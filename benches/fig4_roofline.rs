@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig. 4a (roofline analysis) and time the analysis.
+//!
+//! Run: `cargo bench --bench fig4_roofline`
+
+use pd_swap::eval::run_fig4a;
+use pd_swap::roofline::Bound;
+use pd_swap::util::bench;
+
+fn main() {
+    bench::section("Fig. 4a — qualitative roofline, computed");
+    let results = run_fig4a();
+
+    bench::section("paper vs measured (regime placement)");
+    let (_, pts) = &results[1]; // L = 512
+    for p in pts {
+        let expected = match p.kernel.as_str() {
+            "decode-attention" => Bound::Memory,
+            "prefill-attention" => Bound::Compute,
+            // Decode/prefill linear: streaming-roof bound in our model
+            // (weights cannot reside on-chip at 0.73B).
+            _ => p.bound,
+        };
+        println!(
+            "{:20} AI {:8.2} MAC/B  bound {:?}  (paper: {:?})  {}",
+            p.kernel,
+            p.arithmetic_intensity,
+            p.bound,
+            expected,
+            if p.bound == expected { "match" } else { "MISMATCH" }
+        );
+    }
+
+    bench::section("timing");
+    let s = bench::run("roofline analysis (3 lengths x 4 kernels)", 10, 200, || {
+        std::hint::black_box(pd_swap::eval::fig4::analyze(&[128, 512, 2048]));
+    });
+    println!("{s}");
+}

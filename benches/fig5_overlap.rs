@@ -1,0 +1,58 @@
+//! Bench: regenerate Fig. 5 (latency-overlapped reconfiguration) and run
+//! the serving-level A/B (overlap on/off) that the figure motivates.
+//!
+//! Run: `cargo bench --bench fig5_overlap`
+
+use pd_swap::coordinator::{Request, SimServer, SimServerConfig};
+use pd_swap::eval::run_fig5;
+use pd_swap::fpga::KV260;
+use pd_swap::model::BITNET_0_73B;
+use pd_swap::util::bench;
+
+fn main() {
+    bench::section("Fig. 5 — latency-overlapped runtime reconfiguration");
+    let reports = run_fig5();
+
+    let at128 = reports.iter().find(|r| r.l == 128).unwrap();
+    bench::section("paper vs measured @ L=128");
+    println!(
+        "reconfig    measured {:5.1} ms  paper ~45 ms",
+        at128.reconfig_ms
+    );
+    println!(
+        "tail        measured {:5.1} ms  paper ~31 ms",
+        at128.tail_ms
+    );
+    println!(
+        "hidden      measured {:5.0}%    paper ~75%",
+        at128.hidden_fraction * 100.0
+    );
+
+    // Serving-level A/B: 8 short requests, overlap on vs off.
+    bench::section("serving A/B (8 short requests, L=128, 16 tokens each)");
+    let reqs: Vec<Request> = (0..8)
+        .map(|i| Request::synthetic(i, 128, 16, i as f64 * 0.1))
+        .collect();
+    let mut on = SimServer::new(SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())).unwrap();
+    on.run(reqs.clone()).unwrap();
+    let mut cfg_off = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+    cfg_off.overlap = false;
+    let mut off = SimServer::new(cfg_off).unwrap();
+    off.run(reqs).unwrap();
+    println!(
+        "overlap ON : mean exposed {:5.1} ms, mean TTFT {:6.1} ms",
+        on.metrics.reconfig_exposed.mean() * 1e3,
+        on.metrics.ttft.mean() * 1e3
+    );
+    println!(
+        "overlap OFF: mean exposed {:5.1} ms, mean TTFT {:6.1} ms",
+        off.metrics.reconfig_exposed.mean() * 1e3,
+        off.metrics.ttft.mean() * 1e3
+    );
+
+    bench::section("timing");
+    let s = bench::run("overlap timeline analysis (5 lengths)", 5, 100, || {
+        std::hint::black_box(pd_swap::eval::fig5::analyze(&[64, 128, 256, 512, 1024]));
+    });
+    println!("{s}");
+}

@@ -1,0 +1,49 @@
+//! Bench: regenerate Fig. 6 (decode throughput + TTFT vs context length)
+//! and check the paper's endpoints.
+//!
+//! Run: `cargo bench --bench fig6_throughput`
+
+use pd_swap::eval::{run_fig6, Fig6Point};
+use pd_swap::util::bench;
+
+fn main() {
+    bench::section("Fig. 6 — decoding throughput (a) and prefill TTFT (b)");
+    let pts = run_fig6(pd_swap::eval::fig6::LENGTHS);
+
+    let at = |l: usize| -> &Fig6Point { pts.iter().find(|p| p.l == l).unwrap() };
+    bench::section("paper vs measured");
+    println!(
+        "speedup @64    measured {:4.2}x  paper 1.11x  delta {:+5.1}%",
+        at(64).decode_speedup,
+        (at(64).decode_speedup / 1.11 - 1.0) * 100.0
+    );
+    println!(
+        "speedup @2048  measured {:4.2}x  paper 2.02x  delta {:+5.1}%",
+        at(2048).decode_speedup,
+        (at(2048).decode_speedup / 2.02 - 1.0) * 100.0
+    );
+    println!(
+        "PD TTFT @768   measured {:5.2} s  paper 8.80 s  delta {:+5.1}%",
+        at(768).pd_ttft,
+        (at(768).pd_ttft / 8.80 - 1.0) * 100.0
+    );
+    println!(
+        "TeLLMe TTFT @768 measured {:5.2} s  paper 11.10 s  delta {:+5.1}%",
+        at(768).te_ttft,
+        (at(768).te_ttft / 11.10 - 1.0) * 100.0
+    );
+    println!(
+        "PD decode @2048 measured {:4.1} tok/s  paper '>10'",
+        at(2048).pd_decode_tks
+    );
+    println!(
+        "TeLLMe decode @2048 measured {:4.1} tok/s  paper ~5",
+        at(2048).te_decode_tks
+    );
+
+    bench::section("timing");
+    let s = bench::run("fig6 full series (8 lengths, 2 designs)", 5, 100, || {
+        std::hint::black_box(pd_swap::eval::fig6::series(pd_swap::eval::fig6::LENGTHS));
+    });
+    println!("{s}");
+}

@@ -1,0 +1,91 @@
+//! Bench: the L3 hot paths — simulator step costs, the serving loop, and
+//! (when artifacts exist) the real PJRT prefill/decode calls.
+//!
+//! This is the §Perf measurement harness: every optimization in
+//! EXPERIMENTS.md §Perf quotes numbers from here.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::time::Duration;
+
+use pd_swap::coordinator::{generate_workload, SimServer, SimServerConfig, WorkloadConfig};
+use pd_swap::engines::{AcceleratorDesign, PhaseModel};
+use pd_swap::fpga::KV260;
+use pd_swap::model::BITNET_0_73B;
+use pd_swap::runtime::InferenceEngine;
+use pd_swap::util::bench;
+
+fn main() {
+    let shape = BITNET_0_73B;
+
+    bench::section("simulator primitives");
+    let model = PhaseModel::new(AcceleratorDesign::pd_swap(), KV260.clone());
+    let s = bench::run("decode_step latency query", 100, 10_000, || {
+        std::hint::black_box(model.decode_step(&shape, 1024));
+    });
+    println!("{s}");
+    let s = bench::run("prefill latency query", 100, 10_000, || {
+        std::hint::black_box(model.prefill(&shape, 768));
+    });
+    println!("{s}");
+    let s = bench::run("floorplan + validate", 10, 2_000, || {
+        let d = AcceleratorDesign::pd_swap();
+        std::hint::black_box(d.region_plan().unwrap().validate(&KV260).unwrap());
+    });
+    println!("{s}");
+
+    bench::section("simulated serving loop (16 requests, BitNet 0.73B)");
+    let wl = generate_workload(&WorkloadConfig { n_requests: 16, ..Default::default() });
+    let s = bench::run("SimServer end-to-end", 2, 20, || {
+        let mut srv =
+            SimServer::new(SimServerConfig::pd_swap(shape, KV260.clone())).unwrap();
+        srv.run(wl.clone()).unwrap();
+        std::hint::black_box(srv.metrics.tokens_generated.get());
+    });
+    println!("{s}");
+    // Simulated-time / wall-time ratio: how much faster than real time the
+    // simulator runs (the sim covers minutes of KV260 time).
+    {
+        let mut srv = SimServer::new(SimServerConfig::pd_swap(shape, KV260.clone())).unwrap();
+        let t0 = std::time::Instant::now();
+        srv.run(wl.clone()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "simulated {:.1} s of KV260 time in {:.3} s wall ({:.0}x real time)",
+            srv.clock(),
+            wall,
+            srv.clock() / wall
+        );
+    }
+
+    bench::section("PJRT hot path (artifacts/test — skip if absent)");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
+    if dir.join("manifest.json").exists() {
+        let engine = InferenceEngine::load(&dir).expect("engine");
+        let prompt: Vec<i32> = (1..=5).collect();
+        let s = bench::run_for("prefill (test model, bucket 8)", Duration::from_secs(3), || {
+            std::hint::black_box(engine.prefill(&prompt).unwrap());
+        });
+        println!("{s}");
+        let pre = engine.prefill(&prompt).unwrap();
+        let mut cache = Some(pre.cache);
+        let s = bench::run_for("decode step (test model)", Duration::from_secs(3), || {
+            let c = cache.take().unwrap();
+            // Re-decode at the same position each iteration: take the new
+            // cache but reset its logical length so it never fills.
+            let (_, mut nc) = engine.decode(7, c).unwrap();
+            nc.len = 5;
+            cache = Some(nc);
+        });
+        println!("{s}");
+        println!(
+            "runtime stats: {} prefills ({:.2} ms avg), {} decodes ({:.2} ms avg)",
+            engine.stats.prefill_calls.load(std::sync::atomic::Ordering::Relaxed),
+            engine.stats.avg_prefill_ms(),
+            engine.stats.decode_calls.load(std::sync::atomic::Ordering::Relaxed),
+            engine.stats.avg_decode_ms(),
+        );
+    } else {
+        println!("artifacts/test not built — run `make artifacts` for PJRT numbers");
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Table 1 (cross-platform comparison) and time the
+//! simulator queries behind it.
+//!
+//! Run: `cargo bench --bench table1_cross_platform`
+
+use pd_swap::eval::run_table1;
+use pd_swap::util::bench;
+
+fn main() {
+    bench::section("Table 1 — unified cross-platform comparison");
+    let rows = run_table1();
+
+    // Paper-vs-measured deltas for the computed rows.
+    bench::section("paper vs measured");
+    let pd = rows.iter().find(|r| r.work.contains("PD-Swap")).unwrap();
+    let te = rows.iter().find(|r| r.work.contains("TeLLMe")).unwrap();
+    for (name, got, want) in [
+        ("PD-Swap decode TK/s", pd.decode_tks, 27.8),
+        ("PD-Swap decode TK/J", pd.decode_tkj(), 5.67),
+        ("TeLLMe decode TK/s", te.decode_tks, 25.0),
+        ("TeLLMe decode TK/J", te.decode_tkj(), 5.2),
+    ] {
+        println!(
+            "{name:24} measured {got:7.2}  paper {want:7.2}  delta {:+6.1}%",
+            (got / want - 1.0) * 100.0
+        );
+    }
+
+    bench::section("timing");
+    let s = bench::run("table1 full computation", 3, 50, || {
+        std::hint::black_box(pd_swap::eval::table1::rows());
+    });
+    println!("{s}");
+}

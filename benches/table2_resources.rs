@@ -1,0 +1,36 @@
+//! Bench: regenerate Table 2 (resource breakdown) and time the floorplan
+//! pipeline (engine costing -> RP planning -> validation).
+//!
+//! Run: `cargo bench --bench table2_resources`
+
+use pd_swap::engines::AcceleratorDesign;
+use pd_swap::eval::run_table2;
+use pd_swap::fpga::KV260;
+use pd_swap::util::bench;
+
+fn main() {
+    bench::section("Table 2 — FPGA resource consumption breakdown");
+    let (rows, total, equivalent) = run_table2();
+
+    bench::section("paper vs measured (headline numbers)");
+    for (name, got, want) in [
+        ("Total LUT", total.lut, 102_102.0),
+        ("Equivalent LUT", equivalent.lut, 124_780.0),
+        ("Total DSP", total.dsp, 750.0),
+        ("Total URAM", total.uram, 62.0),
+    ] {
+        println!(
+            "{name:20} measured {got:9.0}  paper {want:9.0}  delta {:+6.1}%",
+            (got / want - 1.0) * 100.0
+        );
+    }
+    println!("({} module rows compared above)", rows.len());
+
+    bench::section("timing");
+    let s = bench::run("floorplan + validate", 10, 200, || {
+        let d = AcceleratorDesign::pd_swap();
+        let plan = d.region_plan().unwrap();
+        std::hint::black_box(plan.validate(&KV260).unwrap());
+    });
+    println!("{s}");
+}

@@ -1,0 +1,91 @@
+//! Long-context study — the regime where PD-Swap's gains grow (Fig. 6's
+//! "larger gains at longer context lengths") plus the ablation grid the
+//! paper implies but doesn't print:
+//!
+//! * PD-Swap (DPR, 2K+2V ports, overlap)        — the full system
+//! * PD-Swap minus the port remap               — isolates §3.2.3
+//! * PD-Swap minus overlap                      — isolates §3.4
+//! * static baseline                            — isolates DPR itself
+//!
+//! ```bash
+//! cargo run --release --example long_context [-- --lengths 64,256,1024,2048 --gen 64]
+//! ```
+
+use anyhow::Result;
+use pd_swap::coordinator::{Request, SimServer, SimServerConfig};
+use pd_swap::engines::{AcceleratorDesign, PhaseModel};
+use pd_swap::fpga::KV260;
+use pd_swap::model::BITNET_0_73B;
+use pd_swap::util::cli::Args;
+use pd_swap::util::table::{fnum, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let lengths = args.get_usize_list("lengths", &[64, 256, 512, 1024, 1536, 2048]);
+    let gen = args.get_usize("gen", 64);
+    let shape = BITNET_0_73B;
+
+    // --- ablation variants -----------------------------------------------
+    let pd = AcceleratorDesign::pd_swap();
+    let mut pd_no_ports = pd.clone();
+    pd_no_ports.decode_attn.kv_optimized_ports = false;
+    pd_no_ports.name = "PD-Swap w/o 2K+2V".into();
+    let tellme = AcceleratorDesign::tellme_static();
+
+    println!("== long-context decode throughput (tokens/s) ==");
+    let mut t = Table::new(vec![
+        "L", "PD-Swap", "w/o port remap", "static (TeLLMe)", "full vs static",
+    ])
+    .right_align(&[0, 1, 2, 3, 4]);
+    let m_pd = PhaseModel::new(pd.clone(), KV260.clone());
+    let m_np = PhaseModel::new(pd_no_ports, KV260.clone());
+    let m_te = PhaseModel::new(tellme, KV260.clone());
+    for &l in &lengths {
+        let a = m_pd.decode_throughput(&shape, l);
+        let b = m_np.decode_throughput(&shape, l);
+        let c = m_te.decode_throughput(&shape, l);
+        t.row(vec![
+            l.to_string(),
+            fnum(a),
+            fnum(b),
+            fnum(c),
+            format!("{:.2}x", a / c),
+        ]);
+    }
+    t.print();
+
+    // --- end-to-end request latency with/without overlap ------------------
+    println!("\n== end-to-end single-request latency (prefill + swap + {gen} tokens) ==");
+    let mut t2 = Table::new(vec![
+        "prompt L", "PD-Swap e2e (s)", "no-overlap e2e (s)", "static e2e (s)", "exposed swap (ms)",
+    ])
+    .right_align(&[0, 1, 2, 3, 4]);
+    for &l in &lengths {
+        let run = |mut cfg: SimServerConfig| -> Result<(f64, f64)> {
+            cfg.shape = shape;
+            let mut s = SimServer::new(cfg)?;
+            // Clamp so the generation fits the KV-cache capacity.
+            let prompt = l.min(shape.max_seq - gen);
+            s.run(vec![Request::synthetic(0, prompt, gen, 0.0)])?;
+            Ok((s.metrics.e2e.mean(), s.metrics.reconfig_exposed.mean()))
+        };
+        let full = run(SimServerConfig::pd_swap(shape, KV260.clone()))?;
+        let mut no_ov = SimServerConfig::pd_swap(shape, KV260.clone());
+        no_ov.overlap = false;
+        let no_ov = run(no_ov)?;
+        let stat = run(SimServerConfig::tellme_static(shape, KV260.clone()))?;
+        t2.row(vec![
+            l.to_string(),
+            fnum(full.0),
+            fnum(no_ov.0),
+            fnum(stat.0),
+            format!("{:.1} / {:.1}", full.1 * 1e3, no_ov.1 * 1e3),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\nreading: the port remap carries the long-context gain; overlap removes the \
+         swap cost at short contexts; DPR itself buys the headroom for both."
+    );
+    Ok(())
+}

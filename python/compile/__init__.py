@@ -1,0 +1,5 @@
+"""PD-Swap compile path: JAX/Pallas model definition + AOT lowering.
+
+Build-time only — the Rust coordinator consumes the emitted
+``artifacts/<config>/*.hlo.txt`` and never imports this package.
+"""

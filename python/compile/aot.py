@@ -1,0 +1,218 @@
+"""AOT compile path: lower the L2 model to HLO **text** artifacts.
+
+Run once by ``make artifacts``; Python never appears on the request path.
+
+Interchange is HLO text, NOT ``lowered.compile()`` / ``.serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the Rust
+side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md
+and gen_hlo.py there).
+
+Per config this emits into ``<out>/<config>/``:
+
+* ``prefill_L{bucket}.hlo.txt`` — one shape-specialized prefill executable
+  per bucket length (the Rust coordinator picks the smallest bucket that
+  fits the prompt and right-pads).
+* ``decode.hlo.txt`` — the single-token autoregressive step.
+* ``weights.bin`` — seeded synthetic ternary weights (weights.py format).
+* ``manifest.json`` — everything the Rust side needs: weight order, IO
+  specs, bucket table, file names.
+* ``golden.json`` (``--golden``) — greedy generation trace computed here
+  with the same jitted functions, asserted bit-for-bit-ish by the Rust
+  integration tests (cross-layer correctness signal).
+
+Usage: ``python -m compile.aot --out ../artifacts [--config test ...]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import weights as weights_mod
+from .configs import CONFIGS, DEFAULT_AOT, ModelConfig
+from .model import WEIGHT_ORDER, make_decode_fn, make_prefill_fn, weight_specs
+
+_DT = {"f32": jnp.float32, "u8": jnp.uint8, "i32": jnp.int32}
+_DT_NAMES = {jnp.float32: "f32", jnp.uint8: "u8", jnp.int32: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _weight_arg_specs(cfg: ModelConfig):
+    specs = weight_specs(cfg)
+    return [jax.ShapeDtypeStruct(*specs[n]) for n in WEIGHT_ORDER]
+
+
+def _cache_spec(cfg: ModelConfig):
+    return jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32
+    )
+
+
+def lower_prefill(cfg: ModelConfig, bucket: int) -> str:
+    fn = make_prefill_fn(cfg, bucket)
+    args = _weight_arg_specs(cfg) + [
+        jax.ShapeDtypeStruct((bucket,), jnp.int32),   # tokens
+        jax.ShapeDtypeStruct((), jnp.int32),          # prompt_len
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_decode(cfg: ModelConfig) -> str:
+    fn = make_decode_fn(cfg)
+    args = _weight_arg_specs(cfg) + [
+        jax.ShapeDtypeStruct((), jnp.int32),          # token
+        jax.ShapeDtypeStruct((), jnp.int32),          # pos
+        _cache_spec(cfg),                             # k_cache
+        _cache_spec(cfg),                             # v_cache
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def make_manifest(cfg: ModelConfig, golden: bool) -> dict:
+    cache_shape = [cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim]
+    specs = weight_specs(cfg)
+    return {
+        "format_version": 1,
+        "config": dataclasses.asdict(cfg),
+        "head_dim": cfg.head_dim,
+        "n_params": cfg.n_params,
+        "weights_file": "weights.bin",
+        "weight_order": [
+            {
+                "name": n,
+                "shape": list(specs[n][0]),
+                "dtype": _DT_NAMES[specs[n][1]],
+            }
+            for n in WEIGHT_ORDER
+        ],
+        "entrypoints": {
+            "prefill": [
+                {"bucket": b, "file": f"prefill_L{b}.hlo.txt"}
+                for b in cfg.prefill_buckets
+            ],
+            "decode": "decode.hlo.txt",
+        },
+        "io": {
+            "prefill_inputs": ["<weights...>", "tokens i32[bucket]",
+                               "prompt_len i32[]"],
+            "prefill_outputs": [
+                f"logits f32[{cfg.vocab}]",
+                f"k_cache f32{cache_shape}",
+                f"v_cache f32{cache_shape}",
+            ],
+            "decode_inputs": ["<weights...>", "token i32[]", "pos i32[]",
+                              f"k_cache f32{cache_shape}",
+                              f"v_cache f32{cache_shape}"],
+            "decode_outputs": [
+                f"logits f32[{cfg.vocab}]",
+                f"k_cache f32{cache_shape}",
+                f"v_cache f32{cache_shape}",
+            ],
+            "cache_shape": cache_shape,
+            "vocab": cfg.vocab,
+        },
+        "golden": "golden.json" if golden else None,
+    }
+
+
+def make_golden(cfg: ModelConfig, weights: dict, n_gen: int = 8,
+                prompt=None) -> dict:
+    """Greedy-generate with the jitted (Pallas) functions as ground truth."""
+    w = [jnp.asarray(weights[n]) for n in WEIGHT_ORDER]
+    prompt = prompt if prompt is not None else [1, 2, 3, 4, 5]
+    bucket = next(b for b in cfg.prefill_buckets if b >= len(prompt))
+    toks = np.zeros(bucket, np.int32)
+    toks[: len(prompt)] = prompt
+
+    prefill_fn = jax.jit(make_prefill_fn(cfg, bucket))
+    decode_fn = jax.jit(make_decode_fn(cfg))
+
+    logits, kc, vc = prefill_fn(*w, jnp.asarray(toks),
+                                jnp.int32(len(prompt)))
+    first_logits = np.asarray(logits[:8], np.float32)
+    generated = []
+    tok = int(jnp.argmax(logits))
+    pos = len(prompt)
+    for _ in range(n_gen):
+        generated.append(tok)
+        if pos >= cfg.max_seq:
+            break
+        logits, kc, vc = decode_fn(*w, jnp.int32(tok), jnp.int32(pos), kc, vc)
+        tok = int(jnp.argmax(logits))
+        pos += 1
+    return {
+        "prompt": list(map(int, prompt)),
+        "bucket": bucket,
+        "generated": generated,
+        "first_logits_prefix": [float(x) for x in first_logits],
+        "n_gen": len(generated),
+    }
+
+
+def build_config(cfg: ModelConfig, out_dir: str, seed: int,
+                 golden: bool) -> None:
+    cdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cdir, exist_ok=True)
+    print(f"[aot] {cfg.name}: generating weights (seed={seed}) ...",
+          flush=True)
+    w = weights_mod.generate(cfg, seed=seed)
+    weights_mod.save(os.path.join(cdir, "weights.bin"), cfg, w)
+
+    for b in cfg.prefill_buckets:
+        print(f"[aot] {cfg.name}: lowering prefill L={b} ...", flush=True)
+        text = lower_prefill(cfg, b)
+        with open(os.path.join(cdir, f"prefill_L{b}.hlo.txt"), "w") as f:
+            f.write(text)
+    print(f"[aot] {cfg.name}: lowering decode ...", flush=True)
+    with open(os.path.join(cdir, "decode.hlo.txt"), "w") as f:
+        f.write(lower_decode(cfg))
+
+    if golden:
+        print(f"[aot] {cfg.name}: computing golden trace ...", flush=True)
+        g = make_golden(cfg, w)
+        with open(os.path.join(cdir, "golden.json"), "w") as f:
+            json.dump(g, f, indent=1)
+
+    with open(os.path.join(cdir, "manifest.json"), "w") as f:
+        json.dump(make_manifest(cfg, golden), f, indent=1)
+    print(f"[aot] {cfg.name}: done -> {cdir}", flush=True)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--config", action="append",
+                   help=f"one of {sorted(CONFIGS)} (repeatable); "
+                        f"default {DEFAULT_AOT}")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--no-golden", action="store_true",
+                   help="skip golden traces (they run the interpret-mode "
+                        "model in python, which is slow for big configs)")
+    args = p.parse_args()
+
+    names = args.config or DEFAULT_AOT
+    for name in names:
+        cfg = CONFIGS[name]
+        # Golden only for configs where interpret-mode generation is cheap.
+        golden = (not args.no_golden) and name in ("test", "tiny")
+        build_config(cfg, args.out, args.seed, golden)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Model configurations shared by the compile path and (via manifest.json)
+the Rust coordinator.
+
+The paper deploys BitNet 0.73B on the KV260; we AOT-compile functional
+artifacts for three smaller configs (CPU-PJRT is the execution substrate)
+and keep ``bitnet-0.73b`` as a simulator-only workload description — its
+timing behaviour is modeled analytically in ``rust/src/engines`` exactly as
+the paper's Eqs. 3–5 do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A BitNet-style ternary transformer configuration."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_seq: int              # decode KV-cache capacity
+    prefill_buckets: List[int]  # compiled prefill lengths (ascending)
+    attn_block: int           # Pallas attention block size (bq = bk)
+    tlmm_block_m: int = 128
+    tlmm_block_n: int = 128
+    rope_base: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        """Approximate parameter count (ternary linears + fp embeddings)."""
+        attn = 4 * self.d_model * self.d_model
+        ffn = 3 * self.d_model * self.d_ff
+        return self.n_layers * (attn + ffn) + self.vocab * self.d_model
+
+    def validate(self) -> None:
+        assert self.d_model % 4 == 0 and self.d_ff % 4 == 0, "TLMM pack=4"
+        assert self.head_dim % 2 == 0, "RoPE needs even head_dim"
+        for b in self.prefill_buckets:
+            assert b % self.attn_block == 0, (b, self.attn_block)
+            assert b <= self.max_seq
+        assert self.max_seq % self.attn_block == 0
+        assert self.prefill_buckets == sorted(self.prefill_buckets)
+
+
+# AOT-compiled configs (functional artifacts exist for these).
+CONFIGS = {
+    # 2-layer toy used by pytest and cargo-test integration tests.
+    "test": ModelConfig(
+        name="test", n_layers=2, d_model=128, n_heads=4, d_ff=384,
+        vocab=256, max_seq=32, prefill_buckets=[8, 16], attn_block=8,
+        tlmm_block_m=8, tlmm_block_n=64,
+    ),
+    # Quickstart-scale model (~3.3M ternary + embeddings).
+    "tiny": ModelConfig(
+        name="tiny", n_layers=4, d_model=256, n_heads=4, d_ff=768,
+        vocab=2048, max_seq=128, prefill_buckets=[32, 64], attn_block=16,
+        tlmm_block_m=32, tlmm_block_n=128,
+    ),
+    # ~103M-parameter model for the end-to-end serving driver.
+    "e2e-100m": ModelConfig(
+        name="e2e-100m", n_layers=10, d_model=768, n_heads=12, d_ff=3072,
+        vocab=8192, max_seq=640, prefill_buckets=[128, 256, 512],
+        attn_block=64, tlmm_block_m=64, tlmm_block_n=128,
+    ),
+    # Paper model — simulator workload only (no PJRT artifact by default;
+    # `aot.py --config bitnet-0.73b` will happily compile it if you have
+    # the patience and RAM).
+    "bitnet-0.73b": ModelConfig(
+        name="bitnet-0.73b", n_layers=24, d_model=1536, n_heads=24,
+        d_ff=4096, vocab=32000, max_seq=2048,
+        prefill_buckets=[128, 256, 512, 1024, 2048], attn_block=64,
+    ),
+}
+
+# Configs `make artifacts` builds by default.
+DEFAULT_AOT = ["test", "tiny", "e2e-100m"]
+
+for _c in CONFIGS.values():
+    _c.validate()

@@ -1,0 +1,12 @@
+"""PD-Swap Layer-1 Pallas kernels (build-time only; lowered into the L2
+HLO artifacts, never imported at runtime).
+
+* :mod:`.tlmm` — ternary table-lookup matmul (static region, Fig. 3a)
+* :mod:`.tlmm_lut` — faithful 81-entry lookup formulation (spec/cross-check)
+* :mod:`.prefill_attention` — reverse-scheduled FlashAttention RM (Fig. 3b)
+* :mod:`.decode_attention` — KV-cache-streaming decode RM (Fig. 3d)
+* :mod:`.rmsnorm` — fused RMSNorm + find-max + int8 quant (static region)
+* :mod:`.ref` — pure-jnp oracles for all of the above
+"""
+
+from . import decode_attention, prefill_attention, ref, rmsnorm, tlmm, tlmm_lut  # noqa: F401

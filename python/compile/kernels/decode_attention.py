@@ -1,0 +1,124 @@
+"""Pallas decode attention kernel — the bandwidth-optimized reconfigurable
+module (Fig. 3d).
+
+FPGA formulation: in decode, L = 1, so there is no Q reuse at all; the
+operation degenerates to ``q_t · K_<t^T -> softmax -> · V_<t -> o_t``, a
+memory-bound streaming pass over the growing KV cache. The paper's decode
+RM therefore trades PE count for bandwidth: 2 HP ports stream K and 2
+stream V (vs. the prefill/baseline QKVO port mapping), the single Q token
+is pre-staged into on-chip buffers, and the output token is held locally
+until the KV transfers finish (§3.2.3) — roughly doubling effective KV
+bandwidth.
+
+TPU adaptation: the single query vector is VMEM-resident (paper: Q buffer),
+the KV cache is streamed block-by-block through VMEM with a running-softmax
+carry — the BlockSpec/ds schedule is the VMEM analogue of the 2K+2V burst
+schedule. The cache is padded to ``Lmax``; a scalar ``length`` input masks
+the tail, which is how the Rust coordinator reuses one compiled executable
+for every decode position.
+
+Grid: ``(heads,)``. interpret=True (see tlmm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, lmax, bk, dh, scale):
+    """One head: stream KV blocks, running softmax against the live length.
+
+    len_ref: [1]        int32  valid cache length t (attend to 0..t-1)
+    q_ref:   [1, dh]    f32    the single query vector
+    k_ref:   [lmax, dh] f32    padded K cache for this head
+    v_ref:   [lmax, dh] f32    padded V cache for this head
+    o_ref:   [1, dh]    f32
+    """
+    length = len_ref[0]
+    q = q_ref[...] * scale  # [1, dh]
+
+    def body(j, carry):
+        o, m, l = carry
+        k_blk = pl.load(k_ref, (pl.ds(j * bk, bk), slice(None)))  # [bk, dh]
+        v_blk = pl.load(v_ref, (pl.ds(j * bk, bk), slice(None)))
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [1, bk]
+        pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        o_new = alpha[:, None] * o + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((1, dh), jnp.float32)
+    m0 = jnp.full((1,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    # Only visit blocks that contain live positions: ceil(length / bk).
+    nblocks = (length + bk - 1) // bk
+    o, m, l = jax.lax.fori_loop(0, nblocks, body, (o0, m0, l0))
+    o_ref[...] = o / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, length, *, block_k=64):
+    """Single-token attention against a padded KV cache.
+
+    Args:
+      q:       f32 ``[H, dh]`` query for the new token (RoPE applied).
+      k_cache: f32 ``[H, Lmax, dh]`` padded key cache (RoPE applied).
+      v_cache: f32 ``[H, Lmax, dh]`` padded value cache.
+      length:  int32 scalar — number of valid positions (includes the
+               current token, whose K/V must already be in the cache).
+      block_k: KV streaming block size (clamped to Lmax).
+
+    Returns f32 ``[H, dh]``.
+    """
+    h, lmax, dh = k_cache.shape
+    bk = min(block_k, lmax)
+    assert lmax % bk == 0, (lmax, bk)
+    scale = 1.0 / (dh ** 0.5)
+    len_arr = jnp.asarray(length, jnp.int32).reshape(1)
+
+    grid = (h,)
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel, lmax=lmax, bk=bk, dh=dh, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ih: (0,)),
+            pl.BlockSpec((1, dh), lambda ih: (ih, 0)),  # [1, dh] per head
+            pl.BlockSpec((None, lmax, dh), lambda ih: (ih, 0, 0)),
+            pl.BlockSpec((None, lmax, dh), lambda ih: (ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda ih: (ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        interpret=INTERPRET,
+    )(len_arr, q, k_cache, v_cache)
+
+
+def hbm_bytes(length, dh, n_heads):
+    """KV bytes streamed per decode step (perf model input): the kernel is
+    bandwidth-bound, so this IS the roofline numerator."""
+    return 2 * n_heads * length * dh * 4
+
+
+def vmem_bytes(dh, block_k=64):
+    """Per-step VMEM footprint: q + one K/V block + running stats."""
+    return 4 * (dh + 2 * block_k * dh + block_k + dh + 3)

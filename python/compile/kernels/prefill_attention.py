@@ -1,0 +1,120 @@
+"""Pallas prefill attention kernel — the compute-heavy reconfigurable
+module (Fig. 3b), a blocked FlashAttention with the paper's *reverse*
+causal scheduling.
+
+FPGA formulation: the prefill RM keeps a Q tile resident (BRAM/registers)
+and streams K/V blocks from DDR, maintaining the FlashAttention running
+(max, sum, output) statistics (Eq. 1). Causal masking is handled by a
+reverse block schedule: for Q block *i*, K blocks are visited
+``j = i, i-1, ..., 0`` so the *first* block visited is the only partially
+masked (diagonal) one and every later block is dense — the PE array never
+stalls on mask logic after the first iteration, and the diagonal block
+seeds the running max with the row's own (largest-position) scores.
+
+TPU adaptation: Q tile ``[bq, dh]`` lives in VMEM for the whole inner loop
+(paper: registers/BRAM); K/V for the head are pinned by the BlockSpec and
+sliced block-by-block with ``pl.ds`` (paper: DDR bursts over HP ports);
+running statistics are loop carries. The reverse schedule is kept verbatim.
+
+Grid: ``(heads, L // block_q)``. interpret=True (see tlmm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+NEG_INF = -1e30  # avoid actual -inf: exp(-inf - -inf) = nan in the rescale
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, dh, scale):
+    """One (head, q-block) step: reverse-scheduled online softmax.
+
+    q_ref: [bq, dh]   resident Q tile
+    k_ref: [L, dh]    full K for this head (sliced per block)
+    v_ref: [L, dh]    full V for this head
+    o_ref: [bq, dh]
+    """
+    iq = pl.program_id(1)
+    q = q_ref[...] * scale  # [bq, dh]
+
+    # Absolute row positions of this Q tile (for the diagonal mask).
+    row_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    def body(step, carry):
+        o, m, l = carry
+        # Reverse schedule: step 0 visits the diagonal block j = iq.
+        j = iq - step
+        k_blk = pl.load(k_ref, (pl.ds(j * bk, bk), slice(None)))  # [bk, dh]
+        v_blk = pl.load(v_ref, (pl.ds(j * bk, bk), slice(None)))  # [bk, dh]
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bq, bk]
+        # Causal mask — only the diagonal block (step 0) is ever partial.
+        col_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(col_pos <= row_pos, s, NEG_INF)
+
+        # FlashAttention running update (Eq. 1 of the paper).
+        m_blk = jnp.max(s, axis=-1)  # rmax(L^(j))
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[:, None])  # e^{L^(j) - m^(j)}
+        alpha = jnp.exp(m - m_new)  # e^{m^(j-1) - m^(j)}
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        o_new = alpha[:, None] * o + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((bq, dh), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    # Q block iq attends to K blocks 0..iq — (iq + 1) blocks, reversed.
+    o, m, l = jax.lax.fori_loop(0, iq + 1, body, (o0, m0, l0))
+    o_ref[...] = o / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def prefill_attention(q, k, v, *, block_q=64, block_k=64):
+    """Causal FlashAttention with reverse block scheduling.
+
+    ``q, k, v`` f32 ``[H, L, dh]`` (RoPE already applied to q, k) ->
+    ``[H, L, dh]``. L must divide by the (clamped) block sizes.
+    """
+    h, l, dh = q.shape
+    bq = min(block_q, l)
+    bk = min(block_k, l)
+    assert l % bq == 0 and l % bk == 0, (l, bq, bk)
+    assert bq == bk, "reverse diagonal scheduling assumes square blocks"
+    scale = 1.0 / (dh ** 0.5)
+
+    grid = (h, l // bq)
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, bq=bq, bk=bk, dh=dh, scale=scale),
+        grid=grid,
+        in_specs=[
+            # None squeezes the head dim: refs arrive as [bq/l, dh].
+            pl.BlockSpec((None, bq, dh), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((None, l, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((None, l, dh), lambda ih, iq: (ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, l, dh), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+def vmem_bytes(l, dh, block_q=64, block_k=64):
+    """Estimated per-step VMEM footprint: Q tile + one K/V block + stats.
+
+    The full-head K/V pin in the BlockSpec is an interpret-mode convenience;
+    the real schedule streams one [bk, dh] block at a time, which is what
+    the perf model should charge.
+    """
+    bq, bk = block_q, block_k
+    return 4 * (bq * dh + 2 * bk * dh + bq * bk + bq * dh + 3 * bq)

@@ -1,0 +1,174 @@
+"""Pure-jnp reference oracles for every PD-Swap kernel.
+
+These are the CORE correctness signal: each Pallas kernel in this package is
+checked against the corresponding function here via pytest + hypothesis
+(``python/tests/``). Keep these as boring and obviously-correct as possible —
+no blocking, no running softmax, no packing tricks.
+
+Conventions (shared with the kernels and with ``model.py``):
+
+* Linear layers compute ``y = (x_q @ W_t.T) * (sx * sw)`` where
+  ``x_q`` is the per-token int8 quantized activation, ``W_t`` is the ternary
+  weight matrix with entries in {-1, 0, +1} stored output-major ``[N, K]``,
+  ``sx`` is the per-token activation scale and ``sw`` the per-tensor weight
+  scale (BitNet beta = mean |W|).
+* Attention uses softmax scale ``1/sqrt(head_dim)`` and causal masking.
+* RMSNorm uses ``x * g / sqrt(mean(x^2) + eps)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Activation quantization clamp (int8, symmetric).
+QMAX = 127.0
+RMS_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+def quantize_i8(x):
+    """Per-token (last-axis) symmetric absmax int8 quantization.
+
+    Returns ``(x_q, sx)`` with ``x_q`` int8 of x.shape and ``sx`` float32 of
+    ``x.shape[:-1] + (1,)`` such that ``x ≈ x_q * sx``.
+    """
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    sx = jnp.maximum(absmax, 1e-8) / QMAX
+    x_q = jnp.clip(jnp.round(x / sx), -QMAX, QMAX).astype(jnp.int8)
+    return x_q, sx.astype(jnp.float32)
+
+
+def ternarize(w_f):
+    """BitNet absmean ternarization of a float weight matrix.
+
+    Returns ``(w_t, sw)`` where ``w_t`` is int8 in {-1, 0, +1} and ``sw`` is
+    the scalar absmean scale, such that ``w_f ≈ w_t * sw``.
+    """
+    sw = jnp.mean(jnp.abs(w_f))
+    sw = jnp.maximum(sw, 1e-8)
+    w_t = jnp.clip(jnp.round(w_f / sw), -1, 1).astype(jnp.int8)
+    return w_t, sw.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Ternary weight packing (the TLMM storage format)
+# ---------------------------------------------------------------------------
+
+# Weights are packed in groups of 4 along the K (input) axis, one uint8 code
+# per group, base-3 digits: code = sum_j (w[4k+j] + 1) * 3^j, code in [0, 81).
+# This is the on-URAM format of the paper's table-lookup matmul engine:
+# the code doubles as the index into the per-group precomputed partial-sum
+# table (see tlmm_lut.py for the faithful lookup formulation).
+PACK_GROUP = 4
+PACK_BASE = 3
+PACK_CODES = PACK_BASE ** PACK_GROUP  # 81
+
+
+def pack_ternary(w_t):
+    """Pack ternary int8 matrix ``[N, K]`` (K % 4 == 0) to uint8 ``[N, K//4]``."""
+    n, k = w_t.shape
+    assert k % PACK_GROUP == 0, f"K={k} not a multiple of {PACK_GROUP}"
+    digits = (w_t.astype(jnp.int32) + 1).reshape(n, k // PACK_GROUP, PACK_GROUP)
+    weights = PACK_BASE ** jnp.arange(PACK_GROUP, dtype=jnp.int32)
+    codes = jnp.sum(digits * weights, axis=-1)
+    return codes.astype(jnp.uint8)
+
+
+def unpack_ternary(codes, k):
+    """Inverse of :func:`pack_ternary`: uint8 ``[N, K//4]`` -> int8 ``[N, K]``."""
+    n = codes.shape[0]
+    c = codes.astype(jnp.int32)[:, :, None]
+    shifts = PACK_BASE ** jnp.arange(PACK_GROUP, dtype=jnp.int32)
+    digits = (c // shifts) % PACK_BASE - 1
+    return digits.reshape(n, k).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Reference kernels
+# ---------------------------------------------------------------------------
+
+def tlmm_ref(x_q, sx, codes, sw):
+    """Reference ternary table-lookup matmul.
+
+    ``x_q`` int8 ``[M, K]``, ``sx`` f32 ``[M, 1]``, ``codes`` uint8
+    ``[N, K//4]``, ``sw`` f32 scalar -> f32 ``[M, N]``.
+    """
+    k = x_q.shape[-1]
+    w_t = unpack_ternary(codes, k)  # [N, K]
+    acc = jnp.dot(x_q.astype(jnp.int32), w_t.astype(jnp.int32).T)  # [M, N]
+    return acc.astype(jnp.float32) * sx * sw
+
+
+def linear_ref(x, w_f):
+    """Full float path: quantize activations, ternarize weights, matmul."""
+    x_q, sx = quantize_i8(x)
+    w_t, sw = ternarize(w_f)
+    return tlmm_ref(x_q, sx, pack_ternary(w_t), sw)
+
+
+def rmsnorm_ref(x, g, eps=RMS_EPS):
+    """RMSNorm over the last axis. ``x`` ``[M, D]``, ``g`` ``[D]``."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * g
+
+
+def rmsnorm_quant_ref(x, g, eps=RMS_EPS):
+    """Fused RMSNorm + find-max + int8 quant (the paper's 'RMSNorm & Find
+    Max Unit'). Returns ``(x_q, sx)``."""
+    return quantize_i8(rmsnorm_ref(x, g, eps))
+
+
+def attention_ref(q, k, v, causal=True):
+    """Dense causal attention. ``q,k,v`` ``[H, L, dh]`` -> ``[H, L, dh]``."""
+    h, l, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """Single-token attention against a padded KV cache.
+
+    ``q`` ``[H, dh]``, ``k_cache/v_cache`` ``[H, Lmax, dh]``, ``length``
+    int32 (number of valid cache positions) -> ``[H, dh]``.
+    """
+    h, lmax, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jnp.einsum("hd,hkd->hk", q, k_cache) * scale
+    valid = jnp.arange(lmax) < length
+    s = jnp.where(valid[None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hk,hkd->hd", p, v_cache)
+
+
+def rope_ref(x, positions, base=10000.0):
+    """Rotary position embedding (half-split convention).
+
+    ``x`` ``[H, L, dh]``, ``positions`` ``[L]`` int32 -> ``[H, L, dh]``.
+    """
+    h, l, dh = x.shape
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [L, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def silu_ref(x):
+    """SiLU (swish) activation."""
+    return x / (1.0 + jnp.exp(-x))
+
+
+def swiglu_ref(gate, up):
+    """SwiGLU activation: silu(gate) * up."""
+    return silu_ref(gate) * up

@@ -1,0 +1,67 @@
+"""Pallas fused RMSNorm + find-max + int8 quantization kernel — the paper's
+static-region "RMSNorm & Find Max Unit" (Table 2 row 2).
+
+Every TLMM linear is fed by this unit: normalize the residual stream, find
+the per-token absmax (the "Find Max" half), and emit int8 activations plus
+the per-token scale. Fusing the three passes means the activation vector is
+read once from the stream instead of three times — on the FPGA this is one
+pipeline; on TPU it is one VMEM-resident row block per grid step.
+
+Grid: ``(M // block_m,)``. interpret=True (see tlmm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QMAX, RMS_EPS
+
+INTERPRET = True
+
+
+def _rmsnorm_quant_kernel(x_ref, g_ref, q_ref, s_ref, *, eps):
+    """x_ref [bm, D] f32, g_ref [1, D] f32 -> q_ref [bm, D] i8, s_ref [bm, 1] f32."""
+    x = x_ref[...]
+    g = g_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    normed = x * jax.lax.rsqrt(ms + eps) * g
+    absmax = jnp.max(jnp.abs(normed), axis=-1, keepdims=True)  # find-max
+    sx = jnp.maximum(absmax, 1e-8) / QMAX
+    q_ref[...] = jnp.clip(jnp.round(normed / sx), -QMAX, QMAX).astype(jnp.int8)
+    s_ref[...] = sx.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def rmsnorm_quant(x, g, *, block_m=128, eps=RMS_EPS):
+    """Fused RMSNorm -> absmax -> int8 quant over the last axis.
+
+    ``x`` f32 ``[M, D]``, ``g`` f32 ``[D]`` -> ``(x_q int8 [M, D],
+    sx f32 [M, 1])``.
+    """
+    m, d = x.shape
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    g2 = g.reshape(1, d)
+
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_quant_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, d), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, g2)

@@ -1,0 +1,127 @@
+"""Pallas ternary table-lookup matmul (TLMM) kernel — the paper's static
+region workhorse (Fig. 3a).
+
+Paper formulation (KV260): ternary weights are packed 4-per-URAM-word as
+base-3 codes; for each group of 4 int8 activations all 81 add/subtract
+combinations are precomputed into a LUT-resident table, and the weight code
+is the *index* used to fetch the partial sum. Runtime matmul becomes
+index -> lookup -> accumulate, eliminating both multipliers (DSPs) and DDR
+weight traffic (weights live on-chip).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): there is no LUT fabric, so
+the surviving insight is *weights resident in fast memory + multiplication-
+free accumulation*. The kernel keeps the paper's packed base-3 storage
+format (2 bits/weight asymptotically, 1 byte per 4 weights here), decodes
+the codes to {-1, 0, +1} **inside VMEM** — the decode stands in for the
+table lookup — and feeds an integer dot-product. The BlockSpec pins the
+whole K (reduction) extent of both operands per grid step, expressing the
+paper's "weights never leave URAM" residency: the weight tile is read from
+HBM once per (i, j) output tile and never re-streamed per token.
+
+A faithful lookup formulation (actual 81-entry tables, used to validate the
+equivalence claim) lives in ``tlmm_lut.py``; it is tested against this
+kernel but not used in the AOT model because the MXU prefers the dot form.
+
+All kernels in this package run with ``interpret=True``: CPU PJRT cannot
+execute Mosaic custom-calls, so we lower to plain HLO (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PACK_BASE, PACK_GROUP
+
+INTERPRET = True  # CPU PJRT path; real-TPU perf is estimated analytically.
+
+
+def _decode_codes(codes_i32, bn, bk):
+    """Decode packed base-3 codes ``[bn, bk//4]`` int32 -> ternary ``[bn, bk]``.
+
+    This is the in-VMEM stand-in for the paper's partial-sum table lookup:
+    one divmod chain per group instead of one URAM read per group.
+    """
+    c = codes_i32[:, :, None]
+    shifts = PACK_BASE ** jnp.arange(PACK_GROUP, dtype=jnp.int32)
+    digits = (c // shifts) % PACK_BASE - 1  # [bn, bk//4, 4]
+    return digits.reshape(bn, bk)
+
+
+def _tlmm_kernel(x_ref, sx_ref, codes_ref, sw_ref, o_ref, *, bm, bn, bk):
+    """One (i, j) output tile: int8 activations x ternary weights.
+
+    x_ref:     [bm, K]      int8   (quantized activations, full K resident)
+    sx_ref:    [bm, 1]      f32    (per-token activation scales)
+    codes_ref: [bn, K//4]   uint8  (packed ternary weights, full K resident)
+    sw_ref:    [1, 1]       f32    (per-tensor weight scale)
+    o_ref:     [bm, bn]     f32
+    """
+    x = x_ref[...].astype(jnp.int32)  # [bm, K]
+    codes = codes_ref[...].astype(jnp.int32)  # [bn, K//4]
+    w = _decode_codes(codes, bn, bk)  # [bn, K] in {-1,0,+1}
+    # Integer accumulate: on real TPU this is a bf16 MXU matmul of the
+    # decoded ternary tile; int32 keeps the interpret path exact.
+    acc = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # [bm, bn]
+    o_ref[...] = acc.astype(jnp.float32) * sx_ref[...] * sw_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def tlmm(x_q, sx, codes, sw, *, block_m=128, block_n=128):
+    """Ternary table-lookup matmul: ``y = (x_q @ W.T) * sx * sw``.
+
+    Args:
+      x_q:   int8  ``[M, K]`` quantized activations (K % 4 == 0).
+      sx:    f32   ``[M, 1]`` per-token activation scale.
+      codes: uint8 ``[N, K//4]`` packed ternary weights (output-major).
+      sw:    f32   scalar (or ``[]``) weight scale.
+      block_m/block_n: output tile sizes (clamped to M, N).
+
+    Returns f32 ``[M, N]``.
+    """
+    m, k = x_q.shape
+    n, kp = codes.shape
+    assert kp * PACK_GROUP == k, (k, kp)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    sw2 = jnp.asarray(sw, jnp.float32).reshape(1, 1)
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_tlmm_kernel, bm=bm, bn=bn, bk=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x_q, sx, codes, sw2)
+
+
+def vmem_bytes(m, k, n, block_m=128, block_n=128):
+    """Estimated VMEM footprint of one grid step (perf model input).
+
+    int8 activations + packed codes + decoded i32 tile + f32 output tile.
+    """
+    bm, bn = min(block_m, m), min(block_n, n)
+    return (
+        bm * k  # x int8
+        + bm * 4  # sx f32
+        + bn * (k // PACK_GROUP)  # codes u8
+        + bn * k * 4  # decoded weight tile i32
+        + bm * bn * 4  # output f32
+    )

@@ -1,0 +1,67 @@
+"""Faithful table-lookup formulation of the TLMM engine (Fig. 3a).
+
+This module implements the paper's *actual* FPGA algorithm, not the
+MXU-adapted one in ``tlmm.py``: for every token and every group of 4
+activations, precompute all ``3^4 = 81`` signed add/subtract combinations
+into a table, then use each packed weight code as an index to *look up* the
+group's partial sum and accumulate.
+
+On the KV260 the table lives in LUTs/BRAM and the codes in URAM, so the
+inner loop has no multipliers at all. On TPU this formulation is gather
+bound and strictly worse than the decode+dot form, so it is used only as a
+**semantic cross-check**: ``python/tests/test_tlmm.py`` asserts
+``tlmm_lut == tlmm == tlmm_ref`` exactly (all-integer accumulation), which
+is the equivalence the paper's engine relies on.
+
+Kept in plain jnp (not Pallas) intentionally — it is an executable
+specification, and the gather patterns it needs are the part that does NOT
+survive the hardware translation (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import PACK_BASE, PACK_CODES, PACK_GROUP
+
+
+def build_group_tables(x_q):
+    """Precompute the 81-entry partial-sum table for every activation group.
+
+    ``x_q`` int8 ``[M, K]`` -> int32 ``[M, K//4, 81]`` where entry
+    ``[m, g, c]`` is ``sum_j digit_j(c) * x_q[m, 4g+j]`` with
+    ``digit_j(c) = (c // 3^j) % 3 - 1``.
+
+    This mirrors the paper's "for every value group, add/subtract
+    combinations are pre-computed" step; the FPGA builds it once per token
+    as the activations stream in, reusing it across all N output channels.
+    """
+    m, k = x_q.shape
+    assert k % PACK_GROUP == 0
+    groups = x_q.astype(jnp.int32).reshape(m, k // PACK_GROUP, PACK_GROUP)
+    codes = jnp.arange(PACK_CODES, dtype=jnp.int32)  # [81]
+    shifts = PACK_BASE ** jnp.arange(PACK_GROUP, dtype=jnp.int32)  # [4]
+    digits = (codes[:, None] // shifts[None, :]) % PACK_BASE - 1  # [81, 4]
+    # [M, G, 81] = sum_j groups[m, g, j] * digits[c, j]
+    return jnp.einsum("mgj,cj->mgc", groups, digits)
+
+
+def tlmm_lut(x_q, sx, codes, sw):
+    """Table-lookup matmul: index -> lookup -> accumulate.
+
+    Same contract as :func:`tlmm.tlmm`. ``codes`` uint8 ``[N, K//4]``.
+    """
+    tables = build_group_tables(x_q)  # [M, G, 81]
+    idx = codes.astype(jnp.int32)  # [N, G]
+    # The lookup: partial[m, n, g] = tables[m, g, idx[n, g]].
+    # vmap over output channels n; each channel gathers its G partial sums.
+    def one_channel(ch_idx):
+        # tables: [M, G, 81], ch_idx: [G] -> [M, G]
+        return jnp.take_along_axis(
+            tables, ch_idx[None, :, None], axis=2
+        )[..., 0]
+
+    partial = jax.vmap(one_channel, in_axes=0, out_axes=2)(idx)  # [M, G, N]
+    acc = jnp.sum(partial, axis=1)  # [M, N] int32
+    return acc.astype(jnp.float32) * sx * jnp.asarray(sw, jnp.float32)

@@ -1,0 +1,267 @@
+"""Layer-2 JAX model: BitNet-style ternary transformer, prefill + decode
+graphs, calling the Layer-1 Pallas kernels.
+
+Build-time only. ``aot.py`` lowers :func:`make_prefill_fn` (once per prefill
+bucket length) and :func:`make_decode_fn` (once) to HLO text; the Rust
+coordinator executes those artifacts via PJRT and never sees Python.
+
+Graph contracts (positional HLO parameters — order is WEIGHT_ORDER then the
+per-call inputs; recorded in manifest.json for the Rust side):
+
+* prefill(W..., tokens i32[L], prompt_len i32[]) ->
+      (logits f32[vocab], k_cache f32[nl,H,max_seq,dh], v_cache same)
+  The prompt is right-padded to the bucket length L; causal masking keeps
+  the logits at ``prompt_len-1`` exact, and cache rows >= prompt_len are
+  garbage that the decode kernel masks away by ``length``.
+* decode(W..., token i32[], pos i32[], k_cache, v_cache) ->
+      (logits f32[vocab], k_cache', v_cache')
+  One autoregressive step: inserts the token's K/V at ``pos`` and attends
+  to positions ``0..pos``.
+
+Layers are folded with ``lax.scan`` over stacked per-layer weights so the
+HLO size is independent of depth (24-layer BitNet lowers as cheaply as the
+2-layer test config).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.decode_attention import decode_attention
+from .kernels.prefill_attention import prefill_attention
+from .kernels.rmsnorm import rmsnorm_quant
+from .kernels.tlmm import tlmm
+
+# Flat positional parameter order of the HLO artifacts. Entries with a
+# leading ``nl`` axis are per-layer stacks consumed by lax.scan.
+WEIGHT_ORDER: List[str] = [
+    "tok_emb",        # [vocab, d] f32 (tied embedding / lm head)
+    "final_norm_g",   # [d] f32
+    "attn_norm_g",    # [nl, d] f32
+    "wq_codes",       # [nl, d, d//4] u8
+    "wq_scale",       # [nl] f32
+    "wk_codes", "wk_scale",
+    "wv_codes", "wv_scale",
+    "wo_codes", "wo_scale",
+    "ffn_norm_g",     # [nl, d] f32
+    "w1_codes",       # [nl, d_ff, d//4] u8  (SwiGLU gate)
+    "w1_scale",
+    "w3_codes",       # [nl, d_ff, d//4] u8  (SwiGLU up)
+    "w3_scale",
+    "w2_codes",       # [nl, d, d_ff//4] u8  (SwiGLU down)
+    "w2_scale",
+]
+
+PER_LAYER = [n for n in WEIGHT_ORDER if n not in ("tok_emb", "final_norm_g")]
+
+
+def weight_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    """name -> (shape, dtype) for every entry of WEIGHT_ORDER."""
+    nl, d, dff, v = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    u8, f32 = jnp.uint8, jnp.float32
+    return {
+        "tok_emb": ((v, d), f32),
+        "final_norm_g": ((d,), f32),
+        "attn_norm_g": ((nl, d), f32),
+        "wq_codes": ((nl, d, d // 4), u8), "wq_scale": ((nl,), f32),
+        "wk_codes": ((nl, d, d // 4), u8), "wk_scale": ((nl,), f32),
+        "wv_codes": ((nl, d, d // 4), u8), "wv_scale": ((nl,), f32),
+        "wo_codes": ((nl, d, d // 4), u8), "wo_scale": ((nl,), f32),
+        "ffn_norm_g": ((nl, d), f32),
+        "w1_codes": ((nl, dff, d // 4), u8), "w1_scale": ((nl,), f32),
+        "w3_codes": ((nl, dff, d // 4), u8), "w3_scale": ((nl,), f32),
+        "w2_codes": ((nl, d, dff // 4), u8), "w2_scale": ((nl,), f32),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    """[L, d] -> [H, L, dh]."""
+    l = x.shape[0]
+    return x.reshape(l, n_heads, head_dim).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    """[H, L, dh] -> [L, d]."""
+    h, l, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(l, h * dh)
+
+
+def _linear(cfg: ModelConfig, x_q, sx, codes, sw):
+    """TLMM linear with the config's block sizes."""
+    return tlmm(
+        x_q, sx, codes, sw,
+        block_m=cfg.tlmm_block_m, block_n=cfg.tlmm_block_n,
+    )
+
+
+def _attn_block_prefill(cfg: ModelConfig, x, lw, positions):
+    """Attention sub-block for a full sequence. Returns (x', k_rope, v)."""
+    h_q, sx = rmsnorm_quant(x, lw["attn_norm_g"], block_m=cfg.tlmm_block_m)
+    q = _linear(cfg, h_q, sx, lw["wq_codes"], lw["wq_scale"])
+    k = _linear(cfg, h_q, sx, lw["wk_codes"], lw["wk_scale"])
+    v = _linear(cfg, h_q, sx, lw["wv_codes"], lw["wv_scale"])
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_heads, cfg.head_dim)
+    q = ref.rope_ref(q, positions, cfg.rope_base)
+    k = ref.rope_ref(k, positions, cfg.rope_base)
+    o = prefill_attention(
+        q, k, v, block_q=cfg.attn_block, block_k=cfg.attn_block
+    )
+    o = _merge_heads(o)
+    o_q, o_sx = ref.quantize_i8(o)
+    out = _linear(cfg, o_q, o_sx, lw["wo_codes"], lw["wo_scale"])
+    return x + out, k, v
+
+
+def _ffn_block(cfg: ModelConfig, x, lw, block_m=None):
+    """SwiGLU FFN sub-block (shared by prefill and decode)."""
+    bm = block_m if block_m is not None else cfg.tlmm_block_m
+    h_q, sx = rmsnorm_quant(x, lw["ffn_norm_g"], block_m=bm)
+    gate = _linear(cfg, h_q, sx, lw["w1_codes"], lw["w1_scale"])
+    up = _linear(cfg, h_q, sx, lw["w3_codes"], lw["w3_scale"])
+    a = ref.swiglu_ref(gate, up)
+    a_q, a_sx = ref.quantize_i8(a)
+    out = _linear(cfg, a_q, a_sx, lw["w2_codes"], lw["w2_scale"])
+    return x + out
+
+
+def _layer_weights(weights: Dict[str, jax.Array]):
+    """Stacked per-layer weights as scan xs."""
+    return {n: weights[n] for n in PER_LAYER}
+
+
+def prefill(cfg: ModelConfig, weights: Dict[str, jax.Array], tokens, prompt_len):
+    """Process a (padded) prompt; see module docstring for the contract."""
+    l = tokens.shape[0]
+    positions = jnp.arange(l, dtype=jnp.int32)
+    x = jnp.take(weights["tok_emb"], tokens, axis=0)  # [L, d]
+
+    def step(x, lw):
+        x, k, v = _attn_block_prefill(cfg, x, lw, positions)
+        x = _ffn_block(cfg, x, lw)
+        # Pad the bucket-length cache out to max_seq in-graph so the decode
+        # executable gets full-capacity caches without a host-side copy.
+        kc = jnp.zeros((cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0))
+        return x, (kc, vc)
+
+    x, (k_cache, v_cache) = jax.lax.scan(step, x, _layer_weights(weights))
+
+    # Logits for the last *valid* prompt position only.
+    last = jax.lax.dynamic_slice(x, (prompt_len - 1, 0), (1, cfg.d_model))
+    normed = ref.rmsnorm_ref(last, weights["final_norm_g"])
+    logits = (normed @ weights["tok_emb"].T)[0]  # [vocab]
+    return logits, k_cache, v_cache
+
+
+def _attn_block_decode(cfg: ModelConfig, x, lw, kc, vc, pos):
+    """Attention sub-block for one token. Returns (x', kc', vc')."""
+    h_q, sx = rmsnorm_quant(x, lw["attn_norm_g"], block_m=1)
+    q = _linear(cfg, h_q, sx, lw["wq_codes"], lw["wq_scale"])  # [1, d]
+    k = _linear(cfg, h_q, sx, lw["wk_codes"], lw["wk_scale"])
+    v = _linear(cfg, h_q, sx, lw["wv_codes"], lw["wv_scale"])
+    pos_arr = pos.reshape(1).astype(jnp.int32)
+    q = ref.rope_ref(_split_heads(q, cfg.n_heads, cfg.head_dim), pos_arr,
+                     cfg.rope_base)  # [H, 1, dh]
+    k = ref.rope_ref(_split_heads(k, cfg.n_heads, cfg.head_dim), pos_arr,
+                     cfg.rope_base)
+    v = _split_heads(v, cfg.n_heads, cfg.head_dim)
+    # Insert this token's K/V at pos, then attend to 0..pos inclusive.
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0))
+    o = decode_attention(
+        q[:, 0, :], kc, vc, pos + 1, block_k=cfg.attn_block
+    )  # [H, dh]
+    o = o.reshape(1, cfg.d_model)
+    o_q, o_sx = ref.quantize_i8(o)
+    out = _linear(cfg, o_q, o_sx, lw["wo_codes"], lw["wo_scale"])
+    return x + out, kc, vc
+
+
+def decode_step(cfg: ModelConfig, weights: Dict[str, jax.Array],
+                token, pos, k_cache, v_cache):
+    """One autoregressive step; see module docstring for the contract."""
+    x = jnp.take(weights["tok_emb"], token[None], axis=0)  # [1, d]
+
+    def step(x, xs):
+        lw, kc, vc = xs
+        x, kc, vc = _attn_block_decode(cfg, x, lw, kc, vc, pos)
+        x = _ffn_block(cfg, x, lw, block_m=1)
+        return x, (kc, vc)
+
+    x, (k_cache, v_cache) = jax.lax.scan(
+        step, x, (_layer_weights(weights), k_cache, v_cache)
+    )
+    normed = ref.rmsnorm_ref(x, weights["final_norm_g"])
+    logits = (normed @ weights["tok_emb"].T)[0]
+    return logits, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# jit-able entry points with flat positional weights (the AOT interface)
+# ---------------------------------------------------------------------------
+
+def make_prefill_fn(cfg: ModelConfig, bucket_len: int):
+    """Returns f(*weights, tokens[i32 L], prompt_len[i32]) -> 3-tuple."""
+    del bucket_len  # shape comes from the example args at lowering time
+
+    def fn(*args):
+        weights = dict(zip(WEIGHT_ORDER, args[: len(WEIGHT_ORDER)]))
+        tokens, prompt_len = args[len(WEIGHT_ORDER):]
+        return prefill(cfg, weights, tokens, prompt_len)
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    """Returns f(*weights, token, pos, k_cache, v_cache) -> 3-tuple."""
+
+    def fn(*args):
+        weights = dict(zip(WEIGHT_ORDER, args[: len(WEIGHT_ORDER)]))
+        token, pos, k_cache, v_cache = args[len(WEIGHT_ORDER):]
+        return decode_step(cfg, weights, token, pos, k_cache, v_cache)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference model (oracle for the whole graph, used by pytest and
+# to generate golden outputs for the Rust integration tests)
+# ---------------------------------------------------------------------------
+
+def reference_forward(cfg: ModelConfig, weights: Dict[str, jax.Array], tokens):
+    """Dense full-sequence forward pass with no Pallas, no KV cache.
+
+    ``tokens`` i32 ``[T]`` (no padding) -> logits f32 ``[T, vocab]``.
+    """
+    positions = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+    x = jnp.take(weights["tok_emb"], tokens, axis=0)
+    for i in range(cfg.n_layers):
+        lw = {n: weights[n][i] for n in PER_LAYER}
+        xq, sx = ref.rmsnorm_quant_ref(x, lw["attn_norm_g"])
+        q = ref.tlmm_ref(xq, sx, lw["wq_codes"], lw["wq_scale"])
+        k = ref.tlmm_ref(xq, sx, lw["wk_codes"], lw["wk_scale"])
+        v = ref.tlmm_ref(xq, sx, lw["wv_codes"], lw["wv_scale"])
+        q = ref.rope_ref(_split_heads(q, cfg.n_heads, cfg.head_dim), positions,
+                         cfg.rope_base)
+        k = ref.rope_ref(_split_heads(k, cfg.n_heads, cfg.head_dim), positions,
+                         cfg.rope_base)
+        v = _split_heads(v, cfg.n_heads, cfg.head_dim)
+        o = _merge_heads(ref.attention_ref(q, k, v, causal=True))
+        oq, osx = ref.quantize_i8(o)
+        x = x + ref.tlmm_ref(oq, osx, lw["wo_codes"], lw["wo_scale"])
+        xq, sx = ref.rmsnorm_quant_ref(x, lw["ffn_norm_g"])
+        gate = ref.tlmm_ref(xq, sx, lw["w1_codes"], lw["w1_scale"])
+        up = ref.tlmm_ref(xq, sx, lw["w3_codes"], lw["w3_scale"])
+        aq, asx = ref.quantize_i8(ref.swiglu_ref(gate, up))
+        x = x + ref.tlmm_ref(aq, asx, lw["w2_codes"], lw["w2_scale"])
+    normed = ref.rmsnorm_ref(x, weights["final_norm_g"])
+    return normed @ weights["tok_emb"].T

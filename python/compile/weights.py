@@ -1,0 +1,135 @@
+"""Synthetic weight generation + the ``weights.bin`` serialization format.
+
+The paper loads real BitNet 0.73B checkpoints; we have no weights (and the
+accelerator's performance does not depend on their values — DESIGN.md §2),
+so ``aot.py`` generates seeded synthetic ternary weights here and dumps them
+in a simple binary format the Rust runtime reads directly. Keeping
+generation + packing on the Python side means the base-3 pack logic exists
+in exactly one place (``kernels/ref.py``) and Rust never re-implements it.
+
+``weights.bin`` layout (all little-endian):
+
+    bytes 0..8    magic b"PDSWAP01"
+    bytes 8..16   u64 header_len
+    bytes 16..16+header_len   JSON header (utf-8):
+        {"config": "<name>", "tensors": [
+            {"name", "shape", "dtype" ("f32"|"u8"|"i32"), "offset", "nbytes"},
+            ...  # in model.WEIGHT_ORDER
+        ]}
+    then raw tensor data; each tensor starts at `offset` bytes past the end
+    of the header, offsets 64-byte aligned, row-major (C) order.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import numpy as np
+
+from .configs import ModelConfig
+from .model import WEIGHT_ORDER, weight_specs
+
+MAGIC = b"PDSWAP01"
+ALIGN = 64
+
+_DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.uint8): "u8",
+                np.dtype(np.int32): "i32"}
+
+
+def _pack_ternary_np(w_t: np.ndarray) -> np.ndarray:
+    """numpy mirror of kernels.ref.pack_ternary (asserted equal in pytest)."""
+    n, k = w_t.shape
+    assert k % 4 == 0
+    digits = (w_t.astype(np.int32) + 1).reshape(n, k // 4, 4)
+    weights = 3 ** np.arange(4, dtype=np.int32)
+    return np.sum(digits * weights, axis=-1).astype(np.uint8)
+
+
+def _ternarize_np(w_f: np.ndarray):
+    """numpy mirror of kernels.ref.ternarize."""
+    sw = max(float(np.mean(np.abs(w_f))), 1e-8)
+    w_t = np.clip(np.round(w_f / sw), -1, 1).astype(np.int8)
+    return w_t, np.float32(sw)
+
+
+def generate(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Seeded synthetic weights for every WEIGHT_ORDER entry.
+
+    Linear weights are gaussians scaled 1/sqrt(fan_in) then BitNet
+    absmean-ternarized; norms start at 1; embeddings are small gaussians.
+    """
+    rng = np.random.RandomState(seed)
+    specs = weight_specs(cfg)
+    out: Dict[str, np.ndarray] = {}
+
+    out["tok_emb"] = (rng.randn(*specs["tok_emb"][0]) * 0.05).astype(np.float32)
+    out["final_norm_g"] = np.ones(specs["final_norm_g"][0], np.float32)
+    out["attn_norm_g"] = np.ones(specs["attn_norm_g"][0], np.float32)
+    out["ffn_norm_g"] = np.ones(specs["ffn_norm_g"][0], np.float32)
+
+    for base in ("wq", "wk", "wv", "wo", "w1", "w3", "w2"):
+        codes_name, scale_name = f"{base}_codes", f"{base}_scale"
+        nl, n, kp = specs[codes_name][0]
+        k = kp * 4
+        codes = np.empty((nl, n, kp), np.uint8)
+        scales = np.empty((nl,), np.float32)
+        for layer in range(nl):
+            w_f = rng.randn(n, k).astype(np.float32) / np.sqrt(k)
+            w_t, sw = _ternarize_np(w_f)
+            codes[layer] = _pack_ternary_np(w_t)
+            scales[layer] = sw
+        out[codes_name] = codes
+        out[scale_name] = scales
+
+    # Shape/dtype sanity against the model's declared specs.
+    for name in WEIGHT_ORDER:
+        shape, dtype = specs[name]
+        assert out[name].shape == tuple(shape), name
+        assert out[name].dtype == np.dtype(dtype), name
+    return out
+
+
+def save(path: str, cfg: ModelConfig, weights: Dict[str, np.ndarray]) -> None:
+    """Serialize weights in WEIGHT_ORDER to ``path`` (format above)."""
+    tensors = []
+    offset = 0
+    for name in WEIGHT_ORDER:
+        arr = np.ascontiguousarray(weights[name])
+        offset = (offset + ALIGN - 1) // ALIGN * ALIGN
+        tensors.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": _DTYPE_NAMES[arr.dtype],
+            "offset": offset,
+            "nbytes": arr.nbytes,
+        })
+        offset += arr.nbytes
+    header = json.dumps({"config": cfg.name, "tensors": tensors}).encode()
+
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(len(header).to_bytes(8, "little"))
+        f.write(header)
+        data_start = f.tell()
+        for name, meta in zip(WEIGHT_ORDER, tensors):
+            f.seek(data_start + meta["offset"])
+            f.write(np.ascontiguousarray(weights[name]).tobytes())
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    """Read a ``weights.bin`` back (used by pytest round-trip checks)."""
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        header_len = int.from_bytes(f.read(8), "little")
+        header = json.loads(f.read(header_len))
+        data_start = f.tell()
+        out = {}
+        np_dtypes = {"f32": np.float32, "u8": np.uint8, "i32": np.int32}
+        for meta in header["tensors"]:
+            f.seek(data_start + meta["offset"])
+            raw = f.read(meta["nbytes"])
+            out[meta["name"]] = np.frombuffer(
+                raw, dtype=np_dtypes[meta["dtype"]]
+            ).reshape(meta["shape"])
+    return out

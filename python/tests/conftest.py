@@ -1,0 +1,26 @@
+"""Shared pytest fixtures for the PD-Swap compile-path tests.
+
+Run from the ``python/`` directory: ``cd python && pytest tests/ -q``.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def test_cfg():
+    from compile.configs import CONFIGS
+
+    return CONFIGS["test"]
+
+
+@pytest.fixture(scope="session")
+def test_weights(test_cfg):
+    from compile import weights as wm
+
+    return wm.generate(test_cfg, seed=0)

@@ -1,0 +1,157 @@
+"""Attention kernels: reverse-scheduled FlashAttention prefill and the
+KV-streaming decode kernel vs the dense oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.decode_attention import decode_attention, hbm_bytes
+from compile.kernels.prefill_attention import prefill_attention
+
+ATOL = 2e-5
+
+
+def make_qkv(rng, h, l, dh):
+    return tuple(
+        jnp.asarray(rng.randn(h, l, dh), jnp.float32) for _ in range(3)
+    )
+
+
+@pytest.mark.parametrize(
+    "h,l,dh,blk",
+    [
+        (1, 8, 8, 4),     # 2 blocks
+        (2, 16, 8, 4),    # 4 blocks, multi-head
+        (4, 8, 32, 8),    # single block (degenerate loop)
+        (2, 32, 16, 8),   # deeper block chain
+        (3, 24, 8, 8),    # non-power-of-two length
+    ],
+)
+def test_prefill_matches_dense_causal(rng, h, l, dh, blk):
+    q, k, v = make_qkv(rng, h, l, dh)
+    got = prefill_attention(q, k, v, block_q=blk, block_k=blk)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_prefill_is_causal(rng):
+    """Mutating future K/V must not change earlier outputs."""
+    h, l, dh, blk = 2, 16, 8, 4
+    q, k, v = make_qkv(rng, h, l, dh)
+    base = np.asarray(prefill_attention(q, k, v, block_q=blk, block_k=blk))
+    k2 = k.at[:, l // 2:, :].set(99.0)
+    v2 = v.at[:, l // 2:, :].set(-99.0)
+    pert = np.asarray(prefill_attention(q, k2, v2, block_q=blk, block_k=blk))
+    np.testing.assert_allclose(
+        base[:, : l // 2], pert[:, : l // 2], atol=ATOL,
+        err_msg="future tokens leaked into past outputs",
+    )
+    assert not np.allclose(base[:, l // 2:], pert[:, l // 2:]), \
+        "sanity: the perturbed region must actually change"
+
+
+def test_prefill_first_token_attends_only_itself(rng):
+    """Row 0 output == V[0] (softmax over a single unmasked score)."""
+    q, k, v = make_qkv(rng, 2, 8, 8)
+    out = np.asarray(prefill_attention(q, k, v, block_q=4, block_k=4))
+    np.testing.assert_allclose(out[:, 0, :], np.asarray(v)[:, 0, :], atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    nblk=st.integers(1, 4),
+    blk=st.sampled_from([4, 8]),
+    dh=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_prefill_hypothesis(h, nblk, blk, dh, seed):
+    r = np.random.RandomState(seed)
+    l = nblk * blk
+    q, k, v = make_qkv(r, h, l, dh)
+    got = prefill_attention(q, k, v, block_q=blk, block_k=blk)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length", [1, 3, 8, 11, 16])
+def test_decode_matches_dense(rng, length):
+    h, lmax, dh, blk = 2, 16, 8, 4
+    kc = jnp.asarray(rng.randn(h, lmax, dh), jnp.float32)
+    vc = jnp.asarray(rng.randn(h, lmax, dh), jnp.float32)
+    q = jnp.asarray(rng.randn(h, dh), jnp.float32)
+    got = decode_attention(q, kc, vc, length, block_k=blk)
+    want = ref.decode_attention_ref(q, kc, vc, length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_decode_ignores_padding_garbage(rng):
+    """Cache rows beyond `length` may hold anything (stale requests,
+    prefill bucket padding) without affecting the output."""
+    h, lmax, dh = 2, 16, 8
+    kc = jnp.asarray(rng.randn(h, lmax, dh), jnp.float32)
+    vc = jnp.asarray(rng.randn(h, lmax, dh), jnp.float32)
+    q = jnp.asarray(rng.randn(h, dh), jnp.float32)
+    length = 5
+    base = np.asarray(decode_attention(q, kc, vc, length, block_k=4))
+    kc2 = kc.at[:, length:, :].set(1e6)
+    vc2 = vc.at[:, length:, :].set(-1e6)
+    pert = np.asarray(decode_attention(q, kc2, vc2, length, block_k=4))
+    np.testing.assert_allclose(base, pert, atol=ATOL)
+
+
+def test_decode_length_one_returns_v0(rng):
+    h, lmax, dh = 3, 8, 8
+    kc = jnp.asarray(rng.randn(h, lmax, dh), jnp.float32)
+    vc = jnp.asarray(rng.randn(h, lmax, dh), jnp.float32)
+    q = jnp.asarray(rng.randn(h, dh), jnp.float32)
+    out = np.asarray(decode_attention(q, kc, vc, 1, block_k=4))
+    np.testing.assert_allclose(out, np.asarray(vc)[:, 0, :], atol=ATOL)
+
+
+def test_decode_agrees_with_prefill_last_row(rng):
+    """Decode at position t-1 == last row of prefill over t tokens."""
+    h, t, dh, blk = 2, 12, 8, 4
+    lmax = 16
+    q, k, v = make_qkv(rng, h, t, dh)
+    pre = np.asarray(prefill_attention(q, k, v, block_q=4, block_k=4))
+
+    kc = jnp.zeros((h, lmax, dh), jnp.float32).at[:, :t, :].set(k)
+    vc = jnp.zeros((h, lmax, dh), jnp.float32).at[:, :t, :].set(v)
+    dec = np.asarray(decode_attention(q[:, t - 1, :], kc, vc, t, block_k=blk))
+    np.testing.assert_allclose(dec, pre[:, t - 1, :], atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    lmax_blk=st.integers(1, 4),
+    blk=st.sampled_from([4, 8]),
+    dh=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_decode_hypothesis(h, lmax_blk, blk, dh, seed):
+    r = np.random.RandomState(seed)
+    lmax = lmax_blk * blk
+    length = r.randint(1, lmax + 1)
+    kc = jnp.asarray(r.randn(h, lmax, dh), jnp.float32)
+    vc = jnp.asarray(r.randn(h, lmax, dh), jnp.float32)
+    q = jnp.asarray(r.randn(h, dh), jnp.float32)
+    got = decode_attention(q, kc, vc, length, block_k=blk)
+    want = ref.decode_attention_ref(q, kc, vc, length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_hbm_traffic_model_is_linear():
+    """The perf-model numerator: KV bytes scale linearly with context."""
+    b1 = hbm_bytes(length=64, dh=64, n_heads=24)
+    b2 = hbm_bytes(length=2048, dh=64, n_heads=24)
+    assert b2 == 32 * b1
+    # BitNet 0.73B at L=2048: 2 * 24 heads * 2048 * 64 * 4B = 24 MiB/step/layer.
+    assert b2 == 2 * 24 * 2048 * 64 * 4

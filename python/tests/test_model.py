@@ -1,0 +1,142 @@
+"""Whole-model consistency: the AOT prefill/decode graphs (Pallas kernels,
+scan over layers, KV caches) against the dense no-cache reference model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import CONFIGS
+from compile.model import (
+    WEIGHT_ORDER,
+    make_decode_fn,
+    make_prefill_fn,
+    reference_forward,
+    weight_specs,
+)
+
+RTOL = 2e-3
+ATOL = 2e-3
+
+
+@pytest.fixture(scope="module")
+def jitted(test_cfg, test_weights):
+    wl = [jnp.asarray(test_weights[n]) for n in WEIGHT_ORDER]
+    return {
+        "w": wl,
+        "wd": {n: jnp.asarray(test_weights[n]) for n in WEIGHT_ORDER},
+        "prefill8": jax.jit(make_prefill_fn(test_cfg, 8)),
+        "prefill16": jax.jit(make_prefill_fn(test_cfg, 16)),
+        "decode": jax.jit(make_decode_fn(test_cfg)),
+    }
+
+
+def pad_prompt(prompt, bucket):
+    t = np.zeros(bucket, np.int32)
+    t[: len(prompt)] = prompt
+    return jnp.asarray(t)
+
+
+def test_prefill_matches_reference(test_cfg, jitted):
+    prompt = [1, 2, 3, 4, 5]
+    logits, _, _ = jitted["prefill8"](
+        *jitted["w"], pad_prompt(prompt, 8), jnp.int32(len(prompt))
+    )
+    want = reference_forward(test_cfg, jitted["wd"], jnp.asarray(prompt, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(want[-1]), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_prefill_bucket_invariance(test_cfg, jitted):
+    """Same prompt through the 8- and 16-token buckets -> same logits."""
+    prompt = [3, 1, 4, 1, 5]
+    l8, k8, v8 = jitted["prefill8"](
+        *jitted["w"], pad_prompt(prompt, 8), jnp.int32(len(prompt))
+    )
+    l16, k16, v16 = jitted["prefill16"](
+        *jitted["w"], pad_prompt(prompt, 16), jnp.int32(len(prompt))
+    )
+    np.testing.assert_allclose(np.asarray(l8), np.asarray(l16), rtol=RTOL, atol=ATOL)
+    # The *valid* cache region must agree too.
+    n = len(prompt)
+    np.testing.assert_allclose(
+        np.asarray(k8)[:, :, :n], np.asarray(k16)[:, :, :n], rtol=RTOL, atol=ATOL
+    )
+    np.testing.assert_allclose(
+        np.asarray(v8)[:, :, :n], np.asarray(v16)[:, :, :n], rtol=RTOL, atol=ATOL
+    )
+
+
+def test_decode_chain_matches_reference(test_cfg, jitted):
+    """Prefill + t decode steps == dense forward of the whole sequence at
+    every step — the fundamental prefill/decode consistency invariant."""
+    prompt = [1, 2, 3, 4, 5]
+    seq = list(prompt)
+    _, kc, vc = jitted["prefill8"](
+        *jitted["w"], pad_prompt(prompt, 8), jnp.int32(len(prompt))
+    )
+    next_tokens = [7, 11, 200, 5]
+    for step, tok in enumerate(next_tokens):
+        pos = len(seq)
+        logits, kc, vc = jitted["decode"](
+            *jitted["w"], jnp.int32(tok), jnp.int32(pos), kc, vc
+        )
+        seq.append(tok)
+        want = reference_forward(test_cfg, jitted["wd"], jnp.asarray(seq, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits),
+            np.asarray(want[-1]),
+            rtol=RTOL,
+            atol=ATOL,
+            err_msg=f"decode step {step} (pos {pos}) diverged",
+        )
+
+
+def test_prompt_len_one(test_cfg, jitted):
+    """Minimal prompt exercises the dynamic_slice at prompt_len-1 == 0."""
+    logits, _, _ = jitted["prefill8"](
+        *jitted["w"], pad_prompt([9], 8), jnp.int32(1)
+    )
+    want = reference_forward(test_cfg, jitted["wd"], jnp.asarray([9], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(want[-1]), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_padding_tokens_do_not_leak(test_cfg, jitted):
+    """Changing the *padding* region of the bucket must not change logits."""
+    prompt = [1, 2, 3]
+    a = jitted["prefill8"](*jitted["w"], pad_prompt(prompt, 8), jnp.int32(3))[0]
+    padded = np.full(8, 77, np.int32)
+    padded[:3] = prompt
+    b = jitted["prefill8"](*jitted["w"], jnp.asarray(padded), jnp.int32(3))[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_weight_specs_cover_order(test_cfg):
+    specs = weight_specs(test_cfg)
+    assert set(specs) == set(WEIGHT_ORDER)
+    # Pack axis: every codes tensor's last dim is K//4 for its matmul.
+    d, dff = test_cfg.d_model, test_cfg.d_ff
+    assert specs["wq_codes"][0][-1] == d // 4
+    assert specs["w2_codes"][0][-1] == dff // 4
+    assert specs["w1_codes"][0][1] == dff
+
+
+def test_full_cache_decode(test_cfg, jitted):
+    """Decode at the last cache slot (pos = max_seq - 1) works."""
+    prompt = list(range(1, 9))
+    _, kc, vc = jitted["prefill8"](
+        *jitted["w"], pad_prompt(prompt, 8), jnp.int32(8)
+    )
+    pos = 8
+    tok = 1
+    # walk the cache to the end
+    while pos < test_cfg.max_seq:
+        logits, kc, vc = jitted["decode"](
+            *jitted["w"], jnp.int32(tok), jnp.int32(pos), kc, vc
+        )
+        tok = int(jnp.argmax(logits))
+        pos += 1
+    assert np.isfinite(np.asarray(logits)).all()

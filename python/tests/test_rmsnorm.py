@@ -1,0 +1,118 @@
+"""Fused RMSNorm+quant kernel vs oracle, plus RoPE/SwiGLU element-wise
+properties (they live in the static region of the paper's design)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rmsnorm import rmsnorm_quant
+
+
+@pytest.mark.parametrize("m,d,bm", [(4, 32, 4), (16, 128, 8), (1, 64, 1), (12, 32, 4)])
+def test_rmsnorm_quant_matches_ref(rng, m, d, bm):
+    x = jnp.asarray(rng.randn(m, d) * 3.0, jnp.float32)
+    g = jnp.asarray(rng.randn(d), jnp.float32)
+    q_got, s_got = rmsnorm_quant(x, g, block_m=bm)
+    q_want, s_want = ref.rmsnorm_quant_ref(x, g)
+    np.testing.assert_array_equal(np.asarray(q_got), np.asarray(q_want))
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want), rtol=1e-6)
+
+
+def test_rmsnorm_output_is_unit_rms(rng):
+    x = jnp.asarray(rng.randn(8, 256) * 5.0, jnp.float32)
+    g = jnp.ones(256, jnp.float32)
+    normed = ref.rmsnorm_ref(x, g)
+    rms = np.sqrt(np.mean(np.square(np.asarray(normed)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_quant_range_and_reconstruction(rng):
+    x = jnp.asarray(rng.randn(16, 64) * 10.0, jnp.float32)
+    q, s = ref.quantize_i8(x)
+    qa = np.asarray(q, np.int32)
+    assert qa.max() <= 127 and qa.min() >= -127
+    # per-token absmax hits full scale
+    assert (np.abs(qa).max(axis=1) == 127).all()
+    recon = qa * np.asarray(s)
+    err = np.abs(recon - np.asarray(x)).max()
+    scale = np.abs(np.asarray(x)).max()
+    assert err <= scale / 127.0 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([8, 32, 128]),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_rmsnorm_hypothesis(m, d, scale, seed):
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(m, d) * scale, jnp.float32)
+    g = jnp.asarray(r.randn(d), jnp.float32)
+    q_got, s_got = rmsnorm_quant(x, g, block_m=max(1, m // 2))
+    q_want, s_want = ref.rmsnorm_quant_ref(x, g)
+    # int8 rounding at the exact .5 boundary can differ by 1 ulp between
+    # the fused and the reference path after rsqrt reassociation.
+    diff = np.abs(
+        np.asarray(q_got, np.int32) - np.asarray(q_want, np.int32)
+    ).max()
+    assert diff <= 1
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RoPE + SwiGLU properties
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_pair_norms(rng):
+    """RoPE is a rotation in each (x1, x2) plane: per-pair norms invariant."""
+    h, l, dh = 2, 8, 16
+    x = jnp.asarray(rng.randn(h, l, dh), jnp.float32)
+    pos = jnp.arange(l, dtype=jnp.int32)
+    y = np.asarray(ref.rope_ref(x, pos))
+    xa = np.asarray(x)
+    half = dh // 2
+    n_x = xa[..., :half] ** 2 + xa[..., half:] ** 2
+    n_y = y[..., :half] ** 2 + y[..., half:] ** 2
+    np.testing.assert_allclose(n_x, n_y, rtol=1e-4)
+
+
+def test_rope_position_zero_is_identity(rng):
+    x = jnp.asarray(rng.randn(2, 1, 8), jnp.float32)
+    y = ref.rope_ref(x, jnp.zeros(1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_rope_relative_phase(rng):
+    """Dot products under RoPE depend only on relative position:
+    <rope(q,m), rope(k,n)> == <rope(q,m+d), rope(k,n+d)>."""
+    dh = 16
+    q = jnp.asarray(rng.randn(1, 1, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 1, dh), jnp.float32)
+
+    def dot(m, n):
+        qm = ref.rope_ref(q, jnp.asarray([m], jnp.int32))
+        kn = ref.rope_ref(k, jnp.asarray([n], jnp.int32))
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot(3, 7) - dot(13, 17)) < 1e-3
+    assert abs(dot(0, 5) - dot(20, 25)) < 1e-3
+
+
+def test_swiglu_properties(rng):
+    gate = jnp.asarray(rng.randn(8, 16), jnp.float32)
+    up = jnp.asarray(rng.randn(8, 16), jnp.float32)
+    y = np.asarray(ref.swiglu_ref(gate, up))
+    # silu(0) = 0 -> zero gate kills the output
+    y0 = np.asarray(ref.swiglu_ref(jnp.zeros_like(gate), up))
+    np.testing.assert_allclose(y0, 0.0, atol=1e-7)
+    # large positive gate ~ identity * up
+    yb = np.asarray(ref.swiglu_ref(jnp.full_like(gate, 20.0), up))
+    np.testing.assert_allclose(yb, 20.0 * np.asarray(up), rtol=1e-4)
+    # silu is bounded below by ~ -0.2785
+    s = np.asarray(ref.silu_ref(jnp.linspace(-50, 50, 1001)))
+    assert s.min() > -0.2786
+    assert y.shape == (8, 16)

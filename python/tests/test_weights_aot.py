@@ -1,0 +1,110 @@
+"""Weight generation/serialization and the AOT artifact contract."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import weights as wm
+from compile.aot import lower_prefill, make_manifest
+from compile.configs import CONFIGS
+from compile.kernels import ref
+from compile.model import WEIGHT_ORDER, weight_specs
+
+
+def test_numpy_pack_matches_jax_pack(rng):
+    w = (rng.randint(0, 3, size=(12, 40)) - 1).astype(np.int8)
+    np.testing.assert_array_equal(
+        wm._pack_ternary_np(w), np.asarray(ref.pack_ternary(jnp.asarray(w)))
+    )
+
+
+def test_numpy_ternarize_matches_jax(rng):
+    w = rng.randn(16, 32).astype(np.float32)
+    wt_np, sw_np = wm._ternarize_np(w)
+    wt_j, sw_j = ref.ternarize(jnp.asarray(w))
+    np.testing.assert_array_equal(wt_np, np.asarray(wt_j))
+    assert abs(sw_np - float(sw_j)) < 1e-6
+
+
+def test_generate_is_deterministic(test_cfg):
+    a = wm.generate(test_cfg, seed=7)
+    b = wm.generate(test_cfg, seed=7)
+    c = wm.generate(test_cfg, seed=8)
+    for n in WEIGHT_ORDER:
+        np.testing.assert_array_equal(a[n], b[n])
+    assert any(not np.array_equal(a[n], c[n]) for n in WEIGHT_ORDER)
+
+
+def test_generate_matches_specs(test_cfg, test_weights):
+    specs = weight_specs(test_cfg)
+    for n in WEIGHT_ORDER:
+        shape, dtype = specs[n]
+        assert test_weights[n].shape == tuple(shape)
+        assert test_weights[n].dtype == np.dtype(dtype)
+    # codes are valid base-3 packs
+    assert test_weights["wq_codes"].max() < 81
+
+
+def test_save_load_roundtrip(tmp_path, test_cfg, test_weights):
+    path = str(tmp_path / "weights.bin")
+    wm.save(path, test_cfg, test_weights)
+    loaded = wm.load(path)
+    assert list(loaded) == WEIGHT_ORDER  # order preserved
+    for n in WEIGHT_ORDER:
+        np.testing.assert_array_equal(loaded[n], test_weights[n])
+    # alignment contract
+    with open(path, "rb") as f:
+        assert f.read(8) == wm.MAGIC
+        hlen = int.from_bytes(f.read(8), "little")
+        header = json.loads(f.read(hlen))
+    for t in header["tensors"]:
+        assert t["offset"] % wm.ALIGN == 0
+
+
+def test_manifest_contents(test_cfg):
+    m = make_manifest(test_cfg, golden=True)
+    assert m["format_version"] == 1
+    assert [t["name"] for t in m["weight_order"]] == WEIGHT_ORDER
+    assert m["entrypoints"]["decode"] == "decode.hlo.txt"
+    assert [e["bucket"] for e in m["entrypoints"]["prefill"]] == \
+        test_cfg.prefill_buckets
+    assert m["io"]["cache_shape"] == [
+        test_cfg.n_layers, test_cfg.n_heads, test_cfg.max_seq,
+        test_cfg.head_dim,
+    ]
+    assert m["golden"] == "golden.json"
+    assert make_manifest(test_cfg, golden=False)["golden"] is None
+
+
+def test_lowering_produces_hlo_text(test_cfg):
+    text = lower_prefill(test_cfg, test_cfg.prefill_buckets[0])
+    assert text.startswith("HloModule")
+    # All weights + tokens + prompt_len appear as ENTRY parameters (nested
+    # computations have their own parameter() lists, so scope the count).
+    entry = text[text.index("ENTRY "):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(WEIGHT_ORDER) + 2, f"got {n_params} parameters"
+    # Tuple-rooted (the Rust side unwraps a 3-tuple).
+    assert "tuple(" in text
+
+
+def test_emitted_artifacts_if_present():
+    """Validate the on-disk artifacts when `make artifacts` already ran."""
+    adir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "test")
+    if not os.path.isdir(adir):
+        pytest.skip("artifacts/test not built")
+    with open(os.path.join(adir, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["config"]["name"] == "test"
+    for e in m["entrypoints"]["prefill"]:
+        assert os.path.exists(os.path.join(adir, e["file"]))
+    assert os.path.exists(os.path.join(adir, m["entrypoints"]["decode"]))
+    loaded = wm.load(os.path.join(adir, m["weights_file"]))
+    assert list(loaded) == WEIGHT_ORDER
+    if m["golden"]:
+        with open(os.path.join(adir, m["golden"])) as f:
+            g = json.load(f)
+        assert len(g["generated"]) == g["n_gen"] > 0

@@ -1,0 +1,232 @@
+//! Table 1 rows: cross-platform + FPGA baselines.
+//!
+//! Literature rows carry the paper's published numbers; the PD-Swap and
+//! TeLLMe rows are *computed* from our simulator so the table is a live
+//! output, not a transcription (the test pins computed-vs-paper agreement).
+
+use crate::engines::PhaseModel;
+use crate::fpga::{ResourceVec, KV260};
+use crate::model::BITNET_0_73B;
+
+/// One row of Table 1.
+#[derive(Debug, Clone)]
+pub struct PlatformRow {
+    pub work: &'static str,
+    pub platform: &'static str,
+    pub processor: &'static str,
+    pub model: &'static str,
+    pub bitwidth: &'static str,
+    /// FPGA resource utilization (None for non-FPGA platforms).
+    pub resources: Option<ResourceVec>,
+    pub power_w: f64,
+    /// WikiText-2 perplexity (model quality; unchanged by the accelerator).
+    pub wt2_ppl: f64,
+    /// Prefill throughput (tokens/s).
+    pub prefill_tks: f64,
+    /// Decode throughput (tokens/s).
+    pub decode_tks: f64,
+}
+
+impl PlatformRow {
+    /// Energy efficiency in tokens/J.
+    pub fn prefill_tkj(&self) -> f64 {
+        self.prefill_tks / self.power_w
+    }
+    pub fn decode_tkj(&self) -> f64 {
+        self.decode_tks / self.power_w
+    }
+}
+
+/// Literature rows of Table 1 (published numbers, reproduced verbatim).
+pub const TABLE1_ROWS: &[PlatformRow] = &[
+    PlatformRow {
+        work: "Raspberry Pi 5 [19]",
+        platform: "SoC",
+        processor: "4x Cortex-A76",
+        model: "Qwen 0.6B",
+        bitwidth: "W4-A16",
+        resources: None,
+        power_w: 7.8,
+        wt2_ppl: 24.00,
+        prefill_tks: 61.8,
+        decode_tks: 16.6,
+    },
+    PlatformRow {
+        work: "Jetson Orin Nano [20]",
+        platform: "GPU SoC",
+        processor: "8x GPU SM",
+        model: "TinyLLaMA 1.1B",
+        bitwidth: "W4-A16",
+        resources: None,
+        power_w: 25.0,
+        wt2_ppl: 12.42,
+        prefill_tks: 324.9,
+        decode_tks: 67.6,
+    },
+    PlatformRow {
+        work: "LLaMAF [21]",
+        platform: "FPGA SoC",
+        processor: "ZCU102",
+        model: "TinyLLaMA 1.1B",
+        bitwidth: "W8-A8",
+        resources: Some(ResourceVec {
+            lut: 150_000.0,
+            ff: 171_000.0,
+            bram36: 223.0,
+            uram: 0.0,
+            dsp: 528.0,
+        }),
+        power_w: 5.1,
+        wt2_ppl: 8.89,
+        prefill_tks: 100.0,
+        decode_tks: 1.5,
+    },
+    PlatformRow {
+        work: "MEADOW [1]",
+        platform: "FPGA SoC",
+        processor: "ZCU102",
+        model: "OPT 1.3B",
+        bitwidth: "W8-A8",
+        resources: Some(ResourceVec {
+            lut: 0.0, // not reported
+            ff: 0.0,
+            bram36: 2034.0 / 2.0, // paper reports BRAM18 count
+            uram: 0.0,
+            dsp: 845.0,
+        }),
+        power_w: 10.0,
+        wt2_ppl: 15.41,
+        prefill_tks: 143.0,
+        decode_tks: 2.0,
+    },
+];
+
+/// The paper's expected PD-Swap row (for agreement checks in tests).
+pub const PAPER_PDSWAP: (f64, f64, f64) = (4.9, 148.0, 27.8); // (W, prefill, decode)
+/// The paper's TeLLMe row.
+pub const PAPER_TELLME: (f64, f64, f64) = (4.8, 143.0, 25.0);
+
+/// Short-context decode length used for the Table 1 throughput column
+/// (Table 1 reports best-case/short-context decode).
+pub const TABLE1_DECODE_CTX: usize = 64;
+/// Prefill length for the prefill-throughput column.
+pub const TABLE1_PREFILL_CTX: usize = 128;
+
+fn computed_row(
+    work: &'static str,
+    model: PhaseModel,
+    power_w: f64,
+    resources: ResourceVec,
+) -> PlatformRow {
+    let shape = BITNET_0_73B;
+    let prefill = model.prefill(&shape, TABLE1_PREFILL_CTX);
+    let prefill_tks = TABLE1_PREFILL_CTX as f64 / prefill.total;
+    let decode_tks = model.decode_throughput(&shape, TABLE1_DECODE_CTX);
+    PlatformRow {
+        work,
+        platform: "FPGA SoC",
+        processor: "KV260",
+        model: "BitNet 0.73B",
+        bitwidth: "W1.58-A8",
+        resources: Some(resources),
+        power_w,
+        wt2_ppl: 12.79, // property of the BitNet checkpoint, not the system
+        prefill_tks,
+        decode_tks,
+    }
+}
+
+/// PD-Swap row, computed live from the simulator.
+pub fn pd_swap_row() -> PlatformRow {
+    let design = crate::engines::AcceleratorDesign::pd_swap();
+    let plan = design.region_plan().expect("pd-swap floorplans");
+    let total = plan.static_region.total() + plan.rp.pblock;
+    computed_row(
+        "PD-Swap (ours, simulated)",
+        PhaseModel::new(design, KV260.clone()),
+        4.9,
+        total,
+    )
+}
+
+/// TeLLMe row, computed from the same engine family statically hosted.
+pub fn tellme_row() -> PlatformRow {
+    let design = crate::engines::AcceleratorDesign::tellme_static();
+    let total = design.static_region().total();
+    computed_row(
+        "TeLLMe [10] (simulated)",
+        PhaseModel::new(design, KV260.clone()),
+        4.8,
+        total,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn computed_rows_match_paper() {
+        let pd = pd_swap_row();
+        let (w, pre, dec) = PAPER_PDSWAP;
+        assert_eq!(pd.power_w, w);
+        // Short-context decode: 27.8 tok/s claimed.
+        assert!(
+            (dec * 0.93..=dec * 1.07).contains(&pd.decode_tks),
+            "decode {:.1} vs paper {dec}",
+            pd.decode_tks
+        );
+        // Prefill throughput at L=128 lands under the projection-rate
+        // asymptote (148): allow a wide band because TTFT includes the
+        // attention+weights terms at short L.
+        assert!(
+            (0.5 * pre..=1.1 * pre).contains(&pd.prefill_tks),
+            "prefill {:.1} vs paper {pre}",
+            pd.prefill_tks
+        );
+
+        let te = tellme_row();
+        let (_, _, dec_te) = PAPER_TELLME;
+        assert!(
+            (dec_te * 0.93..=dec_te * 1.07).contains(&te.decode_tks),
+            "tellme decode {:.1} vs paper {dec_te}",
+            te.decode_tks
+        );
+    }
+
+    #[test]
+    fn energy_efficiency_ordering() {
+        // The FPGA designs beat the Jetson/Pi on decode tokens/J (Table 1's
+        // qualitative claim).
+        let pd = pd_swap_row();
+        for row in TABLE1_ROWS {
+            if row.platform != "FPGA SoC" {
+                assert!(
+                    pd.decode_tkj() > row.decode_tkj(),
+                    "PD-Swap {:.2} TK/J should beat {} {:.2}",
+                    pd.decode_tkj(),
+                    row.work,
+                    row.decode_tkj()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pd_beats_tellme_on_both_axes() {
+        let pd = pd_swap_row();
+        let te = tellme_row();
+        assert!(pd.decode_tks > te.decode_tks);
+        assert!(pd.prefill_tks > te.prefill_tks);
+        assert!(pd.decode_tkj() > te.decode_tkj());
+    }
+
+    #[test]
+    fn literature_rows_expose_published_values() {
+        assert_eq!(TABLE1_ROWS.len(), 4);
+        let jetson = &TABLE1_ROWS[1];
+        assert!((jetson.decode_tkj() - 2.70).abs() < 0.05);
+        let pi = &TABLE1_ROWS[0];
+        assert!((pi.decode_tkj() - 2.13).abs() < 0.05);
+    }
+}

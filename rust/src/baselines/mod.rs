@@ -1,0 +1,18 @@
+//! Baseline systems for the paper's comparisons (Table 1, Fig. 6).
+//!
+//! Two kinds:
+//!
+//! * **TeLLMe (static)** — the head-to-head baseline: same board, same
+//!   model, same engine family, but both attention engines resident and
+//!   compromised. Built from our own engine models
+//!   ([`crate::engines::AcceleratorDesign::tellme_static`]) so the Fig. 6
+//!   comparison is a true ablation of DPR, not a curve transplant.
+//! * **Cross-platform rows** ([`cross_platform`]) — Raspberry Pi 5, Jetson
+//!   Orin Nano, LLaMAF, MEADOW: published numbers from Table 1 plus simple
+//!   analytic throughput/energy models used for sanity checks (these
+//!   platforms are not simulated at the microarchitecture level; the
+//!   rows are reproduced, not re-derived — EXPERIMENTS.md flags this).
+
+pub mod cross_platform;
+
+pub use cross_platform::{PlatformRow, TABLE1_ROWS, pd_swap_row, tellme_row};

@@ -1,0 +1,191 @@
+//! Phase state machine for the PD-Swap controller.
+//!
+//! Encodes §3.2.1/§3.4 as checked transitions:
+//!
+//! ```text
+//!        ┌───────────┐ prefill_done(trigger swap) ┌──────────┐
+//! Idle ─▶│  Prefill  │───────────────────────────▶│ Swapping │
+//!   ▲    └───────────┘                            └────┬─────┘
+//!   │          ▲                                       │ swap_done
+//!   │          │ next request (swap back to prefill)   ▼
+//!   │    ┌─────┴─────┐◀──────────────────────────┌──────────┐
+//!   └────│ (Swapping)│        request_done       │  Decode  │
+//!        └───────────┘◀──────────────────────────└──────────┘
+//! ```
+//!
+//! Illegal transitions (decode before the swap completes, prefill while
+//! decoding, ...) are hard errors — the property tests drive random event
+//! sequences at this to show the §3.4 correctness rule can't be violated.
+
+use thiserror::Error;
+
+/// Coordinator phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Idle,
+    Prefill,
+    /// Partial reconfiguration in flight; payload = target phase.
+    Swapping {
+        to_decode: bool,
+    },
+    Decode,
+}
+
+/// FSM violation.
+#[derive(Debug, Error, PartialEq)]
+pub enum FsmError {
+    #[error("cannot {event} while in {phase:?}")]
+    IllegalTransition { event: &'static str, phase: Phase },
+    #[error("decode admission before swap completion (§3.4 violation)")]
+    DecodeBeforeSwapDone,
+}
+
+/// The phase FSM with swap-completion bookkeeping.
+#[derive(Debug, Clone)]
+pub struct PhaseFsm {
+    phase: Phase,
+    /// Simulation/wall time at which the in-flight swap completes.
+    swap_done_at: f64,
+    /// Telemetry: number of swaps performed.
+    pub swaps: u64,
+}
+
+impl Default for PhaseFsm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseFsm {
+    pub fn new() -> Self {
+        Self { phase: Phase::Idle, swap_done_at: 0.0, swaps: 0 }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Admit a request: Idle -> Prefill (the prefill RM must already be
+    /// live — on a cold device call `begin_swap(to_decode=false)` first).
+    pub fn begin_prefill(&mut self) -> Result<(), FsmError> {
+        match self.phase {
+            Phase::Idle => {
+                self.phase = Phase::Prefill;
+                Ok(())
+            }
+            p => Err(FsmError::IllegalTransition { event: "begin_prefill", phase: p }),
+        }
+    }
+
+    /// Start a partial reconfiguration completing at `done_at`.
+    /// Legal from Idle (cold load), Prefill (the §3.4 early trigger — the
+    /// prefill *tail* keeps running in the static region), or Decode
+    /// (swap back for the next request).
+    pub fn begin_swap(&mut self, to_decode: bool, done_at: f64) -> Result<(), FsmError> {
+        match self.phase {
+            Phase::Idle | Phase::Prefill | Phase::Decode => {
+                self.phase = Phase::Swapping { to_decode };
+                self.swap_done_at = done_at;
+                self.swaps += 1;
+                Ok(())
+            }
+            p @ Phase::Swapping { .. } => {
+                Err(FsmError::IllegalTransition { event: "begin_swap", phase: p })
+            }
+        }
+    }
+
+    /// Complete the swap at time `now`. Errors if the PCAP hasn't finished.
+    pub fn complete_swap(&mut self, now: f64) -> Result<Phase, FsmError> {
+        match self.phase {
+            Phase::Swapping { to_decode } => {
+                if now + 1e-12 < self.swap_done_at {
+                    return Err(FsmError::DecodeBeforeSwapDone);
+                }
+                self.phase = if to_decode { Phase::Decode } else { Phase::Idle };
+                Ok(self.phase)
+            }
+            p => Err(FsmError::IllegalTransition { event: "complete_swap", phase: p }),
+        }
+    }
+
+    /// Finish decoding a request: Decode -> Idle.
+    pub fn finish_request(&mut self) -> Result<(), FsmError> {
+        match self.phase {
+            Phase::Decode => {
+                self.phase = Phase::Idle;
+                Ok(())
+            }
+            p => Err(FsmError::IllegalTransition { event: "finish_request", phase: p }),
+        }
+    }
+
+    /// Can decode work be admitted right now?
+    pub fn decode_admissible(&self, now: f64) -> bool {
+        match self.phase {
+            Phase::Decode => true,
+            Phase::Swapping { to_decode: true } => now + 1e-12 >= self.swap_done_at,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path() {
+        let mut f = PhaseFsm::new();
+        // Cold load of the prefill RM.
+        f.begin_swap(false, 0.045).unwrap();
+        f.complete_swap(0.045).unwrap();
+        f.begin_prefill().unwrap();
+        // §3.4 early trigger while the tail runs.
+        f.begin_swap(true, 1.045).unwrap();
+        assert!(!f.decode_admissible(1.0));
+        f.complete_swap(1.05).unwrap();
+        assert_eq!(f.phase(), Phase::Decode);
+        assert!(f.decode_admissible(1.05));
+        f.finish_request().unwrap();
+        assert_eq!(f.phase(), Phase::Idle);
+        assert_eq!(f.swaps, 2);
+    }
+
+    #[test]
+    fn decode_before_swap_completion_is_rejected() {
+        let mut f = PhaseFsm::new();
+        f.begin_prefill().unwrap();
+        f.begin_swap(true, 10.0).unwrap();
+        assert_eq!(f.complete_swap(9.0).unwrap_err(), FsmError::DecodeBeforeSwapDone);
+        assert!(!f.decode_admissible(9.0));
+        // Completing on time works.
+        f.complete_swap(10.0).unwrap();
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut f = PhaseFsm::new();
+        assert!(f.finish_request().is_err());
+        assert!(f.complete_swap(0.0).is_err());
+        f.begin_prefill().unwrap();
+        assert!(f.begin_prefill().is_err());
+        f.begin_swap(true, 1.0).unwrap();
+        assert!(f.begin_swap(true, 2.0).is_err(), "PCAP is serial");
+        assert!(f.begin_prefill().is_err());
+    }
+
+    #[test]
+    fn swap_back_to_prefill_from_decode() {
+        let mut f = PhaseFsm::new();
+        f.begin_swap(false, 0.0).unwrap();
+        f.complete_swap(0.0).unwrap();
+        f.begin_prefill().unwrap();
+        f.begin_swap(true, 0.1).unwrap();
+        f.complete_swap(0.1).unwrap();
+        // Next request arrives: swap back while still in Decode.
+        f.begin_swap(false, 0.2).unwrap();
+        assert_eq!(f.complete_swap(0.2).unwrap(), Phase::Idle);
+        f.begin_prefill().unwrap();
+    }
+}

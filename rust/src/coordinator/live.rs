@@ -1,0 +1,158 @@
+//! The live coordinator: same scheduling/FSM logic, but the compute is
+//! *real* — every prefill and decode step executes the AOT HLO artifacts
+//! through PJRT ([`crate::runtime::InferenceEngine`]).
+//!
+//! Two clocks run in lockstep:
+//!
+//! * **wall clock** — actual CPU time of the PJRT executions (reported as
+//!   "host" numbers; this is NOT a KV260 measurement);
+//! * **simulated clock** — what the same token trace would cost on the
+//!   modeled KV260 with PD-Swap (reconfigurations included), so the live
+//!   example reports paper-comparable numbers next to real tokens.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engines::PhaseModel;
+use crate::metrics::ServerMetrics;
+use crate::model::{shapes, ModelShape};
+use crate::reconfig::OverlapScheduler;
+use crate::runtime::{sample, InferenceEngine, SamplerConfig};
+use crate::util::rng::Rng;
+
+use super::request::{Request, RequestOutcome};
+
+/// Live server configuration.
+pub struct LiveServerConfig {
+    /// Artifact directory (e.g. `artifacts/e2e-100m`).
+    pub artifacts_dir: std::path::PathBuf,
+    pub sampler: SamplerConfig,
+    pub seed: u64,
+    /// Attach the KV260 simulator in lockstep (reports simulated timing).
+    pub simulate_fpga: bool,
+}
+
+/// Live serving results for one request.
+#[derive(Debug, Clone)]
+pub struct LiveOutcome {
+    pub outcome: RequestOutcome,
+    /// Simulated KV260 TTFT / e2e for the same trace (if enabled).
+    pub sim_ttft: Option<f64>,
+    pub sim_e2e: Option<f64>,
+}
+
+/// PJRT-backed server.
+pub struct LiveServer {
+    pub engine: InferenceEngine,
+    sampler: SamplerConfig,
+    rng: Rng,
+    sim: Option<(PhaseModel, OverlapScheduler, ModelShape)>,
+    /// Wall-clock metrics (host CPU).
+    pub metrics: ServerMetrics,
+    /// Simulated-KV260 metrics (if enabled).
+    pub sim_metrics: ServerMetrics,
+}
+
+impl LiveServer {
+    pub fn new(cfg: LiveServerConfig) -> Result<Self> {
+        let engine = InferenceEngine::load(&cfg.artifacts_dir)?;
+        let sim = if cfg.simulate_fpga {
+            let name = engine.manifest().config.name.clone();
+            let shape = shapes::by_name(&name)
+                .unwrap_or(crate::model::BITNET_0_73B);
+            let design = crate::engines::AcceleratorDesign::pd_swap();
+            let device = crate::fpga::KV260.clone();
+            let fpga = design.program(&device)?;
+            let model = PhaseModel::new(design, device);
+            let ov = OverlapScheduler::new(model.clone(), fpga.reconfig_latency());
+            Some((model, ov, shape))
+        } else {
+            None
+        };
+        Ok(Self {
+            engine,
+            sampler: cfg.sampler,
+            rng: Rng::new(cfg.seed),
+            sim,
+            metrics: ServerMetrics::default(),
+            sim_metrics: ServerMetrics::default(),
+        })
+    }
+
+    /// Serve one request to completion (real tokens out).
+    pub fn serve(&mut self, r: &Request) -> Result<LiveOutcome> {
+        anyhow::ensure!(!r.prompt.is_empty(), "live requests need real tokens");
+        let t0 = Instant::now();
+
+        // Prefill (real).
+        let pre = self.engine.prefill(&r.prompt)?;
+        let mut cache = pre.cache;
+        let mut tok = sample(&pre.logits, &self.sampler, &mut self.rng);
+        let ttft = t0.elapsed().as_secs_f64();
+
+        // Decode (real).
+        let mut generated = Vec::with_capacity(r.max_new_tokens);
+        let decode_start = Instant::now();
+        for _ in 0..r.max_new_tokens {
+            generated.push(tok);
+            if !cache.has_room() {
+                break;
+            }
+            let step0 = Instant::now();
+            let (logits, c) = self.engine.decode(tok, cache)?;
+            cache = c;
+            tok = sample(&logits, &self.sampler, &mut self.rng);
+            self.metrics.tpot.record(step0.elapsed().as_secs_f64());
+        }
+        let e2e = t0.elapsed().as_secs_f64();
+        let n = generated.len();
+
+        self.metrics.ttft.record(ttft);
+        self.metrics.e2e.record(e2e);
+        self.metrics.tokens_generated.add(n as u64);
+        self.metrics.requests_completed.inc();
+
+        // Simulated-KV260 lockstep accounting for the same trace.
+        let (sim_ttft, sim_e2e) = if let Some((model, ov, shape)) = &self.sim {
+            let timeline = ov.overlapped(shape, r.prompt_len.min(shape.max_seq));
+            let s_ttft = timeline.prefill_end + timeline.exposed;
+            let gen = n.min(shape.max_seq.saturating_sub(r.prompt_len));
+            let s_dec = model.decode_span(shape, r.prompt_len.min(shape.max_seq), gen);
+            self.sim_metrics.ttft.record(s_ttft);
+            self.sim_metrics.e2e.record(s_ttft + s_dec);
+            self.sim_metrics.reconfig_exposed.record(timeline.exposed);
+            self.sim_metrics.reconfigurations.add(2);
+            self.sim_metrics.tokens_generated.add(gen as u64);
+            self.sim_metrics.requests_completed.inc();
+            if gen > 0 {
+                self.sim_metrics.tpot.record(s_dec / gen as f64);
+            }
+            (Some(s_ttft), Some(s_ttft + s_dec))
+        } else {
+            (None, None)
+        };
+
+        Ok(LiveOutcome {
+            outcome: RequestOutcome {
+                id: r.id,
+                prompt_len: r.prompt_len,
+                generated,
+                ttft,
+                e2e,
+                mean_tpot: if n > 0 {
+                    decode_start.elapsed().as_secs_f64() / n as f64
+                } else {
+                    0.0
+                },
+            },
+            sim_ttft,
+            sim_e2e,
+        })
+    }
+
+    /// Serve a workload sequentially (edge profile: one request at a time).
+    pub fn run(&mut self, workload: &[Request]) -> Result<Vec<LiveOutcome>> {
+        workload.iter().map(|r| self.serve(r)).collect()
+    }
+}

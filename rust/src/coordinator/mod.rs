@@ -1,0 +1,29 @@
+//! The inference coordinator — the paper's PS-side "global inference
+//! controller" (§3.2.1), generalized into a small serving runtime.
+//!
+//! * [`request`] — request/response types + the synthetic workload
+//!   generator (Poisson arrivals, edge-profile prompt/generation lengths).
+//! * [`fsm`] — the phase state machine: `Idle → Prefill → Swapping →
+//!   Decode → ...`, enforcing the §3.4 safety rule (no decode until the
+//!   decode RM is fully loaded) as a type-level protocol.
+//! * [`scheduler`] — admission + batching policies. `SwapPerRequest` is
+//!   the paper's flow; `BatchedPhases` amortizes one swap over a queue of
+//!   requests (our extension for the multi-request edge scenario §3.4
+//!   worries about).
+//! * [`sim_server`] — event-driven serving simulation on the KV260 model:
+//!   every figure in the paper's evaluation is a query against this.
+//! * [`live`] — the same coordinator logic driving *real* PJRT execution
+//!   of the AOT artifacts (tokens are real; FPGA timing is reported from
+//!   the simulator running in lockstep).
+
+pub mod fsm;
+pub mod live;
+pub mod request;
+pub mod scheduler;
+pub mod sim_server;
+
+pub use fsm::{Phase, PhaseFsm};
+pub use live::{LiveServer, LiveServerConfig};
+pub use request::{Request, RequestOutcome, WorkloadConfig, generate_workload};
+pub use scheduler::{Policy, Scheduler};
+pub use sim_server::{SimServer, SimServerConfig};

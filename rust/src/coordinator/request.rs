@@ -1,0 +1,144 @@
+//! Request/response types and the synthetic edge workload generator.
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids. For simulator-only runs this may be empty with
+    /// `prompt_len` carrying the length; the live server requires tokens.
+    pub prompt: Vec<i32>,
+    pub prompt_len: usize,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+    /// Arrival time (seconds since workload start).
+    pub arrival: f64,
+}
+
+impl Request {
+    /// Simulator-side request (length only).
+    pub fn synthetic(id: u64, prompt_len: usize, max_new_tokens: usize, arrival: f64) -> Self {
+        Self { id, prompt: Vec::new(), prompt_len, max_new_tokens, arrival }
+    }
+
+    /// Live request with real token ids.
+    pub fn with_tokens(id: u64, prompt: Vec<i32>, max_new_tokens: usize, arrival: f64) -> Self {
+        let prompt_len = prompt.len();
+        Self { id, prompt, prompt_len, max_new_tokens, arrival }
+    }
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    /// Time-to-first-token (includes queueing + prefill + any exposed
+    /// reconfiguration).
+    pub ttft: f64,
+    /// End-to-end latency.
+    pub e2e: f64,
+    /// Mean per-output-token latency over the decode phase.
+    pub mean_tpot: f64,
+}
+
+/// Synthetic workload parameters (edge assistant profile).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub n_requests: usize,
+    /// Mean request arrival rate (req/s). Edge devices see sparse,
+    /// bursty single-user traffic; the default is deliberately low.
+    pub arrival_rate: f64,
+    /// Prompt length range (uniform in log space).
+    pub prompt_len: (usize, usize),
+    /// Generation length range.
+    pub gen_len: (usize, usize),
+    pub seed: u64,
+    /// Vocabulary for real token ids (live runs); 0 = synthetic only.
+    pub vocab: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            n_requests: 16,
+            arrival_rate: 0.05,
+            prompt_len: (32, 768),
+            gen_len: (16, 128),
+            seed: 0,
+            vocab: 0,
+        }
+    }
+}
+
+/// Generate a Poisson-arrival workload.
+pub fn generate_workload(cfg: &WorkloadConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0;
+    (0..cfg.n_requests)
+        .map(|i| {
+            t += rng.exponential(cfg.arrival_rate.max(1e-9));
+            let (plo, phi) = cfg.prompt_len;
+            // Log-uniform: short prompts common, long ones present.
+            let lp = (plo as f64).ln() + rng.f64() * ((phi as f64).ln() - (plo as f64).ln());
+            let prompt_len = lp.exp().round() as usize;
+            let gen = rng.range(cfg.gen_len.0, cfg.gen_len.1);
+            let prompt = if cfg.vocab > 1 {
+                (0..prompt_len)
+                    .map(|_| 1 + rng.below(cfg.vocab - 1) as i32)
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let mut r = Request::synthetic(i as u64, prompt_len, gen, t);
+            r.prompt = prompt;
+            r
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic_and_ordered() {
+        let cfg = WorkloadConfig { n_requests: 32, ..Default::default() };
+        let a = generate_workload(&cfg);
+        let b = generate_workload(&cfg);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        // Arrivals strictly increase.
+        for w in a.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn lengths_respect_ranges() {
+        let cfg = WorkloadConfig {
+            n_requests: 200,
+            prompt_len: (16, 256),
+            gen_len: (8, 64),
+            ..Default::default()
+        };
+        for r in generate_workload(&cfg) {
+            assert!((15..=257).contains(&r.prompt_len), "prompt {}", r.prompt_len);
+            assert!((8..=64).contains(&r.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn vocab_generates_tokens() {
+        let cfg = WorkloadConfig { n_requests: 4, vocab: 100, ..Default::default() };
+        for r in generate_workload(&cfg) {
+            assert_eq!(r.prompt.len(), r.prompt_len);
+            assert!(r.prompt.iter().all(|&t| (1..100).contains(&t)));
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! Event-driven serving simulation on the modeled KV260.
+//!
+//! Drives the full stack — scheduler → FSM → swap controller → phase
+//! latency model — over a workload, with a simulated clock. This is the
+//! machine behind Figs. 5/6 and the ablation benches: the same loop runs
+//! a PD-Swap device (DPR + overlap), a PD-Swap device without overlap, or
+//! a static baseline (no swaps at all), selected by configuration.
+
+use anyhow::Result;
+
+use crate::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
+use crate::fpga::DeviceConfig;
+use crate::metrics::ServerMetrics;
+use crate::model::ModelShape;
+use crate::reconfig::{OverlapScheduler, SwapController, RM_PREFILL};
+
+use super::fsm::PhaseFsm;
+use super::request::{Request, RequestOutcome};
+use super::scheduler::{Policy, Scheduler};
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimServerConfig {
+    pub design: AcceleratorDesign,
+    pub device: DeviceConfig,
+    pub shape: ModelShape,
+    pub policy: Policy,
+    /// Use the §3.4 latency-overlapped early trigger (PD-Swap default).
+    pub overlap: bool,
+}
+
+impl SimServerConfig {
+    pub fn pd_swap(shape: ModelShape, device: DeviceConfig) -> Self {
+        Self {
+            design: AcceleratorDesign::pd_swap(),
+            device,
+            shape,
+            policy: Policy::SwapPerRequest,
+            overlap: true,
+        }
+    }
+
+    pub fn tellme_static(shape: ModelShape, device: DeviceConfig) -> Self {
+        Self {
+            design: AcceleratorDesign::tellme_static(),
+            device,
+            shape,
+            policy: Policy::SwapPerRequest,
+            overlap: false,
+        }
+    }
+}
+
+/// The simulated server.
+pub struct SimServer {
+    cfg: SimServerConfig,
+    model: PhaseModel,
+    swap: Option<SwapController>,
+    overlap: Option<OverlapScheduler>,
+    fsm: PhaseFsm,
+    pub metrics: ServerMetrics,
+    clock: f64,
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+impl SimServer {
+    pub fn new(cfg: SimServerConfig) -> Result<Self> {
+        let model = PhaseModel::new(cfg.design.clone(), cfg.device.clone());
+        let uses_dpr = cfg.design.hosting == AttentionHosting::Reconfigurable;
+        let swap = if uses_dpr {
+            Some(SwapController::new(cfg.design.program(&cfg.device)?))
+        } else {
+            // Static design: validate the floorplan but never swap.
+            cfg.design.program(&cfg.device)?;
+            None
+        };
+        let overlap = if uses_dpr {
+            let lat = swap.as_ref().unwrap().device.reconfig_latency();
+            Some(OverlapScheduler::new(model.clone(), lat))
+        } else {
+            None
+        };
+        Ok(Self {
+            cfg,
+            model,
+            swap,
+            overlap,
+            fsm: PhaseFsm::new(),
+            metrics: ServerMetrics::default(),
+            clock: 0.0,
+            outcomes: Vec::new(),
+        })
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Serve a whole workload to completion; returns the metric bundle.
+    pub fn run(&mut self, mut workload: Vec<Request>) -> Result<&ServerMetrics> {
+        workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut sched = Scheduler::new(self.cfg.policy);
+        for r in workload {
+            sched.admit(r);
+        }
+
+        while !sched.is_empty() {
+            // Advance the clock to the next arrival if idle.
+            if let Some(next) = sched.next_arrival() {
+                if next > self.clock {
+                    self.clock = next;
+                }
+            }
+            let batch = sched.next_batch(self.clock);
+            if batch.is_empty() {
+                continue;
+            }
+            self.serve_batch(batch)?;
+        }
+        Ok(&self.metrics)
+    }
+
+    /// One phase-batch: prefill all, swap once, decode all.
+    fn serve_batch(&mut self, batch: Vec<Request>) -> Result<()> {
+        let shape = self.cfg.shape;
+
+        // -- ensure prefill RM ------------------------------------------------
+        if let Some(swap) = self.swap.as_mut() {
+            if !swap.device.is_live(RM_PREFILL, self.clock) {
+                self.fsm.begin_swap(false, 0.0).ok();
+                let ready = swap.ensure_prefill(self.clock)?;
+                self.fsm.complete_swap(f64::MAX.min(ready)).ok();
+                self.metrics.reconfigurations.inc();
+                self.clock = ready;
+            }
+        }
+
+        // -- prefill phase ----------------------------------------------------
+        // (start-of-prefill timestamps per request for TTFT accounting)
+        let mut prefill_done = Vec::with_capacity(batch.len());
+        let mut last_timeline = None;
+        for r in &batch {
+            self.fsm.begin_prefill().ok();
+            let pre = self.model.prefill(&shape, r.prompt_len);
+            self.clock += pre.total;
+            prefill_done.push(self.clock);
+            // Early-trigger the decode swap during the LAST request's tail
+            // (batched mode keeps the prefill RM until the batch drains).
+            let is_last = r.id == batch.last().unwrap().id;
+            if is_last {
+                if let (Some(swap), Some(ov)) = (self.swap.as_mut(), self.overlap.as_ref()) {
+                    let timeline = if self.cfg.overlap {
+                        ov.overlapped(&shape, r.prompt_len)
+                    } else {
+                        ov.sequential(&shape, r.prompt_len)
+                    };
+                    //
+
+                    let trigger_abs = self.clock - pre.total + timeline.trigger;
+                    self.fsm.begin_swap(true, trigger_abs + timeline.reconfig).ok();
+                    let ready = swap.trigger_decode_swap(trigger_abs)?;
+                    let admit = swap.decode_admissible_at(self.clock, ready);
+                    self.metrics.reconfigurations.inc();
+                    self.metrics.reconfig_exposed.record(admit - self.clock);
+                    self.clock = admit;
+                    self.fsm.complete_swap(admit).ok();
+                    last_timeline = Some(timeline);
+                }
+            }
+            let _ = last_timeline;
+        }
+        if self.swap.is_none() {
+            // Static design: decode engine always live.
+            self.fsm.begin_swap(true, self.clock).ok();
+            self.fsm.complete_swap(self.clock).ok();
+        }
+
+        // -- decode phase -------------------------------------------------
+        debug_assert!(self.fsm.decode_admissible(self.clock));
+        for (r, pre_done) in batch.iter().zip(&prefill_done) {
+            let mut ctx = r.prompt_len;
+            let decode_start = self.clock;
+            // First token comes out of prefill logits; TTFT counts queue +
+            // prefill + exposed swap.
+            let ttft = self.clock.max(*pre_done) - r.arrival;
+            let mut tokens = 0usize;
+            for _ in 0..r.max_new_tokens {
+                if ctx >= shape.max_seq {
+                    break;
+                }
+                let step = self.model.decode_step(&shape, ctx).total;
+                self.clock += step;
+                self.metrics.tpot.record(step);
+                ctx += 1;
+                tokens += 1;
+            }
+            let e2e = self.clock - r.arrival;
+            self.metrics.ttft.record(ttft);
+            self.metrics.e2e.record(e2e);
+            self.metrics.tokens_generated.add(tokens as u64);
+            self.metrics.requests_completed.inc();
+            self.outcomes.push(RequestOutcome {
+                id: r.id,
+                prompt_len: r.prompt_len,
+                generated: Vec::new(),
+                ttft,
+                e2e,
+                mean_tpot: if tokens > 0 {
+                    (self.clock - decode_start) / tokens as f64
+                } else {
+                    0.0
+                },
+            });
+        }
+        self.fsm.finish_request().ok();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{generate_workload, WorkloadConfig};
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn workload(n: usize) -> Vec<Request> {
+        generate_workload(&WorkloadConfig {
+            n_requests: n,
+            prompt_len: (64, 512),
+            gen_len: (8, 32),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn pd_swap_serves_workload() {
+        let mut s =
+            SimServer::new(SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())).unwrap();
+        let m = s.run(workload(6)).unwrap();
+        assert_eq!(m.requests_completed.get(), 6);
+        assert!(m.tokens_generated.get() > 0);
+        assert!(m.reconfigurations.get() >= 6, "one swap pair per request");
+        assert!(m.decode_throughput() > 5.0);
+    }
+
+    #[test]
+    fn static_design_never_reconfigures() {
+        let mut s =
+            SimServer::new(SimServerConfig::tellme_static(BITNET_0_73B, KV260.clone()))
+                .unwrap();
+        let m = s.run(workload(4)).unwrap();
+        assert_eq!(m.reconfigurations.get(), 0);
+        assert_eq!(m.requests_completed.get(), 4);
+    }
+
+    #[test]
+    fn pd_beats_static_on_e2e() {
+        let w = workload(6);
+        let mut pd =
+            SimServer::new(SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())).unwrap();
+        let mut st =
+            SimServer::new(SimServerConfig::tellme_static(BITNET_0_73B, KV260.clone()))
+                .unwrap();
+        pd.run(w.clone()).unwrap();
+        st.run(w).unwrap();
+        assert!(
+            pd.metrics.e2e.mean() < st.metrics.e2e.mean(),
+            "pd {:.2}s vs static {:.2}s",
+            pd.metrics.e2e.mean(),
+            st.metrics.e2e.mean()
+        );
+    }
+
+    #[test]
+    fn overlap_reduces_exposed_latency() {
+        let w = workload(5);
+        let mut with = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        with.overlap = true;
+        let mut without = with.clone();
+        without.overlap = false;
+
+        let mut a = SimServer::new(with).unwrap();
+        let mut b = SimServer::new(without).unwrap();
+        a.run(w.clone()).unwrap();
+        b.run(w).unwrap();
+        assert!(
+            a.metrics.reconfig_exposed.mean() < b.metrics.reconfig_exposed.mean(),
+            "overlap {:.1}ms vs sequential {:.1}ms",
+            a.metrics.reconfig_exposed.mean() * 1e3,
+            b.metrics.reconfig_exposed.mean() * 1e3
+        );
+        // TTFT improves accordingly.
+        assert!(a.metrics.ttft.mean() <= b.metrics.ttft.mean() + 1e-9);
+    }
+
+    #[test]
+    fn batched_policy_amortizes_swaps() {
+        // Same 6 near-simultaneous requests; batched mode pays fewer swaps.
+        let mut w = workload(6);
+        for r in &mut w {
+            r.arrival = 0.0;
+        }
+        let mut per_req = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        per_req.policy = Policy::SwapPerRequest;
+        let mut batched = per_req.clone();
+        batched.policy = Policy::BatchedPhases { max_batch: 8 };
+
+        let mut a = SimServer::new(per_req).unwrap();
+        let mut b = SimServer::new(batched).unwrap();
+        a.run(w.clone()).unwrap();
+        b.run(w).unwrap();
+        assert!(
+            b.metrics.reconfigurations.get() < a.metrics.reconfigurations.get(),
+            "batched {} swaps vs per-request {}",
+            b.metrics.reconfigurations.get(),
+            a.metrics.reconfigurations.get()
+        );
+        // And the batch finishes sooner overall.
+        assert!(b.clock() <= a.clock() + 1e-9);
+    }
+
+    #[test]
+    fn cache_capacity_caps_generation() {
+        let mut s =
+            SimServer::new(SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())).unwrap();
+        // One request whose generation would overflow max_seq.
+        let r = Request::synthetic(0, BITNET_0_73B.max_seq - 4, 100, 0.0);
+        s.run(vec![r]).unwrap();
+        assert_eq!(s.metrics.tokens_generated.get(), 4);
+    }
+}

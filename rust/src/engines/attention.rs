@@ -1,0 +1,234 @@
+//! Attention engine models: the two reconfigurable modules (Fig. 3b/3d)
+//! plus their "crammed into a static design" variants for the baseline.
+
+use crate::fpga::ResourceVec;
+use crate::memory::{MemorySystem, PortMapping, Stream};
+use crate::memory::traffic::burst_for;
+use crate::model::ModelShape;
+
+use super::calib;
+
+/// How well the engine's dataflow fits the phase it's running.
+///
+/// A *tailored* engine exists only because DPR lets each phase get its own
+/// logic; a *generic* engine is the compromise dataflow a static design
+/// must ship (the paper's §2.1 complaint: "a single static architecture
+/// that must compromise between them").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleQuality {
+    Tailored,
+    Generic,
+}
+
+impl ScheduleQuality {
+    pub fn efficiency(&self) -> f64 {
+        match self {
+            ScheduleQuality::Tailored => calib::SCHED_EFF_TAILORED,
+            ScheduleQuality::Generic => calib::SCHED_EFF_GENERIC,
+        }
+    }
+}
+
+/// Shared resource-cost shape for both attention engines, anchored to
+/// Table 2: `lut = base + k·dsp`.
+fn attn_resources(dsp: f64, lut_base: f64, lut_per_dsp: f64, ff_per_dsp: f64, bram: f64) -> ResourceVec {
+    ResourceVec {
+        lut: lut_base + lut_per_dsp * dsp,
+        ff: 2_000.0 + ff_per_dsp * dsp,
+        bram36: bram,
+        // Stream-buffer URAM scales (coarsely) with engine width; the
+        // paper-sized RMs use 8 each (Table 2).
+        uram: (dsp / 40.0).clamp(2.0, 8.0).round(),
+        dsp,
+    }
+}
+
+/// Token-parallel blocked FlashAttention engine (prefill RM, Fig. 3b).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillAttentionEngine {
+    /// DSP budget (MAC array + softmax pipeline).
+    pub n_dsp: usize,
+    pub schedule: ScheduleQuality,
+}
+
+impl PrefillAttentionEngine {
+    /// The paper's prefill RM (Table 2: 28,400 LUT / 303 DSP / 140 BRAM).
+    pub const PAPER: PrefillAttentionEngine =
+        PrefillAttentionEngine { n_dsp: 303, schedule: ScheduleQuality::Tailored };
+
+    /// Anchored to Table 2 row "Prefill Attention".
+    pub fn resources(&self) -> ResourceVec {
+        attn_resources(self.n_dsp as f64, 4_000.0, 80.5, 132.0, 81.0)
+    }
+
+    /// Sustained MAC rate (MACs/s) at `clock_hz`.
+    pub fn mac_rate(&self, clock_hz: f64) -> f64 {
+        let sched = match self.schedule {
+            ScheduleQuality::Tailored => 1.0,
+            ScheduleQuality::Generic => calib::PREFILL_GENERIC_EFF,
+        };
+        self.n_dsp as f64
+            * calib::ATTN_MACS_PER_DSP_CYCLE
+            * clock_hz
+            * calib::PREFILL_ATTN_DERATE
+            * sched
+    }
+
+    /// Prefill attention time for a prompt of `l` tokens: causal
+    /// FlashAttention MACs over all layers. Compute-bound by construction
+    /// (Fig. 4a places it far right of the ridge), so no memory term.
+    pub fn time(&self, shape: &ModelShape, l: usize, clock_hz: f64) -> f64 {
+        let l = l as f64;
+        let macs = shape.n_layers as f64 * (l * l / 2.0) * shape.d_model as f64 * 2.0;
+        macs / self.mac_rate(clock_hz)
+    }
+}
+
+/// KV-cache-streaming single-query engine (decode RM, Fig. 3d).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeAttentionEngine {
+    pub n_dsp: usize,
+    pub schedule: ScheduleQuality,
+    /// Uses the §3.2.3 2K+2V port remap (true for the dedicated RM; the
+    /// static baseline keeps the QKVO mapping).
+    pub kv_optimized_ports: bool,
+}
+
+impl DecodeAttentionEngine {
+    /// The paper's decode RM (Table 2: 26,418 LUT / 278 DSP / 16 BRAM).
+    pub const PAPER: DecodeAttentionEngine = DecodeAttentionEngine {
+        n_dsp: 278,
+        schedule: ScheduleQuality::Tailored,
+        kv_optimized_ports: true,
+    };
+
+    /// Anchored to Table 2 row "Decoding Attention".
+    pub fn resources(&self) -> ResourceVec {
+        attn_resources(self.n_dsp as f64, 3_000.0, 84.2, 90.0, 16.0)
+    }
+
+    pub fn mac_rate(&self, clock_hz: f64) -> f64 {
+        self.n_dsp as f64
+            * calib::ATTN_MACS_PER_DSP_CYCLE
+            * clock_hz
+            * self.schedule.efficiency()
+    }
+
+    /// Effective K+V read bandwidth (B/s) under this engine's port plan.
+    pub fn kv_bandwidth(&self, mem: &MemorySystem) -> f64 {
+        let mapping = if self.kv_optimized_ports {
+            PortMapping::decode_kv_optimized(mem.n_ports)
+        } else {
+            PortMapping::qkvo_baseline(mem.n_ports)
+        };
+        let bw = mem.effective_bandwidth(&mapping, Stream::K, burst_for(Stream::K))
+            + mem.effective_bandwidth(&mapping, Stream::V, burst_for(Stream::V));
+        bw * calib::KV_CONTROLLER_EFF
+    }
+
+    /// One decode step's attention time at context length `l`:
+    /// `max(compute roof, memory roof)` — the roofline in code.
+    pub fn time(&self, shape: &ModelShape, l: usize, mem: &MemorySystem, clock_hz: f64) -> f64 {
+        let macs = 2.0 * (l * shape.d_model) as f64 * shape.n_layers as f64;
+        let compute = macs / self.mac_rate(clock_hz);
+        let memory = shape.kv_bytes(l) / self.kv_bandwidth(mem);
+        compute.max(memory)
+    }
+
+    /// Which roof binds at context `l`? (true = memory-bound, the regime
+    /// the paper says decode attention "should ideally operate in".)
+    pub fn is_memory_bound(&self, shape: &ModelShape, l: usize, mem: &MemorySystem, clock_hz: f64) -> bool {
+        let macs = 2.0 * (l * shape.d_model) as f64 * shape.n_layers as f64;
+        let compute = macs / self.mac_rate(clock_hz);
+        let memory = shape.kv_bytes(l) / self.kv_bandwidth(mem);
+        memory >= compute
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn mem() -> MemorySystem {
+        MemorySystem::for_device(&KV260)
+    }
+
+    fn clock() -> f64 {
+        KV260.clock_hz()
+    }
+
+    #[test]
+    fn prefill_rm_resources_match_table2() {
+        let r = PrefillAttentionEngine::PAPER.resources();
+        assert!((r.lut - 28_400.0).abs() < 600.0, "lut {}", r.lut);
+        assert_eq!(r.dsp, 303.0);
+    }
+
+    #[test]
+    fn decode_rm_resources_match_table2() {
+        let r = DecodeAttentionEngine::PAPER.resources();
+        assert!((r.lut - 26_418.0).abs() < 600.0, "lut {}", r.lut);
+        assert_eq!(r.dsp, 278.0);
+    }
+
+    #[test]
+    fn prefill_attention_quadratic() {
+        let e = PrefillAttentionEngine::PAPER;
+        let t1 = e.time(&BITNET_0_73B, 512, clock());
+        let t2 = e.time(&BITNET_0_73B, 1024, clock());
+        assert!((t2 / t1 - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn paper_prefill_attention_anchor() {
+        // Fig. 6b decomposition: PD attention ~3.4 s of the 8.8 s TTFT at
+        // L=768.
+        let t = PrefillAttentionEngine::PAPER.time(&BITNET_0_73B, 768, clock());
+        assert!((2.8..4.0).contains(&t), "t {t:.2} s");
+    }
+
+    #[test]
+    fn dedicated_decode_rm_is_memory_bound() {
+        // The whole point of the swap: with the full RP, decode attention
+        // reaches the memory-bound regime at every context length.
+        let e = DecodeAttentionEngine::PAPER;
+        let m = mem();
+        for l in [64, 256, 1024, 2048] {
+            assert!(e.is_memory_bound(&BITNET_0_73B, l, &m, clock()), "L={l}");
+        }
+    }
+
+    #[test]
+    fn static_shared_decode_engine_is_compute_bound() {
+        // A TeLLMe-like static design: small leftover engine, generic
+        // schedule, QKVO ports -> compute-bound (paper §3.3.1: "static
+        // designs lack the reusable resources to accelerate it").
+        let e = DecodeAttentionEngine {
+            n_dsp: 16,
+            schedule: ScheduleQuality::Generic,
+            kv_optimized_ports: false,
+        };
+        let m = mem();
+        assert!(!e.is_memory_bound(&BITNET_0_73B, 1024, &m, clock()));
+    }
+
+    #[test]
+    fn kv_port_remap_doubles_bandwidth() {
+        let m = mem();
+        let opt = DecodeAttentionEngine::PAPER;
+        let base = DecodeAttentionEngine { kv_optimized_ports: false, ..opt };
+        let r = opt.kv_bandwidth(&m) / base.kv_bandwidth(&m);
+        assert!((1.9..2.1).contains(&r), "ratio {r:.2}");
+    }
+
+    #[test]
+    fn paper_decode_attention_anchor() {
+        // PD decode attention ~0.032 ms per context token (the Fig. 6a
+        // slope): at L=2048 that's ~65 ms.
+        let e = DecodeAttentionEngine::PAPER;
+        let t = e.time(&BITNET_0_73B, 2048, &mem(), clock());
+        assert!((0.050..0.080).contains(&t), "t {:.1} ms", t * 1e3);
+    }
+}

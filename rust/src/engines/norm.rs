@@ -1,0 +1,75 @@
+//! RMSNorm & find-max unit + misc element-wise ops (static region).
+//!
+//! Vector pipeline: one element per lane per cycle. Never a bottleneck in
+//! either phase (the paper keeps it static for exactly that reason), but
+//! it contributes the constant per-token epilogue visible at short
+//! contexts, so it is modeled rather than ignored.
+
+use crate::fpga::ResourceVec;
+use crate::model::ModelShape;
+
+/// The fused RMSNorm/find-max/quant + RoPE/SwiGLU element-wise unit.
+#[derive(Debug, Clone, Copy)]
+pub struct NormEngine {
+    /// Parallel vector lanes.
+    pub lanes: usize,
+}
+
+impl NormEngine {
+    /// Paper configuration (Table 2 row 2: 6,210 LUT / 47 DSP).
+    pub const PAPER: NormEngine = NormEngine { lanes: 16 };
+
+    pub fn resources(&self) -> ResourceVec {
+        let l = self.lanes as f64;
+        ResourceVec {
+            lut: 2_000.0 + 263.0 * l,
+            ff: 3_000.0 + 513.0 * l,
+            bram36: 4.0,
+            uram: 4.0,
+            dsp: 3.0 * l - 1.0,
+        }
+    }
+
+    /// Element-wise passes per token per layer: 2 norms + RoPE + SwiGLU +
+    /// residuals + quant ~ 8 d_model-sized sweeps.
+    pub fn time_per_token(&self, shape: &ModelShape, clock_hz: f64) -> f64 {
+        let sweeps = 8.0;
+        let elems = sweeps * (shape.d_model * shape.n_layers) as f64;
+        elems / (self.lanes as f64 * clock_hz)
+    }
+
+    pub fn time(&self, shape: &ModelShape, tokens: usize, clock_hz: f64) -> f64 {
+        self.time_per_token(shape, clock_hz) * tokens as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    #[test]
+    fn resources_match_table2() {
+        let r = NormEngine::PAPER.resources();
+        assert!((r.lut - 6_210.0).abs() < 100.0, "lut {}", r.lut);
+        assert!((r.dsp - 47.0).abs() < 1.0, "dsp {}", r.dsp);
+    }
+
+    #[test]
+    fn negligible_vs_decode_floor() {
+        // Per-token element-wise work must be well under T_weights (~34 ms).
+        let t = NormEngine::PAPER.time_per_token(&BITNET_0_73B, KV260.clock_hz());
+        assert!(t < 0.002, "norm per-token {:.3} ms", t * 1e3);
+    }
+
+    #[test]
+    fn linear_in_tokens() {
+        let e = NormEngine::PAPER;
+        let c = KV260.clock_hz();
+        assert!(
+            (e.time(&BITNET_0_73B, 100, c) - 100.0 * e.time_per_token(&BITNET_0_73B, c)).abs()
+                < 1e-12
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! Phase-level latency composition: Eqs. 3 and 5 evaluated over an
+//! [`AcceleratorDesign`] — the model every figure harness queries.
+
+use crate::fpga::DeviceConfig;
+use crate::memory::MemorySystem;
+use crate::model::ModelShape;
+
+use super::design::AcceleratorDesign;
+
+/// Breakdown of one prefill (Eq. 3).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillLatency {
+    pub projection: f64,
+    pub attention: f64,
+    pub norm_elementwise: f64,
+    pub weights: f64,
+    pub total: f64,
+}
+
+/// Breakdown of one decode step at a given context length (Eq. 5).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeLatency {
+    pub projection: f64,
+    pub attention: f64,
+    pub norm_elementwise: f64,
+    pub total: f64,
+}
+
+impl DecodeLatency {
+    pub fn tokens_per_sec(&self) -> f64 {
+        1.0 / self.total
+    }
+}
+
+/// Evaluates a design's phase latencies on a device.
+#[derive(Debug, Clone)]
+pub struct PhaseModel {
+    pub design: AcceleratorDesign,
+    pub device: DeviceConfig,
+    mem: MemorySystem,
+}
+
+impl PhaseModel {
+    pub fn new(design: AcceleratorDesign, device: DeviceConfig) -> Self {
+        let mem = MemorySystem::for_device(&device);
+        Self { design, device, mem }
+    }
+
+    pub fn mem(&self) -> &MemorySystem {
+        &self.mem
+    }
+
+    /// Eq. 3: `T_pre = P_proj·L / f(r_proj) + P_attn·L² / g(r_attn) + T_w`.
+    ///
+    /// The projection term already folds `T_weights` in (compute and the
+    /// weight stream pipeline; the max binds), so `weights` is reported
+    /// separately only for diagnostics.
+    pub fn prefill(&self, shape: &ModelShape, l: usize) -> PrefillLatency {
+        let clock = self.device.clock_hz();
+        let projection = self.design.tlmm.projection_time(shape, l, &self.mem);
+        let attention = self.design.prefill_attn.time(shape, l, clock);
+        let norm = self.design.norm.time(shape, l, clock);
+        let weights = self.design.tlmm.weight_stream_time(shape, &self.mem);
+        PrefillLatency {
+            projection,
+            attention,
+            norm_elementwise: norm,
+            weights,
+            total: projection + attention + norm,
+        }
+    }
+
+    /// Eq. 5: `T_dec = D_proj / f(r_proj) + D_attn·L / g(r_attn) + T_w`.
+    pub fn decode_step(&self, shape: &ModelShape, l: usize) -> DecodeLatency {
+        let clock = self.device.clock_hz();
+        let projection = self.design.tlmm.projection_time(shape, 1, &self.mem);
+        let attention = self.design.decode_attn.time(shape, l, &self.mem, clock);
+        let norm = self.design.norm.time(shape, 1, clock);
+        DecodeLatency {
+            projection,
+            attention,
+            norm_elementwise: norm,
+            total: projection + attention + norm,
+        }
+    }
+
+    /// Decode throughput (tokens/s) at context length `l`.
+    pub fn decode_throughput(&self, shape: &ModelShape, l: usize) -> f64 {
+        self.decode_step(shape, l).tokens_per_sec()
+    }
+
+    /// Time to generate `n` tokens starting from context `l0` (the context
+    /// grows as tokens are emitted — used by the end-to-end simulations).
+    pub fn decode_span(&self, shape: &ModelShape, l0: usize, n: usize) -> f64 {
+        (0..n)
+            .map(|i| self.decode_step(shape, l0 + i).total)
+            .sum()
+    }
+
+    /// The prefill *tail* after the final layer's attention completes: the
+    /// last layer's output projection + FFN + norms. This is the window
+    /// §3.4 overlaps reconfiguration with (~31 ms at L=128 in the paper).
+    pub fn prefill_tail_after_last_attention(&self, shape: &ModelShape, l: usize) -> f64 {
+        let pre = self.prefill(shape, l);
+        // Per-layer share of projection + norm; the FFN block plus the
+        // output projection is ~(3·d·dff + d²)/(4·d² + 3·d·dff) of a
+        // layer's projection work.
+        let proj_per_layer = pre.projection / shape.n_layers as f64;
+        let norm_per_layer = pre.norm_elementwise / shape.n_layers as f64;
+        let d = shape.d_model as f64;
+        let dff = shape.d_ff as f64;
+        let tail_frac = (3.0 * d * dff + d * d) / (4.0 * d * d + 3.0 * d * dff);
+        proj_per_layer * tail_frac + norm_per_layer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn pd() -> PhaseModel {
+        PhaseModel::new(AcceleratorDesign::pd_swap(), KV260.clone())
+    }
+
+    fn tellme() -> PhaseModel {
+        PhaseModel::new(AcceleratorDesign::tellme_static(), KV260.clone())
+    }
+
+    #[test]
+    fn paper_decode_endpoints() {
+        let pd = pd();
+        let te = tellme();
+        let s = BITNET_0_73B;
+
+        // PD-Swap @ 64: paper 27.8 tok/s.
+        let pd64 = pd.decode_throughput(&s, 64);
+        assert!((26.0..30.0).contains(&pd64), "PD@64 {pd64:.1}");
+        // TeLLMe @ 64: paper 25 tok/s.
+        let te64 = te.decode_throughput(&s, 64);
+        assert!((23.0..27.0).contains(&te64), "TeLLMe@64 {te64:.1}");
+        // PD-Swap @ 2048: paper ">10 tok/s".
+        let pd2048 = pd.decode_throughput(&s, 2048);
+        assert!(pd2048 > 9.5, "PD@2048 {pd2048:.1}");
+        // TeLLMe @ 2048: paper "~5 tok/s".
+        let te2048 = te.decode_throughput(&s, 2048);
+        assert!((4.0..6.5).contains(&te2048), "TeLLMe@2048 {te2048:.1}");
+    }
+
+    #[test]
+    fn paper_speedup_trend() {
+        // 1.11x at 64 growing to 2.02x at 2048 (Fig. 6a).
+        let pd = pd();
+        let te = tellme();
+        let s = BITNET_0_73B;
+        let r64 = pd.decode_throughput(&s, 64) / te.decode_throughput(&s, 64);
+        let r2048 = pd.decode_throughput(&s, 2048) / te.decode_throughput(&s, 2048);
+        assert!((1.02..1.25).contains(&r64), "r64 {r64:.2}");
+        assert!((1.75..2.35).contains(&r2048), "r2048 {r2048:.2}");
+        assert!(r2048 > r64, "gains must grow with context");
+    }
+
+    #[test]
+    fn paper_prefill_endpoints() {
+        // Fig. 6b @ 768: TeLLMe 11.10 s -> PD-Swap 8.80 s (20-25% less).
+        let t_pd = pd().prefill(&BITNET_0_73B, 768).total;
+        let t_te = tellme().prefill(&BITNET_0_73B, 768).total;
+        assert!((7.9..9.7).contains(&t_pd), "PD TTFT {t_pd:.2}");
+        assert!((10.0..12.2).contains(&t_te), "TeLLMe TTFT {t_te:.2}");
+        let saving = 1.0 - t_pd / t_te;
+        assert!((0.15..0.30).contains(&saving), "saving {saving:.2}");
+    }
+
+    #[test]
+    fn prefill_tail_near_31ms_at_128() {
+        // §3.4: remaining projection+FFN after the last attention ~31 ms
+        // at L=128.
+        let tail = pd().prefill_tail_after_last_attention(&BITNET_0_73B, 128);
+        assert!((0.022..0.042).contains(&tail), "tail {:.1} ms", tail * 1e3);
+    }
+
+    #[test]
+    fn decode_span_accumulates_growing_context() {
+        let pd = pd();
+        let s = BITNET_0_73B;
+        let span = pd.decode_span(&s, 64, 10);
+        let lo = 10.0 * pd.decode_step(&s, 64).total;
+        let hi = 10.0 * pd.decode_step(&s, 74).total;
+        assert!(span > lo && span < hi);
+    }
+
+    #[test]
+    fn throughput_is_monotone_in_context() {
+        let pd = pd();
+        let s = BITNET_0_73B;
+        let mut last = f64::INFINITY;
+        for l in [64, 128, 256, 512, 1024, 2048] {
+            let t = pd.decode_throughput(&s, l);
+            assert!(t < last, "throughput must fall with context");
+            last = t;
+        }
+    }
+}

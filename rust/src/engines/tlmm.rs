@@ -1,0 +1,150 @@
+//! TLMM linear-unit model (static region, Fig. 3a).
+//!
+//! The table-lookup matmul engine: per PE, one 4-weight group lookup +
+//! accumulate per cycle. Weights are packed base-3 in DDR and streamed
+//! through the weight ports (at 0.73B they cannot reside on-chip; URAM
+//! holds the per-token partial-sum tables and stream buffers — Table 2
+//! charges that to "Other").
+//!
+//! Latency model: projections are a *batch of GEMVs* (the paper's
+//! orchestration), so a phase's projection time is
+//! `max(weight_stream_time, tokens x per_token_compute)` — the stream and
+//! the PE array are pipelined against each other.
+
+use crate::fpga::ResourceVec;
+use crate::memory::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
+use crate::model::ModelShape;
+
+use super::calib;
+
+/// The ternary table-lookup matmul engine.
+#[derive(Debug, Clone, Copy)]
+pub struct TlmmEngine {
+    /// Lookup-accumulate processing elements (DSP-count proxy).
+    pub n_pe: usize,
+}
+
+impl TlmmEngine {
+    /// The paper's shipped configuration (Table 2 row 1: 320 DSP).
+    pub const PAPER: TlmmEngine = TlmmEngine { n_pe: 320 };
+
+    /// Fabric cost, anchored to Table 2 (320 PE -> 42,854 LUT / 50,752 FF /
+    /// 5.5 BRAM / 0 URAM / 320 DSP).
+    pub fn resources(&self) -> ResourceVec {
+        let pe = self.n_pe as f64;
+        ResourceVec {
+            lut: 3_000.0 + 124.5 * pe,
+            ff: 6_000.0 + 140.0 * pe,
+            bram36: 5.5,
+            uram: 0.0,
+            dsp: pe,
+        }
+    }
+
+    /// Sustained projection throughput (tokens/s) on `shape`, scaled from
+    /// the 0.73B anchor by relative per-token work.
+    pub fn tokens_per_sec(&self, shape: &ModelShape) -> f64 {
+        let anchor_work = per_token_macs(&crate::model::BITNET_0_73B);
+        let work = per_token_macs(shape);
+        self.n_pe as f64 * calib::TLMM_TOKENS_PER_PE * anchor_work / work
+    }
+
+    /// Weight-stream time for one full pass over the packed weights.
+    ///
+    /// The stream is striped over all HP ports (the projection sub-phase
+    /// owns the memory system — see [`PortMapping::weights_striped`]) and
+    /// derated by the measured controller efficiency.
+    pub fn weight_stream_time(&self, shape: &ModelShape, mem: &MemorySystem) -> f64 {
+        let bytes = shape.ternary_weight_bytes();
+        let mapping = PortMapping::weights_striped(mem.n_ports);
+        let raw = mem.transfer_time(
+            &mapping,
+            &[PortAssignment {
+                stream: Stream::Weights,
+                bytes,
+                burst: AxiBurst { beats: 64 },
+            }],
+        );
+        raw / calib::WEIGHT_CONTROLLER_EFF
+    }
+
+    /// Projection time for `tokens` tokens in one phase: compute and the
+    /// weight stream are pipelined, the slower one binds. `+ epilogue`
+    /// covers drain/fill (small, per phase).
+    pub fn projection_time(&self, shape: &ModelShape, tokens: usize, mem: &MemorySystem) -> f64 {
+        let compute = tokens as f64 / self.tokens_per_sec(shape);
+        let stream = self.weight_stream_time(shape, mem);
+        compute.max(stream)
+    }
+}
+
+/// MACs of all 7 ternary linears for one token.
+pub fn per_token_macs(shape: &ModelShape) -> f64 {
+    ((4 * shape.d_model * shape.d_model + 3 * shape.d_model * shape.d_ff)
+        * shape.n_layers) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::{BITNET_0_73B, E2E_100M};
+
+    fn mem() -> MemorySystem {
+        MemorySystem::for_device(&KV260)
+    }
+
+    #[test]
+    fn resources_match_table2() {
+        let r = TlmmEngine::PAPER.resources();
+        assert!((r.lut - 42_854.0).abs() < 600.0, "lut {}", r.lut);
+        assert!((r.ff - 50_752.0).abs() < 700.0, "ff {}", r.ff);
+        assert_eq!(r.dsp, 320.0);
+    }
+
+    #[test]
+    fn paper_prefill_rate_anchor() {
+        let rate = TlmmEngine::PAPER.tokens_per_sec(&BITNET_0_73B);
+        assert!((rate - 148.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn weight_stream_is_the_decode_floor() {
+        // ~163 MB packed ternary at the calibrated controller efficiency
+        // lands near the 34 ms T_weights the decode endpoints imply.
+        let m = mem();
+        let t = TlmmEngine::PAPER.weight_stream_time(&BITNET_0_73B, &m);
+        assert!((0.028..0.042).contains(&t), "T_weights {:.1} ms", t * 1e3);
+    }
+
+    #[test]
+    fn decode_projection_is_stream_bound_prefill_is_compute_bound() {
+        let m = mem();
+        let e = TlmmEngine::PAPER;
+        let stream = e.weight_stream_time(&BITNET_0_73B, &m);
+        // 1 token (decode): the stream dominates.
+        let t1 = e.projection_time(&BITNET_0_73B, 1, &m);
+        assert_eq!(t1, stream);
+        // 768 tokens (prefill): compute dominates.
+        let t768 = e.projection_time(&BITNET_0_73B, 768, &m);
+        assert!(t768 > 2.0 * stream);
+        assert!((t768 - 768.0 / 148.0).abs() / t768 < 0.05, "t768 {t768}");
+    }
+
+    #[test]
+    fn smaller_model_streams_faster() {
+        let m = mem();
+        let e = TlmmEngine::PAPER;
+        assert!(
+            e.weight_stream_time(&E2E_100M, &m)
+                < e.weight_stream_time(&BITNET_0_73B, &m) / 5.0
+        );
+    }
+
+    #[test]
+    fn more_pes_more_throughput() {
+        let a = TlmmEngine { n_pe: 160 }.tokens_per_sec(&BITNET_0_73B);
+        let b = TlmmEngine { n_pe: 320 }.tokens_per_sec(&BITNET_0_73B);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 4a: roofline placement of the major kernels.
+
+use crate::engines::AcceleratorDesign;
+use crate::fpga::KV260;
+use crate::model::BITNET_0_73B;
+use crate::roofline::{Bound, RooflineModel, RooflinePoint};
+use crate::util::table::{fnum, Table};
+
+/// Compute the roofline points at a set of context lengths.
+pub fn analyze(lengths: &[usize]) -> Vec<(usize, Vec<RooflinePoint>)> {
+    let model = RooflineModel::new(AcceleratorDesign::pd_swap(), KV260.clone());
+    lengths
+        .iter()
+        .map(|&l| (l, model.analyze(&BITNET_0_73B, l)))
+        .collect()
+}
+
+/// Print the Fig. 4a analysis; returns the points.
+pub fn run_fig4a() -> Vec<(usize, Vec<RooflinePoint>)> {
+    let results = analyze(&[128, 512, 2048]);
+    let mut t = Table::new(vec![
+        "L", "kernel", "AI (MAC/B)", "compute roof", "memory roof", "bound", "roof frac",
+    ])
+    .right_align(&[0, 2, 3, 4, 6]);
+    for (l, points) in &results {
+        for p in points {
+            t.row(vec![
+                l.to_string(),
+                p.kernel.clone(),
+                fnum(p.arithmetic_intensity),
+                format!("{} GMAC/s", fnum(p.compute_roof / 1e9)),
+                format!("{} GB/s", fnum(p.memory_roof_bytes / 1e9)),
+                match p.bound {
+                    Bound::Compute => "compute".to_string(),
+                    Bound::Memory => "memory".to_string(),
+                },
+                format!("{:.2}", p.roof_fraction),
+            ]);
+        }
+    }
+    println!("\nFig. 4a — roofline placement of the major kernels (PD-Swap design):");
+    t.print();
+    println!(
+        "paper reference (qualitative): decode attention memory-bound, prefill attention \
+         compute-bound, decode linear close to its (streaming) roofline."
+    );
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regimes_stable_across_lengths() {
+        for (l, points) in analyze(&[128, 512, 2048]) {
+            let dec = points.iter().find(|p| p.kernel == "decode-attention").unwrap();
+            let pre = points.iter().find(|p| p.kernel == "prefill-attention").unwrap();
+            assert_eq!(dec.bound, Bound::Memory, "L={l}");
+            assert_eq!(pre.bound, Bound::Compute, "L={l}");
+        }
+    }
+}

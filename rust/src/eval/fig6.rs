@@ -1,0 +1,135 @@
+//! Fig. 6: (a) decoding throughput and (b) prefill time (TTFT) vs context
+//! length, PD-Swap vs TeLLMe.
+
+use crate::engines::{AcceleratorDesign, PhaseModel};
+use crate::fpga::KV260;
+use crate::model::BITNET_0_73B;
+use crate::util::table::{fnum, Table};
+
+/// One context-length sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig6Point {
+    pub l: usize,
+    pub pd_decode_tks: f64,
+    pub te_decode_tks: f64,
+    pub decode_speedup: f64,
+    pub pd_ttft: f64,
+    pub te_ttft: f64,
+    pub ttft_saving: f64,
+}
+
+/// The paper's anchor values for the series (speedup at 64 and 2048;
+/// TTFT pair at 768).
+pub const PAPER_SPEEDUP_64: f64 = 1.11;
+pub const PAPER_SPEEDUP_2048: f64 = 2.02;
+pub const PAPER_TTFT_768: (f64, f64) = (11.10, 8.80); // (TeLLMe, PD-Swap)
+
+/// Default context sweep (the paper's x-axis).
+pub const LENGTHS: &[usize] = &[64, 128, 256, 512, 768, 1024, 1536, 2048];
+
+/// Compute the Fig. 6 series.
+pub fn series(lengths: &[usize]) -> Vec<Fig6Point> {
+    let pd = PhaseModel::new(AcceleratorDesign::pd_swap(), KV260.clone());
+    let te = PhaseModel::new(AcceleratorDesign::tellme_static(), KV260.clone());
+    let s = BITNET_0_73B;
+    lengths
+        .iter()
+        .map(|&l| {
+            let pd_dec = pd.decode_throughput(&s, l);
+            let te_dec = te.decode_throughput(&s, l);
+            let pd_ttft = pd.prefill(&s, l).total;
+            let te_ttft = te.prefill(&s, l).total;
+            Fig6Point {
+                l,
+                pd_decode_tks: pd_dec,
+                te_decode_tks: te_dec,
+                decode_speedup: pd_dec / te_dec,
+                pd_ttft,
+                te_ttft,
+                ttft_saving: 1.0 - pd_ttft / te_ttft,
+            }
+        })
+        .collect()
+}
+
+/// Print both panels; returns the series.
+pub fn run_fig6(lengths: &[usize]) -> Vec<Fig6Point> {
+    let pts = series(lengths);
+    let mut t = Table::new(vec![
+        "L", "PD dec TK/s", "TeLLMe dec TK/s", "speedup",
+        "PD TTFT (s)", "TeLLMe TTFT (s)", "TTFT saving",
+    ])
+    .right_align(&[0, 1, 2, 3, 4, 5, 6]);
+    for p in &pts {
+        t.row(vec![
+            p.l.to_string(),
+            fnum(p.pd_decode_tks),
+            fnum(p.te_decode_tks),
+            format!("{:.2}x", p.decode_speedup),
+            fnum(p.pd_ttft),
+            fnum(p.te_ttft),
+            format!("{:.0}%", p.ttft_saving * 100.0),
+        ]);
+    }
+    println!("\nFig. 6 — decoding throughput (a) and prefill time / TTFT (b) vs context length:");
+    t.print();
+    println!(
+        "paper reference: speedup 1.11x @64 -> 2.02x @2048; TTFT @768: 11.10 s -> 8.80 s; \
+         PD-Swap holds >10 TK/s at 2048 while TeLLMe drops to ~5."
+    );
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(pts: &[Fig6Point], l: usize) -> Fig6Point {
+        *pts.iter().find(|p| p.l == l).unwrap()
+    }
+
+    #[test]
+    fn speedup_endpoints_match_paper() {
+        let pts = series(LENGTHS);
+        let s64 = at(&pts, 64).decode_speedup;
+        let s2048 = at(&pts, 2048).decode_speedup;
+        assert!((PAPER_SPEEDUP_64 - 0.09..=PAPER_SPEEDUP_64 + 0.14).contains(&s64), "{s64:.2}");
+        assert!(
+            (PAPER_SPEEDUP_2048 - 0.27..=PAPER_SPEEDUP_2048 + 0.33).contains(&s2048),
+            "{s2048:.2}"
+        );
+    }
+
+    #[test]
+    fn speedup_grows_monotonically_with_context() {
+        // The paper's core claim: "larger gains at longer context lengths".
+        let pts = series(LENGTHS);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].decode_speedup >= w[0].decode_speedup - 1e-9,
+                "speedup dipped between L={} and L={}",
+                w[0].l,
+                w[1].l
+            );
+        }
+    }
+
+    #[test]
+    fn ttft_at_768_matches_paper() {
+        let pts = series(LENGTHS);
+        let p = at(&pts, 768);
+        assert!((PAPER_TTFT_768.0 * 0.9..=PAPER_TTFT_768.0 * 1.1).contains(&p.te_ttft),
+            "TeLLMe {:.2}", p.te_ttft);
+        assert!((PAPER_TTFT_768.1 * 0.9..=PAPER_TTFT_768.1 * 1.1).contains(&p.pd_ttft),
+            "PD {:.2}", p.pd_ttft);
+        assert!((0.15..0.30).contains(&p.ttft_saving), "saving {:.2}", p.ttft_saving);
+    }
+
+    #[test]
+    fn long_context_floor() {
+        let pts = series(LENGTHS);
+        let p = at(&pts, 2048);
+        assert!(p.pd_decode_tks > 9.5, "PD {:.1}", p.pd_decode_tks);
+        assert!(p.te_decode_tks < 6.5, "TeLLMe {:.1}", p.te_decode_tks);
+    }
+}

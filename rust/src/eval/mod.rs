@@ -1,0 +1,19 @@
+//! Evaluation harnesses: one module per table/figure in the paper's §4.
+//!
+//! Each harness *computes* its rows from the simulator (never transcribes
+//! our own results), prints them next to the paper's published values,
+//! and returns structured data so the benches and EXPERIMENTS.md capture
+//! identical numbers. Run via `pd-swap eval <table1|table2|fig4a|fig5|fig6|all>`
+//! or the corresponding `cargo bench` target.
+
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+
+pub use fig4::run_fig4a;
+pub use fig5::run_fig5;
+pub use fig6::{run_fig6, Fig6Point};
+pub use table1::run_table1;
+pub use table2::run_table2;

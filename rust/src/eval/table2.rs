@@ -1,0 +1,175 @@
+//! Table 2: FPGA resource consumption breakdown.
+
+use crate::engines::AcceleratorDesign;
+use crate::fpga::{ResourceVec, KV260};
+use crate::util::table::Table;
+
+/// Paper's published Table 2 (for side-by-side comparison in the output).
+pub const PAPER_TABLE2: &[(&str, ResourceVec)] = &[
+    ("Table Lookup Linear Unit",
+     ResourceVec { lut: 42_854.0, ff: 50_752.0, bram36: 5.5, uram: 0.0, dsp: 320.0 }),
+    ("RMSNorm & Find Max Unit",
+     ResourceVec { lut: 6_210.0, ff: 11_206.0, bram36: 4.0, uram: 4.0, dsp: 47.0 }),
+    ("Other",
+     ResourceVec { lut: 21_432.0, ff: 22_402.0, bram36: 34.0, uram: 48.0, dsp: 5.0 }),
+    ("Dynamic Region",
+     ResourceVec { lut: 32_140.0, ff: 92_080.0, bram36: 81.0, uram: 10.0, dsp: 378.0 }),
+    ("Prefill Attention",
+     ResourceVec { lut: 28_400.0, ff: 42_053.0, bram36: 140.0, uram: 8.0, dsp: 303.0 }),
+    ("Decoding Attention",
+     ResourceVec { lut: 26_418.0, ff: 27_236.0, bram36: 16.0, uram: 8.0, dsp: 278.0 }),
+];
+
+/// One computed row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub module: String,
+    pub ours: ResourceVec,
+    pub paper: Option<ResourceVec>,
+}
+
+/// Compute the breakdown from the shipped design's engine models.
+pub fn rows() -> (Vec<Row>, ResourceVec, ResourceVec) {
+    let d = AcceleratorDesign::pd_swap();
+    let plan = d.region_plan().expect("pd-swap floorplans");
+    let paper = |name: &str| {
+        PAPER_TABLE2
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, r)| *r)
+    };
+
+    let mut rows = Vec::new();
+    for (name, r) in &plan.static_region.components {
+        rows.push(Row { module: name.clone(), ours: *r, paper: paper(name) });
+    }
+    rows.push(Row {
+        module: "Dynamic Region".into(),
+        ours: plan.rp.pblock,
+        paper: paper("Dynamic Region"),
+    });
+    for m in &plan.rp.modules {
+        let label = match m.name.as_str() {
+            "attn-prefill" => "Prefill Attention",
+            "attn-decode" => "Decoding Attention",
+            other => other,
+        };
+        rows.push(Row { module: label.into(), ours: m.resources, paper: paper(label) });
+    }
+
+    // Total = static + dynamic pblock (what the chip actually holds).
+    let total = plan.static_region.total() + plan.rp.pblock;
+    // Equivalent total = static + both RMs (the >100% headline).
+    let equivalent = d.equivalent_total();
+    (rows, total, equivalent)
+}
+
+fn fmt_res(r: &ResourceVec) -> Vec<String> {
+    vec![
+        format!("{:.0}", r.lut),
+        format!("{:.0}", r.ff),
+        format!("{:.1}", r.bram36),
+        format!("{:.0}", r.uram),
+        format!("{:.0}", r.dsp),
+    ]
+}
+
+/// Print the table; returns (rows, total, equivalent_total).
+pub fn run_table2() -> (Vec<Row>, ResourceVec, ResourceVec) {
+    let (rows, total, equivalent) = rows();
+    let mut t = Table::new(vec!["Module", "LUT", "FF", "BRAM", "URAM", "DSP", "src"])
+        .right_align(&[1, 2, 3, 4, 5]);
+    for r in &rows {
+        let mut cells = vec![r.module.clone()];
+        cells.extend(fmt_res(&r.ours));
+        cells.push("model".into());
+        t.row(cells);
+        if let Some(p) = &r.paper {
+            let mut cells = vec![format!("  (paper)")];
+            cells.extend(fmt_res(p));
+            cells.push("paper".into());
+            t.row(cells);
+        }
+    }
+    let budget = KV260.resources;
+    for (label, r) in [("Total", &total), ("Equivalent Total", &equivalent)] {
+        let mut cells = vec![label.to_string()];
+        cells.extend(fmt_res(r));
+        cells.push("model".into());
+        t.row(cells);
+        let u = r.utilization(&budget);
+        t.row(vec![
+            format!("  utilization"),
+            format!("{:.0}%", u.lut * 100.0),
+            format!("{:.0}%", u.ff * 100.0),
+            format!("{:.0}%", u.bram36 * 100.0),
+            format!("{:.0}%", u.uram * 100.0),
+            format!("{:.0}%", u.dsp * 100.0),
+            "".into(),
+        ]);
+    }
+    println!("\nTable 2 — KV260 resource breakdown (model vs paper):");
+    t.print();
+    println!(
+        "paper reference: Total 102,102 LUT (87%) / 124.5 BRAM (85%) / 62 URAM (96%) / 750 DSP (60%); \
+         Equivalent Total 124,780 LUT (106%).\n\
+         NB: the paper reports FF at 36%; against the XCK26's 234,240 FFs the same\n\
+         absolute count is 75% — we report the arithmetic and flag the discrepancy."
+    );
+    (rows, total, equivalent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_rows_track_paper_rows() {
+        let (rows, _, _) = rows();
+        for r in &rows {
+            let Some(p) = &r.paper else { continue };
+            if r.module == "Dynamic Region" {
+                // pblock sizing differs from the paper's pblock draw; only
+                // the order of magnitude is pinned here.
+                assert!((r.ours.lut / p.lut - 1.0).abs() < 0.25, "{}", r.module);
+                continue;
+            }
+            if p.lut > 0.0 {
+                assert!(
+                    (r.ours.lut / p.lut - 1.0).abs() < 0.05,
+                    "{}: ours {} paper {}",
+                    r.module,
+                    r.ours.lut,
+                    p.lut
+                );
+            }
+            assert!(
+                (r.ours.dsp - p.dsp).abs() <= 2.0,
+                "{}: dsp ours {} paper {}",
+                r.module,
+                r.ours.dsp,
+                p.dsp
+            );
+        }
+    }
+
+    #[test]
+    fn equivalent_total_exceeds_chip_lut() {
+        let (_, total, equivalent) = rows();
+        assert!(total.lut <= KV260.resources.lut);
+        assert!(equivalent.lut > KV260.resources.lut, "the 106% headline");
+        // Paper: equivalent 124,780 LUT. Ours within 5%.
+        assert!(
+            (equivalent.lut / 124_780.0 - 1.0).abs() < 0.05,
+            "equivalent {:.0}",
+            equivalent.lut
+        );
+    }
+
+    #[test]
+    fn total_utilization_near_87pct() {
+        let (_, total, _) = rows();
+        let u = total.lut / KV260.resources.lut;
+        assert!((0.80..=0.90).contains(&u), "LUT util {:.3}", u);
+    }
+}

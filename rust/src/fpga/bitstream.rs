@@ -1,0 +1,116 @@
+//! Partial-bitstream sizing and PCAP configuration timing.
+//!
+//! On UltraScale+ the configuration frames covering a pblock scale with
+//! its fabric footprint, so a partial bitstream's size is well-modeled as
+//! the device's full bitstream scaled by the pblock's area fraction (plus
+//! per-bitstream command overhead). Configuration time through the PS's
+//! PCAP port is `size / pcap_bandwidth` plus a fixed driver/DMA setup cost
+//! — the paper measures ~45 ms for its attention RP, which this model
+//! reproduces with the KV260 constants.
+
+use super::resources::{DeviceConfig, ResourceVec};
+
+/// Fixed per-reconfiguration software overhead: FPGA manager ioctl, DMA
+/// descriptor setup, RP decoupling/re-enable handshakes.
+pub const RECONFIG_SETUP_SECONDS: f64 = 2.0e-3;
+
+/// Command/padding overhead factor on partial bitstreams.
+pub const BITSTREAM_OVERHEAD: f64 = 1.05;
+
+/// A generated (partial or full) bitstream.
+#[derive(Debug, Clone)]
+pub struct Bitstream {
+    pub name: String,
+    pub bytes: f64,
+    /// Full-device bitstreams reset the PL; partial ones only the RP.
+    pub partial: bool,
+}
+
+impl Bitstream {
+    /// Partial bitstream for a pblock on `device`.
+    ///
+    /// The configuration-frame count tracks the *fabric area* of the
+    /// pblock; LUT fraction is the best single-number proxy for area on
+    /// UltraScale+ (CLB columns dominate the frame address space).
+    pub fn partial_for(name: impl Into<String>, pblock: &ResourceVec, device: &DeviceConfig) -> Self {
+        let area_fraction = (pblock.lut / device.resources.lut)
+            .max(pblock.dsp / device.resources.dsp)
+            .max(pblock.bram36 / device.resources.bram36);
+        Self {
+            name: name.into(),
+            bytes: device.full_bitstream_bytes * area_fraction * BITSTREAM_OVERHEAD,
+            partial: true,
+        }
+    }
+
+    pub fn full(device: &DeviceConfig) -> Self {
+        Self {
+            name: format!("{} (full)", device.name),
+            bytes: device.full_bitstream_bytes,
+            partial: false,
+        }
+    }
+}
+
+/// The PS-side configuration port model.
+#[derive(Debug, Clone)]
+pub struct PcapModel {
+    pub bytes_per_sec: f64,
+    pub setup_seconds: f64,
+}
+
+impl PcapModel {
+    pub fn for_device(device: &DeviceConfig) -> Self {
+        Self {
+            bytes_per_sec: device.pcap_bytes_per_sec,
+            setup_seconds: RECONFIG_SETUP_SECONDS,
+        }
+    }
+
+    /// Wall-clock seconds to stream `bs` through PCAP.
+    pub fn load_time(&self, bs: &Bitstream) -> f64 {
+        self.setup_seconds + bs.bytes / self.bytes_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resources::KV260;
+
+    #[test]
+    fn partial_scales_with_area() {
+        let small = ResourceVec::new(10_000.0, 20_000.0, 10.0, 4.0, 100.0);
+        let big = small * 2.0;
+        let bs_small = Bitstream::partial_for("s", &small, &KV260);
+        let bs_big = Bitstream::partial_for("b", &big, &KV260);
+        assert!((bs_big.bytes / bs_small.bytes - 2.0).abs() < 1e-9);
+        assert!(bs_small.partial);
+    }
+
+    #[test]
+    fn paper_attention_rp_loads_in_about_45ms() {
+        // The attention RP from Table 2's dynamic region row: 32,140 LUT /
+        // 92,080 FF / 81 BRAM / 10 URAM / 378 DSP.
+        let rp = ResourceVec::new(32_140.0, 92_080.0, 81.0, 10.0, 378.0);
+        let bs = Bitstream::partial_for("attention-rp", &rp, &KV260);
+        let pcap = PcapModel::for_device(&KV260);
+        let t = pcap.load_time(&bs);
+        // Paper: "approximately 45 ms". BRAM columns are the binding area
+        // class for this pblock (81/144 = 56%).
+        assert!((0.035..0.055).contains(&t), "got {:.1} ms", t * 1e3);
+    }
+
+    #[test]
+    fn full_bitstream_slower_than_partial() {
+        let rp = ResourceVec::new(32_140.0, 92_080.0, 81.0, 10.0, 378.0);
+        let pcap = PcapModel::for_device(&KV260);
+        let t_partial = pcap.load_time(&Bitstream::partial_for("p", &rp, &KV260));
+        let t_full = pcap.load_time(&Bitstream::full(&KV260));
+        assert!(t_full > t_partial);
+        assert!((t_full - (KV260.full_bitstream_bytes / KV260.pcap_bytes_per_sec
+            + RECONFIG_SETUP_SECONDS))
+            .abs()
+            < 1e-9);
+    }
+}

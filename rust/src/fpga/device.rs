@@ -1,0 +1,202 @@
+//! The simulated FPGA device: floorplan + live reconfiguration state.
+//!
+//! Composes the resource model, region plan, and PCAP/bitstream timing
+//! into the object the coordinator drives: program it, swap RMs, and ask
+//! "what is live right now?" — with the same safety rules the real DFX
+//! flow enforces (no compute in a partition mid-reconfiguration; the
+//! static region keeps running).
+
+use anyhow::{bail, Result};
+
+use super::bitstream::{Bitstream, PcapModel};
+use super::region::RegionPlan;
+use super::resources::DeviceConfig;
+
+/// What the reconfigurable partition is doing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReconfigState {
+    /// Nothing loaded yet (after full programming, before first RM load).
+    Empty,
+    /// An RM is live and usable.
+    Loaded { rm: String },
+    /// PCAP is streaming a partial bitstream; the RP is unusable but the
+    /// static region keeps running. Carries the target RM and the absolute
+    /// simulation time at which the load completes.
+    Loading { rm: String, until: f64 },
+}
+
+/// A programmed device with one reconfigurable partition.
+#[derive(Debug)]
+pub struct FpgaDevice {
+    pub config: DeviceConfig,
+    pub plan: RegionPlan,
+    pcap: PcapModel,
+    state: ReconfigState,
+    /// Precomputed partial bitstream load time (same pblock for all RMs).
+    partial_load_seconds: f64,
+    /// Telemetry.
+    pub reconfig_count: u64,
+    pub reconfig_seconds_total: f64,
+}
+
+impl FpgaDevice {
+    /// "Program" the full bitstream: validates the floorplan against the
+    /// device and returns a device with an empty RP.
+    pub fn program(config: DeviceConfig, plan: RegionPlan) -> Result<Self> {
+        plan.validate(&config).map_err(|e| anyhow::anyhow!(e))?;
+        let pcap = PcapModel::for_device(&config);
+        let bs = Bitstream::partial_for("rp", &plan.rp.pblock, &config);
+        let partial_load_seconds = pcap.load_time(&bs);
+        Ok(Self {
+            config,
+            plan,
+            pcap,
+            state: ReconfigState::Empty,
+            partial_load_seconds,
+            reconfig_count: 0,
+            reconfig_seconds_total: 0.0,
+        })
+    }
+
+    pub fn state(&self) -> &ReconfigState {
+        &self.state
+    }
+
+    /// Seconds to load any of this RP's partial bitstreams.
+    pub fn reconfig_latency(&self) -> f64 {
+        self.partial_load_seconds
+    }
+
+    /// Is `rm` live (loaded and not mid-swap) at simulation time `now`?
+    pub fn is_live(&self, rm: &str, now: f64) -> bool {
+        match &self.state {
+            ReconfigState::Loaded { rm: cur } => cur == rm,
+            ReconfigState::Loading { rm: cur, until } => cur == rm && now >= *until,
+            ReconfigState::Empty => false,
+        }
+    }
+
+    /// Settle a completed load (Loading whose deadline passed becomes
+    /// Loaded). Call with the current simulation time before queries.
+    pub fn settle(&mut self, now: f64) {
+        if let ReconfigState::Loading { rm, until } = &self.state {
+            if now >= *until {
+                self.state = ReconfigState::Loaded { rm: rm.clone() };
+            }
+        }
+    }
+
+    /// Begin a partial reconfiguration to `rm` at simulation time `now`.
+    /// Returns the completion time. Fails if the RM is unknown, doesn't
+    /// fit the partition, or a swap is already in flight (the PCAP is a
+    /// single serial channel).
+    pub fn start_reconfig(&mut self, rm: &str, now: f64) -> Result<f64> {
+        self.settle(now);
+        if let ReconfigState::Loading { rm: cur, until } = &self.state {
+            bail!(
+                "PCAP busy loading '{}' until t={:.3}s (requested '{}' at t={:.3}s)",
+                cur, until, rm, now
+            );
+        }
+        let module = self
+            .plan
+            .rp
+            .module(rm)
+            .ok_or_else(|| anyhow::anyhow!("unknown RM '{rm}'"))?;
+        if !self.plan.rp.admits(module) {
+            bail!("RM '{rm}' does not fit the reconfigurable partition");
+        }
+        // Loading the already-live RM is a no-op (the controller checks
+        // this to avoid paying PCAP time on back-to-back same-phase reqs).
+        if matches!(&self.state, ReconfigState::Loaded { rm: cur } if cur == rm) {
+            return Ok(now);
+        }
+        let until = now + self.partial_load_seconds;
+        self.state = ReconfigState::Loading { rm: rm.to_string(), until };
+        self.reconfig_count += 1;
+        self.reconfig_seconds_total += self.partial_load_seconds;
+        Ok(until)
+    }
+
+    /// PCAP bandwidth exposure for diagnostics.
+    pub fn pcap(&self) -> &PcapModel {
+        &self.pcap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::region::{ReconfigurableModule, ReconfigurablePartition, StaticRegion};
+    use crate::fpga::resources::{ResourceVec, KV260};
+
+    fn device() -> FpgaDevice {
+        let mut sr = StaticRegion::default();
+        sr.add("tlmm", ResourceVec::new(42_854.0, 50_752.0, 5.5, 0.0, 320.0));
+        sr.add("norm", ResourceVec::new(6_210.0, 11_206.0, 4.0, 4.0, 47.0));
+        sr.add("other", ResourceVec::new(21_432.0, 22_402.0, 34.0, 48.0, 5.0));
+        let rp = ReconfigurablePartition::plan(vec![
+            ReconfigurableModule::new(
+                "attn-prefill",
+                ResourceVec::new(28_400.0, 42_053.0, 140.0f64.min(81.0), 8.0, 303.0),
+                7,
+            ),
+            ReconfigurableModule::new(
+                "attn-decode",
+                ResourceVec::new(26_418.0, 27_236.0, 16.0, 8.0, 278.0),
+                7,
+            ),
+        ])
+        .unwrap();
+        FpgaDevice::program(KV260.clone(), RegionPlan { static_region: sr, rp }).unwrap()
+    }
+
+    #[test]
+    fn swap_lifecycle() {
+        let mut dev = device();
+        assert_eq!(*dev.state(), ReconfigState::Empty);
+        assert!(!dev.is_live("attn-prefill", 0.0));
+
+        let done = dev.start_reconfig("attn-prefill", 0.0).unwrap();
+        assert!(done > 0.0);
+        assert!(!dev.is_live("attn-prefill", done / 2.0), "not live mid-load");
+        assert!(dev.is_live("attn-prefill", done));
+
+        // Swapping to decode after completion works and takes the same time.
+        dev.settle(done);
+        let done2 = dev.start_reconfig("attn-decode", done).unwrap();
+        assert!((done2 - done - dev.reconfig_latency()).abs() < 1e-12);
+        assert_eq!(dev.reconfig_count, 2);
+    }
+
+    #[test]
+    fn pcap_is_serial() {
+        let mut dev = device();
+        let done = dev.start_reconfig("attn-prefill", 0.0).unwrap();
+        let err = dev.start_reconfig("attn-decode", done / 2.0).unwrap_err();
+        assert!(err.to_string().contains("PCAP busy"));
+    }
+
+    #[test]
+    fn reload_same_rm_is_free() {
+        let mut dev = device();
+        let done = dev.start_reconfig("attn-decode", 0.0).unwrap();
+        dev.settle(done);
+        let t2 = dev.start_reconfig("attn-decode", done).unwrap();
+        assert_eq!(t2, done, "same-RM reload must be a no-op");
+        assert_eq!(dev.reconfig_count, 1);
+    }
+
+    #[test]
+    fn unknown_rm_rejected() {
+        let mut dev = device();
+        assert!(dev.start_reconfig("attn-nope", 0.0).is_err());
+    }
+
+    #[test]
+    fn reconfig_latency_near_paper_45ms() {
+        let dev = device();
+        let ms = dev.reconfig_latency() * 1e3;
+        assert!((35.0..55.0).contains(&ms), "got {ms:.1} ms");
+    }
+}

@@ -1,0 +1,30 @@
+//! FPGA substrate simulator — the KV260 stand-in (DESIGN.md §2).
+//!
+//! The paper deploys on an AMD Kria KV260 (Zynq UltraScale+ XCK26 MPSoC)
+//! and evaluates three things this module models:
+//!
+//! * **fabric resources** ([`resources`]) — LUT/FF/BRAM/URAM/DSP vectors,
+//!   the Eq. 2 accounting `r_proj + max(r_pre, r_dec) <= R_total`, and the
+//!   utilization arithmetic behind Table 2;
+//! * **regions** ([`region`]) — the static region / reconfigurable
+//!   partition (RP) split produced by Vivado DFX pblocks, with RP pin
+//!   compatibility and the "dynamic region sized for the largest RM" rule;
+//! * **partial bitstreams** ([`bitstream`]) — size ∝ RP fabric area, PCAP
+//!   streaming time (the 45 ms of Fig. 5), and full-device programming;
+//! * **the device** ([`device`]) — a checked composition of the above with
+//!   reconfiguration state (which RM is live, is the RP mid-swap).
+//!
+//! Everything is arithmetic over published device constants — no RTL — but
+//! the *checks* are real: any engine configuration the DSE proposes is
+//! validated against the same constraints Vivado place-and-route would
+//! enforce (capacity, routability-derived utilization ceilings).
+
+pub mod bitstream;
+pub mod device;
+pub mod region;
+pub mod resources;
+
+pub use bitstream::{Bitstream, PcapModel};
+pub use device::{FpgaDevice, ReconfigState};
+pub use region::{ReconfigurableModule, ReconfigurablePartition, RegionPlan, StaticRegion};
+pub use resources::{DeviceConfig, ResourceVec, Utilization, KV260, ROUTABILITY_CEILING};

@@ -1,0 +1,237 @@
+//! Static-region / reconfigurable-partition floorplanning (the DFX pblock
+//! split of §3.2.1).
+//!
+//! At design time the fabric is split into a **static region** (TLMM
+//! linear unit, RMSNorm/find-max, controllers, NoC/AXI plumbing — the
+//! operators whose dataflow is phase-invariant) and one **reconfigurable
+//! partition** (RP) hosting the attention subsystem. The RP can load one
+//! **reconfigurable module** (RM) at a time: the prefill attention engine
+//! or the decode attention engine. DFX rules modeled here:
+//!
+//! * the RP pblock must enclose the largest RM in every resource class
+//!   (`ResourceVec::max`), plus a placement margin (pblocks cannot be
+//!   packed to 100%);
+//! * RP pin interface is fixed across RMs (checked by id equality here —
+//!   both RMs are generated from the same interface template);
+//! * Eq. 2: `static + pblock <= device`, with the routability ceiling
+//!   applied on top (§3.3.3's timing-closure feedback).
+
+use super::resources::{DeviceConfig, ResourceVec, ROUTABILITY_CEILING};
+
+/// Placement slack inside a pblock: DFX pblocks route at <= ~80-90% fill,
+/// so the partition must be drawn larger than its largest tenant.
+pub const PBLOCK_FILL_CEILING: f64 = 0.85;
+
+/// A module that can be loaded into the reconfigurable partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigurableModule {
+    pub name: String,
+    /// Fabric cost of the module's engine logic.
+    pub resources: ResourceVec,
+    /// Interface signature — all RMs of one RP must match (DFX fixes the
+    /// partition pins at implementation time).
+    pub interface_id: u64,
+}
+
+impl ReconfigurableModule {
+    pub fn new(name: impl Into<String>, resources: ResourceVec, interface_id: u64) -> Self {
+        Self { name: name.into(), resources, interface_id }
+    }
+}
+
+/// The dynamic pblock: sized at floorplan time, hosts one RM at runtime.
+#[derive(Debug, Clone)]
+pub struct ReconfigurablePartition {
+    /// Fabric area reserved by the pblock (>= largest RM / fill ceiling).
+    pub pblock: ResourceVec,
+    /// Registered modules (attention-prefill, attention-decode).
+    pub modules: Vec<ReconfigurableModule>,
+}
+
+impl ReconfigurablePartition {
+    /// Floorplan an RP around a set of RMs. Fails if the RMs disagree on
+    /// interface (DFX pin compatibility).
+    pub fn plan(modules: Vec<ReconfigurableModule>) -> Result<Self, String> {
+        if modules.is_empty() {
+            return Err("RP needs at least one RM".into());
+        }
+        let iface = modules[0].interface_id;
+        if let Some(bad) = modules.iter().find(|m| m.interface_id != iface) {
+            return Err(format!(
+                "RM '{}' interface 0x{:x} != partition interface 0x{:x}",
+                bad.name, bad.interface_id, iface
+            ));
+        }
+        let largest = modules
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, m| acc.max(&m.resources));
+        let pblock = largest * (1.0 / PBLOCK_FILL_CEILING);
+        Ok(Self { pblock, modules })
+    }
+
+    pub fn module(&self, name: &str) -> Option<&ReconfigurableModule> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+
+    /// Can `rm` be hosted (fits the pblock at the fill ceiling)?
+    pub fn admits(&self, rm: &ReconfigurableModule) -> bool {
+        rm.resources.fits_within(&(self.pblock * PBLOCK_FILL_CEILING))
+            && self
+                .modules
+                .first()
+                .map(|m| m.interface_id == rm.interface_id)
+                .unwrap_or(true)
+    }
+}
+
+/// The static region's inventory (Table 2 rows 1-3).
+#[derive(Debug, Clone, Default)]
+pub struct StaticRegion {
+    pub components: Vec<(String, ResourceVec)>,
+}
+
+impl StaticRegion {
+    pub fn add(&mut self, name: impl Into<String>, r: ResourceVec) {
+        self.components.push((name.into(), r));
+    }
+
+    pub fn total(&self) -> ResourceVec {
+        self.components
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, (_, r)| acc + *r)
+    }
+}
+
+/// A complete floorplan: static region + RP on a device, validated.
+#[derive(Debug, Clone)]
+pub struct RegionPlan {
+    pub static_region: StaticRegion,
+    pub rp: ReconfigurablePartition,
+}
+
+impl RegionPlan {
+    /// Eq. 2 with the routability ceiling: `static + pblock` must fit the
+    /// device scaled by [`ROUTABILITY_CEILING`] in its binding class.
+    pub fn validate(&self, device: &DeviceConfig) -> Result<PlanReport, String> {
+        let static_total = self.static_region.total();
+        let total = static_total + self.rp.pblock;
+        if !total.fits_within(&device.resources) {
+            return Err(format!(
+                "floorplan exceeds {}: need {} have {}",
+                device.name, total, device.resources
+            ));
+        }
+        // Routability/timing closure is a *logic congestion* phenomenon:
+        // the ceiling applies to LUT/FF fill. Hard blocks (BRAM/URAM/DSP)
+        // can legitimately run to ~97% — the paper ships at 96% URAM.
+        let u = total.utilization(&device.resources);
+        let congestion = u.lut.max(u.ff);
+        if congestion > ROUTABILITY_CEILING {
+            return Err(format!(
+                "LUT/FF utilization {:.1}% above routability ceiling {:.0}% — \
+                 P&R would fail timing (reduce RM parallelism, §3.3.3)",
+                congestion * 100.0,
+                ROUTABILITY_CEILING * 100.0
+            ));
+        }
+        let peak = congestion;
+        Ok(PlanReport { static_total, total, peak_utilization: peak })
+    }
+
+    /// The paper's "Equivalent Total": static region + *every* RM counted
+    /// simultaneously — what a non-DPR design would need (Table 2 last rows).
+    pub fn equivalent_total(&self) -> ResourceVec {
+        self.rp
+            .modules
+            .iter()
+            .fold(self.static_region.total(), |acc, m| acc + m.resources)
+    }
+}
+
+/// Result of a successful floorplan validation.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanReport {
+    pub static_total: ResourceVec,
+    pub total: ResourceVec,
+    pub peak_utilization: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resources::KV260;
+
+    fn rm(name: &str, lut: f64, iface: u64) -> ReconfigurableModule {
+        ReconfigurableModule::new(
+            name,
+            ResourceVec::new(lut, 1.5 * lut, 20.0, 8.0, lut / 100.0),
+            iface,
+        )
+    }
+
+    #[test]
+    fn rp_sized_for_largest_rm() {
+        let rp = ReconfigurablePartition::plan(vec![
+            rm("prefill", 28_400.0, 1),
+            rm("decode", 26_418.0, 1),
+        ])
+        .unwrap();
+        // pblock holds the larger RM with fill margin
+        assert!(rp.pblock.lut >= 28_400.0 / PBLOCK_FILL_CEILING - 1e-6);
+        assert!(rp.admits(rp.module("prefill").unwrap()));
+        assert!(rp.admits(rp.module("decode").unwrap()));
+    }
+
+    #[test]
+    fn interface_mismatch_rejected() {
+        let err = ReconfigurablePartition::plan(vec![rm("a", 100.0, 1), rm("b", 100.0, 2)])
+            .unwrap_err();
+        assert!(err.contains("interface"));
+    }
+
+    #[test]
+    fn foreign_rm_too_big_is_rejected() {
+        let rp = ReconfigurablePartition::plan(vec![rm("a", 10_000.0, 1)]).unwrap();
+        assert!(!rp.admits(&rm("huge", 50_000.0, 1)));
+        assert!(!rp.admits(&rm("wrong-iface", 1_000.0, 9)));
+    }
+
+    #[test]
+    fn plan_validation_enforces_ceiling() {
+        let mut sr = StaticRegion::default();
+        sr.add("tlmm", ResourceVec::new(42_854.0, 50_752.0, 5.5, 0.0, 320.0));
+        sr.add("norm", ResourceVec::new(6_210.0, 11_206.0, 4.0, 4.0, 47.0));
+        sr.add("other", ResourceVec::new(21_432.0, 22_402.0, 34.0, 48.0, 5.0));
+        let rp = ReconfigurablePartition::plan(vec![
+            rm("prefill", 28_400.0, 1),
+            rm("decode", 26_418.0, 1),
+        ])
+        .unwrap();
+        let plan = RegionPlan { static_region: sr.clone(), rp };
+        let report = plan.validate(&KV260).unwrap();
+        assert!(report.peak_utilization < ROUTABILITY_CEILING);
+
+        // Blow up the static region -> validation must fail.
+        let mut sr2 = sr;
+        sr2.add("bloat", ResourceVec::new(40_000.0, 0.0, 0.0, 0.0, 0.0));
+        let rp2 = ReconfigurablePartition::plan(vec![rm("p", 28_400.0, 1)]).unwrap();
+        let plan2 = RegionPlan { static_region: sr2, rp: rp2 };
+        assert!(plan2.validate(&KV260).is_err());
+    }
+
+    #[test]
+    fn equivalent_total_counts_both_rms() {
+        let mut sr = StaticRegion::default();
+        sr.add("s", ResourceVec::new(70_000.0, 0.0, 0.0, 0.0, 0.0));
+        let rp = ReconfigurablePartition::plan(vec![
+            rm("p", 28_000.0, 1),
+            rm("d", 26_000.0, 1),
+        ])
+        .unwrap();
+        let plan = RegionPlan { static_region: sr, rp };
+        let eq = plan.equivalent_total();
+        assert!((eq.lut - 124_000.0).abs() < 1e-6);
+        // Exceeds the chip: the Table 2 ">100%" headline.
+        assert!(eq.lut > KV260.resources.lut);
+    }
+}

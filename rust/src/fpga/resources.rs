@@ -1,0 +1,274 @@
+//! Fabric resource vectors and device budgets.
+//!
+//! Units follow the paper's Table 2: LUTs, flip-flops, BRAM36 blocks
+//! (fractional — a BRAM18 is 0.5), URAM blocks, DSP48 slices. `f64`
+//! throughout so fractional BRAM and utilization math stay exact enough.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+/// A bundle of the five fabric resource classes.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram36: f64,
+    pub uram: f64,
+    pub dsp: f64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec =
+        ResourceVec { lut: 0.0, ff: 0.0, bram36: 0.0, uram: 0.0, dsp: 0.0 };
+
+    pub fn new(lut: f64, ff: f64, bram36: f64, uram: f64, dsp: f64) -> Self {
+        Self { lut, ff, bram36, uram, dsp }
+    }
+
+    /// Component-wise `self <= other` (the fits-in-budget check).
+    pub fn fits_within(&self, budget: &ResourceVec) -> bool {
+        self.lut <= budget.lut
+            && self.ff <= budget.ff
+            && self.bram36 <= budget.bram36
+            && self.uram <= budget.uram
+            && self.dsp <= budget.dsp
+    }
+
+    /// Component-wise maximum — the RP sizing rule: the dynamic region must
+    /// hold the *largest* reconfigurable module in every resource class.
+    pub fn max(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut.max(other.lut),
+            ff: self.ff.max(other.ff),
+            bram36: self.bram36.max(other.bram36),
+            uram: self.uram.max(other.uram),
+            dsp: self.dsp.max(other.dsp),
+        }
+    }
+
+    /// Largest utilization fraction across classes w.r.t. a budget.
+    pub fn peak_utilization(&self, budget: &ResourceVec) -> f64 {
+        [
+            self.lut / budget.lut,
+            self.ff / budget.ff,
+            self.bram36 / budget.bram36,
+            self.uram / budget.uram,
+            self.dsp / budget.dsp,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+
+    /// Per-class utilization report against a budget.
+    pub fn utilization(&self, budget: &ResourceVec) -> Utilization {
+        Utilization {
+            lut: self.lut / budget.lut,
+            ff: self.ff / budget.ff,
+            bram36: self.bram36 / budget.bram36,
+            uram: self.uram / budget.uram,
+            dsp: self.dsp / budget.dsp,
+        }
+    }
+
+    pub fn is_nonnegative(&self) -> bool {
+        self.lut >= 0.0
+            && self.ff >= 0.0
+            && self.bram36 >= 0.0
+            && self.uram >= 0.0
+            && self.dsp >= 0.0
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram36: self.bram36 + o.bram36,
+            uram: self.uram + o.uram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, o: ResourceVec) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for ResourceVec {
+    type Output = ResourceVec;
+    fn sub(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut - o.lut,
+            ff: self.ff - o.ff,
+            bram36: self.bram36 - o.bram36,
+            uram: self.uram - o.uram,
+            dsp: self.dsp - o.dsp,
+        }
+    }
+}
+
+impl Mul<f64> for ResourceVec {
+    type Output = ResourceVec;
+    fn mul(self, s: f64) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut * s,
+            ff: self.ff * s,
+            bram36: self.bram36 * s,
+            uram: self.uram * s,
+            dsp: self.dsp * s,
+        }
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{{lut {:.0}, ff {:.0}, bram {:.1}, uram {:.0}, dsp {:.0}}}",
+            self.lut, self.ff, self.bram36, self.uram, self.dsp
+        )
+    }
+}
+
+/// Per-class utilization fractions.
+#[derive(Debug, Clone, Copy)]
+pub struct Utilization {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram36: f64,
+    pub uram: f64,
+    pub dsp: f64,
+}
+
+impl Utilization {
+    pub fn peak(&self) -> f64 {
+        [self.lut, self.ff, self.bram36, self.uram, self.dsp]
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Above this peak utilization place-and-route is assumed to fail timing —
+/// the paper's "iteratively reduce resource utilization in the dynamic
+/// partition" loop (§3.3.3) kicks in at this threshold. The paper ships at
+/// 87% LUT, so the ceiling sits just above it.
+pub const ROUTABILITY_CEILING: f64 = 0.90;
+
+/// A target device (board-level constants; DDR/PCAP live in
+/// [`crate::memory`] / [`super::bitstream`]).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub name: &'static str,
+    pub resources: ResourceVec,
+    /// Fabric clock for the HLS engines (MHz).
+    pub clock_mhz: f64,
+    /// Full-device configuration bitstream size (bytes); partial bitstream
+    /// sizes scale from this by fabric-area fraction.
+    pub full_bitstream_bytes: f64,
+    /// PCAP configuration throughput (bytes/s).
+    pub pcap_bytes_per_sec: f64,
+    /// Number of PL<->DDR high-performance ports.
+    pub n_hp_ports: usize,
+    /// Peak DDR bandwidth of one HP port (bytes/s).
+    pub hp_port_peak: f64,
+    /// Aggregate DDR controller ceiling across all ports (bytes/s).
+    pub ddr_aggregate_peak: f64,
+}
+
+/// AMD Kria KV260 (Zynq UltraScale+ XCK26, the paper's platform).
+///
+/// Fabric: 117,120 LUT6 / 234,240 FF / 144 BRAM36 / 64 URAM / 1,248 DSP48.
+/// DDR4-2400 x64 -> 19.2 GB/s controller peak; four 128-bit HP ports.
+/// PCAP sustains ~400 MB/s, giving the paper's ~45 ms for the attention RP.
+pub const KV260: DeviceConfig = DeviceConfig {
+    name: "KV260 (XCK26)",
+    resources: ResourceVec {
+        lut: 117_120.0,
+        ff: 234_240.0,
+        bram36: 144.0,
+        uram: 64.0,
+        dsp: 1_248.0,
+    },
+    clock_mhz: 250.0,
+    full_bitstream_bytes: 25.5e6,
+    pcap_bytes_per_sec: 400.0e6,
+    n_hp_ports: 4,
+    hp_port_peak: 4.8e9,
+    ddr_aggregate_peak: 19.2e9,
+};
+
+impl DeviceConfig {
+    pub fn clock_hz(&self) -> f64 {
+        self.clock_mhz * 1e6
+    }
+
+    /// Seconds per fabric cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / self.clock_hz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(lut: f64) -> ResourceVec {
+        ResourceVec::new(lut, 2.0 * lut, lut / 1000.0, lut / 2000.0, lut / 100.0)
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = r(1000.0);
+        let b = r(500.0);
+        assert_eq!((a + b).lut, 1500.0);
+        assert_eq!((a - b).lut, 500.0);
+        assert_eq!((a * 2.0).dsp, 20.0);
+        assert!(b.fits_within(&a));
+        assert!(!a.fits_within(&b));
+        assert!((a - b).is_nonnegative());
+        assert!(!(b - a).is_nonnegative());
+    }
+
+    #[test]
+    fn max_is_componentwise() {
+        let a = ResourceVec::new(10.0, 0.0, 5.0, 0.0, 1.0);
+        let b = ResourceVec::new(5.0, 2.0, 7.0, 0.0, 0.0);
+        let m = a.max(&b);
+        assert_eq!(m, ResourceVec::new(10.0, 2.0, 7.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn paper_table2_utilization() {
+        // Table 2 totals: 102,102 LUT / 176,440 FF / 124.5 BRAM / 62 URAM /
+        // 750 DSP on the XCK26 -> 87% / (36%) / 85% / 96% / 60%.
+        let total = ResourceVec::new(102_102.0, 176_440.0, 124.5, 62.0, 750.0);
+        let u = total.utilization(&KV260.resources);
+        assert!((u.lut - 0.87).abs() < 0.005, "lut {:.3}", u.lut);
+        assert!((u.bram36 - 0.86).abs() < 0.01, "bram {:.3}", u.bram36);
+        assert!((u.uram - 0.97).abs() < 0.01, "uram {:.3}", u.uram);
+        assert!((u.dsp - 0.60).abs() < 0.005, "dsp {:.3}", u.dsp);
+        // NB: the paper reports FF at 36%; against the XCK26's 234,240 FFs
+        // the arithmetic gives 75%. We keep the device constant and flag
+        // the discrepancy in EXPERIMENTS.md instead of fudging the budget.
+        assert!((u.ff - 0.753).abs() < 0.005, "ff {:.3}", u.ff);
+    }
+
+    #[test]
+    fn equivalent_total_exceeds_chip() {
+        // Table 2 "Equivalent Total": static + BOTH attention RMs counted.
+        let equivalent = ResourceVec::new(124_780.0, 136_721.0, 98.5, 62.0, 953.0);
+        let u = equivalent.utilization(&KV260.resources);
+        assert!(u.lut > 1.0, "the DPR advantage: logic > chip capacity");
+    }
+
+    #[test]
+    fn peak_utilization_picks_binding_class() {
+        let x = ResourceVec::new(0.0, 0.0, 0.0, 63.0, 0.0);
+        let u = x.peak_utilization(&KV260.resources);
+        assert!((u - 63.0 / 64.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,48 @@
+//! # PD-Swap
+//!
+//! Full-system reproduction of *"PD-Swap: Prefill-Decode Logic Swapping for
+//! End-to-End LLM Inference on Edge FPGAs via Dynamic Partial
+//! Reconfiguration"* (Zhang, Chen, Qiao, Huang — UC Irvine, 2025).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** Pallas kernels (`python/compile/kernels/`) — TLMM ternary
+//!   matmul, reverse-scheduled FlashAttention prefill, KV-streaming decode
+//!   attention, fused RMSNorm+quant.
+//! * **L2** JAX model (`python/compile/model.py`) — BitNet-style ternary
+//!   transformer prefill/decode graphs, AOT-lowered to HLO text.
+//! * **L3** this crate — loads the HLO artifacts via PJRT ([`runtime`]),
+//!   simulates the KV260 FPGA substrate the paper deploys on ([`fpga`],
+//!   [`memory`], [`engines`]), performs the paper's roofline-guided design
+//!   space exploration ([`roofline`], [`dse`]), and orchestrates
+//!   prefill→decode logic swapping with latency-overlapped dynamic partial
+//!   reconfiguration ([`reconfig`], [`coordinator`]).
+//!
+//! The FPGA itself is simulated (DESIGN.md §2 documents every
+//! substitution); the *functional* compute path is real — tokens are
+//! produced by executing the AOT artifacts on the PJRT CPU client.
+//!
+//! ## Quick start
+//!
+//! ```bash
+//! make artifacts            # AOT-compile the HLO artifacts (runs python)
+//! cargo run --release --example quickstart
+//! cargo run --release -- eval fig6   # regenerate the paper's Fig. 6
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dse;
+pub mod engines;
+pub mod eval;
+pub mod fpga;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod reconfig;
+pub mod roofline;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

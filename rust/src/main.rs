@@ -1,0 +1,269 @@
+//! `pd-swap` — the PD-Swap coordinator CLI.
+//!
+//! ```text
+//! pd-swap info                         # device, design, floorplan report
+//! pd-swap eval <table1|table2|fig4a|fig5|fig6|all>
+//! pd-swap dse [--static] [--l-long N] [--alpha F]
+//! pd-swap generate --artifacts DIR --prompt 1,2,3 [--n N] [--temperature F]
+//! pd-swap serve --artifacts DIR [--requests N] [--seed S]
+//! pd-swap simulate [--requests N] [--policy batched] [--no-overlap]
+//! ```
+
+use anyhow::{bail, Result};
+
+use pd_swap::coordinator::{
+    generate_workload, LiveServer, LiveServerConfig, Policy, SimServer, SimServerConfig,
+    WorkloadConfig,
+};
+use pd_swap::dse::{explore, DseConfig};
+use pd_swap::engines::{AcceleratorDesign, AttentionHosting};
+use pd_swap::eval;
+use pd_swap::fpga::KV260;
+use pd_swap::model::BITNET_0_73B;
+use pd_swap::runtime::{SamplerConfig, SamplingMode};
+use pd_swap::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("eval") => run_eval(&args),
+        Some("dse") => run_dse(&args),
+        Some("generate") => generate(&args),
+        Some("serve") => serve(&args),
+        Some("simulate") => simulate(&args),
+        _ => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+pd-swap — prefill-decode logic swapping for LLM inference on edge FPGAs (simulated)
+
+USAGE:
+  pd-swap info                          device + design + floorplan report
+  pd-swap eval <table1|table2|fig4a|fig5|fig6|all>
+  pd-swap dse [--static] [--l-long N] [--l-short N] [--alpha F]
+  pd-swap generate --artifacts DIR --prompt 1,2,3 [--n 16] [--temperature F] [--top-k K]
+  pd-swap serve --artifacts DIR [--requests 8] [--gen 32] [--seed 0]
+  pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]";
+
+fn info() -> Result<()> {
+    let design = AcceleratorDesign::pd_swap();
+    let plan = design.region_plan()?;
+    let report = plan.validate(&KV260).map_err(|e| anyhow::anyhow!(e))?;
+    println!("device: {}", KV260.name);
+    println!("  fabric: {}", KV260.resources);
+    println!(
+        "  clock: {} MHz, PCAP {:.0} MB/s, DDR {:.1} GB/s over {} HP ports",
+        KV260.clock_mhz,
+        KV260.pcap_bytes_per_sec / 1e6,
+        KV260.ddr_aggregate_peak / 1e9,
+        KV260.n_hp_ports
+    );
+    println!("design: {}", design.name);
+    println!("  static region: {}", report.static_total);
+    println!("  RP pblock:     {}", plan.rp.pblock);
+    for m in &plan.rp.modules {
+        println!("    RM {:14} {}", m.name, m.resources);
+    }
+    println!(
+        "  total: {} (peak LUT/FF util {:.1}%)",
+        report.total,
+        report.peak_utilization * 100.0
+    );
+    println!("  equivalent total (both RMs resident): {}", plan.equivalent_total());
+    let device = design.program(&KV260)?;
+    println!(
+        "  partial reconfiguration latency: {:.1} ms",
+        device.reconfig_latency() * 1e3
+    );
+    println!("model: {} ({} params)", BITNET_0_73B.name, BITNET_0_73B.total_params());
+    Ok(())
+}
+
+fn run_eval(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    match which {
+        "table1" => {
+            eval::run_table1();
+        }
+        "table2" => {
+            eval::run_table2();
+        }
+        "fig4a" => {
+            eval::run_fig4a();
+        }
+        "fig5" => {
+            eval::run_fig5();
+        }
+        "fig6" => {
+            eval::run_fig6(pd_swap::eval::fig6::LENGTHS);
+        }
+        "all" => {
+            eval::run_table1();
+            eval::run_table2();
+            eval::run_fig4a();
+            eval::run_fig5();
+            eval::run_fig6(pd_swap::eval::fig6::LENGTHS);
+        }
+        other => bail!("unknown eval target '{other}' (try table1|table2|fig4a|fig5|fig6|all)"),
+    }
+    Ok(())
+}
+
+fn run_dse(args: &Args) -> Result<()> {
+    let hosting = if args.flag("static") {
+        AttentionHosting::StaticBoth
+    } else {
+        AttentionHosting::Reconfigurable
+    };
+    let mut cfg = DseConfig::paper_default(BITNET_0_73B, KV260.clone(), hosting);
+    cfg.l_long = args.get_usize("l-long", cfg.l_long);
+    cfg.l_short = args.get_usize("l-short", cfg.l_short);
+    cfg.alpha = args.get_f64("alpha", cfg.alpha);
+
+    println!(
+        "exploring {} hosting: {} x {} x {} grid ...",
+        if hosting == AttentionHosting::Reconfigurable { "DPR" } else { "static" },
+        cfg.tlmm_grid.len(),
+        cfg.prefill_grid.len(),
+        cfg.decode_grid.len()
+    );
+    let res = explore(&cfg);
+    println!("explored {} candidates, {} feasible", res.explored, res.feasible);
+    println!("best: {}", res.best.design.name);
+    println!(
+        "  T_pre(L={}) = {:.2} s | T_dec(L={}) = {:.1} ms ({:.1} tok/s) | T_dec(L={}) = {:.1} ms ({:.1} tok/s)",
+        cfg.l_prefill,
+        res.best.t_pre,
+        cfg.l_long,
+        res.best.t_dec_long * 1e3,
+        1.0 / res.best.t_dec_long,
+        cfg.l_short,
+        res.best.t_dec_short * 1e3,
+        1.0 / res.best.t_dec_short,
+    );
+    println!("  objective (Eq. 6): {:.3}", res.best.objective);
+    println!("runner-ups:");
+    for p in res.top.iter().take(5) {
+        println!("  {:40} obj {:.3}", p.design.name, p.objective);
+    }
+    Ok(())
+}
+
+fn sampler_from(args: &Args) -> SamplerConfig {
+    let temp = args.get_f64("temperature", 0.0) as f32;
+    let top_k = args.get_usize("top-k", 0);
+    let mode = if top_k > 0 {
+        SamplingMode::TopK { k: top_k, temperature: if temp > 0.0 { temp } else { 1.0 } }
+    } else if temp > 0.0 {
+        SamplingMode::Temperature(temp)
+    } else {
+        SamplingMode::Greedy
+    };
+    SamplerConfig { mode }
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts/test");
+    let prompt: Vec<i32> = args
+        .get("prompt")
+        .unwrap_or("1,2,3,4,5")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse().expect("prompt must be comma-separated ints"))
+        .collect();
+    let n = args.get_usize("n", 16);
+
+    let mut server = LiveServer::new(LiveServerConfig {
+        artifacts_dir: dir.into(),
+        sampler: sampler_from(args),
+        seed: args.get_u64("seed", 0),
+        simulate_fpga: true,
+    })?;
+    let req = pd_swap::coordinator::Request::with_tokens(0, prompt.clone(), n, 0.0);
+    let out = server.serve(&req)?;
+    println!("prompt:    {prompt:?}");
+    println!("generated: {:?}", out.outcome.generated);
+    println!(
+        "host: ttft {:.1} ms, {:.2} tok/s decode",
+        out.outcome.ttft * 1e3,
+        1.0 / out.outcome.mean_tpot.max(1e-9)
+    );
+    if let (Some(st), Some(se)) = (out.sim_ttft, out.sim_e2e) {
+        println!("simulated KV260 (PD-Swap): ttft {st:.2} s, e2e {se:.2} s");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts/tiny");
+    let mut server = LiveServer::new(LiveServerConfig {
+        artifacts_dir: dir.into(),
+        sampler: sampler_from(args),
+        seed: args.get_u64("seed", 0),
+        simulate_fpga: true,
+    })?;
+    let m = server.engine.manifest().config.clone();
+    let wl = generate_workload(&WorkloadConfig {
+        n_requests: args.get_usize("requests", 8),
+        prompt_len: (4, *m.prefill_buckets.last().unwrap()),
+        gen_len: (4, args.get_usize("gen", 32)),
+        seed: args.get_u64("seed", 0),
+        vocab: m.vocab,
+        ..Default::default()
+    });
+    println!(
+        "serving {} requests against {} ({} params) ...",
+        wl.len(),
+        m.name,
+        server.engine.manifest().n_params
+    );
+    let outcomes = server.run(&wl)?;
+    for o in &outcomes {
+        println!(
+            "  req {:2} prompt {:4} -> {:3} tokens, host ttft {:7.1} ms, tpot {:6.1} ms",
+            o.outcome.id,
+            o.outcome.prompt_len,
+            o.outcome.generated.len(),
+            o.outcome.ttft * 1e3,
+            o.outcome.mean_tpot * 1e3
+        );
+    }
+    println!("\nhost (PJRT CPU) metrics:\n{}", server.metrics.report());
+    println!(
+        "\nsimulated KV260 (PD-Swap) metrics for the same traces:\n{}",
+        server.sim_metrics.report()
+    );
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let mut cfg = if args.flag("static") {
+        SimServerConfig::tellme_static(BITNET_0_73B, KV260.clone())
+    } else {
+        SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())
+    };
+    if args.get_or("policy", "per-request") == "batched" {
+        cfg.policy = Policy::BatchedPhases { max_batch: args.get_usize("max-batch", 8) };
+    }
+    if args.flag("no-overlap") {
+        cfg.overlap = false;
+    }
+    let wl = generate_workload(&WorkloadConfig {
+        n_requests: args.get_usize("requests", 16),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    });
+    let mut server = SimServer::new(cfg)?;
+    server.run(wl)?;
+    println!(
+        "simulated KV260 serving metrics ({}):\n{}",
+        if args.flag("static") { "TeLLMe static" } else { "PD-Swap" },
+        server.metrics.report()
+    );
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! DDR + HP-port bandwidth model (the §3.2.3 memory-interface substrate).
+//!
+//! The KV260's PL reaches DDR4 through four High-Performance (HP) AXI
+//! ports. Each port sustains a fraction of its theoretical peak that
+//! depends on burst length (short stride-y bursts waste controller cycles);
+//! all ports together are capped by the single DDR controller. The
+//! paper's decode optimization is purely a *mapping* change: instead of
+//! dedicating ports to Q / K / V / O as in the static baseline, the decode
+//! RM maps **two ports to K and two to V**, pre-stages the single Q token
+//! into on-chip buffers, and holds the output token locally until the KV
+//! streams finish — roughly doubling effective KV bandwidth.
+//!
+//! [`PortMapping`] expresses such assignments, [`MemorySystem::transfer_time`]
+//! evaluates them with per-port serialization + aggregate capping, and the
+//! unit tests pin the ~2x claim.
+
+pub mod ports;
+pub mod traffic;
+
+pub use ports::{AxiBurst, HpPort, MemorySystem, PortAssignment, PortMapping, Stream};
+pub use traffic::{PhaseTraffic, TrafficModel};

@@ -1,0 +1,173 @@
+//! Phase traffic: turns [`crate::model::workload`] byte counts into
+//! per-stream DDR demands evaluated under a [`super::PortMapping`].
+
+use crate::model::{ComponentOps, ModelShape, PhaseWork, PrefillWork};
+
+use super::ports::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
+
+/// Burst shapes per stream class: KV and weights are long sequential
+/// bursts; single-token Q/O are short.
+pub fn burst_for(s: Stream) -> AxiBurst {
+    match s {
+        Stream::K | Stream::V | Stream::Weights => AxiBurst { beats: 64 },
+        Stream::Activations => AxiBurst { beats: 16 },
+        Stream::Q | Stream::O => AxiBurst { beats: 4 },
+    }
+}
+
+/// DDR demand of one phase, broken down by stream.
+#[derive(Debug, Clone)]
+pub struct PhaseTraffic {
+    pub demands: Vec<PortAssignment>,
+}
+
+impl PhaseTraffic {
+    /// Decode-step attention traffic: the full KV cache split across the
+    /// K and V streams, one token of Q in, one token of O out.
+    pub fn decode_attention(shape: &ModelShape, l: usize) -> Self {
+        let kv_total = shape.kv_bytes(l);
+        let tok = shape.d_model as f64 * shape.kv_precision.bytes();
+        Self {
+            demands: vec![
+                PortAssignment { stream: Stream::K, bytes: kv_total / 2.0, burst: burst_for(Stream::K) },
+                PortAssignment { stream: Stream::V, bytes: kv_total / 2.0, burst: burst_for(Stream::V) },
+                PortAssignment { stream: Stream::Q, bytes: tok, burst: burst_for(Stream::Q) },
+                PortAssignment { stream: Stream::O, bytes: tok, burst: burst_for(Stream::O) },
+            ],
+        }
+    }
+
+    /// Decode-step projection traffic: the packed ternary weights stream.
+    pub fn decode_projection(shape: &ModelShape) -> Self {
+        Self {
+            demands: vec![PortAssignment {
+                stream: Stream::Weights,
+                bytes: shape.ternary_weight_bytes(),
+                burst: burst_for(Stream::Weights),
+            }],
+        }
+    }
+
+    /// Prefill traffic (per full prompt): weights once + QKV/activations.
+    pub fn prefill(shape: &ModelShape, l: usize) -> Self {
+        let work = PrefillWork { shape: *shape, l };
+        let attn: ComponentOps = work.attention();
+        let proj: ComponentOps = work.projection();
+        Self {
+            demands: vec![
+                PortAssignment {
+                    stream: Stream::Weights,
+                    bytes: shape.ternary_weight_bytes(),
+                    burst: burst_for(Stream::Weights),
+                },
+                PortAssignment {
+                    stream: Stream::Activations,
+                    bytes: proj.read_bytes - shape.ternary_weight_bytes() + proj.write_bytes,
+                    burst: burst_for(Stream::Activations),
+                },
+                PortAssignment {
+                    stream: Stream::K,
+                    bytes: attn.read_bytes / 2.0 + attn.write_bytes / 2.0,
+                    burst: burst_for(Stream::K),
+                },
+                PortAssignment {
+                    stream: Stream::V,
+                    bytes: attn.read_bytes / 2.0 + attn.write_bytes / 2.0,
+                    burst: burst_for(Stream::V),
+                },
+            ],
+        }
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.demands.iter().map(|d| d.bytes).sum()
+    }
+
+    /// Evaluate under a mapping.
+    pub fn time_under(&self, mem: &MemorySystem, mapping: &PortMapping) -> f64 {
+        mem.transfer_time(mapping, &self.demands)
+    }
+}
+
+/// Convenience bundle: memory system + both mappings, asking the question
+/// the paper's §3.2.3 answers.
+#[derive(Debug, Clone)]
+pub struct TrafficModel {
+    pub mem: MemorySystem,
+    pub baseline: PortMapping,
+    pub optimized: PortMapping,
+}
+
+impl TrafficModel {
+    pub fn new(mem: MemorySystem) -> Self {
+        let n = mem.n_ports;
+        Self {
+            mem,
+            baseline: PortMapping::qkvo_baseline(n),
+            optimized: PortMapping::decode_kv_optimized(n),
+        }
+    }
+
+    /// Effective KV bandwidth under each mapping (B/s).
+    pub fn kv_bandwidth(&self, optimized: bool) -> f64 {
+        let mapping = if optimized { &self.optimized } else { &self.baseline };
+        self.mem.effective_bandwidth(mapping, Stream::K, burst_for(Stream::K))
+            + self.mem.effective_bandwidth(mapping, Stream::V, burst_for(Stream::V))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn tm() -> TrafficModel {
+        TrafficModel::new(MemorySystem::for_device(&KV260))
+    }
+
+    #[test]
+    fn decode_attention_time_improves_with_remap() {
+        let t = tm();
+        let traffic = PhaseTraffic::decode_attention(&BITNET_0_73B, 2048);
+        let t_base = traffic.time_under(&t.mem, &t.baseline);
+        let t_opt = traffic.time_under(&t.mem, &t.optimized);
+        let speedup = t_base / t_opt;
+        assert!(
+            (1.7..=2.2).contains(&speedup),
+            "KV remap speedup {speedup:.2} (base {:.3} ms, opt {:.3} ms)",
+            t_base * 1e3,
+            t_opt * 1e3
+        );
+    }
+
+    #[test]
+    fn decode_kv_time_scales_with_context() {
+        let t = tm();
+        let t1 = PhaseTraffic::decode_attention(&BITNET_0_73B, 512)
+            .time_under(&t.mem, &t.optimized);
+        let t2 = PhaseTraffic::decode_attention(&BITNET_0_73B, 1024)
+            .time_under(&t.mem, &t.optimized);
+        let r = t2 / t1;
+        assert!((1.8..=2.2).contains(&r), "ratio {r:.2}");
+    }
+
+    #[test]
+    fn weights_stream_dominates_short_context_decode() {
+        // At short contexts T_weights >> KV time: decode is projection
+        // bound, which is why Fig. 6a starts near-flat.
+        let t = tm();
+        let w = PhaseTraffic::decode_projection(&BITNET_0_73B)
+            .time_under(&t.mem, &t.baseline);
+        let kv = PhaseTraffic::decode_attention(&BITNET_0_73B, 64)
+            .time_under(&t.mem, &t.optimized);
+        assert!(w > 3.0 * kv, "weights {:.3} ms kv {:.3} ms", w * 1e3, kv * 1e3);
+    }
+
+    #[test]
+    fn kv_bandwidth_ratio_near_two() {
+        let t = tm();
+        let r = t.kv_bandwidth(true) / t.kv_bandwidth(false);
+        assert!((1.9..=2.1).contains(&r), "ratio {r:.2}");
+    }
+}

@@ -1,0 +1,219 @@
+//! Serving telemetry: counters and log-bucketed latency histograms.
+//!
+//! Shared by the simulated coordinator and the live (PJRT) server; the
+//! serving example prints these as its latency/throughput report.
+
+use std::fmt;
+
+/// Monotonic counter.
+#[derive(Debug, Default, Clone)]
+pub struct Counter {
+    value: u64,
+}
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.value += 1;
+    }
+    pub fn add(&mut self, n: u64) {
+        self.value += n;
+    }
+    pub fn get(&self) -> u64 {
+        self.value
+    }
+}
+
+/// Log-bucketed latency histogram (microseconds, factor-of-2 buckets from
+/// 1 µs to ~1.2 hours) with exact min/max/mean tracking.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const N_BUCKETS: usize = 32;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(seconds: f64) -> usize {
+        let micros = (seconds * 1e6).max(1.0);
+        (micros.log2() as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Upper edge (seconds) of bucket `i`.
+    fn bucket_edge(i: usize) -> f64 {
+        (1u64 << (i + 1)) as f64 * 1e-6
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.buckets[Self::bucket_of(seconds)] += 1;
+        self.count += 1;
+        self.sum += seconds;
+        self.min = self.min.min(seconds);
+        self.max = self.max.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Approximate quantile from bucket edges (upper bound of the bucket
+    /// containing the q-th sample).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target.max(1) {
+                return Self::bucket_edge(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+}
+
+impl fmt::Display for Histogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count,
+            self.mean() * 1e3,
+            self.quantile(0.50) * 1e3,
+            self.quantile(0.95) * 1e3,
+            self.quantile(0.99) * 1e3,
+            self.max() * 1e3
+        )
+    }
+}
+
+/// The serving metric bundle.
+#[derive(Debug, Default, Clone)]
+pub struct ServerMetrics {
+    pub requests_completed: Counter,
+    pub tokens_generated: Counter,
+    pub reconfigurations: Counter,
+    /// Time-to-first-token per request.
+    pub ttft: Histogram,
+    /// Per-token decode latency.
+    pub tpot: Histogram,
+    /// End-to-end request latency.
+    pub e2e: Histogram,
+    /// Exposed (non-hidden) reconfiguration latency per swap.
+    pub reconfig_exposed: Histogram,
+}
+
+impl ServerMetrics {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} swaps={}\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {}",
+            self.requests_completed.get(),
+            self.tokens_generated.get(),
+            self.reconfigurations.get(),
+            self.ttft,
+            self.tpot,
+            self.e2e,
+            self.reconfig_exposed,
+        )
+    }
+
+    /// Aggregate decode throughput (tokens/s) implied by TPOT.
+    pub fn decode_throughput(&self) -> f64 {
+        let m = self.tpot.mean();
+        if m == 0.0 { 0.0 } else { 1.0 / m }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let mut c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for ms in [1.0, 2.0, 4.0, 8.0, 100.0] {
+            h.record(ms / 1e3);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean() - 0.023).abs() < 1e-3);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 0.1);
+        // p50 within a factor-2 bucket of the true median (4 ms).
+        let p50 = h.quantile(0.5);
+        assert!((0.002..=0.008).contains(&p50), "p50 {p50}");
+        assert!(h.quantile(1.0) >= h.quantile(0.5));
+    }
+
+    #[test]
+    fn histogram_empty_is_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.min(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut h = Histogram::default();
+        let mut x = 0.0001;
+        for _ in 0..100 {
+            h.record(x);
+            x *= 1.1;
+        }
+        let mut last = 0.0;
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let v = h.quantile(q);
+            assert!(v >= last, "q={q}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn throughput_from_tpot() {
+        let mut m = ServerMetrics::default();
+        m.tpot.record(0.040);
+        m.tpot.record(0.040);
+        assert!((m.decode_throughput() - 25.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload description: model shapes and per-phase op/byte accounting.
+//!
+//! This is the *analytic* view of the BitNet transformer that the
+//! simulator, roofline model, and DSE consume — the functional twin lives
+//! in `python/compile/model.py` and executes via [`crate::runtime`]. The
+//! two views share shapes through `manifest.json`.
+
+pub mod shapes;
+pub mod workload;
+
+pub use shapes::{ModelShape, Precision, BITNET_0_73B, E2E_100M, TEST, TINY};
+pub use workload::{ComponentOps, DecodeStepWork, PhaseWork, PrefillWork};

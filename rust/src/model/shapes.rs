@@ -1,0 +1,177 @@
+//! Model shape constants (the analytic mirror of `python/compile/configs.py`).
+
+/// Numeric precisions used by the accelerator's datapaths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Ternary weights packed base-3: 8 bits per 4 weights.
+    Ternary,
+    /// int8 activations.
+    Int8,
+    /// fp16 attention tensors (Q/K/V/O and the KV cache).
+    Fp16,
+    /// fp32 (CPU-PJRT functional path only).
+    Fp32,
+}
+
+impl Precision {
+    /// Storage bytes per element (ternary amortized: 0.25 B/weight).
+    pub fn bytes(&self) -> f64 {
+        match self {
+            Precision::Ternary => 0.25,
+            Precision::Int8 => 1.0,
+            Precision::Fp16 => 2.0,
+            Precision::Fp32 => 4.0,
+        }
+    }
+}
+
+/// A BitNet-style transformer's dimensions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    /// KV cache element precision on the accelerator.
+    pub kv_precision: Precision,
+}
+
+impl ModelShape {
+    pub const fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Ternary linear parameter count (attention QKVO + SwiGLU FFN).
+    pub fn linear_params(&self) -> u64 {
+        let attn = 4 * self.d_model * self.d_model;
+        let ffn = 3 * self.d_model * self.d_ff;
+        (self.n_layers * (attn + ffn)) as u64
+    }
+
+    /// Embedding parameters (kept fp16 on the accelerator, tied lm-head).
+    pub fn embed_params(&self) -> u64 {
+        (self.vocab * self.d_model) as u64
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.linear_params() + self.embed_params()
+    }
+
+    /// Bytes of packed ternary weights (the TLMM streaming/residency load).
+    pub fn ternary_weight_bytes(&self) -> f64 {
+        self.linear_params() as f64 * Precision::Ternary.bytes()
+    }
+
+    /// KV cache bytes per token of context (all layers, K+V).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64 * self.d_model as f64 * self.kv_precision.bytes()
+    }
+
+    /// KV cache bytes for a full context of `l` tokens.
+    pub fn kv_bytes(&self, l: usize) -> f64 {
+        self.kv_bytes_per_token() * l as f64
+    }
+}
+
+/// The paper's model: BitNet b1.58 0.73B on the KV260.
+pub const BITNET_0_73B: ModelShape = ModelShape {
+    name: "bitnet-0.73b",
+    n_layers: 24,
+    d_model: 1536,
+    n_heads: 24,
+    d_ff: 4096,
+    vocab: 32000,
+    max_seq: 2048,
+    kv_precision: Precision::Fp16,
+};
+
+/// The ~103M-parameter e2e driver model (PJRT-executable artifact exists).
+pub const E2E_100M: ModelShape = ModelShape {
+    name: "e2e-100m",
+    n_layers: 10,
+    d_model: 768,
+    n_heads: 12,
+    d_ff: 3072,
+    vocab: 8192,
+    max_seq: 640,
+    kv_precision: Precision::Fp16,
+};
+
+/// Quickstart model.
+pub const TINY: ModelShape = ModelShape {
+    name: "tiny",
+    n_layers: 4,
+    d_model: 256,
+    n_heads: 4,
+    d_ff: 768,
+    vocab: 2048,
+    max_seq: 128,
+    kv_precision: Precision::Fp16,
+};
+
+/// pytest/cargo-test model.
+pub const TEST: ModelShape = ModelShape {
+    name: "test",
+    n_layers: 2,
+    d_model: 128,
+    n_heads: 4,
+    d_ff: 384,
+    vocab: 256,
+    max_seq: 32,
+    kv_precision: Precision::Fp16,
+};
+
+/// Look up a shape by artifact/config name.
+pub fn by_name(name: &str) -> Option<ModelShape> {
+    match name {
+        "bitnet-0.73b" => Some(BITNET_0_73B),
+        "e2e-100m" => Some(E2E_100M),
+        "tiny" => Some(TINY),
+        "test" => Some(TEST),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitnet_param_count_matches_paper() {
+        // "BitNet 0.73B": linear + embedding params must land near 0.73e9.
+        let p = BITNET_0_73B.total_params() as f64;
+        assert!((0.65e9..0.80e9).contains(&p), "params {p:e}");
+    }
+
+    #[test]
+    fn e2e_is_about_100m() {
+        let p = E2E_100M.total_params() as f64;
+        assert!((0.9e8..1.15e8).contains(&p), "params {p:e}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        // 2 * 24 layers * 1536 * 2B = 147,456 B/token for the paper model.
+        assert_eq!(BITNET_0_73B.kv_bytes_per_token(), 147_456.0);
+        // 2048-token context: ~302 MB — the Fig. 6 long-context pain.
+        let total = BITNET_0_73B.kv_bytes(2048);
+        assert!((2.9e8..3.1e8).contains(&total));
+    }
+
+    #[test]
+    fn ternary_weights_exceed_uram() {
+        // 0.73B ternary weights ~ 168 MB >> the 2.25 MB of URAM: weights
+        // must stream from DDR each step (T_weights in Eqs. 3/5).
+        let bytes = BITNET_0_73B.ternary_weight_bytes();
+        assert!(bytes > 100e6, "bytes {bytes:e}");
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("tiny").unwrap(), TINY);
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,210 @@
+//! Per-phase op and byte accounting (the numerators of Eqs. 3 and 5).
+//!
+//! Counts MAC operations and DDR bytes for each pipeline component so the
+//! engine latency models and the roofline analysis share one source of
+//! truth. Conventions:
+//!
+//! * a MAC = one multiply-accumulate (2 FLOPs in GPU-marketing units);
+//! * weights: ternary linears stream packed codes from DDR (they do NOT
+//!   fit in URAM at 0.73B scale — URAM holds the working set / LUT tables);
+//! * KV cache: fp16 in DDR, read in full every decode step, written one
+//!   token per step.
+
+use super::shapes::ModelShape;
+
+/// Ops/bytes of one logical component of a phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComponentOps {
+    /// Multiply-accumulate count.
+    pub macs: f64,
+    /// DDR read bytes.
+    pub read_bytes: f64,
+    /// DDR write bytes.
+    pub write_bytes: f64,
+}
+
+impl ComponentOps {
+    pub const ZERO: ComponentOps = ComponentOps { macs: 0.0, read_bytes: 0.0, write_bytes: 0.0 };
+
+    pub fn total_bytes(&self) -> f64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    /// Arithmetic intensity in MACs/byte.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.macs / self.total_bytes().max(1.0)
+    }
+
+    pub fn add(&self, o: &ComponentOps) -> ComponentOps {
+        ComponentOps {
+            macs: self.macs + o.macs,
+            read_bytes: self.read_bytes + o.read_bytes,
+            write_bytes: self.write_bytes + o.write_bytes,
+        }
+    }
+}
+
+/// Common interface for the two phases.
+pub trait PhaseWork {
+    fn projection(&self) -> ComponentOps;
+    fn attention(&self) -> ComponentOps;
+    fn norm_elementwise(&self) -> ComponentOps;
+    fn total(&self) -> ComponentOps {
+        self.projection()
+            .add(&self.attention())
+            .add(&self.norm_elementwise())
+    }
+}
+
+/// Prefill of `l` prompt tokens (whole model).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillWork {
+    pub shape: ModelShape,
+    pub l: usize,
+}
+
+impl PhaseWork for PrefillWork {
+    /// All ternary linears over L tokens: QKVO (4·d²) + SwiGLU (3·d·dff)
+    /// per layer per token. Reads: packed weights once per *phase* (tiles
+    /// are reused across all L tokens — the paper's "batch of GEMVs"
+    /// orchestration) + int8 activations.
+    fn projection(&self) -> ComponentOps {
+        let s = &self.shape;
+        let per_token =
+            (4 * s.d_model * s.d_model + 3 * s.d_model * s.d_ff) as f64;
+        let macs = per_token * self.l as f64 * s.n_layers as f64;
+        let weight_reads = s.ternary_weight_bytes();
+        let act_bytes =
+            (self.l * s.d_model) as f64 * s.n_layers as f64 * 7.0; // 7 tensors/layer
+        ComponentOps {
+            macs,
+            read_bytes: weight_reads + act_bytes,
+            write_bytes: act_bytes,
+        }
+    }
+
+    /// FlashAttention: QK^T (L²·d/2 causal) + PV (same) per layer, fp16
+    /// streams; causal halves the score matrix.
+    fn attention(&self) -> ComponentOps {
+        let s = &self.shape;
+        let l = self.l as f64;
+        let macs = s.n_layers as f64 * (l * l / 2.0) * s.d_model as f64 * 2.0;
+        let qkv_bytes = 3.0 * l * s.d_model as f64 * 2.0 * s.n_layers as f64;
+        let out_bytes = l * s.d_model as f64 * 2.0 * s.n_layers as f64;
+        // KV cache write-out for the decode phase.
+        let kv_write = s.kv_bytes(self.l);
+        ComponentOps {
+            macs,
+            read_bytes: qkv_bytes,
+            write_bytes: out_bytes + kv_write,
+        }
+    }
+
+    /// RMSNorm + RoPE + SwiGLU activation + residuals: ~10 ops/element.
+    fn norm_elementwise(&self) -> ComponentOps {
+        let s = &self.shape;
+        let elems = (self.l * s.d_model * s.n_layers) as f64;
+        ComponentOps { macs: elems * 10.0, read_bytes: 0.0, write_bytes: 0.0 }
+    }
+}
+
+/// One decode step at context length `l` (the new token attends 0..l-1).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeStepWork {
+    pub shape: ModelShape,
+    pub l: usize,
+}
+
+impl PhaseWork for DecodeStepWork {
+    /// Single-token GEMVs; the whole packed weight set streams from DDR
+    /// every step (nothing amortizes it at batch 1 — this is T_weights,
+    /// the decode floor).
+    fn projection(&self) -> ComponentOps {
+        let s = &self.shape;
+        let macs = ((4 * s.d_model * s.d_model + 3 * s.d_model * s.d_ff)
+            * s.n_layers) as f64;
+        ComponentOps {
+            macs,
+            read_bytes: s.ternary_weight_bytes(),
+            write_bytes: (s.d_model * s.n_layers) as f64,
+        }
+    }
+
+    /// q·K^T -> softmax -> ·V over the cached context: 2·L·d MACs/layer,
+    /// and — the decode bottleneck — the entire fp16 KV cache read.
+    fn attention(&self) -> ComponentOps {
+        let s = &self.shape;
+        let macs = 2.0 * (self.l * s.d_model) as f64 * s.n_layers as f64;
+        ComponentOps {
+            macs,
+            read_bytes: s.kv_bytes(self.l),
+            write_bytes: s.kv_bytes_per_token(), // this token's K/V append
+        }
+    }
+
+    fn norm_elementwise(&self) -> ComponentOps {
+        let s = &self.shape;
+        let elems = (s.d_model * s.n_layers) as f64;
+        ComponentOps { macs: elems * 10.0, read_bytes: 0.0, write_bytes: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shapes::BITNET_0_73B;
+
+    #[test]
+    fn prefill_attention_scales_quadratically() {
+        let w1 = PrefillWork { shape: BITNET_0_73B, l: 256 };
+        let w2 = PrefillWork { shape: BITNET_0_73B, l: 512 };
+        let r = w2.attention().macs / w1.attention().macs;
+        assert!((r - 4.0).abs() < 0.01, "ratio {r}");
+        // Projections scale linearly.
+        let rp = w2.projection().macs / w1.projection().macs;
+        assert!((rp - 2.0).abs() < 0.01, "ratio {rp}");
+    }
+
+    #[test]
+    fn decode_attention_scales_linearly() {
+        let w1 = DecodeStepWork { shape: BITNET_0_73B, l: 512 };
+        let w2 = DecodeStepWork { shape: BITNET_0_73B, l: 1024 };
+        let r = w2.attention().read_bytes / w1.attention().read_bytes;
+        assert!((r - 2.0).abs() < 0.01);
+        // Projection cost is context-independent.
+        assert_eq!(w1.projection().macs, w2.projection().macs);
+    }
+
+    #[test]
+    fn asymmetry_prefill_compute_bound_decode_memory_bound() {
+        // The paper's §2.1 asymmetry, in numbers: prefill attention AI is
+        // orders of magnitude above decode attention AI.
+        let pre = PrefillWork { shape: BITNET_0_73B, l: 1024 }.attention();
+        let dec = DecodeStepWork { shape: BITNET_0_73B, l: 1024 }.attention();
+        assert!(
+            pre.arithmetic_intensity() > 50.0 * dec.arithmetic_intensity(),
+            "prefill AI {:.2} vs decode AI {:.2}",
+            pre.arithmetic_intensity(),
+            dec.arithmetic_intensity()
+        );
+        // Decode attention is memory-dominated: < 1 MAC/byte.
+        assert!(dec.arithmetic_intensity() < 1.0);
+    }
+
+    #[test]
+    fn decode_kv_read_matches_cache_size() {
+        let w = DecodeStepWork { shape: BITNET_0_73B, l: 2048 };
+        assert_eq!(w.attention().read_bytes, BITNET_0_73B.kv_bytes(2048));
+    }
+
+    #[test]
+    fn totals_are_sums() {
+        let w = PrefillWork { shape: BITNET_0_73B, l: 128 };
+        let t = w.total();
+        let s = w
+            .projection()
+            .add(&w.attention())
+            .add(&w.norm_elementwise());
+        assert_eq!(t, s);
+    }
+}

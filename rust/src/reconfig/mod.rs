@@ -1,0 +1,212 @@
+//! Latency-overlapped runtime reconfiguration (§3.4, Fig. 5).
+//!
+//! A request needs exactly one swap (prefill-attention → decode-attention)
+//! but the ~45 ms PCAP load would still be visible on short generations —
+//! so the paper's controller starts the swap the moment the *final
+//! layer's* prefill attention finishes, overlapping the load with the
+//! remaining output-projection + FFN tail (~31 ms at L=128) and exposing
+//! only the difference (~75% of the overhead hidden).
+//!
+//! [`OverlapScheduler`] computes that arithmetic for any (design, model,
+//! L); [`SwapController`] drives an [`FpgaDevice`] through the swap with
+//! the correctness rule the paper states: decode never starts before the
+//! decode-attention bitstream is fully loaded.
+
+use anyhow::Result;
+
+use crate::engines::PhaseModel;
+use crate::fpga::FpgaDevice;
+use crate::model::ModelShape;
+
+/// Names of the two attention RMs (shared with `AcceleratorDesign`).
+pub const RM_PREFILL: &str = "attn-prefill";
+pub const RM_DECODE: &str = "attn-decode";
+
+/// The Fig. 5 timeline for one prefill→decode transition.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapTimeline {
+    /// Total prefill latency (t=0 .. prefill_end).
+    pub prefill_end: f64,
+    /// When the final layer's attention completes = swap trigger point.
+    pub trigger: f64,
+    /// The prefill tail available for overlap (prefill_end - trigger).
+    pub tail: f64,
+    /// PCAP load latency.
+    pub reconfig: f64,
+    /// When the decode RM is live.
+    pub decode_ready: f64,
+    /// Reconfiguration latency NOT hidden by the tail.
+    pub exposed: f64,
+    /// Fraction of the reconfig latency hidden (the paper's ~75%).
+    pub hidden_fraction: f64,
+}
+
+/// Computes overlap timelines from the phase model.
+#[derive(Debug, Clone)]
+pub struct OverlapScheduler {
+    pub model: PhaseModel,
+    pub reconfig_latency: f64,
+}
+
+impl OverlapScheduler {
+    pub fn new(model: PhaseModel, reconfig_latency: f64) -> Self {
+        Self { model, reconfig_latency }
+    }
+
+    /// Timeline with early-trigger overlap (the paper's mechanism).
+    pub fn overlapped(&self, shape: &ModelShape, l: usize) -> OverlapTimeline {
+        let prefill_end = self.model.prefill(shape, l).total;
+        let tail = self.model.prefill_tail_after_last_attention(shape, l);
+        let trigger = prefill_end - tail;
+        let decode_ready = (trigger + self.reconfig_latency).max(prefill_end);
+        let exposed = decode_ready - prefill_end;
+        OverlapTimeline {
+            prefill_end,
+            trigger,
+            tail,
+            reconfig: self.reconfig_latency,
+            decode_ready,
+            exposed,
+            hidden_fraction: 1.0 - exposed / self.reconfig_latency,
+        }
+    }
+
+    /// Timeline without overlap (swap starts only after prefill ends) —
+    /// the naive baseline Fig. 5 compares against.
+    pub fn sequential(&self, shape: &ModelShape, l: usize) -> OverlapTimeline {
+        let prefill_end = self.model.prefill(shape, l).total;
+        OverlapTimeline {
+            prefill_end,
+            trigger: prefill_end,
+            tail: 0.0,
+            reconfig: self.reconfig_latency,
+            decode_ready: prefill_end + self.reconfig_latency,
+            exposed: self.reconfig_latency,
+            hidden_fraction: 0.0,
+        }
+    }
+}
+
+/// Drives the simulated device through phase swaps with the §3.4 safety
+/// rule: decode work is only admitted once the decode RM is live.
+#[derive(Debug)]
+pub struct SwapController {
+    pub device: FpgaDevice,
+}
+
+impl SwapController {
+    pub fn new(device: FpgaDevice) -> Self {
+        Self { device }
+    }
+
+    /// Ensure the prefill RM is (or becomes) live; returns when it's ready.
+    pub fn ensure_prefill(&mut self, now: f64) -> Result<f64> {
+        if self.device.is_live(RM_PREFILL, now) {
+            return Ok(now);
+        }
+        self.device.start_reconfig(RM_PREFILL, now)
+    }
+
+    /// Early-trigger the decode swap at the §3.4 trigger point.
+    pub fn trigger_decode_swap(&mut self, trigger_time: f64) -> Result<f64> {
+        if self.device.is_live(RM_DECODE, trigger_time) {
+            return Ok(trigger_time);
+        }
+        self.device.start_reconfig(RM_DECODE, trigger_time)
+    }
+
+    /// The §3.4 conservative rule: decode may start at
+    /// `max(prefill_end, decode_ready)`.
+    pub fn decode_admissible_at(&mut self, prefill_end: f64, decode_ready: f64) -> f64 {
+        self.device.settle(decode_ready);
+        prefill_end.max(decode_ready)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::AcceleratorDesign;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn scheduler() -> OverlapScheduler {
+        let design = AcceleratorDesign::pd_swap();
+        let device = design.program(&KV260).unwrap();
+        let lat = device.reconfig_latency();
+        OverlapScheduler::new(PhaseModel::new(design, KV260.clone()), lat)
+    }
+
+    #[test]
+    fn fig5_numbers_at_l128() {
+        // Paper: reconfig ~45 ms, tail ~31 ms at L=128, ~75% hidden.
+        let s = scheduler();
+        let t = s.overlapped(&BITNET_0_73B, 128);
+        assert!((0.035..0.055).contains(&t.reconfig), "reconfig {:.1} ms", t.reconfig * 1e3);
+        assert!((0.022..0.042).contains(&t.tail), "tail {:.1} ms", t.tail * 1e3);
+        // Paper: "reduce the effective reconfiguration overhead by about
+        // 75%"; our tail estimate is slightly more conservative (the tail
+        // fraction of the last layer depends on how much of the output
+        // projection is really left), so accept a 50-90% band — the
+        // mechanism and order of magnitude are what's pinned here.
+        assert!(
+            (0.50..0.90).contains(&t.hidden_fraction),
+            "hidden {:.0}%",
+            t.hidden_fraction * 100.0
+        );
+    }
+
+    #[test]
+    fn overlap_strictly_beats_sequential() {
+        let s = scheduler();
+        for l in [64, 128, 256, 512] {
+            let o = s.overlapped(&BITNET_0_73B, l);
+            let q = s.sequential(&BITNET_0_73B, l);
+            assert!(o.decode_ready < q.decode_ready, "L={l}");
+            assert!(o.exposed < q.exposed, "L={l}");
+            assert!(o.exposed >= 0.0, "exposed latency can never be negative");
+        }
+    }
+
+    #[test]
+    fn long_prefill_hides_everything() {
+        // At long L the tail alone exceeds 45 ms: zero exposure.
+        let s = scheduler();
+        let t = s.overlapped(&BITNET_0_73B, 2048);
+        assert!(t.exposed == 0.0, "exposed {:.1} ms", t.exposed * 1e3);
+        assert!((t.hidden_fraction - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn controller_enforces_decode_safety() {
+        let design = AcceleratorDesign::pd_swap();
+        let device = design.program(&KV260).unwrap();
+        let mut ctl = SwapController::new(device);
+
+        let t0 = ctl.ensure_prefill(0.0).unwrap();
+        assert!(t0 > 0.0, "first prefill load takes PCAP time");
+        // Prefill runs; trigger the decode swap early (§3.4).
+        let trigger = t0 + 1.0;
+        let ready = ctl.trigger_decode_swap(trigger).unwrap();
+        assert!(ready > trigger);
+        // Decode admission: not before the bitstream is in.
+        let prefill_end = trigger + 0.010; // tail shorter than reconfig
+        let admit = ctl.decode_admissible_at(prefill_end, ready);
+        assert_eq!(admit, ready.max(prefill_end));
+        assert!(ctl.device.is_live(super::RM_DECODE, admit));
+    }
+
+    #[test]
+    fn repeat_swaps_accumulate_telemetry() {
+        let design = AcceleratorDesign::pd_swap();
+        let device = design.program(&KV260).unwrap();
+        let mut ctl = SwapController::new(device);
+        let mut now = 0.0;
+        for _ in 0..3 {
+            now = ctl.ensure_prefill(now).unwrap();
+            now = ctl.trigger_decode_swap(now).unwrap();
+        }
+        assert_eq!(ctl.device.reconfig_count, 6);
+        assert!(ctl.device.reconfig_seconds_total > 0.2);
+    }
+}

@@ -1,0 +1,185 @@
+//! Roofline analysis (Fig. 4a): arithmetic intensity vs attainable
+//! performance for the major kernels in each phase.
+//!
+//! The paper uses a *qualitative* roofline to argue where resources should
+//! go; this module computes the actual numbers from the workload model and
+//! device ceilings so the argument can be checked: decode attention sits
+//! deep in the memory-bound region, prefill attention far into the
+//! compute-bound region, and the decode-stage linears close to their
+//! (streaming) roof.
+
+use crate::engines::{AcceleratorDesign, calib};
+use crate::fpga::DeviceConfig;
+use crate::memory::MemorySystem;
+use crate::model::{ComponentOps, DecodeStepWork, ModelShape, PhaseWork, PrefillWork};
+
+/// Which ceiling binds a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+}
+
+/// One kernel's position on the roofline.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub kernel: String,
+    /// MACs per DDR byte.
+    pub arithmetic_intensity: f64,
+    /// MAC/s the kernel would need to be compute-limited at this AI.
+    pub attainable_rate: f64,
+    /// MAC/s ceiling of the engine assigned to this kernel.
+    pub compute_roof: f64,
+    /// B/s ceiling of the memory system for this kernel's streams.
+    pub memory_roof_bytes: f64,
+    pub bound: Bound,
+    /// attainable / compute_roof — how close the kernel runs to its roof.
+    pub roof_fraction: f64,
+}
+
+/// The device-level roofline: compute ceilings per engine + memory ceiling.
+#[derive(Debug, Clone)]
+pub struct RooflineModel {
+    pub design: AcceleratorDesign,
+    pub device: DeviceConfig,
+    mem: MemorySystem,
+}
+
+/// The ridge point (MACs/byte) where a kernel transitions between regimes
+/// for a given compute roof and memory roof.
+pub fn ridge_point(compute_roof: f64, memory_roof: f64) -> f64 {
+    compute_roof / memory_roof
+}
+
+impl RooflineModel {
+    pub fn new(design: AcceleratorDesign, device: DeviceConfig) -> Self {
+        let mem = MemorySystem::for_device(&device);
+        Self { design, device, mem }
+    }
+
+    fn point(
+        &self,
+        kernel: &str,
+        ops: ComponentOps,
+        compute_roof: f64,
+        memory_roof: f64,
+    ) -> RooflinePoint {
+        let ai = ops.arithmetic_intensity();
+        let attainable = compute_roof.min(ai * memory_roof);
+        let bound = if ai * memory_roof < compute_roof {
+            Bound::Memory
+        } else {
+            Bound::Compute
+        };
+        RooflinePoint {
+            kernel: kernel.to_string(),
+            arithmetic_intensity: ai,
+            attainable_rate: attainable,
+            compute_roof,
+            memory_roof_bytes: memory_roof,
+            bound,
+            roof_fraction: attainable / compute_roof,
+        }
+    }
+
+    /// The three Fig. 4a panels at context length `l`.
+    pub fn analyze(&self, shape: &ModelShape, l: usize) -> Vec<RooflinePoint> {
+        let clock = self.device.clock_hz();
+        let pre = PrefillWork { shape: *shape, l };
+        let dec = DecodeStepWork { shape: *shape, l };
+
+        // Decode attention: engine MAC roof vs its KV bandwidth.
+        let dec_attn = self.point(
+            "decode-attention",
+            dec.attention(),
+            self.design.decode_attn.mac_rate(clock),
+            self.design.decode_attn.kv_bandwidth(&self.mem),
+        );
+        // Prefill attention: engine MAC roof vs general DDR streaming.
+        let pre_attn = self.point(
+            "prefill-attention",
+            pre.attention(),
+            self.design.prefill_attn.mac_rate(clock),
+            self.mem.aggregate_peak * calib::KV_CONTROLLER_EFF,
+        );
+        // Linear (TLMM): lookup-accumulate roof vs the weight stream.
+        let tlmm_roof = self.design.tlmm.n_pe as f64 * 4.0 * clock;
+        let weight_bw = shape.ternary_weight_bytes()
+            / self.design.tlmm.weight_stream_time(shape, &self.mem);
+        let dec_lin = self.point("decode-linear", dec.projection(), tlmm_roof, weight_bw);
+        let pre_lin = self.point("prefill-linear", pre.projection(), tlmm_roof, weight_bw);
+
+        vec![dec_attn, pre_attn, dec_lin, pre_lin]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn model() -> RooflineModel {
+        RooflineModel::new(AcceleratorDesign::pd_swap(), KV260.clone())
+    }
+
+    fn by_name(points: &[RooflinePoint], name: &str) -> RooflinePoint {
+        points.iter().find(|p| p.kernel == name).unwrap().clone()
+    }
+
+    #[test]
+    fn fig4a_regimes() {
+        // The paper's qualitative placement, computed: decode attention
+        // memory-bound, prefill attention compute-bound.
+        let pts = model().analyze(&BITNET_0_73B, 1024);
+        assert_eq!(by_name(&pts, "decode-attention").bound, Bound::Memory);
+        assert_eq!(by_name(&pts, "prefill-attention").bound, Bound::Compute);
+    }
+
+    #[test]
+    fn prefill_ai_dwarfs_decode_ai() {
+        let pts = model().analyze(&BITNET_0_73B, 1024);
+        let pre = by_name(&pts, "prefill-attention").arithmetic_intensity;
+        let dec = by_name(&pts, "decode-attention").arithmetic_intensity;
+        assert!(pre > 20.0 * dec, "pre {pre:.2} dec {dec:.2}");
+    }
+
+    #[test]
+    fn decode_linear_runs_near_its_roof() {
+        // §3.3.1: "the decode-stage linear modules ... operate close to
+        // their roofline limits" — the streaming roof, not the MAC roof.
+        let pts = model().analyze(&BITNET_0_73B, 1024);
+        let lin = by_name(&pts, "decode-linear");
+        assert_eq!(lin.bound, Bound::Memory);
+        // Attainable = AI * weight_bw; actual rate achieved = work/time is
+        // the same quantity by construction, so roof_fraction < 1 but the
+        // memory roof itself is saturated.
+        assert!(lin.attainable_rate > 0.0);
+    }
+
+    #[test]
+    fn ridge_point_math() {
+        assert!((ridge_point(10.0, 2.0) - 5.0).abs() < 1e-12);
+        // AI above the ridge -> compute bound.
+        let m = model();
+        let pts = m.analyze(&BITNET_0_73B, 512);
+        for p in pts {
+            let ridge = ridge_point(p.compute_roof, p.memory_roof_bytes);
+            match p.bound {
+                Bound::Compute => assert!(p.arithmetic_intensity >= ridge),
+                Bound::Memory => assert!(p.arithmetic_intensity < ridge),
+            }
+        }
+    }
+
+    #[test]
+    fn decode_attention_ai_constant_in_l() {
+        // Both MACs and bytes scale linearly with context: AI ~ constant.
+        let m = model();
+        let a = by_name(&m.analyze(&BITNET_0_73B, 256), "decode-attention")
+            .arithmetic_intensity;
+        let b = by_name(&m.analyze(&BITNET_0_73B, 2048), "decode-attention")
+            .arithmetic_intensity;
+        assert!((a - b).abs() / a < 0.05, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,471 @@
+//! Artifact directory parsing: `manifest.json`, `weights.bin`,
+//! `golden.json`.
+//!
+//! The formats are defined by `python/compile/aot.py` / `weights.py`; this
+//! module is the Rust half of that contract and is exercised end-to-end by
+//! `rust/tests/runtime_golden.rs` against bytes the Python side produced.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Magic prefix of `weights.bin`.
+pub const WEIGHTS_MAGIC: &[u8; 8] = b"PDSWAP01";
+
+/// Model hyper-parameters as recorded by `configs.py` in the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub attn_block: usize,
+    pub tlmm_block_m: usize,
+    pub tlmm_block_n: usize,
+    pub rope_base: f64,
+}
+
+impl ManifestConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            v.req(k)?
+                .as_usize()
+                .with_context(|| format!("config.{k}: expected unsigned int"))
+        };
+        Ok(Self {
+            name: v.req("name")?.as_str().context("config.name")?.to_string(),
+            n_layers: u("n_layers")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            vocab: u("vocab")?,
+            max_seq: u("max_seq")?,
+            prefill_buckets: v
+                .req("prefill_buckets")?
+                .to_usize_vec()
+                .context("config.prefill_buckets")?,
+            attn_block: u("attn_block")?,
+            tlmm_block_m: u("tlmm_block_m").unwrap_or(128),
+            tlmm_block_n: u("tlmm_block_n").unwrap_or(128),
+            rope_base: v
+                .get("rope_base")
+                .and_then(Value::as_f64)
+                .unwrap_or(10_000.0),
+        })
+    }
+}
+
+/// One weight tensor's metadata (shape/dtype/position in `weights.bin`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str().context("tensor.name")?.to_string(),
+            shape: v.req("shape")?.to_usize_vec().context("tensor.shape")?,
+            dtype: v.req("dtype")?.as_str().context("tensor.dtype")?.to_string(),
+            offset: v.get("offset").and_then(Value::as_usize).unwrap_or(0),
+            nbytes: v.get("nbytes").and_then(Value::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PrefillEntry {
+    pub bucket: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Entrypoints {
+    pub prefill: Vec<PrefillEntry>,
+    pub decode: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub cache_shape: Vec<usize>,
+    pub vocab: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format_version: u32,
+    pub config: ManifestConfig,
+    pub head_dim: usize,
+    pub n_params: u64,
+    pub weights_file: String,
+    pub weight_order: Vec<TensorMeta>,
+    pub entrypoints: Entrypoints,
+    pub io: IoSpec,
+    pub golden: Option<String>,
+}
+
+impl Manifest {
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        let v = json::parse(s).context("manifest.json")?;
+        let config = ManifestConfig::from_json(v.req("config")?)?;
+        let weight_order = v
+            .req("weight_order")?
+            .as_arr()
+            .context("weight_order: expected array")?
+            .iter()
+            .map(TensorMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let ep = v.req("entrypoints")?;
+        let prefill = ep
+            .req("prefill")?
+            .as_arr()
+            .context("entrypoints.prefill")?
+            .iter()
+            .map(|e| {
+                Ok(PrefillEntry {
+                    bucket: e.req("bucket")?.as_usize().context("bucket")?,
+                    file: e.req("file")?.as_str().context("file")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let io = v.req("io")?;
+        Ok(Self {
+            format_version: v
+                .req("format_version")?
+                .as_usize()
+                .context("format_version")? as u32,
+            config,
+            head_dim: v.req("head_dim")?.as_usize().context("head_dim")?,
+            n_params: v.req("n_params")?.as_i64().context("n_params")? as u64,
+            weights_file: v
+                .req("weights_file")?
+                .as_str()
+                .context("weights_file")?
+                .to_string(),
+            weight_order,
+            entrypoints: Entrypoints {
+                prefill,
+                decode: ep.req("decode")?.as_str().context("decode")?.to_string(),
+            },
+            io: IoSpec {
+                cache_shape: io
+                    .req("cache_shape")?
+                    .to_usize_vec()
+                    .context("cache_shape")?,
+                vocab: io.req("vocab")?.as_usize().context("vocab")?,
+            },
+            golden: v
+                .get("golden")
+                .filter(|g| !g.is_null())
+                .and_then(Value::as_str)
+                .map(String::from),
+        })
+    }
+}
+
+/// The greedy-generation trace emitted by `aot.py --golden`, used by the
+/// cross-layer integration test (Rust execution must reproduce it).
+#[derive(Debug, Clone)]
+pub struct GoldenTrace {
+    pub prompt: Vec<i32>,
+    pub bucket: usize,
+    pub generated: Vec<i32>,
+    pub first_logits_prefix: Vec<f32>,
+    pub n_gen: usize,
+}
+
+impl GoldenTrace {
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        let v = json::parse(s).context("golden.json")?;
+        Ok(Self {
+            prompt: v.req("prompt")?.to_i32_vec().context("prompt")?,
+            bucket: v.req("bucket")?.as_usize().context("bucket")?,
+            generated: v.req("generated")?.to_i32_vec().context("generated")?,
+            first_logits_prefix: v
+                .req("first_logits_prefix")?
+                .to_f32_vec()
+                .context("first_logits_prefix")?,
+            n_gen: v.req("n_gen")?.as_usize().context("n_gen")?,
+        })
+    }
+}
+
+/// A raw weight tensor sliced out of `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct RawTensor {
+    pub meta: TensorMeta,
+    pub data: Vec<u8>,
+}
+
+/// All weights of one config, keyed by name, in manifest order.
+#[derive(Debug)]
+pub struct WeightStore {
+    pub tensors: Vec<RawTensor>,
+    by_name: HashMap<String, usize>,
+}
+
+impl WeightStore {
+    /// Parse a `weights.bin` (format documented in
+    /// `python/compile/weights.py`).
+    pub fn parse(bytes: &[u8], expected: &[TensorMeta]) -> Result<Self> {
+        if bytes.len() < 16 || &bytes[..8] != WEIGHTS_MAGIC {
+            bail!("weights.bin: bad magic");
+        }
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let header_end = 16usize
+            .checked_add(header_len)
+            .filter(|&e| e <= bytes.len())
+            .context("weights.bin: truncated header")?;
+        let header = json::parse_bytes(&bytes[16..header_end])
+            .context("weights.bin: header json")?;
+        let metas = header
+            .req("tensors")?
+            .as_arr()
+            .context("weights.bin: tensors")?
+            .iter()
+            .map(TensorMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let data = &bytes[header_end..];
+
+        let mut tensors = Vec::with_capacity(metas.len());
+        let mut by_name = HashMap::new();
+        for (i, meta) in metas.into_iter().enumerate() {
+            let end = meta
+                .offset
+                .checked_add(meta.nbytes)
+                .filter(|&e| e <= data.len())
+                .with_context(|| format!("weights.bin: tensor {} out of bounds", meta.name))?;
+            // Cross-check against the manifest's declared order/shapes.
+            if let Some(exp) = expected.get(i) {
+                if exp.name != meta.name || exp.shape != meta.shape || exp.dtype != meta.dtype {
+                    bail!(
+                        "weights.bin/manifest mismatch at #{i}: {} {:?} {} vs {} {:?} {}",
+                        meta.name, meta.shape, meta.dtype, exp.name, exp.shape, exp.dtype
+                    );
+                }
+            }
+            by_name.insert(meta.name.clone(), i);
+            tensors.push(RawTensor { data: data[meta.offset..end].to_vec(), meta });
+        }
+        if !expected.is_empty() && tensors.len() != expected.len() {
+            bail!(
+                "weights.bin has {} tensors, manifest expects {}",
+                tensors.len(),
+                expected.len()
+            );
+        }
+        Ok(Self { tensors, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&RawTensor> {
+        self.by_name.get(name).map(|&i| &self.tensors[i])
+    }
+
+    /// Total weight bytes (the paper's on-chip URAM residency figure).
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+}
+
+/// An artifact directory (`artifacts/<config>/`) with its parsed manifest.
+#[derive(Debug)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactDir {
+    /// Open and validate `<dir>/manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::from_json_str(&text)?;
+        if manifest.format_version != 1 {
+            bail!("unsupported manifest format_version {}", manifest.format_version);
+        }
+        Ok(Self { dir, manifest })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load and parse `weights.bin`.
+    pub fn load_weights(&self) -> Result<WeightStore> {
+        let bytes = fs::read(self.path(&self.manifest.weights_file))?;
+        WeightStore::parse(&bytes, &self.manifest.weight_order)
+    }
+
+    /// Load `golden.json` if the manifest declares one.
+    pub fn load_golden(&self) -> Result<Option<GoldenTrace>> {
+        match &self.manifest.golden {
+            None => Ok(None),
+            Some(file) => {
+                let text = fs::read_to_string(self.path(file))?;
+                Ok(Some(GoldenTrace::from_json_str(&text)?))
+            }
+        }
+    }
+
+    /// Smallest prefill bucket that fits `prompt_len`, if any.
+    pub fn bucket_for(&self, prompt_len: usize) -> Option<usize> {
+        self.manifest
+            .config
+            .prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= prompt_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(name: &str, len: usize, offset: usize) -> TensorMeta {
+        TensorMeta {
+            name: name.into(),
+            shape: vec![len],
+            dtype: "u8".into(),
+            offset,
+            nbytes: len,
+        }
+    }
+
+    fn build_weights_bin(tensors: &[(&str, Vec<u8>)]) -> (Vec<u8>, Vec<TensorMeta>) {
+        let mut metas = Vec::new();
+        let mut offset = 0usize;
+        for (name, data) in tensors {
+            offset = (offset + 63) / 64 * 64;
+            metas.push(meta(name, data.len(), offset));
+            offset += data.len();
+        }
+        let tensor_objs: Vec<String> = metas
+            .iter()
+            .map(|m| {
+                format!(
+                    r#"{{"name":"{}","shape":[{}],"dtype":"u8","offset":{},"nbytes":{}}}"#,
+                    m.name, m.shape[0], m.offset, m.nbytes
+                )
+            })
+            .collect();
+        let header = format!(r#"{{"tensors":[{}]}}"#, tensor_objs.join(","));
+        let mut out = Vec::new();
+        out.extend_from_slice(WEIGHTS_MAGIC);
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        let data_start = out.len();
+        for (m, (_, data)) in metas.iter().zip(tensors) {
+            out.resize(data_start + m.offset, 0);
+            out.extend_from_slice(data);
+        }
+        (out, metas)
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        let (bytes, metas) = build_weights_bin(&[("a", vec![1, 2, 3]), ("b", vec![9; 100])]);
+        let store = WeightStore::parse(&bytes, &metas).unwrap();
+        assert_eq!(store.tensors.len(), 2);
+        assert_eq!(store.get("a").unwrap().data, vec![1, 2, 3]);
+        assert_eq!(store.get("b").unwrap().data.len(), 100);
+        assert_eq!(store.total_bytes(), 103);
+        assert!(store.get("zzz").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = WeightStore::parse(b"NOTMAGIC00000000", &[]).unwrap_err();
+        assert!(err.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let (bytes, mut metas) = build_weights_bin(&[("a", vec![1, 2, 3])]);
+        metas[0].shape = vec![4];
+        assert!(WeightStore::parse(&bytes, &metas).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let (bytes, metas) = build_weights_bin(&[("a", vec![7; 64])]);
+        assert!(WeightStore::parse(&bytes[..bytes.len() - 8], &metas).is_err());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+          "format_version": 1,
+          "config": {"name":"test","n_layers":2,"d_model":128,"n_heads":4,
+                     "d_ff":384,"vocab":256,"max_seq":32,
+                     "prefill_buckets":[8,16],"attn_block":8,
+                     "tlmm_block_m":8,"tlmm_block_n":64,"rope_base":10000.0},
+          "head_dim": 32,
+          "n_params": 600000,
+          "weights_file": "weights.bin",
+          "weight_order": [{"name":"tok_emb","shape":[256,128],"dtype":"f32"}],
+          "entrypoints": {"prefill":[{"bucket":8,"file":"prefill_L8.hlo.txt"}],
+                          "decode":"decode.hlo.txt"},
+          "io": {"cache_shape":[2,4,32,32],"vocab":256},
+          "golden": "golden.json"
+        }"#;
+        let m = Manifest::from_json_str(text).unwrap();
+        assert_eq!(m.config.head_dim(), 32);
+        assert_eq!(m.entrypoints.prefill[0].bucket, 8);
+        assert_eq!(m.golden.as_deref(), Some("golden.json"));
+        assert_eq!(m.weight_order[0].element_count(), 256 * 128);
+    }
+
+    #[test]
+    fn manifest_null_golden() {
+        let text = r#"{
+          "format_version": 1,
+          "config": {"name":"x","n_layers":1,"d_model":4,"n_heads":1,
+                     "d_ff":4,"vocab":8,"max_seq":8,
+                     "prefill_buckets":[8],"attn_block":8},
+          "head_dim": 4, "n_params": 10, "weights_file": "weights.bin",
+          "weight_order": [],
+          "entrypoints": {"prefill":[],"decode":"decode.hlo.txt"},
+          "io": {"cache_shape":[1,1,8,4],"vocab":8},
+          "golden": null
+        }"#;
+        let m = Manifest::from_json_str(text).unwrap();
+        assert!(m.golden.is_none());
+        // defaulted blocks
+        assert_eq!(m.config.tlmm_block_m, 128);
+    }
+
+    #[test]
+    fn golden_parses() {
+        let g = GoldenTrace::from_json_str(
+            r#"{"prompt":[1,2],"bucket":8,"generated":[3,4],
+                "first_logits_prefix":[0.5,-1.25],"n_gen":2}"#,
+        )
+        .unwrap();
+        assert_eq!(g.prompt, vec![1, 2]);
+        assert_eq!(g.first_logits_prefix[1], -1.25);
+    }
+}

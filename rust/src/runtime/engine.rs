@@ -1,0 +1,318 @@
+//! [`InferenceEngine`]: compile-once / execute-many PJRT wrapper around one
+//! artifact directory.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::{ArtifactDir, Manifest, RawTensor, WeightStore};
+use super::kv_cache::KvCache;
+
+/// Execution counters (monotonic; cheap enough for the hot path).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub prefill_calls: AtomicU64,
+    pub decode_calls: AtomicU64,
+    pub prefill_micros: AtomicU64,
+    pub decode_micros: AtomicU64,
+    /// Host<->device bytes moved for KV caches (the round-trip tax).
+    pub cache_bytes: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn avg_decode_ms(&self) -> f64 {
+        let n = self.decode_calls.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.decode_micros.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+    pub fn avg_prefill_ms(&self) -> f64 {
+        let n = self.prefill_calls.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.prefill_micros.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+}
+
+/// Result of a prefill call.
+pub struct PrefillResult {
+    /// Logits for the last valid prompt position, `f32 [vocab]`.
+    pub logits: Vec<f32>,
+    /// Freshly minted cache containing the prompt's K/V.
+    pub cache: KvCache,
+    /// The bucket length actually executed.
+    pub bucket: usize,
+}
+
+/// Compile-once PJRT engine for one model config.
+///
+/// Weights are uploaded to the device once at load; per call we only ship
+/// the small dynamic inputs and the KV cache. All executables share the
+/// same positional parameter convention: `weights..., <dynamic inputs>`.
+pub struct InferenceEngine {
+    client: PjRtClient,
+    pub artifacts: ArtifactDir,
+    /// Device-resident weights in manifest order.
+    weights: Vec<PjRtBuffer>,
+    /// Prefill executables keyed by bucket length.
+    prefill_exes: BTreeMap<usize, PjRtLoadedExecutable>,
+    decode_exe: PjRtLoadedExecutable,
+    pub stats: RuntimeStats,
+    /// Total weight bytes (reported by examples; the simulator's URAM
+    /// residency check uses the analytic count instead).
+    pub weight_bytes: usize,
+}
+
+fn upload_tensor(client: &PjRtClient, t: &RawTensor) -> Result<PjRtBuffer> {
+    let dims = &t.meta.shape;
+    let buf = match t.meta.dtype.as_str() {
+        "f32" => {
+            let data: Vec<f32> = t
+                .data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            client.buffer_from_host_buffer(&data, dims, None)?
+        }
+        "i32" => {
+            let data: Vec<i32> = t
+                .data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            client.buffer_from_host_buffer(&data, dims, None)?
+        }
+        "u8" => client.buffer_from_host_buffer(&t.data, dims, None)?,
+        other => bail!("unsupported dtype {other} for tensor {}", t.meta.name),
+    };
+    Ok(buf)
+}
+
+fn compile_hlo(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl InferenceEngine {
+    /// Load every artifact of `dir`, compile all executables, upload
+    /// weights. This is the (one-time) analogue of the paper's full
+    /// bitstream programming + weight preload.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let artifacts = ArtifactDir::open(dir)?;
+        let client = PjRtClient::cpu()?;
+
+        let store: WeightStore = artifacts.load_weights()?;
+        let weight_bytes = store.total_bytes();
+        let weights = store
+            .tensors
+            .iter()
+            .map(|t| upload_tensor(&client, t))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut prefill_exes = BTreeMap::new();
+        for entry in &artifacts.manifest.entrypoints.prefill {
+            let exe = compile_hlo(&client, &artifacts.path(&entry.file))?;
+            prefill_exes.insert(entry.bucket, exe);
+        }
+        let decode_exe = compile_hlo(
+            &client,
+            &artifacts.path(&artifacts.manifest.entrypoints.decode),
+        )?;
+
+        Ok(Self {
+            client,
+            artifacts,
+            weights,
+            prefill_exes,
+            decode_exe,
+            stats: RuntimeStats::default(),
+            weight_bytes,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.artifacts.manifest
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest().io.vocab
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.manifest().config.max_seq
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.prefill_exes.keys().copied().collect()
+    }
+
+    fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        // 0-d i32 buffer.
+        Ok(self.client.buffer_from_host_buffer::<i32>(&[v], &[], None)?)
+    }
+
+    /// Run prefill for `prompt` (unpadded token ids). Picks the smallest
+    /// compiled bucket that fits, right-pads with 0, returns the logits of
+    /// the last valid position plus the populated KV cache.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillResult> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let bucket = self
+            .artifacts
+            .bucket_for(prompt.len())
+            .with_context(|| {
+                format!(
+                    "prompt of {} tokens exceeds largest bucket {:?}",
+                    prompt.len(),
+                    self.manifest().config.prefill_buckets
+                )
+            })?;
+        let exe = &self.prefill_exes[&bucket];
+
+        let mut padded = vec![0i32; bucket];
+        padded[..prompt.len()].copy_from_slice(prompt);
+
+        let t0 = Instant::now();
+        let tokens = self
+            .client
+            .buffer_from_host_buffer(&padded, &[bucket], None)?;
+        let plen = self.scalar_i32(prompt.len() as i32)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tokens);
+        args.push(&plen);
+
+        let result = exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let (logits_l, k, v) = match <[Literal; 3]>::try_from(parts) {
+            Ok([a, b, c]) => (a, b, c),
+            Err(p) => bail!("prefill returned {} outputs, expected 3", p.len()),
+        };
+        let logits = logits_l.to_vec::<f32>()?;
+        let cache = KvCache::new(k, v, prompt.len(), self.max_seq());
+
+        self.stats.prefill_calls.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .prefill_micros
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        self.stats
+            .cache_bytes
+            .fetch_add(cache.nbytes() as u64, Ordering::Relaxed);
+
+        Ok(PrefillResult { logits, cache, bucket })
+    }
+
+    /// One autoregressive step: feed `token` at position `cache.len`,
+    /// return the next-token logits and the updated cache.
+    pub fn decode(&self, token: i32, cache: KvCache) -> Result<(Vec<f32>, KvCache)> {
+        if !cache.has_room() {
+            bail!(
+                "KV cache full ({} / {}): cannot decode further",
+                cache.len,
+                cache.capacity
+            );
+        }
+        let pos = cache.len;
+        let t0 = Instant::now();
+
+        let tok_buf = self.scalar_i32(token)?;
+        let pos_buf = self.scalar_i32(pos as i32)?;
+        let k_buf = self.client.buffer_from_host_literal(None, &cache.k)?;
+        let v_buf = self.client.buffer_from_host_literal(None, &cache.v)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+
+        let result = self.decode_exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let (logits_l, k, v) = match <[Literal; 3]>::try_from(parts) {
+            Ok([a, b, c]) => (a, b, c),
+            Err(p) => bail!("decode returned {} outputs, expected 3", p.len()),
+        };
+        let logits = logits_l.to_vec::<f32>()?;
+        let new_cache = KvCache::new(k, v, pos + 1, cache.capacity);
+
+        self.stats.decode_calls.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .decode_micros
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        self.stats
+            .cache_bytes
+            .fetch_add(2 * new_cache.nbytes() as u64, Ordering::Relaxed);
+
+        Ok((logits, new_cache))
+    }
+
+    /// Convenience: greedy-generate `n` tokens after `prompt`. Returns the
+    /// generated ids (stops early when the cache fills).
+    pub fn generate_greedy(&self, prompt: &[i32], n: usize) -> Result<Vec<i32>> {
+        let pre = self.prefill(prompt)?;
+        let mut cache = pre.cache;
+        let mut tok = argmax(&pre.logits);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(tok);
+            if !cache.has_room() {
+                break;
+            }
+            let (logits, c) = self.decode(tok, cache)?;
+            cache = c;
+            tok = argmax(&logits);
+        }
+        Ok(out)
+    }
+
+    /// ElementType helper for the manifest's dtype strings (exposed for
+    /// integration tests).
+    pub fn element_type(dtype: &str) -> Result<ElementType> {
+        Ok(match dtype {
+            "f32" => ElementType::F32,
+            "u8" => ElementType::U8,
+            "i32" => ElementType::S32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// Index of the maximum logit (ties -> lowest index, matching jnp.argmax).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        // Ties resolve to the first index, like jnp.argmax.
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
+        // NaN never wins (NaN > x is false).
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
+    }
+}

@@ -1,0 +1,61 @@
+//! Host-side KV cache handles.
+//!
+//! The decode executable carries the cache as explicit inputs/outputs
+//! (`k_cache`/`v_cache` f32 `[n_layers, n_heads, max_seq, head_dim]`).
+//! PJRT (through the `xla` crate's default `ExecuteOptions`) returns the
+//! whole result tuple as a *single* buffer, so tuple elements can only be
+//! reached by materializing a host literal — which means the cache crosses
+//! the host boundary once per decode step. That is correct and, at the
+//! model sizes CPU-PJRT can execute, cheap relative to the compute; the
+//! multi-step decode graph that amortizes it is tracked in EXPERIMENTS.md
+//! §Perf.
+//!
+//! On the *simulated* KV260 the cache lives in DDR and its streaming cost
+//! is modeled by [`crate::memory`]; this module is only the functional
+//! path.
+
+use xla::Literal;
+
+/// One request's KV cache (both tensors padded to `max_seq`).
+pub struct KvCache {
+    /// `f32 [n_layers, n_heads, max_seq, head_dim]`, RoPE already applied.
+    pub k: Literal,
+    /// Same shape as `k`.
+    pub v: Literal,
+    /// Number of valid positions (prompt + generated so far).
+    pub len: usize,
+    /// Capacity (`max_seq` of the compiled graph).
+    pub capacity: usize,
+}
+
+impl KvCache {
+    pub fn new(k: Literal, v: Literal, len: usize, capacity: usize) -> Self {
+        Self { k, v, len, capacity }
+    }
+
+    /// True if one more token can be decoded into the cache.
+    pub fn has_room(&self) -> bool {
+        self.len < self.capacity
+    }
+
+    /// Host bytes held by this cache (both tensors).
+    pub fn nbytes(&self) -> usize {
+        self.k.size_bytes() + self.v.size_bytes()
+    }
+
+    /// Valid fraction of the padded cache (decode bandwidth utilization in
+    /// the simulator maps 1:1 onto this).
+    pub fn occupancy(&self) -> f64 {
+        self.len as f64 / self.capacity.max(1) as f64
+    }
+}
+
+impl std::fmt::Debug for KvCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvCache")
+            .field("len", &self.len)
+            .field("capacity", &self.capacity)
+            .field("nbytes", &self.nbytes())
+            .finish()
+    }
+}

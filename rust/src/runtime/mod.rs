@@ -1,0 +1,30 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the
+//! request path.
+//!
+//! Python is never imported here — `make artifacts` ran once at build time
+//! and produced, per model config:
+//!
+//! * `prefill_L{bucket}.hlo.txt` — shape-specialized prefill executables,
+//! * `decode.hlo.txt` — the single-token autoregressive step,
+//! * `weights.bin` + `manifest.json` — weights and the IO contract.
+//!
+//! [`InferenceEngine`] compiles each HLO module once with the PJRT CPU
+//! client and keeps the weight tensors uploaded as device buffers so the
+//! per-call cost is just the small dynamic inputs (tokens, positions) plus
+//! the KV cache round-trip (see `kv_cache` for why the cache currently
+//! crosses the host boundary each step, and EXPERIMENTS.md §Perf for the
+//! multi-step mitigation).
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that this XLA build (xla_extension 0.5.1) rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+mod artifacts;
+mod engine;
+mod kv_cache;
+mod sampler;
+
+pub use artifacts::{ArtifactDir, GoldenTrace, Manifest, ManifestConfig, TensorMeta, WeightStore};
+pub use engine::{argmax, InferenceEngine, PrefillResult, RuntimeStats};
+pub use kv_cache::KvCache;
+pub use sampler::{SamplerConfig, SamplingMode, sample};

@@ -1,0 +1,131 @@
+//! Token sampling — the coordinator-side half of generation.
+//!
+//! The AOT graphs return raw logits; sampling policy lives here in Rust so
+//! one compiled artifact serves greedy, temperature, and top-k decoding.
+
+use crate::util::rng::Rng;
+
+/// How to turn logits into a token id.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplingMode {
+    /// Always the argmax (deterministic; matches the golden traces).
+    Greedy,
+    /// Softmax with temperature.
+    Temperature(f32),
+    /// Keep the k most likely logits, then temperature-softmax over them.
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Sampler configuration carried per request.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    pub mode: SamplingMode,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self { mode: SamplingMode::Greedy }
+    }
+}
+
+/// Sample a token id from `logits` according to `cfg`.
+pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Rng) -> i32 {
+    match cfg.mode {
+        SamplingMode::Greedy => super::argmax(logits),
+        SamplingMode::Temperature(t) => sample_softmax(logits, t, usize::MAX, rng),
+        SamplingMode::TopK { k, temperature } => sample_softmax(logits, temperature, k, rng),
+    }
+}
+
+fn sample_softmax(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> i32 {
+    let t = temperature.max(1e-4);
+    // Rank indices by logit (descending), truncate to top_k.
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        logits[b]
+            .partial_cmp(&logits[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(top_k.max(1).min(logits.len()));
+
+    let max = logits[idx[0]];
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - max) / t) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (w, &i) in weights.iter().zip(&idx) {
+        u -= w;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    idx[idx.len() - 1] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1, 5.0, -1.0];
+        assert_eq!(sample(&logits, &SamplerConfig::default(), &mut rng), 1);
+    }
+
+    #[test]
+    fn top1_equals_greedy_regardless_of_temperature() {
+        let mut rng = Rng::new(1);
+        let logits = [0.5, 2.0, 1.0, -3.0];
+        let cfg = SamplerConfig { mode: SamplingMode::TopK { k: 1, temperature: 10.0 } };
+        for _ in 0..32 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0, 3.0, 0.5];
+        let cfg = SamplerConfig { mode: SamplingMode::Temperature(0.01) };
+        for _ in 0..64 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn samples_stay_in_top_k() {
+        let mut rng = Rng::new(3);
+        let logits = [10.0, 9.0, 8.0, -50.0, -60.0];
+        let cfg = SamplerConfig { mode: SamplingMode::TopK { k: 3, temperature: 1.0 } };
+        for _ in 0..128 {
+            let s = sample(&logits, &cfg, &mut rng);
+            assert!((0..3).contains(&s), "sampled {s} outside top-3");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let mut rng = Rng::new(4);
+        let logits = [1.0, 1.1];
+        let cfg = SamplerConfig { mode: SamplingMode::Temperature(100.0) };
+        let n0 = (0..256)
+            .filter(|_| sample(&logits, &cfg, &mut rng) == 0)
+            .count();
+        assert!(n0 > 64 && n0 < 192, "expected near-uniform, got {n0}/256");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cfg = SamplerConfig { mode: SamplingMode::Temperature(1.0) };
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..16).map(|_| sample(&logits, &cfg, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

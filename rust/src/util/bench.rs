@@ -1,0 +1,134 @@
+//! Measurement harness for `benches/*` (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with percentile statistics, plus the
+//! throughput bookkeeping the paper-table benches need. Deliberately
+//! simple: monotonic clock, no outlier rejection beyond percentiles.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    /// items/s given `items` of work per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} ms mean  {:>10.3} ms p50  {:>10.3} ms p95  ({} iters)",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.p50.as_secs_f64() * 1e3,
+            self.p95.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Bench runner: time `f` with `warmup` unmeasured then `iters` measured
+/// calls.
+pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    from_samples(name, samples)
+}
+
+/// Adaptive runner: keeps iterating until `budget` elapses (at least 3
+/// iterations), suited for calls whose cost is unknown up front.
+pub fn run_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Stats {
+    // One warmup call.
+    f();
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    from_samples(name, samples)
+}
+
+fn from_samples(name: &str, mut samples: Vec<Duration>) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let iters = samples.len();
+    let total: Duration = samples.iter().sum();
+    let pct = |p: f64| samples[((iters as f64 * p) as usize).min(iters - 1)];
+    Stats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: pct(0.50),
+        p95: pct(0.95),
+        min: samples[0],
+        max: samples[iters - 1],
+    }
+}
+
+/// Section header used by the bench binaries so their output reads like
+/// the paper's tables.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = run("noop", 2, 50, || {
+            std::hint::black_box(3u64.wrapping_mul(7));
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+    }
+
+    #[test]
+    fn run_for_hits_minimum() {
+        let s = run_for("sleepless", Duration::from_millis(1), || {});
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            p50: Duration::from_millis(100),
+            p95: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+            max: Duration::from_millis(100),
+        };
+        assert!((s.throughput(10.0) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny flag parser for the `pd-swap` binary and examples (clap is
+//! unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a collected usage/error report.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.bools.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own args.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes (e.g. `--lengths 64,128,256`).
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad entry '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NB: a bare `--flag` followed by a non-flag token would consume it
+        // as a value (the parser has no boolean schema), so boolean flags
+        // go last or use `--flag=...` — documented parser behaviour.
+        let a = parse("serve extra --model tiny --steps=32 --verbose");
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_usize("steps", 0), 32);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("model", "test"), "test");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("rate", 0.5), 0.5);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--lengths 64,128, 256");
+        // note: spaces split args; only the first token is the value
+        assert_eq!(a.get_usize_list("lengths", &[]), vec![64, 128]);
+        let b = parse("--lengths 64,128,256");
+        assert_eq!(b.get_usize_list("lengths", &[1]), vec![64, 128, 256]);
+        let c = parse("");
+        assert_eq!(c.get_usize_list("lengths", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn boolean_at_end() {
+        let a = parse("--check");
+        assert!(a.flag("check"));
+    }
+}

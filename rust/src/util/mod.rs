@@ -1,0 +1,23 @@
+//! In-crate substrates for what would normally come from crates.io.
+//!
+//! The reproduction environment is fully offline with a minimal registry
+//! (only the `xla` PJRT bindings and `anyhow`/`thiserror` resolve), so the
+//! support libraries are built here, each small, documented, and tested:
+//!
+//! * [`json`] — recursive-descent JSON parser + serializer (manifests,
+//!   golden traces, eval outputs).
+//! * [`rng`] — deterministic SplitMix64/xoshiro256** PRNG (sampling,
+//!   workload generation, property tests).
+//! * [`bench`] — measurement harness used by `benches/*` (warmup, repeats,
+//!   percentile stats, table printing).
+//! * [`prop`] — a miniature property-testing driver (random cases +
+//!   shrinking-lite) used for the coordinator/DSE invariants.
+//! * [`cli`] — flag parsing for the `pd-swap` binary and examples.
+//! * [`table`] — fixed-width table rendering shared by eval harnesses.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,159 @@
+//! Miniature property-testing driver (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs; on
+//! failure it retries with progressively "smaller" regenerated inputs
+//! (shrinking-lite: re-draw with a shrunken size hint) and reports the
+//! smallest failing case's seed so the exact run can be replayed with
+//! [`replay`].
+//!
+//! Used by the coordinator/DSE/memory invariant tests — see
+//! `rust/tests/prop_invariants.rs`.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Size hint passed to the generator (generators should scale their
+    /// output, e.g. vector lengths, by this).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0x5EED, max_size: 64 }
+    }
+}
+
+/// Outcome of a failed property with reproduction info.
+#[derive(Debug)]
+pub struct Failure<T: std::fmt::Debug> {
+    pub input: T,
+    pub case_seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn by `gen`.
+///
+/// `gen(rng, size)` produces an input; `prop(&input)` returns
+/// `Err(message)` on violation. Panics with a replayable report on the
+/// smallest failure found.
+pub fn check<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    let mut failure: Option<Failure<T>> = None;
+
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(message) = prop(&input) {
+            failure = Some(Failure { input, case_seed, size, message });
+            break;
+        }
+    }
+
+    let Some(mut fail) = failure else { return };
+
+    // Shrinking-lite: re-draw at smaller sizes from derived seeds, keep the
+    // smallest input that still fails.
+    let mut shrink_meta = Rng::new(fail.case_seed ^ 0xDEAD_BEEF);
+    let mut size = fail.size;
+    while size > 1 {
+        size /= 2;
+        let mut found_smaller = false;
+        for _ in 0..32 {
+            let seed = shrink_meta.next_u64();
+            let mut rng = Rng::new(seed);
+            let input = gen(&mut rng, size);
+            if let Err(message) = prop(&input) {
+                fail = Failure { input, case_seed: seed, size, message };
+                found_smaller = true;
+                break;
+            }
+        }
+        if !found_smaller {
+            break;
+        }
+    }
+
+    panic!(
+        "property failed (replay with seed=0x{seed:X}, size={size}):\n  input: {input:?}\n  violation: {msg}",
+        seed = fail.case_seed,
+        size = fail.size,
+        input = fail.input,
+        msg = fail.message,
+    );
+}
+
+/// Re-run a single failing case from its reported seed and size.
+pub fn replay<T, G, P>(case_seed: u64, size: usize, mut gen: G, mut prop: P) -> Result<(), String>
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    prop(&gen(&mut rng, size))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            Config { cases: 64, ..Default::default() },
+            |rng, size| (0..size).map(|_| rng.below(100)).collect::<Vec<_>>(),
+            |xs| {
+                if xs.iter().all(|&x| x < 100) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_replay_info() {
+        check(
+            Config { cases: 64, ..Default::default() },
+            |rng, size| rng.below(size + 8),
+            |&x| if x < 4 { Ok(()) } else { Err(format!("{x} >= 4")) },
+        );
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        // Find a failing case manually, then replay it.
+        let mut meta = Rng::new(123);
+        let mut found = None;
+        for _ in 0..256 {
+            let seed = meta.next_u64();
+            let mut rng = Rng::new(seed);
+            let x = rng.below(100);
+            if x >= 50 {
+                found = Some((seed, x));
+                break;
+            }
+        }
+        let (seed, x) = found.expect("should find a failing case");
+        let res = replay(
+            seed,
+            1,
+            |rng, _| rng.below(100),
+            |&y| if y < 50 { Ok(()) } else { Err("big".into()) },
+        );
+        assert!(res.is_err(), "replay of x={x} must still fail");
+    }
+}

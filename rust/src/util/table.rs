@@ -1,0 +1,147 @@
+//! Fixed-width table rendering for the eval harnesses (Table 1, Table 2,
+//! and the figure series are all printed as aligned text tables).
+
+/// A simple text table with a header row and alignment-aware columns.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    /// Right-align numeric-looking cells.
+    right: Vec<bool>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let right = vec![false; header.len()];
+        Self { header, rows: Vec::new(), right }
+    }
+
+    /// Mark columns (by index) as right-aligned.
+    pub fn right_align(mut self, cols: &[usize]) -> Self {
+        for &c in cols {
+            if c < self.right.len() {
+                self.right[c] = true;
+            }
+        }
+        self
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with column separators and a rule under the header.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = widths[i] - c.chars().count();
+                if self.right[i] {
+                    s.push_str(&format!(" {}{} |", " ".repeat(pad), c));
+                } else {
+                    s.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with engineering-friendly precision (3 significant-ish
+/// places, trailing-zero trimmed).
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let a = x.abs();
+    let s = if a >= 100.0 {
+        format!("{x:.0}")
+    } else if a >= 10.0 {
+        format!("{x:.1}")
+    } else if a >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    };
+    s
+}
+
+/// Format seconds with an adaptive unit.
+pub fn ftime(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{:.2} s", seconds)
+    } else if seconds >= 1e-3 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.1} µs", seconds * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["name", "val"]).right_align(&[1]);
+        t.row(vec!["a", "1.5"]);
+        t.row(vec!["longer", "10"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same width
+        assert!(lines.iter().all(|l| l.chars().count() == lines[0].chars().count()));
+        assert!(lines[2].contains("| a      |"));
+        assert!(lines[3].contains("|  10 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1234.0), "1234");
+        assert_eq!(fnum(27.83), "27.8");
+        assert_eq!(fnum(5.666), "5.67");
+        assert_eq!(fnum(0.123456), "0.123");
+        assert_eq!(ftime(2.5), "2.50 s");
+        assert_eq!(ftime(0.045), "45.00 ms");
+        assert_eq!(ftime(31e-6), "31.0 µs");
+    }
+}

@@ -1,0 +1,269 @@
+//! Property-based invariant tests over the coordinator, DSE, memory, and
+//! reconfiguration substrates (driven by the in-crate `util::prop`
+//! mini-framework; proptest is unavailable offline).
+
+use pd_swap::coordinator::{Policy, Request, Scheduler, SimServer, SimServerConfig};
+use pd_swap::dse::{evaluate_grid_point, DseConfig};
+use pd_swap::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
+use pd_swap::fpga::{ResourceVec, KV260};
+use pd_swap::memory::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
+use pd_swap::model::BITNET_0_73B;
+use pd_swap::reconfig::OverlapScheduler;
+use pd_swap::util::prop::{check, Config};
+use pd_swap::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xC0FFEE, max_size: 48 }
+}
+
+/// Eq. 2 is never violated by any design the DSE marks feasible.
+#[test]
+fn prop_dse_feasible_implies_eq2() {
+    let dse = DseConfig::paper_default(
+        BITNET_0_73B,
+        KV260.clone(),
+        AttentionHosting::Reconfigurable,
+    );
+    check(
+        cfg(128),
+        |rng, _| {
+            (
+                *rng.choose(&[160usize, 240, 320, 400]),
+                rng.range(2, 26) * 25,  // prefill DSP
+                rng.range(1, 26) * 25,  // decode DSP
+            )
+        },
+        |&(tlmm, pre, dec)| {
+            let p = evaluate_grid_point(&dse, tlmm, pre, dec);
+            if !p.feasible {
+                return Ok(()); // infeasible points carry a reason, fine
+            }
+            let plan = p.design.region_plan().map_err(|e| e.to_string())?;
+            let total = plan.static_region.total() + plan.rp.pblock;
+            if total.fits_within(&KV260.resources) {
+                Ok(())
+            } else {
+                Err(format!("feasible design violates Eq.2: {total}"))
+            }
+        },
+    );
+}
+
+/// Port arbitration: transfer time never beats the aggregate-bandwidth
+/// floor, and striping a stream never makes it slower.
+#[test]
+fn prop_memory_arbitration_bounds() {
+    let mem = MemorySystem::for_device(&KV260);
+    check(
+        cfg(256),
+        |rng, size| {
+            let streams = [Stream::K, Stream::V, Stream::Q, Stream::O, Stream::Weights];
+            (0..rng.range(1, 4))
+                .map(|_| PortAssignment {
+                    stream: *rng.choose(&streams),
+                    bytes: (rng.f64() * 1e8 * size as f64).max(1.0),
+                    burst: AxiBurst { beats: rng.range(1, 256) },
+                })
+                .collect::<Vec<_>>()
+        },
+        |demands| {
+            let base = PortMapping::qkvo_baseline(4);
+            let opt = PortMapping::decode_kv_optimized(4);
+            let total: f64 = demands.iter().map(|d| d.bytes).sum();
+            for mapping in [&base, &opt] {
+                let t = mem.transfer_time(mapping, demands);
+                if !t.is_finite() || t < 0.0 {
+                    return Err(format!("non-finite transfer time {t}"));
+                }
+                let floor = total / mem.aggregate_peak;
+                if t + 1e-12 < floor {
+                    return Err(format!(
+                        "time {t} beats the controller floor {floor} under {}",
+                        mapping.name
+                    ));
+                }
+            }
+            // KV-heavy demand must not be slower under the 2K+2V remap.
+            let kv_only: Vec<_> = demands
+                .iter()
+                .filter(|d| matches!(d.stream, Stream::K | Stream::V))
+                .cloned()
+                .collect();
+            if !kv_only.is_empty() {
+                let tb = mem.transfer_time(&base, &kv_only);
+                let to = mem.transfer_time(&opt, &kv_only);
+                if to > tb * 1.001 {
+                    return Err(format!("remap slowed KV: {to} > {tb}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Overlap arithmetic: exposed latency is within [0, reconfig] and
+/// overlapped decode-ready never exceeds sequential decode-ready.
+#[test]
+fn prop_overlap_bounds() {
+    let design = AcceleratorDesign::pd_swap();
+    let device = design.program(&KV260).unwrap();
+    let lat = device.reconfig_latency();
+    let sched = OverlapScheduler::new(PhaseModel::new(design, KV260.clone()), lat);
+    check(
+        cfg(256),
+        |rng, _| rng.range(1, BITNET_0_73B.max_seq),
+        |&l| {
+            let o = sched.overlapped(&BITNET_0_73B, l);
+            let s = sched.sequential(&BITNET_0_73B, l);
+            if o.exposed < -1e-12 {
+                return Err(format!("negative exposed latency {}", o.exposed));
+            }
+            if o.exposed > o.reconfig + 1e-12 {
+                return Err("exposed exceeds the full reconfig cost".into());
+            }
+            if o.decode_ready > s.decode_ready + 1e-12 {
+                return Err("overlap made things worse".into());
+            }
+            if !(0.0..=1.0 + 1e-12).contains(&o.hidden_fraction) {
+                return Err(format!("hidden fraction {} out of range", o.hidden_fraction));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Scheduler conservation: every admitted request is dispatched exactly
+/// once, in arrival-compatible order, under any policy.
+#[test]
+fn prop_scheduler_conservation() {
+    check(
+        cfg(256),
+        |rng, size| {
+            let n = rng.range(1, size.max(2));
+            let policy = if rng.chance(0.5) {
+                Policy::SwapPerRequest
+            } else {
+                Policy::BatchedPhases { max_batch: rng.range(1, 8) }
+            };
+            let mut t = 0.0;
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| {
+                    t += rng.f64();
+                    Request::synthetic(i as u64, rng.range(1, 512), rng.range(1, 64), t)
+                })
+                .collect();
+            (policy, reqs)
+        },
+        |(policy, reqs)| {
+            let mut s = Scheduler::new(*policy);
+            for r in reqs.clone() {
+                s.admit(r);
+            }
+            let mut seen = Vec::new();
+            let mut guard = 0;
+            while !s.is_empty() {
+                guard += 1;
+                if guard > 10_000 {
+                    return Err("scheduler livelock".into());
+                }
+                let now = s.next_arrival().unwrap_or(f64::MAX);
+                for r in s.next_batch(now) {
+                    seen.push(r.id);
+                }
+            }
+            if seen.len() != reqs.len() {
+                return Err(format!("lost/duplicated: {} of {}", seen.len(), reqs.len()));
+            }
+            let mut sorted = seen.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != seen.len() {
+                return Err("duplicate dispatch".into());
+            }
+            if s.admitted != s.dispatched {
+                return Err("counter mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// End-to-end simulation sanity under random workloads: every request
+/// completes, KV capacity is respected, the clock only moves forward, and
+/// decode throughput stays within physical bounds.
+#[test]
+fn prop_sim_server_sanity() {
+    check(
+        cfg(48),
+        |rng, size| {
+            let n = rng.range(1, (size / 8).max(2));
+            let mut t = 0.0;
+            (0..n)
+                .map(|i| {
+                    t += rng.f64() * 2.0;
+                    Request::synthetic(
+                        i as u64,
+                        rng.range(1, 1024),
+                        rng.range(1, 64),
+                        t,
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |reqs| {
+            let mut srv = SimServer::new(SimServerConfig::pd_swap(
+                BITNET_0_73B,
+                KV260.clone(),
+            ))
+            .map_err(|e| e.to_string())?;
+            srv.run(reqs.clone()).map_err(|e| e.to_string())?;
+            if srv.metrics.requests_completed.get() != reqs.len() as u64 {
+                return Err("request lost".into());
+            }
+            for o in &srv.outcomes {
+                if o.ttft < 0.0 || o.e2e < o.ttft - 1e-9 {
+                    return Err(format!("latency accounting broken: {o:?}"));
+                }
+            }
+            // Decode throughput can never exceed the projection floor.
+            let tp = srv.metrics.decode_throughput();
+            if tp > 35.0 {
+                return Err(format!("impossible decode throughput {tp}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Resource vector algebra: fits_within is monotone under addition of
+/// non-negative vectors; max is an upper bound of both arguments.
+#[test]
+fn prop_resource_algebra() {
+    check(
+        cfg(512),
+        |rng, _| {
+            let r = |rng: &mut Rng| ResourceVec {
+                lut: rng.f64() * 1e5,
+                ff: rng.f64() * 2e5,
+                bram36: rng.f64() * 150.0,
+                uram: rng.f64() * 64.0,
+                dsp: rng.f64() * 1250.0,
+            };
+            (r(rng), r(rng))
+        },
+        |(a, b)| {
+            let m = a.max(b);
+            if !a.fits_within(&m) || !b.fits_within(&m) {
+                return Err("max is not an upper bound".into());
+            }
+            let sum = *a + *b;
+            if !a.fits_within(&sum) {
+                return Err("addition broke monotonicity".into());
+            }
+            if !(sum - *a).is_nonnegative() {
+                return Err("subtraction broke non-negativity".into());
+            }
+            Ok(())
+        },
+    );
+}

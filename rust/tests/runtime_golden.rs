@@ -1,0 +1,127 @@
+//! Cross-layer integration test: the Rust PJRT execution of the AOT
+//! artifacts must reproduce the golden greedy-generation trace that
+//! `aot.py` computed with the same jitted JAX functions.
+//!
+//! Requires `make artifacts` to have run (skips with a note otherwise, so
+//! `cargo test` stays green on a fresh checkout).
+
+use pd_swap::runtime::{argmax, InferenceEngine};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn golden_greedy_trace_matches() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load(&dir).expect("engine load");
+    let golden = engine
+        .artifacts
+        .load_golden()
+        .expect("golden load")
+        .expect("test config must ship golden.json");
+
+    // 1. Prefill logits prefix must match to float tolerance.
+    let pre = engine.prefill(&golden.prompt).expect("prefill");
+    assert_eq!(pre.bucket, golden.bucket, "bucket selection diverged");
+    for (i, (&got, &want)) in pre
+        .logits
+        .iter()
+        .zip(&golden.first_logits_prefix)
+        .enumerate()
+    {
+        assert!(
+            (got - want).abs() <= 1e-3 + 1e-3 * want.abs(),
+            "logit[{i}]: rust={got} python={want}"
+        );
+    }
+
+    // 2. Greedy generation must match token-for-token.
+    let generated = engine
+        .generate_greedy(&golden.prompt, golden.n_gen)
+        .expect("generate");
+    assert_eq!(generated, golden.generated, "greedy trace diverged");
+}
+
+#[test]
+fn decode_respects_cache_capacity() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load(&dir).expect("engine load");
+    let max_seq = engine.max_seq();
+
+    let pre = engine.prefill(&[1, 2, 3]).expect("prefill");
+    let mut cache = pre.cache;
+    let mut tok = argmax(&pre.logits);
+    // Fill the cache to the brim ...
+    while cache.has_room() {
+        let (logits, c) = engine.decode(tok, cache).expect("decode");
+        cache = c;
+        tok = argmax(&logits);
+    }
+    assert_eq!(cache.len, max_seq);
+    // ... and the next decode must fail loudly, not corrupt state.
+    let err = engine.decode(tok, cache).unwrap_err();
+    assert!(err.to_string().contains("full"), "unexpected error: {err}");
+}
+
+#[test]
+fn prefill_bucket_selection_and_overflow() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load(&dir).expect("engine load");
+    let buckets = engine.buckets();
+
+    // A prompt exactly at each bucket boundary compiles to that bucket.
+    for &b in &buckets {
+        let prompt: Vec<i32> = (0..b as i32).map(|i| i % 7 + 1).collect();
+        let pre = engine.prefill(&prompt).expect("prefill");
+        assert_eq!(pre.bucket, b);
+        assert_eq!(pre.cache.len, b);
+    }
+
+    // A prompt longer than the largest bucket is rejected.
+    let too_long = vec![1i32; buckets.last().unwrap() + 1];
+    assert!(engine.prefill(&too_long).is_err());
+
+    // Empty prompts are rejected.
+    assert!(engine.prefill(&[]).is_err());
+}
+
+#[test]
+fn prefill_padding_is_invisible() {
+    // The same prompt must produce the same logits whether it lands in the
+    // small or the large bucket — right-padding + causal masking must not
+    // leak into the valid positions. We force the big bucket by lengthening
+    // the prompt with a common prefix... actually by comparing the common
+    // prefix computation: prompt P in bucket b1, and P' = P padded into a
+    // longer *prompt* is a different computation, so instead compare
+    // prefill(P) against decode-reconstruction: prefill(P[..n-1]) + decode.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load(&dir).expect("engine load");
+
+    let prompt = [1i32, 2, 3, 4, 5, 6];
+    let full = engine.prefill(&prompt).expect("prefill full");
+
+    // Reconstruct: prefill all but the last token, then decode it.
+    let pre = engine.prefill(&prompt[..5]).expect("prefill prefix");
+    let (logits, _cache) = engine.decode(prompt[5], pre.cache).expect("decode");
+
+    for (i, (a, b)) in full.logits.iter().zip(&logits).enumerate() {
+        assert!(
+            (a - b).abs() <= 2e-3 + 2e-3 * b.abs(),
+            "prefill-vs-decode logits diverge at {i}: {a} vs {b}"
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Integration tests over the full simulated stack: DSE -> floorplan ->
+//! device -> coordinator -> metrics, plus failure injection.
+
+use pd_swap::coordinator::{
+    generate_workload, Policy, Request, SimServer, SimServerConfig, WorkloadConfig,
+};
+use pd_swap::dse::{explore, DseConfig};
+use pd_swap::engines::{
+    AcceleratorDesign, AttentionHosting, DecodeAttentionEngine, PhaseModel,
+    PrefillAttentionEngine, ScheduleQuality, TlmmEngine,
+};
+use pd_swap::eval;
+use pd_swap::fpga::{FpgaDevice, KV260};
+use pd_swap::model::BITNET_0_73B;
+use pd_swap::reconfig::{SwapController, RM_DECODE, RM_PREFILL};
+
+/// The full paper pipeline: run the DSE, program the winning design,
+/// serve a workload, and confirm the headline speedup over the static
+/// baseline's DSE winner.
+#[test]
+fn dse_to_serving_pipeline() {
+    let mut dpr_cfg = DseConfig::paper_default(
+        BITNET_0_73B,
+        KV260.clone(),
+        AttentionHosting::Reconfigurable,
+    );
+    // Trim grids for test runtime.
+    dpr_cfg.tlmm_grid = vec![320];
+    dpr_cfg.prefill_grid = vec![200, 250, 300];
+    dpr_cfg.decode_grid = vec![50, 150, 250];
+    let mut static_cfg = dpr_cfg.clone();
+    static_cfg.hosting = AttentionHosting::StaticBoth;
+
+    let dpr = explore(&dpr_cfg);
+    let stat = explore(&static_cfg);
+
+    let wl = generate_workload(&WorkloadConfig {
+        n_requests: 8,
+        prompt_len: (64, 1024),
+        gen_len: (16, 64),
+        ..Default::default()
+    });
+
+    let mut cfg_a = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+    cfg_a.design = dpr.best.design.clone();
+    let mut a = SimServer::new(cfg_a).unwrap();
+    a.run(wl.clone()).unwrap();
+
+    let mut cfg_b = SimServerConfig::tellme_static(BITNET_0_73B, KV260.clone());
+    cfg_b.design = stat.best.design.clone();
+    let mut b = SimServer::new(cfg_b).unwrap();
+    b.run(wl).unwrap();
+
+    assert_eq!(a.metrics.requests_completed.get(), 8);
+    assert_eq!(b.metrics.requests_completed.get(), 8);
+    assert!(
+        a.metrics.e2e.mean() < b.metrics.e2e.mean(),
+        "DSE-chosen DPR design must beat DSE-chosen static design: {:.2}s vs {:.2}s",
+        a.metrics.e2e.mean(),
+        b.metrics.e2e.mean()
+    );
+}
+
+/// Failure injection: an over-provisioned design must be refused at
+/// programming time (P&R gate), not crash the server later.
+#[test]
+fn oversized_design_is_rejected_at_programming() {
+    let mut d = AcceleratorDesign::pd_swap();
+    d.prefill_attn = PrefillAttentionEngine { n_dsp: 800, schedule: ScheduleQuality::Tailored };
+    let err = SimServer::new(SimServerConfig {
+        design: d,
+        device: KV260.clone(),
+        shape: BITNET_0_73B,
+        policy: Policy::SwapPerRequest,
+        overlap: true,
+    })
+    .err()
+    .expect("must fail");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("utilization") || msg.contains("exceeds"),
+        "unexpected error: {msg}"
+    );
+}
+
+/// Failure injection: a TLMM engine so large the static region alone
+/// overflows — same gate, different component.
+#[test]
+fn oversized_static_region_rejected() {
+    let mut d = AcceleratorDesign::tellme_static();
+    d.tlmm = TlmmEngine { n_pe: 1500 };
+    assert!(d.program(&KV260).is_err());
+}
+
+/// Device-level misuse: decoding against a partition mid-swap is refused
+/// by the device (the §3.4 correctness rule at the lowest layer).
+#[test]
+fn device_refuses_concurrent_swaps() {
+    let design = AcceleratorDesign::pd_swap();
+    let device: FpgaDevice = design.program(&KV260).unwrap();
+    let mut ctl = SwapController::new(device);
+    let t_ready = ctl.ensure_prefill(0.0).unwrap();
+    // Mid-flight second swap on the serial PCAP must fail.
+    assert!(ctl.device.start_reconfig(RM_DECODE, t_ready / 2.0).is_err());
+    // After completion it succeeds.
+    ctl.device.settle(t_ready);
+    assert!(ctl.device.start_reconfig(RM_DECODE, t_ready).is_ok());
+    assert!(!ctl.device.is_live(RM_PREFILL, t_ready));
+}
+
+/// The eval harnesses all run end-to-end and return structurally sane
+/// data (this is what `pd-swap eval all` executes).
+#[test]
+fn eval_harnesses_run() {
+    let t1 = eval::run_table1();
+    assert_eq!(t1.len(), 6);
+    let (t2_rows, total, eq) = eval::run_table2();
+    assert!(t2_rows.len() >= 6);
+    assert!(eq.lut > total.lut);
+    let f4 = eval::run_fig4a();
+    assert_eq!(f4.len(), 3);
+    let f5 = eval::run_fig5();
+    assert!(f5.iter().any(|r| r.l == 128));
+    let f6 = eval::run_fig6(&[64, 2048]);
+    assert_eq!(f6.len(), 2);
+}
+
+/// Decode throughput from the serving loop agrees with the analytic
+/// per-step model (the simulation adds no phantom overheads).
+#[test]
+fn serving_loop_matches_analytic_model() {
+    let shape = BITNET_0_73B;
+    let l0 = 256usize;
+    let n = 32usize;
+    let mut srv = SimServer::new(SimServerConfig::pd_swap(shape, KV260.clone())).unwrap();
+    srv.run(vec![Request::synthetic(0, l0, n, 0.0)]).unwrap();
+
+    let model = PhaseModel::new(AcceleratorDesign::pd_swap(), KV260.clone());
+    let analytic = model.decode_span(&shape, l0, n) / n as f64;
+    let measured = srv.metrics.tpot.mean();
+    let rel = (measured / analytic - 1.0).abs();
+    assert!(
+        rel < 0.02,
+        "serving tpot {measured:.4} vs analytic {analytic:.4} ({rel:.3} rel)"
+    );
+}
+
+/// Ablation consistency: disabling each PD-Swap ingredient degrades the
+/// metric it owns and only that one.
+#[test]
+fn ablation_matrix() {
+    let shape = BITNET_0_73B;
+    let wl: Vec<Request> = (0..4)
+        .map(|i| Request::synthetic(i, 1024, 32, i as f64 * 0.5))
+        .collect();
+
+    let run = |cfg: SimServerConfig| {
+        let mut s = SimServer::new(cfg).unwrap();
+        s.run(wl.clone()).unwrap();
+        (
+            s.metrics.tpot.mean(),
+            s.metrics.reconfig_exposed.mean(),
+        )
+    };
+
+    let full = run(SimServerConfig::pd_swap(shape, KV260.clone()));
+
+    // No port remap -> slower decode, overlap untouched.
+    let mut no_ports = SimServerConfig::pd_swap(shape, KV260.clone());
+    no_ports.design.decode_attn = DecodeAttentionEngine {
+        kv_optimized_ports: false,
+        ..no_ports.design.decode_attn
+    };
+    let np = run(no_ports);
+    assert!(np.0 > full.0 * 1.3, "port remap ablation: {:.4} vs {:.4}", np.0, full.0);
+
+    // No overlap -> more exposed reconfig latency, same decode speed.
+    let mut no_overlap = SimServerConfig::pd_swap(shape, KV260.clone());
+    no_overlap.overlap = false;
+    let nov = run(no_overlap);
+    assert!(nov.1 > full.1, "overlap ablation: {:.4} vs {:.4}", nov.1, full.1);
+    assert!((nov.0 / full.0 - 1.0).abs() < 0.01, "decode speed should be unchanged");
+}
