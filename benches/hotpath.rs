@@ -6,13 +6,10 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 
-use std::time::Duration;
-
 use pd_swap::coordinator::{generate_workload, SimServer, SimServerConfig, WorkloadConfig};
 use pd_swap::engines::{AcceleratorDesign, PhaseModel};
 use pd_swap::fpga::KV260;
 use pd_swap::model::BITNET_0_73B;
-use pd_swap::runtime::InferenceEngine;
 use pd_swap::util::bench;
 
 fn main() {
@@ -58,6 +55,15 @@ fn main() {
         );
     }
 
+    pjrt_section();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_section() {
+    use std::time::Duration;
+
+    use pd_swap::runtime::InferenceEngine;
+
     bench::section("PJRT hot path (artifacts/test — skip if absent)");
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
     if dir.join("manifest.json").exists() {
@@ -88,4 +94,10 @@ fn main() {
     } else {
         println!("artifacts/test not built — run `make artifacts` for PJRT numbers");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section() {
+    bench::section("PJRT hot path");
+    println!("built without the `pjrt` feature — rebuild with --features pjrt for PJRT numbers");
 }

@@ -1,0 +1,165 @@
+//! Bench: KV-pool-aware serving — `SwapPerRequest` vs. cache-aware
+//! `BatchedPhases` at long contexts (4k / 16k / 32k total tokens).
+//!
+//! Uses a long-context variant of the e2e-100m shape so that the 32k
+//! workload genuinely oversubscribes the KV260's modeled DDR KV budget
+//! (~4k pages): worst-case admission splits the queue into pool-bounded
+//! phase-batches, and batched mode amortizes one swap pair per batch
+//! instead of per request. Reported tokens/s and p95 E2E are *simulated
+//! KV260* numbers (the wall-clock cost of the simulation itself is also
+//! measured, via `util::bench`).
+//!
+//! Emits `BENCH_kvpool.json` (override with `-- --out PATH`).
+//!
+//! Run: `cargo bench --bench kvpool_serving`
+
+use pd_swap::coordinator::{Policy, Request, SimServer, SimServerConfig};
+use pd_swap::fpga::KV260;
+use pd_swap::model::{ModelShape, Precision};
+use pd_swap::util::bench;
+use pd_swap::util::cli::Args;
+use pd_swap::util::json::Value;
+
+/// e2e-100m widened to a 32k context window: small enough that long
+/// contexts fit DDR, big enough that six of them do not.
+const LONG_CTX: ModelShape = ModelShape {
+    name: "e2e-100m-32k",
+    n_layers: 10,
+    d_model: 768,
+    n_heads: 12,
+    d_ff: 3072,
+    vocab: 8192,
+    max_seq: 32 * 1024,
+    kv_precision: Precision::Fp16,
+};
+
+const GEN_TOKENS: usize = 64;
+const N_REQUESTS: u64 = 6;
+
+struct PolicyRun {
+    tokens_per_sec: f64,
+    p95_e2e: f64,
+    swaps: u64,
+    tokens: u64,
+    high_water_pages: u64,
+    batches_deferred: bool,
+}
+
+fn run_policy(policy: Policy, context: usize) -> PolicyRun {
+    let mut cfg = SimServerConfig::pd_swap(LONG_CTX, KV260.clone());
+    cfg.policy = policy;
+    let prompt = context.saturating_sub(GEN_TOKENS).max(1);
+    let aggregate_worst =
+        cfg.pool.worst_case_pages(prompt, GEN_TOKENS) * N_REQUESTS as usize;
+    let oversubscribed = aggregate_worst > cfg.pool.total_pages;
+    let wl: Vec<Request> = (0..N_REQUESTS)
+        .map(|i| Request::synthetic(i, prompt, GEN_TOKENS, 0.0))
+        .collect();
+    let mut srv = SimServer::new(cfg).expect("config must program");
+    srv.run(wl).expect("serving must not fail under oversubscription");
+    assert_eq!(srv.metrics.requests_completed.get(), N_REQUESTS);
+    srv.pool().check_invariants().expect("pool accounting balances at drain");
+
+    let tokens = srv.metrics.tokens_generated.get();
+    PolicyRun {
+        tokens_per_sec: tokens as f64 / srv.clock().max(1e-12),
+        p95_e2e: srv.metrics.e2e.quantile(0.95),
+        swaps: srv.metrics.reconfigurations.get(),
+        tokens,
+        high_water_pages: srv.metrics.kv_pool_high_water.get(),
+        batches_deferred: oversubscribed,
+    }
+}
+
+fn run_json(r: &PolicyRun) -> Value {
+    Value::Obj(vec![
+        ("tokens_per_sec".into(), Value::Num(r.tokens_per_sec)),
+        ("p95_e2e_s".into(), Value::Num(r.p95_e2e)),
+        ("swaps".into(), Value::Num(r.swaps as f64)),
+        ("tokens".into(), Value::Num(r.tokens as f64)),
+        ("pool_high_water_pages".into(), Value::Num(r.high_water_pages as f64)),
+    ])
+}
+
+fn main() {
+    let args = Args::from_env();
+    let out = args.get_or("out", "BENCH_kvpool.json");
+    let contexts = args.get_usize_list("contexts", &[4 * 1024, 16 * 1024, 32 * 1024]);
+
+    let pool_cfg = SimServerConfig::pd_swap(LONG_CTX, KV260.clone()).pool;
+    bench::section("KV pool");
+    println!(
+        "model {}: {:.1} KB KV/token; pool {} pages x {} tokens = {:.2} GB budget",
+        LONG_CTX.name,
+        LONG_CTX.kv_bytes_per_token() / 1e3,
+        pool_cfg.total_pages,
+        pool_cfg.page_tokens,
+        pool_cfg.budget_bytes() / 1e9,
+    );
+
+    bench::section(&format!(
+        "{N_REQUESTS} simultaneous requests, {GEN_TOKENS} new tokens each (simulated KV260)"
+    ));
+    println!(
+        "{:>8}  {:>12} {:>12} {:>7}  | {:>12} {:>12} {:>7}  {:>9}",
+        "context", "per-req t/s", "p95 e2e s", "swaps", "batched t/s", "p95 e2e s", "swaps",
+        "speedup"
+    );
+
+    let mut rows = Vec::new();
+    let mut all_hold = true;
+    for &ctx in &contexts {
+        let per_req = run_policy(Policy::SwapPerRequest, ctx);
+        let batched = run_policy(Policy::BatchedPhases { max_batch: 8 }, ctx);
+        let speedup = batched.tokens_per_sec / per_req.tokens_per_sec.max(1e-12);
+        println!(
+            "{:>8}  {:>12.2} {:>12.1} {:>7}  | {:>12.2} {:>12.1} {:>7}  {:>8.2}x",
+            ctx,
+            per_req.tokens_per_sec,
+            per_req.p95_e2e,
+            per_req.swaps,
+            batched.tokens_per_sec,
+            batched.p95_e2e,
+            batched.swaps,
+            speedup,
+        );
+        // The acceptance bar: cache-aware batching matches or beats the
+        // paper's per-request flow at every context length.
+        if batched.tokens_per_sec + 1e-12 < per_req.tokens_per_sec {
+            all_hold = false;
+        }
+        rows.push(Value::Obj(vec![
+            ("context".into(), Value::Num(ctx as f64)),
+            ("per_request".into(), run_json(&per_req)),
+            ("batched".into(), run_json(&batched)),
+            ("speedup".into(), Value::Num(speedup)),
+            ("oversubscribed".into(), Value::Bool(batched.batches_deferred)),
+        ]));
+    }
+    assert!(
+        all_hold,
+        "BatchedPhases must match or beat SwapPerRequest tokens/s at every context"
+    );
+
+    // Wall-clock cost of the simulation itself (not KV260 time).
+    bench::section("simulation wall-clock");
+    let s = bench::run("32k oversubscribed serve (both policies)", 1, 5, || {
+        std::hint::black_box(run_policy(Policy::BatchedPhases { max_batch: 8 }, 32 * 1024));
+        std::hint::black_box(run_policy(Policy::SwapPerRequest, 32 * 1024));
+    });
+    println!("{s}");
+
+    let report = Value::Obj(vec![
+        ("bench".into(), Value::Str("kvpool_serving".into())),
+        ("model".into(), Value::Str(LONG_CTX.name.into())),
+        ("n_requests".into(), Value::Num(N_REQUESTS as f64)),
+        ("gen_tokens".into(), Value::Num(GEN_TOKENS as f64)),
+        ("pool_total_pages".into(), Value::Num(pool_cfg.total_pages as f64)),
+        ("page_tokens".into(), Value::Num(pool_cfg.page_tokens as f64)),
+        ("contexts".into(), Value::Arr(rows)),
+    ]);
+    match bench::write_json_report(out, &report) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

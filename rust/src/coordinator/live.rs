@@ -18,7 +18,7 @@ use crate::engines::PhaseModel;
 use crate::metrics::ServerMetrics;
 use crate::model::{shapes, ModelShape};
 use crate::reconfig::OverlapScheduler;
-use crate::runtime::{sample, InferenceEngine, SamplerConfig};
+use crate::runtime::{sample, InferenceEngine, PagedKvView, SamplerConfig};
 use crate::util::rng::Rng;
 
 use super::request::{Request, RequestOutcome};
@@ -112,6 +112,19 @@ impl LiveServer {
         self.metrics.e2e.record(e2e);
         self.metrics.tokens_generated.add(n as u64);
         self.metrics.requests_completed.inc();
+
+        // Page accounting in lockstep with the simulator's pool: the
+        // high-water mark is the worst-case *reservation* a WorstCase
+        // admission would commit for this request (prompt + full
+        // generation, clamped to the graph's capacity) — not just the
+        // pages actually written, which can be fewer on early exit.
+        let page_tokens = crate::kvpool::PAGE_TOKENS_DEFAULT;
+        let worst_tokens = (r.prompt_len + r.max_new_tokens).min(cache.capacity);
+        let reserved = PagedKvView::new(page_tokens, worst_tokens, cache.capacity);
+        self.sim_metrics
+            .kv_pool_high_water
+            .observe(reserved.pages_used() as u64);
+        debug_assert!(cache.paged_view(page_tokens).pages_used() <= reserved.pages_used());
 
         // Simulated-KV260 lockstep accounting for the same trace.
         let (sim_ttft, sim_e2e) = if let Some((model, ov, shape)) = &self.sim {

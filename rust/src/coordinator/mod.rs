@@ -9,20 +9,29 @@
 //! * [`scheduler`] — admission + batching policies. `SwapPerRequest` is
 //!   the paper's flow; `BatchedPhases` amortizes one swap over a queue of
 //!   requests (our extension for the multi-request edge scenario §3.4
-//!   worries about).
+//!   worries about). Batch extraction is gated per-request by the KV
+//!   pool ([`Scheduler::next_batch_filtered`]) and evicted requests
+//!   re-enter at the queue front ([`Scheduler::requeue_front`]).
 //! * [`sim_server`] — event-driven serving simulation on the KV260 model:
-//!   every figure in the paper's evaluation is a query against this.
+//!   every figure in the paper's evaluation is a query against this. It
+//!   owns a [`crate::kvpool::KvPool`]: requests are admitted only when
+//!   their pages fit the modeled DDR KV budget, decode rounds interleave
+//!   round-robin across residents, and pool exhaustion triggers the
+//!   configured eviction policy (evict-and-recompute or cap-in-place).
 //! * [`live`] — the same coordinator logic driving *real* PJRT execution
 //!   of the AOT artifacts (tokens are real; FPGA timing is reported from
-//!   the simulator running in lockstep).
+//!   the simulator running in lockstep). Requires the `pjrt` cargo
+//!   feature (and an XLA installation).
 
 pub mod fsm;
+#[cfg(feature = "pjrt")]
 pub mod live;
 pub mod request;
 pub mod scheduler;
 pub mod sim_server;
 
 pub use fsm::{Phase, PhaseFsm};
+#[cfg(feature = "pjrt")]
 pub use live::{LiveServer, LiveServerConfig};
 pub use request::{Request, RequestOutcome, WorkloadConfig, generate_workload};
 pub use scheduler::{Policy, Scheduler};

@@ -30,14 +30,27 @@ pub enum Policy {
 pub struct Scheduler {
     pub policy: Policy,
     queue: VecDeque<Request>,
-    /// Conservation accounting (checked by the property tests).
+    /// Conservation accounting (checked by the property tests): at drain,
+    /// `dispatched == admitted + requeued`.
     pub admitted: u64,
     pub dispatched: u64,
+    /// Requests put back at the queue front (KV-pool preemption).
+    pub requeued: u64,
+    /// Batch extractions cut short by an admission rejection (the head
+    /// request stayed queued for a later batch).
+    pub deferrals: u64,
 }
 
 impl Scheduler {
     pub fn new(policy: Policy) -> Self {
-        Self { policy, queue: VecDeque::new(), admitted: 0, dispatched: 0 }
+        Self {
+            policy,
+            queue: VecDeque::new(),
+            admitted: 0,
+            dispatched: 0,
+            requeued: 0,
+            deferrals: 0,
+        }
     }
 
     pub fn admit(&mut self, r: Request) {
@@ -59,6 +72,18 @@ impl Scheduler {
     /// Extract the next batch to serve at time `now`: requests that have
     /// arrived, respecting FIFO order and the policy's batch cap.
     pub fn next_batch(&mut self, now: f64) -> Vec<Request> {
+        self.next_batch_filtered(now, |_| true)
+    }
+
+    /// [`Self::next_batch`] with a per-request admission gate (the KV-pool
+    /// hook): extraction stops at the first queued request `admit`
+    /// rejects — strict FIFO, no head-of-line bypass, so a rejected head
+    /// is retried first in a later batch when the pool has drained. The
+    /// callback typically reserves pool pages as a side effect.
+    pub fn next_batch_filtered<F>(&mut self, now: f64, mut admit: F) -> Vec<Request>
+    where
+        F: FnMut(&Request) -> bool,
+    {
         let cap = match self.policy {
             Policy::SwapPerRequest => 1,
             Policy::BatchedPhases { max_batch } => max_batch.max(1),
@@ -67,6 +92,10 @@ impl Scheduler {
         while batch.len() < cap {
             match self.queue.front() {
                 Some(r) if r.arrival <= now + 1e-12 => {
+                    if !admit(r) {
+                        self.deferrals += 1;
+                        break;
+                    }
                     batch.push(self.queue.pop_front().unwrap());
                 }
                 _ => break,
@@ -74,6 +103,13 @@ impl Scheduler {
         }
         self.dispatched += batch.len() as u64;
         batch
+    }
+
+    /// Preemption hook: an evicted request goes back to the queue front
+    /// so it is re-served (and re-prefilled) before newer arrivals.
+    pub fn requeue_front(&mut self, r: Request) {
+        self.requeued += 1;
+        self.queue.push_front(r);
     }
 
     /// True when nothing is queued.
@@ -130,6 +166,39 @@ mod tests {
         assert_eq!(s.next_batch(0.0).len(), 3);
         assert_eq!(s.next_batch(0.0).len(), 3);
         assert_eq!(s.next_batch(0.0).len(), 1);
+    }
+
+    #[test]
+    fn filtered_extraction_stops_at_rejection_without_bypass() {
+        let mut s = Scheduler::new(Policy::BatchedPhases { max_batch: 8 });
+        for i in 0..5 {
+            s.admit(req(i, 0.0));
+        }
+        // Reject request 2: the batch is 0,1 — 3 and 4 must NOT bypass.
+        let batch = s.next_batch_filtered(0.0, |r| r.id != 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(s.queue_len(), 3);
+        assert_eq!(s.deferrals, 1);
+        // Next attempt admits everything remaining, head first.
+        let batch = s.next_batch_filtered(0.0, |_| true);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn requeue_front_preempts_fifo() {
+        let mut s = Scheduler::new(Policy::BatchedPhases { max_batch: 8 });
+        s.admit(req(0, 0.0));
+        s.admit(req(1, 0.0));
+        let batch = s.next_batch(0.0);
+        assert_eq!(batch.len(), 2);
+        // Evict request 1 mid-serve; it must come back before any newer work.
+        s.admit(req(2, 0.0));
+        s.requeue_front(batch[1].clone());
+        let batch = s.next_batch(0.0);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(s.requeued, 1);
+        assert_eq!(s.dispatched, 4, "request 1 dispatched twice");
+        assert_eq!(s.dispatched, s.admitted + s.requeued);
     }
 
     #[test]

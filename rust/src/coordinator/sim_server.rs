@@ -1,15 +1,28 @@
 //! Event-driven serving simulation on the modeled KV260.
 //!
-//! Drives the full stack — scheduler → FSM → swap controller → phase
-//! latency model — over a workload, with a simulated clock. This is the
-//! machine behind Figs. 5/6 and the ablation benches: the same loop runs
-//! a PD-Swap device (DPR + overlap), a PD-Swap device without overlap, or
-//! a static baseline (no swaps at all), selected by configuration.
+//! Drives the full stack — scheduler → KV pool → FSM → swap controller →
+//! phase latency model — over a workload, with a simulated clock. This is
+//! the machine behind Figs. 5/6 and the ablation benches: the same loop
+//! runs a PD-Swap device (DPR + overlap), a PD-Swap device without
+//! overlap, or a static baseline (no swaps at all), selected by
+//! configuration.
+//!
+//! Multi-request serving (our extension beyond the paper's single-request
+//! flow) is KV-capacity aware: every batch member holds a page
+//! reservation in the [`crate::kvpool::KvPool`], batch extraction is
+//! bounded by pool occupancy rather than a fixed cap, decode rounds are
+//! interleaved round-robin across residents, and pool exhaustion is
+//! resolved by the configured [`EvictionPolicy`] (evict-and-recompute
+//! preempts the LRU resident back into the queue; keep-resident caps the
+//! growing request instead).
 
-use anyhow::Result;
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
 
 use crate::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
 use crate::fpga::DeviceConfig;
+use crate::kvpool::{EvictionPolicy, KvPool, KvPoolConfig, PoolError};
 use crate::metrics::ServerMetrics;
 use crate::model::ModelShape;
 use crate::reconfig::{OverlapScheduler, SwapController, RM_PREFILL};
@@ -27,27 +40,56 @@ pub struct SimServerConfig {
     pub policy: Policy,
     /// Use the §3.4 latency-overlapped early trigger (PD-Swap default).
     pub overlap: bool,
+    /// Paged KV-cache pool sizing + admission/eviction policy.
+    pub pool: KvPoolConfig,
 }
 
 impl SimServerConfig {
     pub fn pd_swap(shape: ModelShape, device: DeviceConfig) -> Self {
+        let pool = KvPoolConfig::for_device(&shape, &device);
         Self {
             design: AcceleratorDesign::pd_swap(),
             device,
             shape,
             policy: Policy::SwapPerRequest,
             overlap: true,
+            pool,
         }
     }
 
     pub fn tellme_static(shape: ModelShape, device: DeviceConfig) -> Self {
+        let pool = KvPoolConfig::for_device(&shape, &device);
         Self {
             design: AcceleratorDesign::tellme_static(),
             device,
             shape,
             policy: Policy::SwapPerRequest,
             overlap: false,
+            pool,
         }
+    }
+}
+
+/// One batch member mid-decode.
+struct InFlight {
+    req: Request,
+    /// Tokens currently in the KV cache.
+    ctx: usize,
+    /// Tokens generated so far this serve attempt.
+    tokens: usize,
+    /// When this request's prefill finished (absolute sim time).
+    prefill_done: f64,
+    /// Admission-capped token ceiling for this reservation.
+    token_cap: usize,
+}
+
+impl InFlight {
+    /// Generation finished: token budget spent, graph capacity reached,
+    /// or reservation cap hit.
+    fn done(&self, max_seq: usize) -> bool {
+        self.tokens >= self.req.max_new_tokens
+            || self.ctx >= max_seq
+            || self.ctx >= self.token_cap
     }
 }
 
@@ -58,6 +100,13 @@ pub struct SimServer {
     swap: Option<SwapController>,
     overlap: Option<OverlapScheduler>,
     fsm: PhaseFsm,
+    kv_pool: KvPool,
+    /// Requests that have prefilled at least once (a second prefill is an
+    /// eviction recompute and is charged to `metrics.recompute_overhead`).
+    prefilled: HashSet<u64>,
+    /// Requests already evicted once — never chosen as victims again, so
+    /// every request completes in at most two serve attempts.
+    evicted_once: HashSet<u64>,
     pub metrics: ServerMetrics,
     clock: f64,
     pub outcomes: Vec<RequestOutcome>,
@@ -80,12 +129,16 @@ impl SimServer {
         } else {
             None
         };
+        let kv_pool = KvPool::new(cfg.pool.clone());
         Ok(Self {
             cfg,
             model,
             swap,
             overlap,
             fsm: PhaseFsm::new(),
+            kv_pool,
+            prefilled: HashSet::new(),
+            evicted_once: HashSet::new(),
             metrics: ServerMetrics::default(),
             clock: 0.0,
             outcomes: Vec::new(),
@@ -96,14 +149,24 @@ impl SimServer {
         self.clock
     }
 
+    /// The paged KV pool (occupancy/fragmentation/conservation stats).
+    pub fn pool(&self) -> &KvPool {
+        &self.kv_pool
+    }
+
     /// Serve a whole workload to completion; returns the metric bundle.
+    /// Metrics and pool stats accumulate across calls; the per-run
+    /// request-id bookkeeping resets so workloads may reuse ids.
     pub fn run(&mut self, mut workload: Vec<Request>) -> Result<&ServerMetrics> {
+        self.prefilled.clear();
+        self.evicted_once.clear();
         workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         let mut sched = Scheduler::new(self.cfg.policy);
         for r in workload {
             sched.admit(r);
         }
 
+        let mut stalls = 0usize;
         while !sched.is_empty() {
             // Advance the clock to the next arrival if idle.
             if let Some(next) = sched.next_arrival() {
@@ -111,18 +174,50 @@ impl SimServer {
                     self.clock = next;
                 }
             }
-            let batch = sched.next_batch(self.clock);
+            let batch = self.extract_batch(&mut sched);
             if batch.is_empty() {
+                stalls += 1;
+                if stalls > 10_000 {
+                    bail!("scheduler stalled: head request never admitted to the KV pool");
+                }
                 continue;
             }
-            self.serve_batch(batch)?;
+            stalls = 0;
+            self.serve_batch(&mut sched, batch)?;
         }
+        // Mirror the pool's conservation stats into the metric bundle —
+        // `PoolStats` is the single source of truth for these counts.
+        let high_water = self.kv_pool.stats.high_water_pages as u64;
+        let evicted = self.kv_pool.stats.evicted;
+        let capped = self.kv_pool.stats.capped_admissions;
+        self.metrics.kv_pool_high_water.observe(high_water);
+        let d = evicted.saturating_sub(self.metrics.kv_evictions.get());
+        self.metrics.kv_evictions.add(d);
+        let d = capped.saturating_sub(self.metrics.kv_admissions_capped.get());
+        self.metrics.kv_admissions_capped.add(d);
         Ok(&self.metrics)
     }
 
-    /// One phase-batch: prefill all, swap once, decode all.
-    fn serve_batch(&mut self, batch: Vec<Request>) -> Result<()> {
+    /// Pull the next phase-batch, bounding it by KV-pool occupancy: each
+    /// extracted request commits a page reservation; extraction stops at
+    /// the first head-of-queue request the pool cannot hold.
+    fn extract_batch(&mut self, sched: &mut Scheduler) -> Vec<Request> {
+        let now = self.clock;
+        let pool = &mut self.kv_pool;
+        sched.next_batch_filtered(now, |r| {
+            let plan = pool.admission_plan(r.prompt_len, r.max_new_tokens);
+            // Batch-synchronous serving never evicts at admission time (the
+            // only residents are batch-mates that have not run yet), so
+            // EvictThenFit/Defer both close the batch for a later retry.
+            plan.admits_immediately()
+                && pool.execute_admission(r.id, 0, plan, now).unwrap_or(false)
+        })
+    }
+
+    /// One phase-batch: prefill all, swap once, decode all (round-robin).
+    fn serve_batch(&mut self, sched: &mut Scheduler, batch: Vec<Request>) -> Result<()> {
         let shape = self.cfg.shape;
+        let page_tokens = self.cfg.pool.page_tokens;
 
         // -- ensure prefill RM ------------------------------------------------
         if let Some(swap) = self.swap.as_mut() {
@@ -138,12 +233,20 @@ impl SimServer {
         // -- prefill phase ----------------------------------------------------
         // (start-of-prefill timestamps per request for TTFT accounting)
         let mut prefill_done = Vec::with_capacity(batch.len());
-        let mut last_timeline = None;
         for r in &batch {
             self.fsm.begin_prefill().ok();
             let pre = self.model.prefill(&shape, r.prompt_len);
             self.clock += pre.total;
             prefill_done.push(self.clock);
+            if !self.prefilled.insert(r.id) {
+                // Second prefill of an evicted request: pure recompute tax.
+                self.metrics.recompute_overhead.record(pre.total);
+            }
+            // The prompt's KV lands in the pool as it is written.
+            let cap = self.kv_pool.token_cap(r.id).unwrap_or(shape.max_seq);
+            self.kv_pool
+                .ensure_tokens(r.id, r.prompt_len.min(cap), self.clock)
+                .map_err(|e| anyhow::anyhow!("prefill KV write: {e}"))?;
             // Early-trigger the decode swap during the LAST request's tail
             // (batched mode keeps the prefill RM until the batch drains).
             let is_last = r.id == batch.last().unwrap().id;
@@ -154,8 +257,6 @@ impl SimServer {
                     } else {
                         ov.sequential(&shape, r.prompt_len)
                     };
-                    //
-
                     let trigger_abs = self.clock - pre.total + timeline.trigger;
                     self.fsm.begin_swap(true, trigger_abs + timeline.reconfig).ok();
                     let ready = swap.trigger_decode_swap(trigger_abs)?;
@@ -164,10 +265,8 @@ impl SimServer {
                     self.metrics.reconfig_exposed.record(admit - self.clock);
                     self.clock = admit;
                     self.fsm.complete_swap(admit).ok();
-                    last_timeline = Some(timeline);
                 }
             }
-            let _ = last_timeline;
         }
         if self.swap.is_none() {
             // Static design: decode engine always live.
@@ -175,44 +274,122 @@ impl SimServer {
             self.fsm.complete_swap(self.clock).ok();
         }
 
-        // -- decode phase -------------------------------------------------
+        // -- decode phase (round-robin over residents) ------------------------
         debug_assert!(self.fsm.decode_admissible(self.clock));
-        for (r, pre_done) in batch.iter().zip(&prefill_done) {
-            let mut ctx = r.prompt_len;
-            let decode_start = self.clock;
-            // First token comes out of prefill logits; TTFT counts queue +
-            // prefill + exposed swap.
-            let ttft = self.clock.max(*pre_done) - r.arrival;
-            let mut tokens = 0usize;
-            for _ in 0..r.max_new_tokens {
-                if ctx >= shape.max_seq {
-                    break;
+        let decode_start = self.clock;
+        let mut active: Vec<InFlight> = batch
+            .into_iter()
+            .zip(prefill_done)
+            .map(|(req, prefill_done)| {
+                let token_cap = self.kv_pool.token_cap(req.id).unwrap_or(shape.max_seq);
+                let ctx = req.prompt_len.min(token_cap);
+                InFlight { req, ctx, tokens: 0, prefill_done, token_cap }
+            })
+            .collect();
+
+        while !active.is_empty() {
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].done(shape.max_seq) {
+                    let f = active.remove(i);
+                    self.finish_request(f, decode_start)?;
+                    continue;
                 }
-                let step = self.model.decode_step(&shape, ctx).total;
+                // Secure the KV slot for the next token, evicting per
+                // policy when the pool is exhausted.
+                let id = active[i].req.id;
+                let next_tokens = active[i].ctx + 1;
+                let grew = loop {
+                    match self.kv_pool.ensure_tokens(id, next_tokens, self.clock) {
+                        Ok(()) => break true,
+                        Err(PoolError::Exhausted { .. }) => {
+                            // First sweep any batch-mate that already
+                            // finished generating but has not been visited
+                            // yet this round: completing it releases its
+                            // pages without discarding any work.
+                            let done_mate = active
+                                .iter()
+                                .position(|a| a.req.id != id && a.done(shape.max_seq));
+                            if let Some(j) = done_mate {
+                                let f = active.remove(j);
+                                self.finish_request(f, decode_start)?;
+                                if j < i {
+                                    i -= 1;
+                                }
+                                continue;
+                            }
+                            if self.cfg.pool.eviction != EvictionPolicy::EvictAndRecompute {
+                                break false;
+                            }
+                            let victim = self.kv_pool.lru_victim(|v| {
+                                v != id && !self.evicted_once.contains(&v)
+                            });
+                            let Some(vid) = victim else { break false };
+                            self.kv_pool.evict(vid).map_err(|e| anyhow::anyhow!("{e}"))?;
+                            self.evicted_once.insert(vid);
+                            let j = active
+                                .iter()
+                                .position(|a| a.req.id == vid)
+                                .expect("victim must be an active batch member");
+                            let preempted = active.remove(j);
+                            // Preemption hook: back to the queue front — its
+                            // generated-so-far tokens are discarded and its
+                            // prompt re-prefilled on the next attempt.
+                            sched.requeue_front(preempted.req);
+                            if j < i {
+                                i -= 1;
+                            }
+                        }
+                        Err(_) => break false,
+                    }
+                };
+                if !grew {
+                    // Capacity-capped: deliver what we have.
+                    let f = active.remove(i);
+                    self.finish_request(f, decode_start)?;
+                    continue;
+                }
+                let step = self.model.decode_step_paged(&shape, active[i].ctx, page_tokens).total;
                 self.clock += step;
                 self.metrics.tpot.record(step);
-                ctx += 1;
-                tokens += 1;
+                active[i].ctx += 1;
+                active[i].tokens += 1;
+                self.kv_pool.touch(id, self.clock);
+                i += 1;
             }
-            let e2e = self.clock - r.arrival;
-            self.metrics.ttft.record(ttft);
-            self.metrics.e2e.record(e2e);
-            self.metrics.tokens_generated.add(tokens as u64);
-            self.metrics.requests_completed.inc();
-            self.outcomes.push(RequestOutcome {
-                id: r.id,
-                prompt_len: r.prompt_len,
-                generated: Vec::new(),
-                ttft,
-                e2e,
-                mean_tpot: if tokens > 0 {
-                    (self.clock - decode_start) / tokens as f64
-                } else {
-                    0.0
-                },
-            });
         }
         self.fsm.finish_request().ok();
+        Ok(())
+    }
+
+    /// Release the pool reservation and record the outcome.
+    fn finish_request(&mut self, f: InFlight, decode_start: f64) -> Result<()> {
+        self.kv_pool
+            .complete(f.req.id)
+            .map_err(|e| anyhow::anyhow!("completing request {}: {e}", f.req.id))?;
+        // First token comes out of prefill logits; TTFT counts queue +
+        // prefill + exposed swap.
+        let ttft = decode_start.max(f.prefill_done) - f.req.arrival;
+        let e2e = self.clock - f.req.arrival;
+        self.metrics.ttft.record(ttft);
+        self.metrics.e2e.record(e2e);
+        self.metrics.tokens_generated.add(f.tokens as u64);
+        self.metrics.requests_completed.inc();
+        self.outcomes.push(RequestOutcome {
+            id: f.req.id,
+            prompt_len: f.req.prompt_len,
+            generated: Vec::new(),
+            ttft,
+            e2e,
+            // Wall span of this request's decode divided by its tokens —
+            // under round-robin this includes interleaved batch-mates'
+            // steps (the latency a co-tenant actually observes).
+            mean_tpot: if f.tokens > 0 {
+                (self.clock - decode_start) / f.tokens as f64
+            } else {
+                0.0
+            },
+        });
         Ok(())
     }
 }
@@ -222,6 +399,7 @@ mod tests {
     use super::*;
     use crate::coordinator::request::{generate_workload, WorkloadConfig};
     use crate::fpga::KV260;
+    use crate::kvpool::AdmissionControl;
     use crate::model::BITNET_0_73B;
 
     fn workload(n: usize) -> Vec<Request> {
@@ -328,5 +506,115 @@ mod tests {
         let r = Request::synthetic(0, BITNET_0_73B.max_seq - 4, 100, 0.0);
         s.run(vec![r]).unwrap();
         assert_eq!(s.metrics.tokens_generated.get(), 4);
+    }
+
+    #[test]
+    fn pool_drains_and_reports_high_water() {
+        let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        cfg.policy = Policy::BatchedPhases { max_batch: 8 };
+        let mut s = SimServer::new(cfg).unwrap();
+        let mut w = workload(6);
+        for r in &mut w {
+            r.arrival = 0.0;
+        }
+        s.run(w).unwrap();
+        let pool = s.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.resident_count(), 0, "pool must drain");
+        assert_eq!(pool.used_pages(), 0);
+        assert!(pool.stats.high_water_pages > 0);
+        assert_eq!(
+            s.metrics.kv_pool_high_water.get(),
+            pool.stats.high_water_pages as u64
+        );
+        assert_eq!(pool.stats.completed, 6);
+    }
+
+    #[test]
+    fn oversubscribed_worst_case_splits_batches() {
+        // Pool sized for ~2.5 full-length requests; 6 requests whose
+        // aggregate worst case (~6×64 pages) exceeds it. WorstCase
+        // admission must split the batch, never panic, and still finish
+        // everything.
+        let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        cfg.policy = Policy::BatchedPhases { max_batch: 8 };
+        cfg.pool = cfg.pool.clone().with_total_pages(160);
+        let mut s = SimServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..6).map(|i| Request::synthetic(i, 1800, 64, 0.0)).collect();
+        s.run(w).unwrap();
+        assert_eq!(s.metrics.requests_completed.get(), 6);
+        assert_eq!(s.metrics.kv_evictions.get(), 0, "worst-case never evicts");
+        let pool = s.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.resident_count(), 0);
+        assert!(pool.stats.high_water_pages <= 160);
+        // 1800-prompt requests need 59 pages each: at most 2 fit at once.
+        assert!(s.metrics.reconfigurations.get() >= 6, "≥3 batches → ≥3 swap pairs");
+    }
+
+    #[test]
+    fn optimistic_overload_evicts_and_recomputes() {
+        let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        cfg.policy = Policy::BatchedPhases { max_batch: 8 };
+        // Prompts of 256 → 8 pages each; all 4 admit optimistically
+        // (32 of 40 pages), but growing each to 256+96 tokens needs 12
+        // more pages than the 8 free — someone gets evicted.
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(40)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut s = SimServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+        s.run(w).unwrap();
+        assert_eq!(s.metrics.requests_completed.get(), 4, "evicted requests finish later");
+        assert!(s.metrics.kv_evictions.get() >= 1, "pool pressure must evict");
+        assert!(
+            s.metrics.recompute_overhead.count() >= 1,
+            "evicted request re-prefills"
+        );
+        let pool = s.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.resident_count(), 0);
+        assert_eq!(pool.stats.evicted, s.metrics.kv_evictions.get());
+        assert_eq!(
+            pool.stats.admitted,
+            pool.stats.completed + pool.stats.evicted
+        );
+    }
+
+    #[test]
+    fn keep_resident_overload_caps_instead_of_evicting() {
+        let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        cfg.policy = Policy::BatchedPhases { max_batch: 8 };
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(40)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::KeepResident);
+        let mut s = SimServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+        s.run(w).unwrap();
+        assert_eq!(s.metrics.requests_completed.get(), 4);
+        assert_eq!(s.metrics.kv_evictions.get(), 0);
+        // Under pressure some generations were truncated.
+        assert!(s.metrics.tokens_generated.get() < 4 * 96);
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn single_oversized_request_is_capped_not_stuck() {
+        let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        // Pool smaller than one request's prompt.
+        cfg.pool = cfg.pool.clone().with_total_pages(8);
+        let mut s = SimServer::new(cfg).unwrap();
+        s.run(vec![Request::synthetic(0, 1024, 64, 0.0)]).unwrap();
+        assert_eq!(s.metrics.requests_completed.get(), 1);
+        assert_eq!(s.metrics.kv_admissions_capped.get(), 1);
+        assert_eq!(s.metrics.tokens_generated.get(), 0, "no page left to grow into");
+        s.pool().check_invariants().unwrap();
     }
 }

@@ -116,22 +116,55 @@ impl DecodeAttentionEngine {
 
     /// Effective K+V read bandwidth (B/s) under this engine's port plan.
     pub fn kv_bandwidth(&self, mem: &MemorySystem) -> f64 {
+        self.kv_bandwidth_with_burst(mem, burst_for(Stream::K))
+    }
+
+    /// K+V bandwidth with an explicit burst shape — the paged KV pool
+    /// passes [`crate::memory::paged_kv_burst`] here so small pages pay
+    /// their shorter-burst DDR tax.
+    pub fn kv_bandwidth_with_burst(&self, mem: &MemorySystem, burst: crate::memory::AxiBurst) -> f64 {
         let mapping = if self.kv_optimized_ports {
             PortMapping::decode_kv_optimized(mem.n_ports)
         } else {
             PortMapping::qkvo_baseline(mem.n_ports)
         };
-        let bw = mem.effective_bandwidth(&mapping, Stream::K, burst_for(Stream::K))
-            + mem.effective_bandwidth(&mapping, Stream::V, burst_for(Stream::V));
+        let bw = mem.effective_bandwidth(&mapping, Stream::K, burst)
+            + mem.effective_bandwidth(&mapping, Stream::V, burst);
         bw * calib::KV_CONTROLLER_EFF
     }
 
     /// One decode step's attention time at context length `l`:
     /// `max(compute roof, memory roof)` — the roofline in code.
     pub fn time(&self, shape: &ModelShape, l: usize, mem: &MemorySystem, clock_hz: f64) -> f64 {
+        self.time_with_burst(shape, l, mem, clock_hz, burst_for(Stream::K))
+    }
+
+    /// [`Self::time`] against a paged KV cache: identical bytes, but the
+    /// K/V streams burst at most one page-row at a time. With the default
+    /// 32-token page the burst saturates and this equals [`Self::time`].
+    pub fn time_paged(
+        &self,
+        shape: &ModelShape,
+        l: usize,
+        mem: &MemorySystem,
+        clock_hz: f64,
+        page_tokens: usize,
+    ) -> f64 {
+        let burst = crate::memory::paged_kv_burst(shape, page_tokens);
+        self.time_with_burst(shape, l, mem, clock_hz, burst)
+    }
+
+    fn time_with_burst(
+        &self,
+        shape: &ModelShape,
+        l: usize,
+        mem: &MemorySystem,
+        clock_hz: f64,
+        burst: crate::memory::AxiBurst,
+    ) -> f64 {
         let macs = 2.0 * (l * shape.d_model) as f64 * shape.n_layers as f64;
         let compute = macs / self.mac_rate(clock_hz);
-        let memory = shape.kv_bytes(l) / self.kv_bandwidth(mem);
+        let memory = shape.kv_bytes(l) / self.kv_bandwidth_with_burst(mem, burst);
         compute.max(memory)
     }
 
@@ -221,6 +254,20 @@ mod tests {
         let base = DecodeAttentionEngine { kv_optimized_ports: false, ..opt };
         let r = opt.kv_bandwidth(&m) / base.kv_bandwidth(&m);
         assert!((1.9..2.1).contains(&r), "ratio {r:.2}");
+    }
+
+    #[test]
+    fn paged_time_matches_monolithic_at_default_page() {
+        let e = DecodeAttentionEngine::PAPER;
+        let m = mem();
+        for l in [64, 512, 2048] {
+            let mono = e.time(&BITNET_0_73B, l, &m, clock());
+            let paged = e.time_paged(&BITNET_0_73B, l, &m, clock(), 32);
+            assert!((paged / mono - 1.0).abs() < 1e-12, "L={l}");
+            // Single-token pages are never faster.
+            let tiny = e.time_paged(&BITNET_0_73B, l, &m, clock(), 1);
+            assert!(tiny >= mono, "L={l}");
+        }
     }
 
     #[test]

@@ -73,8 +73,29 @@ impl PhaseModel {
     /// Eq. 5: `T_dec = D_proj / f(r_proj) + D_attn·L / g(r_attn) + T_w`.
     pub fn decode_step(&self, shape: &ModelShape, l: usize) -> DecodeLatency {
         let clock = self.device.clock_hz();
-        let projection = self.design.tlmm.projection_time(shape, 1, &self.mem);
         let attention = self.design.decode_attn.time(shape, l, &self.mem, clock);
+        self.decode_latency(shape, attention)
+    }
+
+    /// Eq. 5 against a paged KV cache ([`crate::kvpool`]): the attention
+    /// memory roof is evaluated at the page's burst length. Identical to
+    /// [`Self::decode_step`] for pages at or past the AXI burst knee.
+    pub fn decode_step_paged(
+        &self,
+        shape: &ModelShape,
+        l: usize,
+        page_tokens: usize,
+    ) -> DecodeLatency {
+        let clock = self.device.clock_hz();
+        let attention =
+            self.design.decode_attn.time_paged(shape, l, &self.mem, clock, page_tokens);
+        self.decode_latency(shape, attention)
+    }
+
+    /// Assemble Eq. 5 around a precomputed attention term.
+    fn decode_latency(&self, shape: &ModelShape, attention: f64) -> DecodeLatency {
+        let clock = self.device.clock_hz();
+        let projection = self.design.tlmm.projection_time(shape, 1, &self.mem);
         let norm = self.design.norm.time(shape, 1, clock);
         DecodeLatency {
             projection,
@@ -178,6 +199,19 @@ mod tests {
         // at L=128.
         let tail = pd().prefill_tail_after_last_attention(&BITNET_0_73B, 128);
         assert!((0.022..0.042).contains(&tail), "tail {:.1} ms", tail * 1e3);
+    }
+
+    #[test]
+    fn paged_decode_step_matches_monolithic_at_default_page() {
+        let pd = pd();
+        let s = BITNET_0_73B;
+        for l in [64, 512, 2048] {
+            let a = pd.decode_step(&s, l).total;
+            let b = pd.decode_step_paged(&s, l, 32).total;
+            assert!((b / a - 1.0).abs() < 1e-12, "L={l}");
+        }
+        // A degenerate 1-token page is slower at memory-bound contexts.
+        assert!(pd.decode_step_paged(&s, 2048, 1).total > pd.decode_step(&s, 2048).total);
     }
 
     #[test]

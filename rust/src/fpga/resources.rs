@@ -171,6 +171,9 @@ pub struct DeviceConfig {
     pub full_bitstream_bytes: f64,
     /// PCAP configuration throughput (bytes/s).
     pub pcap_bytes_per_sec: f64,
+    /// Total DDR capacity (bytes) shared by PS + PL — bounds the KV-cache
+    /// pool ([`crate::kvpool`]) after weights and the activation reserve.
+    pub ddr_bytes: f64,
     /// Number of PL<->DDR high-performance ports.
     pub n_hp_ports: usize,
     /// Peak DDR bandwidth of one HP port (bytes/s).
@@ -182,7 +185,7 @@ pub struct DeviceConfig {
 /// AMD Kria KV260 (Zynq UltraScale+ XCK26, the paper's platform).
 ///
 /// Fabric: 117,120 LUT6 / 234,240 FF / 144 BRAM36 / 64 URAM / 1,248 DSP48.
-/// DDR4-2400 x64 -> 19.2 GB/s controller peak; four 128-bit HP ports.
+/// 4 GB DDR4-2400 x64 -> 19.2 GB/s controller peak; four 128-bit HP ports.
 /// PCAP sustains ~400 MB/s, giving the paper's ~45 ms for the attention RP.
 pub const KV260: DeviceConfig = DeviceConfig {
     name: "KV260 (XCK26)",
@@ -196,6 +199,7 @@ pub const KV260: DeviceConfig = DeviceConfig {
     clock_mhz: 250.0,
     full_bitstream_bytes: 25.5e6,
     pcap_bytes_per_sec: 400.0e6,
+    ddr_bytes: 4.0 * 1024.0 * 1024.0 * 1024.0,
     n_hp_ports: 4,
     hp_port_peak: 4.8e9,
     ddr_aggregate_peak: 19.2e9,
@@ -263,6 +267,13 @@ mod tests {
         let equivalent = ResourceVec::new(124_780.0, 136_721.0, 98.5, 62.0, 953.0);
         let u = equivalent.utilization(&KV260.resources);
         assert!(u.lut > 1.0, "the DPR advantage: logic > chip capacity");
+    }
+
+    #[test]
+    fn kv260_ddr_capacity() {
+        // 4 GB on-board DDR; sanity for the KV-pool budget derivation.
+        assert_eq!(KV260.ddr_bytes, 4294967296.0);
+        assert!(KV260.ddr_bytes > KV260.full_bitstream_bytes);
     }
 
     #[test]

@@ -1,0 +1,44 @@
+//! Paged KV-cache pool — DDR capacity management for multi-request serving.
+//!
+//! The paper serves one request at a time, so its KV cache is a single
+//! monolithic `[n_layers, n_heads, max_seq, head_dim]` allocation and DDR
+//! capacity never binds. The moment the coordinator admits *concurrent*
+//! requests (§3.4's "multiple short-token requests in edge scenarios"),
+//! the KV260's 4 GB of DDR — shared with the packed ternary weights and
+//! the activation spill space — becomes a first-class resource. This
+//! module owns that budget:
+//!
+//! * [`pool::KvPoolConfig`] derives the KV byte budget from a
+//!   [`crate::fpga::DeviceConfig`] (DDR capacity minus weights minus an
+//!   activation/runtime reserve) and splits it into fixed-size *token
+//!   pages* (vLLM-style paged attention, sized so page-granular DDR
+//!   bursts stay long enough not to hurt AXI efficiency — see
+//!   [`crate::memory::traffic::paged_kv_burst`]).
+//! * [`pool::KvPool`] is the allocator: per-request page reservations,
+//!   growth during decode, release on completion, and LRU bookkeeping.
+//! * [`policy::AdmissionControl`] decides what "fits" means at admission
+//!   (pessimistic worst-case vs. optimistic prompt-only), and
+//!   [`policy::EvictionPolicy`] what happens when an optimistically
+//!   admitted request exhausts the pool mid-decode (evict-and-recompute
+//!   vs. keep-resident-and-cap).
+//! * [`pool::PoolStats`] exposes the occupancy high-water mark,
+//!   admission/eviction/completion conservation counters, and internal
+//!   fragmentation — surfaced through [`crate::metrics::ServerMetrics`].
+//!
+//! Invariants (enforced by [`pool::KvPool::check_invariants`] and the
+//! property tests in `rust/tests/prop_invariants.rs`):
+//!
+//! 1. **Pages conserved** — `free + reserved == total` at all times.
+//! 2. **Reservation bound** — no request's used pages exceed its
+//!    reservation, and no request's tokens exceed its token capacity.
+//! 3. **Request conservation** — `admitted − evicted − completed ==
+//!    resident`.
+//!
+//! This is an extension beyond the paper (which never multi-tenants the
+//! KV DDR); EXPERIMENTS.md/CHANGES.md label it as such.
+
+pub mod policy;
+pub mod pool;
+
+pub use policy::{AdmissionControl, AdmissionDecision, EvictionPolicy};
+pub use pool::{KvPool, KvPoolConfig, PoolError, PoolStats, PAGE_TOKENS_DEFAULT};

@@ -1,0 +1,116 @@
+//! Admission and eviction policy for the paged KV pool.
+//!
+//! Policies are *declarative* here; the mechanics (page accounting, LRU
+//! ordering, release) live in [`super::pool`], and the serving loop in
+//! [`crate::coordinator::sim_server`] executes the decisions.
+
+/// How the pool judges whether a new request fits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionControl {
+    /// Reserve the worst case up front: `ceil(min(prompt + max_new,
+    /// max_seq) / page_tokens)` pages. Admitted requests can never run
+    /// out of pages mid-decode; the cost is lower occupancy (pages held
+    /// for tokens that may never be generated).
+    WorstCase,
+    /// Reserve only the prompt's pages at admission and grow one page at
+    /// a time during decode. Higher occupancy, but the pool can exhaust
+    /// mid-decode — then [`EvictionPolicy`] decides who pays.
+    Optimistic,
+}
+
+/// What happens when an optimistically admitted request needs a page the
+/// pool no longer has.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict the least-recently-touched co-resident request: its pages
+    /// are freed immediately and the victim is requeued to re-prefill
+    /// from scratch later (its recomputation time is charged to
+    /// `ServerMetrics::recompute_overhead`). This trades compute for
+    /// capacity — the right call on edge parts where DDR capacity, not
+    /// prefill compute, is the scarce resource at long context.
+    EvictAndRecompute,
+    /// Never evict: the request that cannot grow simply stops generating
+    /// (capacity-capped), and every resident keeps its pages until it
+    /// completes. Predictable, starvation-free, but long-context
+    /// requests get truncated generations under pressure.
+    KeepResident,
+}
+
+/// The pool's verdict on an admission query (see
+/// [`super::KvPool::admission_plan`]). The pool never mutates state while
+/// planning — the caller executes the decision (reserve, evict, defer).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionDecision {
+    /// The reservation fits free pages as-is.
+    Fits {
+        /// Pages to reserve at admission.
+        reserved_pages: usize,
+        /// Tokens this reservation may grow to.
+        token_capacity: usize,
+    },
+    /// The request alone exceeds the whole pool (or the free pool with no
+    /// co-residents to evict): admit it with a clamped reservation and a
+    /// correspondingly capped token budget rather than deadlocking.
+    Capped {
+        reserved_pages: usize,
+        token_capacity: usize,
+    },
+    /// Doesn't fit now, but evicting these residents (LRU-first) would
+    /// free enough pages. Only produced under
+    /// [`EvictionPolicy::EvictAndRecompute`].
+    EvictThenFit {
+        victims: Vec<u64>,
+        reserved_pages: usize,
+        token_capacity: usize,
+    },
+    /// Doesn't fit while the current residents hold the pool; retry once
+    /// some of them complete. Never produced on an empty pool.
+    Defer,
+}
+
+impl AdmissionDecision {
+    /// Pages the decision would reserve if executed (0 for `Defer`).
+    pub fn reserved_pages(&self) -> usize {
+        match self {
+            AdmissionDecision::Fits { reserved_pages, .. }
+            | AdmissionDecision::Capped { reserved_pages, .. }
+            | AdmissionDecision::EvictThenFit { reserved_pages, .. } => *reserved_pages,
+            AdmissionDecision::Defer => 0,
+        }
+    }
+
+    /// True if the request can be admitted right now without touching any
+    /// co-resident (i.e. `Fits` or `Capped`).
+    pub fn admits_immediately(&self) -> bool {
+        matches!(
+            self,
+            AdmissionDecision::Fits { .. } | AdmissionDecision::Capped { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_accessors() {
+        let f = AdmissionDecision::Fits { reserved_pages: 4, token_capacity: 128 };
+        assert_eq!(f.reserved_pages(), 4);
+        assert!(f.admits_immediately());
+
+        let c = AdmissionDecision::Capped { reserved_pages: 8, token_capacity: 256 };
+        assert!(c.admits_immediately());
+
+        let e = AdmissionDecision::EvictThenFit {
+            victims: vec![1, 2],
+            reserved_pages: 6,
+            token_capacity: 192,
+        };
+        assert_eq!(e.reserved_pages(), 6);
+        assert!(!e.admits_immediately());
+
+        assert_eq!(AdmissionDecision::Defer.reserved_pages(), 0);
+        assert!(!AdmissionDecision::Defer.admits_immediately());
+    }
+}

@@ -1,0 +1,573 @@
+//! The page allocator: reservations, growth, eviction, conservation.
+
+use std::collections::BTreeMap;
+
+use crate::fpga::DeviceConfig;
+use crate::model::ModelShape;
+
+use super::policy::{AdmissionControl, AdmissionDecision, EvictionPolicy};
+
+/// Default tokens per KV page. 32 tokens × head_dim 64 × fp16 = 4 KiB of
+/// contiguous K (and V) per head per page — comfortably past the 64-beat
+/// AXI burst knee, so paging costs no DDR efficiency at this size (see
+/// [`crate::memory::traffic::paged_kv_burst`]).
+pub const PAGE_TOKENS_DEFAULT: usize = 32;
+
+/// DDR bytes held back from the KV budget for activation spill, DMA
+/// descriptors, and the PS-side runtime (the PS and PL share the same
+/// DDR on the KV260).
+pub const ACTIVATION_RESERVE_BYTES: f64 = 256e6;
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Pool sizing + policy configuration.
+#[derive(Debug, Clone)]
+pub struct KvPoolConfig {
+    /// Tokens per page (all layers of one token share a page slot:
+    /// a page holds `page_tokens` tokens' worth of K+V across the model).
+    pub page_tokens: usize,
+    /// KV bytes per token of context (all layers, K+V) — from
+    /// [`ModelShape::kv_bytes_per_token`].
+    pub bytes_per_token: f64,
+    /// Total pages in the pool (the modeled DDR KV budget).
+    pub total_pages: usize,
+    /// A single request's KV can never exceed this many tokens (the
+    /// compiled graph's `max_seq`); worst-case reservations clamp here.
+    pub max_tokens_per_request: usize,
+    pub admission: AdmissionControl,
+    pub eviction: EvictionPolicy,
+}
+
+impl KvPoolConfig {
+    /// Derive the pool from the device's DDR capacity and the model:
+    /// `budget = ddr − packed ternary weights − activation reserve`.
+    pub fn for_device(shape: &ModelShape, device: &DeviceConfig) -> Self {
+        let budget =
+            (device.ddr_bytes - shape.ternary_weight_bytes() - ACTIVATION_RESERVE_BYTES).max(0.0);
+        let bytes_per_token = shape.kv_bytes_per_token();
+        let page_bytes = bytes_per_token * PAGE_TOKENS_DEFAULT as f64;
+        let total_pages = ((budget / page_bytes).floor() as usize).max(1);
+        Self {
+            page_tokens: PAGE_TOKENS_DEFAULT,
+            bytes_per_token,
+            total_pages,
+            max_tokens_per_request: shape.max_seq,
+            admission: AdmissionControl::WorstCase,
+            eviction: EvictionPolicy::KeepResident,
+        }
+    }
+
+    /// Override the pool size (tests / what-if studies).
+    pub fn with_total_pages(mut self, total_pages: usize) -> Self {
+        self.total_pages = total_pages.max(1);
+        self
+    }
+
+    pub fn with_policies(mut self, admission: AdmissionControl, eviction: EvictionPolicy) -> Self {
+        self.admission = admission;
+        self.eviction = eviction;
+        self
+    }
+
+    /// Bytes of one page.
+    pub fn page_bytes(&self) -> f64 {
+        self.bytes_per_token * self.page_tokens as f64
+    }
+
+    /// The modeled KV byte budget.
+    pub fn budget_bytes(&self) -> f64 {
+        self.page_bytes() * self.total_pages as f64
+    }
+
+    /// Pages needed to hold `tokens` tokens of context.
+    pub fn pages_for_tokens(&self, tokens: usize) -> usize {
+        ceil_div(tokens, self.page_tokens.max(1))
+    }
+
+    /// Worst-case pages for a request: prompt plus full generation,
+    /// clamped to the per-request sequence ceiling.
+    pub fn worst_case_pages(&self, prompt_len: usize, max_new_tokens: usize) -> usize {
+        let tokens = (prompt_len + max_new_tokens).min(self.max_tokens_per_request);
+        self.pages_for_tokens(tokens.max(1))
+    }
+}
+
+/// One resident request's slice of the pool.
+#[derive(Debug, Clone)]
+struct Reservation {
+    /// Pages committed to this request (free pool excludes them).
+    reserved: usize,
+    /// Pages actually backing written tokens (`ceil(tokens/page)`).
+    used: usize,
+    /// Tokens currently in the cache.
+    tokens: usize,
+    /// Tokens this reservation may grow to (admission-capped).
+    token_cap: usize,
+    /// Last simulation time this request's cache was read or written
+    /// (LRU key for victim selection).
+    last_touch: f64,
+}
+
+/// Conservation counters + occupancy telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub admitted: u64,
+    pub evicted: u64,
+    pub completed: u64,
+    /// Admissions that had to clamp their reservation (request alone
+    /// bigger than the free pool with nobody to evict).
+    pub capped_admissions: u64,
+    /// Decode-time page grabs denied because the pool was exhausted.
+    pub grow_denied: u64,
+    /// Peak committed pages over the pool's lifetime.
+    pub high_water_pages: usize,
+}
+
+/// Allocation failures.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum PoolError {
+    #[error("request {0} is already resident in the KV pool")]
+    AlreadyResident(u64),
+    #[error("request {0} is not resident in the KV pool")]
+    NotResident(u64),
+    #[error("reservation of {requested} pages exceeds {free} free (of {total})")]
+    OutOfPages { requested: usize, free: usize, total: usize },
+    #[error("request {id} would exceed its token capacity ({cap} tokens)")]
+    TokenCapExceeded { id: u64, cap: usize },
+    #[error("KV pool exhausted growing request {id} to {tokens} tokens")]
+    Exhausted { id: u64, tokens: usize },
+}
+
+/// The paged KV-cache pool.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    cfg: KvPoolConfig,
+    residents: BTreeMap<u64, Reservation>,
+    reserved_total: usize,
+    pub stats: PoolStats,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvPoolConfig) -> Self {
+        Self { cfg, residents: BTreeMap::new(), reserved_total: 0, stats: PoolStats::default() }
+    }
+
+    pub fn config(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.cfg.total_pages
+    }
+
+    /// Pages not committed to any reservation.
+    pub fn free_pages(&self) -> usize {
+        self.cfg.total_pages - self.reserved_total
+    }
+
+    /// Pages committed across all residents.
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved_total
+    }
+
+    /// Pages actually backing written tokens.
+    pub fn used_pages(&self) -> usize {
+        self.residents.values().map(|r| r.used).sum()
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.residents.len()
+    }
+
+    pub fn is_resident(&self, id: u64) -> bool {
+        self.residents.contains_key(&id)
+    }
+
+    /// Committed fraction of the pool.
+    pub fn occupancy(&self) -> f64 {
+        self.reserved_total as f64 / self.cfg.total_pages.max(1) as f64
+    }
+
+    /// Internal fragmentation: fraction of *committed* page capacity not
+    /// backing real tokens (worst-case reservations + last-page slack).
+    pub fn fragmentation(&self) -> f64 {
+        if self.reserved_total == 0 {
+            return 0.0;
+        }
+        let capacity_tokens = self.reserved_total * self.cfg.page_tokens;
+        let live_tokens: usize = self.residents.values().map(|r| r.tokens).sum();
+        1.0 - live_tokens as f64 / capacity_tokens.max(1) as f64
+    }
+
+    /// Tokens a resident may still grow to (admission cap).
+    pub fn token_cap(&self, id: u64) -> Option<usize> {
+        self.residents.get(&id).map(|r| r.token_cap)
+    }
+
+    /// Plan an admission without mutating the pool. The caller executes
+    /// the decision ([`Self::admit`], plus [`Self::evict`] for
+    /// `EvictThenFit` victims).
+    pub fn admission_plan(&self, prompt_len: usize, max_new_tokens: usize) -> AdmissionDecision {
+        let worst = self.cfg.worst_case_pages(prompt_len, max_new_tokens);
+        let token_capacity = (prompt_len + max_new_tokens).min(self.cfg.max_tokens_per_request);
+        let need = match self.cfg.admission {
+            AdmissionControl::WorstCase => worst,
+            AdmissionControl::Optimistic => {
+                self.cfg.pages_for_tokens(prompt_len.min(self.cfg.max_tokens_per_request).max(1))
+            }
+        };
+        let free = self.free_pages();
+        if need <= free {
+            return AdmissionDecision::Fits { reserved_pages: need, token_capacity };
+        }
+        if self.cfg.eviction == EvictionPolicy::EvictAndRecompute {
+            if let Some(victims) = self.eviction_plan(need - free) {
+                return AdmissionDecision::EvictThenFit {
+                    victims,
+                    reserved_pages: need,
+                    token_capacity,
+                };
+            }
+        }
+        if self.residents.is_empty() {
+            // Whole pool free and still not enough: clamp rather than
+            // deadlock. The token capacity shrinks with the reservation.
+            let reserved_pages = self.cfg.total_pages.min(need);
+            let token_capacity = (reserved_pages * self.cfg.page_tokens).min(token_capacity);
+            return AdmissionDecision::Capped { reserved_pages, token_capacity };
+        }
+        AdmissionDecision::Defer
+    }
+
+    /// LRU-first set of residents whose eviction frees at least
+    /// `deficit` pages, or `None` if even evicting everyone falls short.
+    pub fn eviction_plan(&self, deficit: usize) -> Option<Vec<u64>> {
+        let mut by_lru: Vec<(&u64, &Reservation)> = self.residents.iter().collect();
+        by_lru.sort_by(|a, b| a.1.last_touch.partial_cmp(&b.1.last_touch).unwrap());
+        let mut victims = Vec::new();
+        let mut freed = 0usize;
+        for (&id, r) in by_lru {
+            if freed >= deficit {
+                break;
+            }
+            victims.push(id);
+            freed += r.reserved;
+        }
+        (freed >= deficit).then_some(victims)
+    }
+
+    /// The least-recently-touched resident among those `eligible` allows.
+    pub fn lru_victim<F: Fn(u64) -> bool>(&self, eligible: F) -> Option<u64> {
+        self.residents
+            .iter()
+            .filter(|(&id, _)| eligible(id))
+            .min_by(|a, b| a.1.last_touch.partial_cmp(&b.1.last_touch).unwrap())
+            .map(|(&id, _)| id)
+    }
+
+    /// Commit a reservation. `tokens_now` is the context already written
+    /// (the prompt after prefill; 0 when reserving ahead of prefill).
+    pub fn admit(
+        &mut self,
+        id: u64,
+        tokens_now: usize,
+        reserved_pages: usize,
+        token_cap: usize,
+        now: f64,
+    ) -> Result<(), PoolError> {
+        if self.residents.contains_key(&id) {
+            return Err(PoolError::AlreadyResident(id));
+        }
+        let free = self.free_pages();
+        if reserved_pages > free {
+            return Err(PoolError::OutOfPages {
+                requested: reserved_pages,
+                free,
+                total: self.cfg.total_pages,
+            });
+        }
+        // KV beyond the reservation's capacity is not retained (the
+        // Capped-admission case: a prompt larger than the whole pool).
+        let tokens = tokens_now.min(token_cap).min(reserved_pages * self.cfg.page_tokens);
+        let used = self.cfg.pages_for_tokens(tokens).min(reserved_pages);
+        self.residents.insert(
+            id,
+            Reservation { reserved: reserved_pages, used, tokens, token_cap, last_touch: now },
+        );
+        self.reserved_total += reserved_pages;
+        self.stats.admitted += 1;
+        self.stats.high_water_pages = self.stats.high_water_pages.max(self.reserved_total);
+        Ok(())
+    }
+
+    /// Execute an [`AdmissionDecision`] for `id`: `Fits`/`Capped` reserve
+    /// (`Capped` also bumps `stats.capped_admissions`), `EvictThenFit`
+    /// evicts its victims then reserves, `Defer` is a no-op. Returns
+    /// whether the request is now resident.
+    pub fn execute_admission(
+        &mut self,
+        id: u64,
+        tokens_now: usize,
+        decision: AdmissionDecision,
+        now: f64,
+    ) -> Result<bool, PoolError> {
+        match decision {
+            AdmissionDecision::Fits { reserved_pages, token_capacity } => {
+                self.admit(id, tokens_now, reserved_pages, token_capacity, now)?;
+                Ok(true)
+            }
+            AdmissionDecision::Capped { reserved_pages, token_capacity } => {
+                self.admit(id, tokens_now, reserved_pages, token_capacity, now)?;
+                self.stats.capped_admissions += 1;
+                Ok(true)
+            }
+            AdmissionDecision::EvictThenFit { victims, reserved_pages, token_capacity } => {
+                for v in victims {
+                    self.evict(v)?;
+                }
+                self.admit(id, tokens_now, reserved_pages, token_capacity, now)?;
+                Ok(true)
+            }
+            AdmissionDecision::Defer => Ok(false),
+        }
+    }
+
+    /// Record that `id`'s cache now holds `tokens` tokens, growing the
+    /// reservation page-by-page if the admission mode allows. Errors with
+    /// [`PoolError::Exhausted`] when a needed page does not exist — the
+    /// caller then evicts (per policy) or caps the request.
+    pub fn ensure_tokens(&mut self, id: u64, tokens: usize, now: f64) -> Result<(), PoolError> {
+        let page_tokens = self.cfg.page_tokens;
+        let r = self.residents.get_mut(&id).ok_or(PoolError::NotResident(id))?;
+        if tokens > r.token_cap {
+            return Err(PoolError::TokenCapExceeded { id, cap: r.token_cap });
+        }
+        let need_pages = ceil_div(tokens.max(1), page_tokens.max(1));
+        if need_pages > r.reserved {
+            let extra = need_pages - r.reserved;
+            if self.cfg.total_pages - self.reserved_total < extra {
+                self.stats.grow_denied += 1;
+                return Err(PoolError::Exhausted { id, tokens });
+            }
+            r.reserved += extra;
+            self.reserved_total += extra;
+            self.stats.high_water_pages = self.stats.high_water_pages.max(self.reserved_total);
+        }
+        r.tokens = tokens.max(r.tokens);
+        r.used = need_pages.max(r.used);
+        r.last_touch = now;
+        Ok(())
+    }
+
+    /// Mark `id`'s cache as accessed (decode reads it every step).
+    pub fn touch(&mut self, id: u64, now: f64) {
+        if let Some(r) = self.residents.get_mut(&id) {
+            r.last_touch = r.last_touch.max(now);
+        }
+    }
+
+    fn release(&mut self, id: u64) -> Result<usize, PoolError> {
+        let r = self.residents.remove(&id).ok_or(PoolError::NotResident(id))?;
+        self.reserved_total -= r.reserved;
+        Ok(r.reserved)
+    }
+
+    /// Release a completed request's pages.
+    pub fn complete(&mut self, id: u64) -> Result<usize, PoolError> {
+        let freed = self.release(id)?;
+        self.stats.completed += 1;
+        Ok(freed)
+    }
+
+    /// Evict a resident (pages freed immediately; its KV must be
+    /// recomputed if the request runs again).
+    pub fn evict(&mut self, id: u64) -> Result<usize, PoolError> {
+        let freed = self.release(id)?;
+        self.stats.evicted += 1;
+        Ok(freed)
+    }
+
+    /// Verify the pool's conservation invariants (property-test hook).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let sum_reserved: usize = self.residents.values().map(|r| r.reserved).sum();
+        if sum_reserved != self.reserved_total {
+            return Err(format!(
+                "reserved_total {} != sum of reservations {}",
+                self.reserved_total, sum_reserved
+            ));
+        }
+        if self.reserved_total > self.cfg.total_pages {
+            return Err(format!(
+                "over-committed: {} reserved of {} total",
+                self.reserved_total, self.cfg.total_pages
+            ));
+        }
+        for (id, r) in &self.residents {
+            if r.used > r.reserved {
+                return Err(format!("request {id}: used {} > reserved {}", r.used, r.reserved));
+            }
+            if r.tokens > r.token_cap {
+                return Err(format!("request {id}: tokens {} > cap {}", r.tokens, r.token_cap));
+            }
+            if self.cfg.pages_for_tokens(r.tokens.max(1)) > r.used.max(1) {
+                return Err(format!(
+                    "request {id}: {} tokens not covered by {} used pages",
+                    r.tokens, r.used
+                ));
+            }
+        }
+        let resident = self.residents.len() as u64;
+        if self.stats.admitted < self.stats.evicted + self.stats.completed {
+            return Err("more departures than admissions".into());
+        }
+        if self.stats.admitted - self.stats.evicted - self.stats.completed != resident {
+            return Err(format!(
+                "conservation broken: admitted {} - evicted {} - completed {} != resident {}",
+                self.stats.admitted, self.stats.evicted, self.stats.completed, resident
+            ));
+        }
+        if self.stats.high_water_pages > self.cfg.total_pages {
+            return Err("high-water above pool size".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn cfg(pages: usize) -> KvPoolConfig {
+        KvPoolConfig::for_device(&BITNET_0_73B, &KV260).with_total_pages(pages)
+    }
+
+    #[test]
+    fn kv260_budget_is_sane() {
+        let c = KvPoolConfig::for_device(&BITNET_0_73B, &KV260);
+        // 4 GB DDR − ~170 MB weights − 256 MB reserve ≈ 3.8 GB of KV →
+        // room for roughly a dozen full 2048-token contexts.
+        let full_contexts = c.budget_bytes() / BITNET_0_73B.kv_bytes(2048);
+        assert!((8.0..20.0).contains(&full_contexts), "contexts {full_contexts:.1}");
+        assert_eq!(c.page_tokens, PAGE_TOKENS_DEFAULT);
+        // Worst case clamps at max_seq.
+        assert_eq!(
+            c.worst_case_pages(2040, 100),
+            c.pages_for_tokens(BITNET_0_73B.max_seq)
+        );
+    }
+
+    #[test]
+    fn admit_grow_complete_balances() {
+        let mut p = KvPool::new(cfg(10));
+        p.admit(1, 32, 2, 96, 0.0).unwrap();
+        assert_eq!(p.free_pages(), 8);
+        assert_eq!(p.used_pages(), 1);
+        p.ensure_tokens(1, 64, 1.0).unwrap(); // fills page 2
+        p.ensure_tokens(1, 65, 2.0).unwrap(); // grows to page 3
+        assert_eq!(p.reserved_pages(), 3);
+        p.check_invariants().unwrap();
+        assert_eq!(p.complete(1).unwrap(), 3);
+        assert_eq!(p.free_pages(), 10);
+        assert_eq!(p.resident_count(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn token_cap_is_enforced() {
+        let mut p = KvPool::new(cfg(10));
+        p.admit(1, 10, 1, 40, 0.0).unwrap();
+        assert!(matches!(
+            p.ensure_tokens(1, 41, 1.0),
+            Err(PoolError::TokenCapExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn exhaustion_is_reported_not_granted() {
+        let mut p = KvPool::new(cfg(3));
+        p.admit(1, 32, 1, 1024, 0.0).unwrap();
+        p.admit(2, 64, 2, 1024, 0.0).unwrap();
+        let err = p.ensure_tokens(1, 33, 1.0).unwrap_err();
+        assert!(matches!(err, PoolError::Exhausted { .. }));
+        assert_eq!(p.stats.grow_denied, 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn worst_case_admission_never_exhausts() {
+        let c = cfg(100).with_policies(AdmissionControl::WorstCase, EvictionPolicy::KeepResident);
+        let mut p = KvPool::new(c);
+        let plan = p.admission_plan(64, 64);
+        let AdmissionDecision::Fits { reserved_pages, token_capacity } = plan else {
+            panic!("expected Fits, got {plan:?}");
+        };
+        p.admit(1, 64, reserved_pages, token_capacity, 0.0).unwrap();
+        for t in 65..=token_capacity {
+            p.ensure_tokens(1, t, t as f64).unwrap();
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_request_is_capped_on_empty_pool() {
+        let p = KvPool::new(cfg(4));
+        match p.admission_plan(1024, 512) {
+            AdmissionDecision::Capped { reserved_pages, token_capacity } => {
+                assert_eq!(reserved_pages, 4);
+                assert_eq!(token_capacity, 4 * PAGE_TOKENS_DEFAULT);
+            }
+            other => panic!("expected Capped, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn optimistic_defers_when_residents_hold_pool() {
+        let c = cfg(4).with_policies(AdmissionControl::Optimistic, EvictionPolicy::KeepResident);
+        let mut p = KvPool::new(c);
+        p.admit(1, 96, 3, 256, 0.0).unwrap();
+        assert_eq!(p.admission_plan(64, 64), AdmissionDecision::Defer);
+    }
+
+    #[test]
+    fn eviction_plan_prefers_lru() {
+        let c = cfg(6).with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut p = KvPool::new(c);
+        p.admit(1, 64, 2, 256, 0.0).unwrap();
+        p.admit(2, 64, 2, 256, 1.0).unwrap();
+        p.touch(1, 5.0); // request 2 is now LRU
+        match p.admission_plan(96, 32) {
+            AdmissionDecision::EvictThenFit { victims, .. } => assert_eq!(victims, vec![2]),
+            other => panic!("expected EvictThenFit, got {other:?}"),
+        }
+        assert_eq!(p.lru_victim(|_| true), Some(2));
+        assert_eq!(p.lru_victim(|id| id != 2), Some(1));
+        p.evict(2).unwrap();
+        assert_eq!(p.stats.evicted, 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fragmentation_and_occupancy() {
+        let mut p = KvPool::new(cfg(10));
+        assert_eq!(p.fragmentation(), 0.0);
+        // Reserve 4 pages (128-token capacity) holding only 40 tokens.
+        p.admit(1, 40, 4, 128, 0.0).unwrap();
+        assert!((p.occupancy() - 0.4).abs() < 1e-12);
+        let frag = p.fragmentation();
+        assert!((frag - (1.0 - 40.0 / 128.0)).abs() < 1e-12, "frag {frag}");
+    }
+
+    #[test]
+    fn double_admit_and_unknown_release_rejected() {
+        let mut p = KvPool::new(cfg(10));
+        p.admit(1, 10, 1, 64, 0.0).unwrap();
+        assert!(matches!(p.admit(1, 10, 1, 64, 0.0), Err(PoolError::AlreadyResident(1))));
+        assert!(matches!(p.complete(9), Err(PoolError::NotResident(9))));
+        assert!(matches!(p.evict(9), Err(PoolError::NotResident(9))));
+    }
+}

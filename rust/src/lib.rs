@@ -14,13 +14,19 @@
 //! * **L3** this crate — loads the HLO artifacts via PJRT ([`runtime`]),
 //!   simulates the KV260 FPGA substrate the paper deploys on ([`fpga`],
 //!   [`memory`], [`engines`]), performs the paper's roofline-guided design
-//!   space exploration ([`roofline`], [`dse`]), and orchestrates
+//!   space exploration ([`roofline`], [`dse`]), manages the DDR KV-cache
+//!   budget as a page-granular pool with admission control and eviction
+//!   ([`kvpool`] — our multi-request extension), and orchestrates
 //!   prefill→decode logic swapping with latency-overlapped dynamic partial
 //!   reconfiguration ([`reconfig`], [`coordinator`]).
 //!
 //! The FPGA itself is simulated (DESIGN.md §2 documents every
 //! substitution); the *functional* compute path is real — tokens are
 //! produced by executing the AOT artifacts on the PJRT CPU client.
+//! The PJRT path is gated behind the `pjrt` cargo feature (default off)
+//! so the simulator, DSE, and eval layers build and test without an XLA
+//! installation; see `third_party/xla-stub/` for how the binding is
+//! satisfied when the feature is enabled without the real library.
 //!
 //! ## Quick start
 //!
@@ -36,6 +42,7 @@ pub mod dse;
 pub mod engines;
 pub mod eval;
 pub mod fpga;
+pub mod kvpool;
 pub mod memory;
 pub mod metrics;
 pub mod model;

@@ -7,19 +7,21 @@
 //! pd-swap generate --artifacts DIR --prompt 1,2,3 [--n N] [--temperature F]
 //! pd-swap serve --artifacts DIR [--requests N] [--seed S]
 //! pd-swap simulate [--requests N] [--policy batched] [--no-overlap]
+//!                  [--pool-pages N] [--optimistic] [--evict]
 //! ```
 
 use anyhow::{bail, Result};
 
-use pd_swap::coordinator::{
-    generate_workload, LiveServer, LiveServerConfig, Policy, SimServer, SimServerConfig,
-    WorkloadConfig,
-};
+use pd_swap::coordinator::{generate_workload, Policy, SimServer, SimServerConfig, WorkloadConfig};
+#[cfg(feature = "pjrt")]
+use pd_swap::coordinator::{LiveServer, LiveServerConfig};
 use pd_swap::dse::{explore, DseConfig};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting};
 use pd_swap::eval;
 use pd_swap::fpga::KV260;
+use pd_swap::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
 use pd_swap::model::BITNET_0_73B;
+#[cfg(feature = "pjrt")]
 use pd_swap::runtime::{SamplerConfig, SamplingMode};
 use pd_swap::util::cli::Args;
 
@@ -48,7 +50,8 @@ USAGE:
   pd-swap dse [--static] [--l-long N] [--l-short N] [--alpha F]
   pd-swap generate --artifacts DIR --prompt 1,2,3 [--n 16] [--temperature F] [--top-k K]
   pd-swap serve --artifacts DIR [--requests 8] [--gen 32] [--seed 0]
-  pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]";
+  pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]
+                   [--pool-pages N] [--optimistic] [--evict]";
 
 fn info() -> Result<()> {
     let design = AcceleratorDesign::pd_swap();
@@ -154,6 +157,7 @@ fn run_dse(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn sampler_from(args: &Args) -> SamplerConfig {
     let temp = args.get_f64("temperature", 0.0) as f32;
     let top_k = args.get_usize("top-k", 0);
@@ -167,6 +171,17 @@ fn sampler_from(args: &Args) -> SamplerConfig {
     SamplerConfig { mode }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn generate(_args: &Args) -> Result<()> {
+    bail!("`generate` needs the PJRT runtime: rebuild with `--features pjrt` (requires XLA)")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve(_args: &Args) -> Result<()> {
+    bail!("`serve` needs the PJRT runtime: rebuild with `--features pjrt` (requires XLA)")
+}
+
+#[cfg(feature = "pjrt")]
 fn generate(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts/test");
     let prompt: Vec<i32> = args
@@ -199,6 +214,7 @@ fn generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn serve(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts/tiny");
     let mut server = LiveServer::new(LiveServerConfig {
@@ -253,6 +269,22 @@ fn simulate(args: &Args) -> Result<()> {
     if args.flag("no-overlap") {
         cfg.overlap = false;
     }
+    // KV-pool knobs: size override + admission/eviction policy selection.
+    let pool: KvPoolConfig = cfg.pool.clone();
+    let pool_pages = args.get_usize("pool-pages", pool.total_pages);
+    let pool = pool.with_total_pages(pool_pages);
+    let admission = if args.flag("optimistic") {
+        AdmissionControl::Optimistic
+    } else {
+        AdmissionControl::WorstCase
+    };
+    let eviction = if args.flag("evict") {
+        EvictionPolicy::EvictAndRecompute
+    } else {
+        EvictionPolicy::KeepResident
+    };
+    cfg.pool = pool.with_policies(admission, eviction);
+
     let wl = generate_workload(&WorkloadConfig {
         n_requests: args.get_usize("requests", 16),
         seed: args.get_u64("seed", 0),
@@ -264,6 +296,17 @@ fn simulate(args: &Args) -> Result<()> {
         "simulated KV260 serving metrics ({}):\n{}",
         if args.flag("static") { "TeLLMe static" } else { "PD-Swap" },
         server.metrics.report()
+    );
+    let pool = server.pool();
+    println!(
+        "kv pool: {} pages total ({:.2} GB budget), high-water {} ({:.0}%), admitted {}, evicted {}, completed {}",
+        pool.total_pages(),
+        pool.config().budget_bytes() / 1e9,
+        pool.stats.high_water_pages,
+        100.0 * pool.stats.high_water_pages as f64 / pool.total_pages().max(1) as f64,
+        pool.stats.admitted,
+        pool.stats.evicted,
+        pool.stats.completed,
     );
     Ok(())
 }

@@ -18,4 +18,4 @@ pub mod ports;
 pub mod traffic;
 
 pub use ports::{AxiBurst, HpPort, MemorySystem, PortAssignment, PortMapping, Stream};
-pub use traffic::{PhaseTraffic, TrafficModel};
+pub use traffic::{paged_kv_burst, PhaseTraffic, TrafficModel};

@@ -15,6 +15,21 @@ pub fn burst_for(s: Stream) -> AxiBurst {
     }
 }
 
+/// Burst shape of a *paged* KV stream ([`crate::kvpool`]): each page is a
+/// contiguous run of `page_tokens · head_dim · precision` bytes per head,
+/// but consecutive pages land at arbitrary DDR addresses, so the AXI
+/// burst cannot exceed one page-row. Pages of ≥ 8 tokens (head_dim 64,
+/// fp16) already reach the 64-beat knee the monolithic model assumes —
+/// paging only costs efficiency when pages are made very small.
+pub fn paged_kv_burst(shape: &ModelShape, page_tokens: usize) -> AxiBurst {
+    // 128-bit HP port: 16 bytes per beat.
+    let beat_bytes = 16.0;
+    let run_bytes =
+        page_tokens.max(1) as f64 * shape.head_dim() as f64 * shape.kv_precision.bytes();
+    let beats = (run_bytes / beat_bytes).floor().clamp(1.0, 64.0) as usize;
+    AxiBurst { beats }
+}
+
 /// DDR demand of one phase, broken down by stream.
 #[derive(Debug, Clone)]
 pub struct PhaseTraffic {
@@ -25,12 +40,23 @@ impl PhaseTraffic {
     /// Decode-step attention traffic: the full KV cache split across the
     /// K and V streams, one token of Q in, one token of O out.
     pub fn decode_attention(shape: &ModelShape, l: usize) -> Self {
+        Self::decode_attention_with_burst(shape, l, burst_for(Stream::K))
+    }
+
+    /// Decode-step attention traffic against a *paged* KV cache: same
+    /// bytes as [`Self::decode_attention`], but each K/V read bursts at
+    /// most one page-row before re-addressing.
+    pub fn decode_attention_paged(shape: &ModelShape, l: usize, page_tokens: usize) -> Self {
+        Self::decode_attention_with_burst(shape, l, paged_kv_burst(shape, page_tokens))
+    }
+
+    fn decode_attention_with_burst(shape: &ModelShape, l: usize, kv_burst: AxiBurst) -> Self {
         let kv_total = shape.kv_bytes(l);
         let tok = shape.d_model as f64 * shape.kv_precision.bytes();
         Self {
             demands: vec![
-                PortAssignment { stream: Stream::K, bytes: kv_total / 2.0, burst: burst_for(Stream::K) },
-                PortAssignment { stream: Stream::V, bytes: kv_total / 2.0, burst: burst_for(Stream::V) },
+                PortAssignment { stream: Stream::K, bytes: kv_total / 2.0, burst: kv_burst },
+                PortAssignment { stream: Stream::V, bytes: kv_total / 2.0, burst: kv_burst },
                 PortAssignment { stream: Stream::Q, bytes: tok, burst: burst_for(Stream::Q) },
                 PortAssignment { stream: Stream::O, bytes: tok, burst: burst_for(Stream::O) },
             ],
@@ -162,6 +188,37 @@ mod tests {
         let kv = PhaseTraffic::decode_attention(&BITNET_0_73B, 64)
             .time_under(&t.mem, &t.optimized);
         assert!(w > 3.0 * kv, "weights {:.3} ms kv {:.3} ms", w * 1e3, kv * 1e3);
+    }
+
+    #[test]
+    fn paged_burst_saturates_at_monolithic() {
+        // ≥ 8-token pages (head_dim 64, fp16) reach the 64-beat cap: the
+        // default 32-token page pays no DDR efficiency for paging.
+        let full = burst_for(Stream::K).efficiency();
+        for pt in [8, 16, 32, 128] {
+            let b = paged_kv_burst(&BITNET_0_73B, pt);
+            assert_eq!(b.beats, 64, "page_tokens={pt}");
+            assert_eq!(b.efficiency(), full);
+        }
+        // Tiny pages burst shorter and pay for it.
+        let tiny = paged_kv_burst(&BITNET_0_73B, 1);
+        assert!(tiny.beats < 64);
+        assert!(tiny.efficiency() < full);
+    }
+
+    #[test]
+    fn paged_decode_traffic_matches_monolithic_at_default_page() {
+        let t = tm();
+        let mono = PhaseTraffic::decode_attention(&BITNET_0_73B, 1024);
+        let paged = PhaseTraffic::decode_attention_paged(&BITNET_0_73B, 1024, 32);
+        assert_eq!(mono.total_bytes(), paged.total_bytes());
+        let tm_ = mono.time_under(&t.mem, &t.optimized);
+        let tp = paged.time_under(&t.mem, &t.optimized);
+        assert!((tp / tm_ - 1.0).abs() < 1e-12, "paged {tp} vs mono {tm_}");
+        // One-token pages are strictly slower.
+        let t1 = PhaseTraffic::decode_attention_paged(&BITNET_0_73B, 1024, 1)
+            .time_under(&t.mem, &t.optimized);
+        assert!(t1 > tp);
     }
 
     #[test]

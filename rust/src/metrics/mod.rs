@@ -23,6 +23,24 @@ impl Counter {
     }
 }
 
+/// High-water-mark gauge (e.g. peak KV-pool pages committed).
+#[derive(Debug, Default, Clone)]
+pub struct Peak {
+    value: u64,
+}
+
+impl Peak {
+    /// Record an observation; keeps the maximum seen.
+    pub fn observe(&mut self, v: u64) {
+        if v > self.value {
+            self.value = v;
+        }
+    }
+    pub fn get(&self) -> u64 {
+        self.value
+    }
+}
+
 /// Log-bucketed latency histogram (microseconds, factor-of-2 buckets from
 /// 1 µs to ~1.2 hours) with exact min/max/mean tracking.
 #[derive(Debug, Clone)]
@@ -134,12 +152,21 @@ pub struct ServerMetrics {
     pub e2e: Histogram,
     /// Exposed (non-hidden) reconfiguration latency per swap.
     pub reconfig_exposed: Histogram,
+    /// Peak pages committed in the paged KV pool ([`crate::kvpool`]).
+    pub kv_pool_high_water: Peak,
+    /// Requests evicted from the KV pool (pages reclaimed, KV discarded).
+    pub kv_evictions: Counter,
+    /// Admissions whose reservation had to be clamped to the pool size.
+    pub kv_admissions_capped: Counter,
+    /// Time spent re-running prefill for evicted requests (the
+    /// evict-and-recompute tax).
+    pub recompute_overhead: Histogram,
 }
 
 impl ServerMetrics {
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} swaps={}\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {}",
+            "requests={} tokens={} swaps={}\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {}\n  kv-pool: high-water {} pages, evictions {}, capped admissions {}, recompute {:.1} ms total",
             self.requests_completed.get(),
             self.tokens_generated.get(),
             self.reconfigurations.get(),
@@ -147,6 +174,10 @@ impl ServerMetrics {
             self.tpot,
             self.e2e,
             self.reconfig_exposed,
+            self.kv_pool_high_water.get(),
+            self.kv_evictions.get(),
+            self.kv_admissions_capped.get(),
+            self.recompute_overhead.mean() * self.recompute_overhead.count() as f64 * 1e3,
         )
     }
 
@@ -207,6 +238,26 @@ mod tests {
             assert!(v >= last, "q={q}");
             last = v;
         }
+    }
+
+    #[test]
+    fn peak_keeps_maximum() {
+        let mut p = Peak::default();
+        assert_eq!(p.get(), 0);
+        p.observe(5);
+        p.observe(3);
+        assert_eq!(p.get(), 5);
+        p.observe(9);
+        assert_eq!(p.get(), 9);
+    }
+
+    #[test]
+    fn report_includes_pool_line() {
+        let mut m = ServerMetrics::default();
+        m.kv_pool_high_water.observe(42);
+        m.kv_evictions.inc();
+        assert!(m.report().contains("high-water 42 pages"));
+        assert!(m.report().contains("evictions 1"));
     }
 
     #[test]

@@ -10,6 +10,7 @@ use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifacts::{ArtifactDir, Manifest, RawTensor, WeightStore};
 use super::kv_cache::KvCache;
+use super::sampler::argmax;
 
 /// Execution counters (monotonic; cheap enough for the hot path).
 #[derive(Debug, Default)]
@@ -289,30 +290,5 @@ impl InferenceEngine {
     }
 }
 
-/// Index of the maximum logit (ties -> lowest index, matching jnp.argmax).
-pub fn argmax(logits: &[f32]) -> i32 {
-    let mut best = 0usize;
-    let mut best_v = f32::NEG_INFINITY;
-    for (i, &v) in logits.iter().enumerate() {
-        if v > best_v {
-            best_v = v;
-            best = i;
-        }
-    }
-    best as i32
-}
-
-#[cfg(test)]
-mod tests {
-    use super::argmax;
-
-    #[test]
-    fn argmax_basics() {
-        assert_eq!(argmax(&[0.0, 2.0, 1.0]), 1);
-        assert_eq!(argmax(&[3.0]), 0);
-        // Ties resolve to the first index, like jnp.argmax.
-        assert_eq!(argmax(&[1.0, 1.0]), 0);
-        // NaN never wins (NaN > x is false).
-        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
-    }
-}
+// `argmax` lives in `super::sampler` (available without the `pjrt`
+// feature); re-exported from `runtime` for backwards compatibility.

@@ -12,11 +12,58 @@
 //!
 //! On the *simulated* KV260 the cache lives in DDR and its streaming cost
 //! is modeled by [`crate::memory`]; this module is only the functional
-//! path.
+//! path. [`PagedKvView`] is the bridge between the two: the page-granular
+//! occupancy arithmetic the simulator's [`crate::kvpool::KvPool`] uses,
+//! computed over a live cache's `len`/`capacity` so both sides agree on
+//! how many pages a request holds.
 
+#[cfg(feature = "pjrt")]
 use xla::Literal;
 
+/// Page-granular view of one request's KV occupancy — the host-side
+/// mirror of a [`crate::kvpool::KvPool`] reservation. Pure arithmetic:
+/// available with or without the `pjrt` feature so the simulator and the
+/// live PJRT path share one definition of "pages used".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagedKvView {
+    /// Tokens per page (must match the pool's `page_tokens`).
+    pub page_tokens: usize,
+    /// Valid positions (prompt + generated so far).
+    pub len: usize,
+    /// Capacity in tokens (`max_seq` of the compiled graph).
+    pub capacity: usize,
+}
+
+impl PagedKvView {
+    pub fn new(page_tokens: usize, len: usize, capacity: usize) -> Self {
+        Self { page_tokens: page_tokens.max(1), len, capacity }
+    }
+
+    /// Pages backing the valid prefix.
+    pub fn pages_used(&self) -> usize {
+        self.len.div_ceil(self.page_tokens)
+    }
+
+    /// Pages a full cache would occupy.
+    pub fn pages_capacity(&self) -> usize {
+        self.capacity.div_ceil(self.page_tokens)
+    }
+
+    /// Valid fraction of the paged allocation (≥ the token-level
+    /// occupancy because the last page is partially filled).
+    pub fn page_occupancy(&self) -> f64 {
+        self.pages_used() as f64 / self.pages_capacity().max(1) as f64
+    }
+
+    /// Unused tokens in the trailing page (internal fragmentation).
+    pub fn last_page_slack(&self) -> usize {
+        let rem = self.len % self.page_tokens;
+        if self.len == 0 || rem == 0 { 0 } else { self.page_tokens - rem }
+    }
+}
+
 /// One request's KV cache (both tensors padded to `max_seq`).
+#[cfg(feature = "pjrt")]
 pub struct KvCache {
     /// `f32 [n_layers, n_heads, max_seq, head_dim]`, RoPE already applied.
     pub k: Literal,
@@ -28,6 +75,7 @@ pub struct KvCache {
     pub capacity: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl KvCache {
     pub fn new(k: Literal, v: Literal, len: usize, capacity: usize) -> Self {
         Self { k, v, len, capacity }
@@ -48,8 +96,14 @@ impl KvCache {
     pub fn occupancy(&self) -> f64 {
         self.len as f64 / self.capacity.max(1) as f64
     }
+
+    /// The page-granular occupancy view the KV pool accounts in.
+    pub fn paged_view(&self, page_tokens: usize) -> PagedKvView {
+        PagedKvView::new(page_tokens, self.len, self.capacity)
+    }
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for KvCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("KvCache")
@@ -57,5 +111,43 @@ impl std::fmt::Debug for KvCache {
             .field("capacity", &self.capacity)
             .field("nbytes", &self.nbytes())
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::PagedKvView;
+
+    #[test]
+    fn page_math() {
+        let v = PagedKvView::new(32, 100, 2048);
+        assert_eq!(v.pages_used(), 4);
+        assert_eq!(v.pages_capacity(), 64);
+        assert_eq!(v.last_page_slack(), 28);
+        assert!((v.page_occupancy() - 4.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_page_boundaries() {
+        let v = PagedKvView::new(32, 128, 256);
+        assert_eq!(v.pages_used(), 4);
+        assert_eq!(v.last_page_slack(), 0);
+        let empty = PagedKvView::new(32, 0, 256);
+        assert_eq!(empty.pages_used(), 0);
+        assert_eq!(empty.last_page_slack(), 0);
+    }
+
+    #[test]
+    fn agrees_with_pool_page_accounting() {
+        // The simulator's pool and the host-side view must count pages
+        // identically for the same (len, page_tokens).
+        use crate::fpga::KV260;
+        use crate::kvpool::KvPoolConfig;
+        use crate::model::BITNET_0_73B;
+        let cfg = KvPoolConfig::for_device(&BITNET_0_73B, &KV260);
+        for len in [1, 31, 32, 33, 100, 2048] {
+            let view = PagedKvView::new(cfg.page_tokens, len, BITNET_0_73B.max_seq);
+            assert_eq!(view.pages_used(), cfg.pages_for_tokens(len), "len={len}");
+        }
     }
 }

@@ -19,12 +19,24 @@
 //! instruction ids that this XLA build (xla_extension 0.5.1) rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
 
+//! ## Feature gating
+//!
+//! Everything that touches PJRT/XLA lives behind the `pjrt` cargo feature
+//! (default **off**): the simulator, DSE, and eval paths — and `cargo
+//! test` — build without an XLA installation. The artifact parsing,
+//! sampling, and the paged cache arithmetic ([`PagedKvView`]) are plain
+//! Rust and stay available either way.
+
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod engine;
 mod kv_cache;
 mod sampler;
 
 pub use artifacts::{ArtifactDir, GoldenTrace, Manifest, ManifestConfig, TensorMeta, WeightStore};
-pub use engine::{argmax, InferenceEngine, PrefillResult, RuntimeStats};
+#[cfg(feature = "pjrt")]
+pub use engine::{InferenceEngine, PrefillResult, RuntimeStats};
+#[cfg(feature = "pjrt")]
 pub use kv_cache::KvCache;
-pub use sampler::{SamplerConfig, SamplingMode, sample};
+pub use kv_cache::PagedKvView;
+pub use sampler::{argmax, SamplerConfig, SamplingMode, sample};

@@ -28,10 +28,23 @@ impl Default for SamplerConfig {
     }
 }
 
+/// Index of the maximum logit (ties -> lowest index, matching jnp.argmax).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
 /// Sample a token id from `logits` according to `cfg`.
 pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Rng) -> i32 {
     match cfg.mode {
-        SamplingMode::Greedy => super::argmax(logits),
+        SamplingMode::Greedy => argmax(logits),
         SamplingMode::Temperature(t) => sample_softmax(logits, t, usize::MAX, rng),
         SamplingMode::TopK { k, temperature } => sample_softmax(logits, temperature, k, rng),
     }
@@ -67,6 +80,16 @@ fn sample_softmax(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng)
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        // Ties resolve to the first index, like jnp.argmax.
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
+        // NaN never wins (NaN > x is false).
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
+    }
 
     #[test]
     fn greedy_is_argmax() {

@@ -99,6 +99,17 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Write a machine-readable bench summary (the `BENCH_*.json` convention:
+/// one pretty-printed JSON document per bench binary, parsed by the
+/// regression tooling). Returns the path for the caller's report line.
+pub fn write_json_report<'p>(
+    path: &'p str,
+    v: &crate::util::json::Value,
+) -> std::io::Result<&'p str> {
+    std::fs::write(path, v.to_pretty())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +127,21 @@ mod tests {
     fn run_for_hits_minimum() {
         let s = run_for("sleepless", Duration::from_millis(1), || {});
         assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        use crate::util::json::{self, Value};
+        let v = Value::Obj(vec![
+            ("bench".into(), Value::Str("unit".into())),
+            ("x".into(), Value::Num(1.5)),
+        ]);
+        let path = std::env::temp_dir().join("pd_swap_bench_report_test.json");
+        let path_s = path.to_str().unwrap();
+        write_json_report(path_s, &v).unwrap();
+        let back = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("x").unwrap().as_f64(), Some(1.5));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use pd_swap::coordinator::{Policy, Request, Scheduler, SimServer, SimServerConfi
 use pd_swap::dse::{evaluate_grid_point, DseConfig};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
 use pd_swap::fpga::{ResourceVec, KV260};
+use pd_swap::kvpool::{AdmissionControl, AdmissionDecision, EvictionPolicy, KvPool, KvPoolConfig};
 use pd_swap::memory::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
 use pd_swap::model::BITNET_0_73B;
 use pd_swap::reconfig::OverlapScheduler;
@@ -229,6 +230,305 @@ fn prop_sim_server_sanity() {
             let tp = srv.metrics.decode_throughput();
             if tp > 35.0 {
                 return Err(format!("impossible decode throughput {tp}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// KV-pool conservation under arbitrary admit/grow/evict/complete
+/// interleavings: pages are conserved (`free + reserved == total`), no
+/// request exceeds its reservation or token cap, and
+/// `admitted − evicted − completed == resident` after every operation.
+#[test]
+fn prop_kvpool_invariants() {
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Admit { prompt: usize, gen: usize },
+        Grow { victim_slot: usize, tokens: usize },
+        Complete { victim_slot: usize },
+        Evict { victim_slot: usize },
+        Touch { victim_slot: usize },
+    }
+
+    check(
+        cfg(192),
+        |rng, size| {
+            let total_pages = rng.range(1, 64);
+            let admission = if rng.chance(0.5) {
+                AdmissionControl::WorstCase
+            } else {
+                AdmissionControl::Optimistic
+            };
+            let eviction = if rng.chance(0.5) {
+                EvictionPolicy::EvictAndRecompute
+            } else {
+                EvictionPolicy::KeepResident
+            };
+            let n_ops = rng.range(1, (4 * size).max(2));
+            let ops: Vec<Op> = (0..n_ops)
+                .map(|_| match rng.below(8) {
+                    0 | 1 | 2 => Op::Admit {
+                        prompt: rng.range(1, 1024),
+                        gen: rng.range(1, 128),
+                    },
+                    3 | 4 => Op::Grow {
+                        victim_slot: rng.below(16),
+                        tokens: rng.range(1, 64),
+                    },
+                    5 => Op::Complete { victim_slot: rng.below(16) },
+                    6 => Op::Evict { victim_slot: rng.below(16) },
+                    _ => Op::Touch { victim_slot: rng.below(16) },
+                })
+                .collect();
+            (total_pages, admission, eviction, ops)
+        },
+        |(total_pages, admission, eviction, ops)| {
+            let pool_cfg = KvPoolConfig::for_device(&BITNET_0_73B, &KV260)
+                .with_total_pages(*total_pages)
+                .with_policies(*admission, *eviction);
+            let mut pool = KvPool::new(pool_cfg);
+            let mut next_id = 0u64;
+            // (id, tokens) of live residents, in admission order.
+            let mut live: Vec<(u64, usize)> = Vec::new();
+            let mut now = 0.0f64;
+
+            for op in ops {
+                now += 1.0;
+                match *op {
+                    Op::Admit { prompt, gen } => {
+                        let id = next_id;
+                        match pool.admission_plan(prompt, gen) {
+                            AdmissionDecision::Defer => {
+                                if pool.resident_count() == 0 {
+                                    return Err("Defer on an empty pool".into());
+                                }
+                            }
+                            plan => {
+                                let cap = match &plan {
+                                    AdmissionDecision::Fits { token_capacity, .. }
+                                    | AdmissionDecision::Capped { token_capacity, .. }
+                                    | AdmissionDecision::EvictThenFit {
+                                        token_capacity, ..
+                                    } => *token_capacity,
+                                    AdmissionDecision::Defer => unreachable!(),
+                                };
+                                if let AdmissionDecision::EvictThenFit { victims, .. } = &plan {
+                                    for v in victims {
+                                        live.retain(|(lid, _)| lid != v);
+                                    }
+                                }
+                                let t0 = prompt
+                                    .min(cap)
+                                    .min(plan.reserved_pages() * pool.config().page_tokens);
+                                let admitted = pool
+                                    .execute_admission(id, prompt, plan, now)
+                                    .map_err(|e| format!("execute_admission: {e}"))?;
+                                if !admitted {
+                                    return Err("non-Defer plan did not admit".into());
+                                }
+                                live.push((id, t0));
+                                next_id += 1;
+                            }
+                        }
+                    }
+                    Op::Grow { victim_slot, tokens } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = victim_slot % live.len();
+                        let (id, cur) = live[slot];
+                        let target = cur + tokens;
+                        if pool.ensure_tokens(id, target, now).is_ok() {
+                            live[slot].1 = target;
+                        }
+                        // Denied growth must leave state untouched; the
+                        // invariant check below verifies either way.
+                    }
+                    Op::Complete { victim_slot } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = victim_slot % live.len();
+                        let (id, _) = live.remove(slot);
+                        pool.complete(id).map_err(|e| format!("complete: {e}"))?;
+                    }
+                    Op::Evict { victim_slot } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = victim_slot % live.len();
+                        let (id, _) = live.remove(slot);
+                        pool.evict(id).map_err(|e| format!("evict: {e}"))?;
+                    }
+                    Op::Touch { victim_slot } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let slot = victim_slot % live.len();
+                        pool.touch(live[slot].0, now);
+                    }
+                }
+                pool.check_invariants()?;
+                if pool.resident_count() != live.len() {
+                    return Err(format!(
+                        "model mismatch: pool {} residents vs model {}",
+                        pool.resident_count(),
+                        live.len()
+                    ));
+                }
+            }
+            // Drain and confirm the pool returns to empty.
+            for (id, _) in live.drain(..) {
+                pool.complete(id).map_err(|e| format!("drain: {e}"))?;
+            }
+            pool.check_invariants()?;
+            if pool.free_pages() != pool.total_pages() {
+                return Err("pages leaked after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Scheduler conservation under admission rejection + retry + preemptive
+/// requeue: every request is eventually dispatched, nothing is lost or
+/// duplicated beyond its requeues, and `dispatched == admitted + requeued`
+/// at drain.
+#[test]
+fn prop_scheduler_conservation_under_rejection() {
+    check(
+        cfg(192),
+        |rng, size| {
+            let n = rng.range(1, size.max(2));
+            let policy = if rng.chance(0.5) {
+                Policy::SwapPerRequest
+            } else {
+                Policy::BatchedPhases { max_batch: rng.range(1, 8) }
+            };
+            // Per-extraction rejection dice + one-shot requeue dice.
+            let reject_p = rng.f64() * 0.8;
+            let requeue_p = rng.f64() * 0.5;
+            let dice_seed = rng.next_u64();
+            let mut t = 0.0;
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| {
+                    t += rng.f64();
+                    Request::synthetic(i as u64, rng.range(1, 512), rng.range(1, 64), t)
+                })
+                .collect();
+            (policy, reject_p, requeue_p, dice_seed, reqs)
+        },
+        |(policy, reject_p, requeue_p, dice_seed, reqs)| {
+            let mut dice = Rng::new(*dice_seed);
+            let mut s = Scheduler::new(*policy);
+            for r in reqs.clone() {
+                s.admit(r);
+            }
+            let mut served: Vec<u64> = Vec::new();
+            let mut requeued_once = std::collections::HashSet::new();
+            let mut guard = 0;
+            while !s.is_empty() {
+                guard += 1;
+                if guard > 100_000 {
+                    return Err("scheduler livelock".into());
+                }
+                let now = s.next_arrival().unwrap_or(f64::MAX);
+                // Reject the whole head with probability reject_p, but
+                // never forever: alternate attempts always admit.
+                let reject_this_round = dice.chance(*reject_p) && guard % 2 == 0;
+                let batch = s.next_batch_filtered(now, |_| !reject_this_round);
+                for r in batch {
+                    // Preempt some requests once, back to the queue front.
+                    if dice.chance(*requeue_p) && requeued_once.insert(r.id) {
+                        s.requeue_front(r);
+                    } else {
+                        served.push(r.id);
+                    }
+                }
+            }
+            if served.len() != reqs.len() {
+                return Err(format!("served {} of {}", served.len(), reqs.len()));
+            }
+            let mut ids = served.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != reqs.len() {
+                return Err("a request was served twice or lost".into());
+            }
+            if s.dispatched != s.admitted + s.requeued {
+                return Err(format!(
+                    "counter conservation broken: dispatched {} != admitted {} + requeued {}",
+                    s.dispatched, s.admitted, s.requeued
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pool-aware serving under random oversubscription: any mix of pool
+/// size, policy, and workload completes every request with balanced page
+/// accounting and a drained pool.
+#[test]
+fn prop_sim_server_pool_conservation() {
+    check(
+        cfg(32),
+        |rng, size| {
+            let n = rng.range(1, (size / 8).max(2));
+            let total_pages = rng.range(4, 256);
+            let admission = if rng.chance(0.5) {
+                AdmissionControl::WorstCase
+            } else {
+                AdmissionControl::Optimistic
+            };
+            let eviction = if rng.chance(0.5) {
+                EvictionPolicy::EvictAndRecompute
+            } else {
+                EvictionPolicy::KeepResident
+            };
+            let max_batch = rng.range(1, 8);
+            let mut t = 0.0;
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| {
+                    t += rng.f64();
+                    Request::synthetic(i as u64, rng.range(1, 1024), rng.range(1, 96), t)
+                })
+                .collect();
+            (total_pages, admission, eviction, max_batch, reqs)
+        },
+        |(total_pages, admission, eviction, max_batch, reqs)| {
+            let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+            cfg.policy = Policy::BatchedPhases { max_batch: *max_batch };
+            cfg.pool = cfg
+                .pool
+                .clone()
+                .with_total_pages(*total_pages)
+                .with_policies(*admission, *eviction);
+            let mut srv = SimServer::new(cfg).map_err(|e| e.to_string())?;
+            srv.run(reqs.clone()).map_err(|e| e.to_string())?;
+            if srv.metrics.requests_completed.get() != reqs.len() as u64 {
+                return Err(format!(
+                    "completed {} of {}",
+                    srv.metrics.requests_completed.get(),
+                    reqs.len()
+                ));
+            }
+            let pool = srv.pool();
+            pool.check_invariants()?;
+            if pool.resident_count() != 0 || pool.used_pages() != 0 {
+                return Err("pool not drained".into());
+            }
+            if pool.stats.high_water_pages > pool.total_pages() {
+                return Err("high-water exceeds pool".into());
+            }
+            if srv.metrics.kv_evictions.get() != pool.stats.evicted {
+                return Err("eviction counters disagree".into());
+            }
+            for o in &srv.outcomes {
+                if o.ttft < 0.0 || o.e2e < o.ttft - 1e-9 {
+                    return Err(format!("latency accounting broken: {o:?}"));
+                }
             }
             Ok(())
         },

@@ -3,7 +3,10 @@
 //! `aot.py` computed with the same jitted JAX functions.
 //!
 //! Requires `make artifacts` to have run (skips with a note otherwise, so
-//! `cargo test` stays green on a fresh checkout).
+//! `cargo test` stays green on a fresh checkout) and the `pjrt` cargo
+//! feature (the whole file is a no-op without it).
+
+#![cfg(feature = "pjrt")]
 
 use pd_swap::runtime::{argmax, InferenceEngine};
 

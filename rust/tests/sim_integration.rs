@@ -11,6 +11,7 @@ use pd_swap::engines::{
 };
 use pd_swap::eval;
 use pd_swap::fpga::{FpgaDevice, KV260};
+use pd_swap::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
 use pd_swap::model::BITNET_0_73B;
 use pd_swap::reconfig::{SwapController, RM_DECODE, RM_PREFILL};
 
@@ -73,6 +74,7 @@ fn oversized_design_is_rejected_at_programming() {
         shape: BITNET_0_73B,
         policy: Policy::SwapPerRequest,
         overlap: true,
+        pool: KvPoolConfig::for_device(&BITNET_0_73B, &KV260),
     })
     .err()
     .expect("must fail");
@@ -143,6 +145,68 @@ fn serving_loop_matches_analytic_model() {
         rel < 0.02,
         "serving tpot {measured:.4} vs analytic {analytic:.4} ({rel:.3} rel)"
     );
+}
+
+/// The KV-pool acceptance scenario: a workload whose aggregate worst-case
+/// KV footprint exceeds the modeled DDR KV budget is served without
+/// panicking — requests are admitted/evicted per policy, the page
+/// accounting balances at drain, and `ServerMetrics` carries the pool
+/// high-water mark, eviction count, and recompute overhead.
+#[test]
+fn over_budget_workload_is_served_with_pool_accounting() {
+    let shape = BITNET_0_73B;
+    // Shrink the pool to 96 pages (3072 KV tokens) so ~16 long requests
+    // oversubscribe it several times over.
+    let base_pool = KvPoolConfig::for_device(&shape, &KV260).with_total_pages(96);
+    let wl: Vec<Request> = (0..16)
+        .map(|i| Request::synthetic(i, 512, 96, i as f64 * 0.1))
+        .collect();
+    let aggregate_worst: usize = wl
+        .iter()
+        .map(|r| base_pool.worst_case_pages(r.prompt_len, r.max_new_tokens))
+        .sum();
+    assert!(
+        aggregate_worst > 2 * base_pool.total_pages,
+        "workload must oversubscribe the budget ({aggregate_worst} vs {})",
+        base_pool.total_pages
+    );
+
+    for (admission, eviction) in [
+        (AdmissionControl::WorstCase, EvictionPolicy::KeepResident),
+        (AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute),
+        (AdmissionControl::Optimistic, EvictionPolicy::KeepResident),
+    ] {
+        let mut cfg = SimServerConfig::pd_swap(shape, KV260.clone());
+        cfg.policy = Policy::BatchedPhases { max_batch: 16 };
+        cfg.pool = base_pool.clone().with_policies(admission, eviction);
+        let mut s = SimServer::new(cfg).unwrap();
+        s.run(wl.clone()).unwrap();
+
+        assert_eq!(
+            s.metrics.requests_completed.get(),
+            16,
+            "{admission:?}/{eviction:?}: every request finishes"
+        );
+        let pool = s.pool();
+        pool.check_invariants()
+            .unwrap_or_else(|e| panic!("{admission:?}/{eviction:?}: {e}"));
+        assert_eq!(pool.resident_count(), 0, "pool balances at drain");
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(pool.stats.completed, 16);
+        // The metrics bundle carries the pool telemetry.
+        assert!(s.metrics.kv_pool_high_water.get() > 0);
+        assert!(s.metrics.kv_pool_high_water.get() <= 96);
+        assert_eq!(s.metrics.kv_evictions.get(), pool.stats.evicted);
+        if eviction == EvictionPolicy::EvictAndRecompute {
+            assert_eq!(
+                s.metrics.recompute_overhead.count(),
+                pool.stats.evicted,
+                "every eviction re-prefills exactly once"
+            );
+        } else {
+            assert_eq!(s.metrics.kv_evictions.get(), 0);
+        }
+    }
 }
 
 /// Ablation consistency: disabling each PD-Swap ingredient degrades the

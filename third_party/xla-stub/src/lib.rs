@@ -1,0 +1,164 @@
+//! Compile-only stub of the `xla` PJRT bindings (see README.md).
+//!
+//! Mirrors the slice of the xla_extension 0.5.1-era API that
+//! `pd_swap::runtime` uses, with every runtime entry point returning
+//! [`Error::NotLinked`]. This keeps `--features pjrt` type-checking on
+//! machines without an XLA installation; swap in the real bindings via a
+//! `[patch]` to actually execute artifacts.
+
+use std::fmt;
+
+/// The stub's only error: PJRT is not linked.
+#[derive(Debug, Clone)]
+pub enum Error {
+    NotLinked(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::NotLinked(what) => {
+                write!(f, "xla stub: PJRT not linked (called {what}); build against the real xla bindings")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn not_linked<T>(what: &'static str) -> Result<T> {
+    Err(Error::NotLinked(what))
+}
+
+/// Element types the manifest dtypes map onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    U8,
+    S32,
+}
+
+/// Host tensor elements transferable to device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u32 {}
+
+/// A host literal (stub: carries no data).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn size_bytes(&self) -> usize {
+        0
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        not_linked("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        not_linked("Literal::to_tuple")
+    }
+}
+
+/// A device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        not_linked("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        not_linked("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        not_linked("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// A PJRT client (stub).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        not_linked("PjRtClient::cpu")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        not_linked("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        not_linked("PjRtClient::buffer_from_host_literal")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        not_linked("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_not_linked() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not linked"));
+    }
+}
