@@ -9,7 +9,10 @@
 //! KV260* numbers (the wall-clock cost of the simulation itself is also
 //! measured, via `util::bench`).
 //!
-//! Emits `BENCH_kvpool.json` (override with `-- --out PATH`).
+//! Emits `BENCH_kvpool.json` (override with `-- --out PATH`). All JSON
+//! report fields are deterministic virtual-clock values; `-- --smoke`
+//! only trims the host wall-clock measurement section (CI's bench-smoke
+//! mode), leaving the report byte-identical to a full run.
 //!
 //! Run: `cargo bench --bench kvpool_serving`
 
@@ -142,12 +145,14 @@ fn main() {
     );
 
     // Wall-clock cost of the simulation itself (not KV260 time).
-    bench::section("simulation wall-clock");
-    let s = bench::run("32k oversubscribed serve (both policies)", 1, 5, || {
-        std::hint::black_box(run_policy(Policy::BatchedPhases { max_batch: 8 }, 32 * 1024));
-        std::hint::black_box(run_policy(Policy::SwapPerRequest, 32 * 1024));
-    });
-    println!("{s}");
+    if !args.flag("smoke") {
+        bench::section("simulation wall-clock");
+        let s = bench::run("32k oversubscribed serve (both policies)", 1, 5, || {
+            std::hint::black_box(run_policy(Policy::BatchedPhases { max_batch: 8 }, 32 * 1024));
+            std::hint::black_box(run_policy(Policy::SwapPerRequest, 32 * 1024));
+        });
+        println!("{s}");
+    }
 
     let report = Value::Obj(vec![
         ("bench".into(), Value::Str("kvpool_serving".into())),

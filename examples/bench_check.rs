@@ -1,0 +1,136 @@
+//! Bench-regression gate: compare live `BENCH_*.json` reports against
+//! the baselines committed under `benches/baselines/`.
+//!
+//! CI's `bench-smoke` job runs the benches in reduced-iteration mode,
+//! then runs this checker; any non-advisory gate outside its tolerance
+//! band fails the build. All gated values are deterministic virtual-clock
+//! simulation numbers, so the comparison is exact across machines.
+//!
+//! ```bash
+//! cargo bench --bench kvpool_serving -- --smoke
+//! cargo bench --bench swap_policy   -- --smoke
+//! cargo run --example bench_check
+//! # after an intentional perf change (or to calibrate estimates):
+//! cargo run --example bench_check -- --bless && git add benches/baselines
+//! ```
+//!
+//! Flags: `--baseline-dir DIR` (default `benches/baselines`), `--dir DIR`
+//! where the live reports live (default `.`), `--bless` to rewrite the
+//! baselines' expected values from the live reports.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use pd_swap::util::bench::{bless_baseline, compare_reports, parse_gates};
+use pd_swap::util::cli::Args;
+use pd_swap::util::json;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let baseline_dir = args.get_or("baseline-dir", "benches/baselines");
+    let report_dir = args.get_or("dir", ".");
+    let bless = args.flag("bless");
+
+    let entries = match std::fs::read_dir(baseline_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot read baseline dir {baseline_dir}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        eprintln!("no BENCH_*.json baselines under {baseline_dir}");
+        return ExitCode::FAILURE;
+    }
+
+    let mut failed = false;
+    for name in &names {
+        let base_path = Path::new(baseline_dir).join(name);
+        let cur_path = Path::new(report_dir).join(name);
+        let baseline = match std::fs::read_to_string(&base_path)
+            .map_err(|e| e.to_string())
+            .and_then(|s| json::parse(&s).map_err(|e| e.to_string()))
+        {
+            Ok(v) => v,
+            Err(e) => {
+                println!("FAIL {name}: unreadable baseline: {e}");
+                failed = true;
+                continue;
+            }
+        };
+        let current = match std::fs::read_to_string(&cur_path)
+            .map_err(|e| e.to_string())
+            .and_then(|s| json::parse(&s).map_err(|e| e.to_string()))
+        {
+            Ok(v) => v,
+            Err(e) => {
+                println!(
+                    "FAIL {name}: missing/unreadable live report at {}: {e} (run the bench first)",
+                    cur_path.display()
+                );
+                failed = true;
+                continue;
+            }
+        };
+
+        if bless {
+            let blessed = bless_baseline(&baseline, &current);
+            if let Err(e) = std::fs::write(&base_path, blessed.to_pretty()) {
+                println!("FAIL {name}: cannot write blessed baseline: {e}");
+                failed = true;
+                continue;
+            }
+            println!(
+                "BLESSED {name}: {} gate values rewritten from the live report",
+                parse_gates(&blessed).len()
+            );
+            continue;
+        }
+
+        let cmp = compare_reports(&baseline, &current);
+        let failures = cmp.failures();
+        for r in &cmp.results {
+            let status = if !r.regressed {
+                "ok  "
+            } else if r.gate.advisory {
+                "ADV "
+            } else {
+                "FAIL"
+            };
+            let dir = if r.gate.higher_is_better { "min" } else { "max" };
+            match r.current {
+                Some(c) => println!(
+                    "  {status} {:<48} {dir} {:<12.4} got {:.4}",
+                    r.gate.path, r.gate.value, c
+                ),
+                None => println!(
+                    "  {status} {:<48} {dir} {:<12.4} got <missing>",
+                    r.gate.path, r.gate.value
+                ),
+            }
+        }
+        if failures.is_empty() {
+            println!("PASS {name}: {} gates checked", cmp.results.len());
+        } else {
+            println!(
+                "FAIL {name}: {} of {} gates regressed beyond tolerance \
+                 (if intentional: `cargo run --example bench_check -- --bless`)",
+                failures.len(),
+                cmp.results.len()
+            );
+            failed = true;
+        }
+    }
+
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

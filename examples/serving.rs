@@ -17,7 +17,13 @@
 //! The run recorded in EXPERIMENTS.md §E2E used the default arguments.
 
 use anyhow::Result;
-use pd_swap::coordinator::{generate_workload, LiveServer, LiveServerConfig, WorkloadConfig};
+use pd_swap::coordinator::{
+    generate_workload, EventServer, EventServerConfig, LiveServer, LiveServerConfig, Request,
+    WorkloadConfig,
+};
+use pd_swap::fpga::KV260;
+use pd_swap::model::BITNET_0_73B;
+use pd_swap::reconfig::SwapPolicy;
 use pd_swap::runtime::{SamplerConfig, SamplingMode};
 use pd_swap::util::cli::Args;
 
@@ -89,5 +95,46 @@ fn main() -> Result<()> {
         "  simulated decode throughput: {:.2} tok/s (this shape; the paper\'s 27.8 is BitNet 0.73B — see `pd-swap eval fig6`)",
         server.sim_metrics.decode_throughput()
     );
+
+    // Swap-policy comparison on the event-driven core: replay the same
+    // arrival trace (BitNet 0.73B timing model) under each DPR
+    // swap-scheduling policy to show what continuous serving would do
+    // with this traffic on the real edge part.
+    println!("\nswap-policy comparison (event-driven sim, BitNet 0.73B timing):");
+    println!(
+        "  {:<12} {:>6} {:>12} {:>12} {:>12}",
+        "policy", "swaps", "tok/s", "ttft p95 s", "makespan s"
+    );
+    for policy in [
+        SwapPolicy::Eager,
+        SwapPolicy::hysteresis_default(),
+        SwapPolicy::lookahead_default(),
+    ] {
+        let sim_wl: Vec<Request> = wl
+            .iter()
+            .map(|r| {
+                Request::synthetic(
+                    r.id,
+                    r.prompt_len.min(BITNET_0_73B.max_seq / 2),
+                    r.max_new_tokens,
+                    r.arrival,
+                )
+            })
+            .collect();
+        let mut sim = EventServer::new(EventServerConfig::pd_swap(
+            BITNET_0_73B,
+            KV260.clone(),
+            policy,
+        ))?;
+        sim.run(sim_wl)?;
+        println!(
+            "  {:<12} {:>6} {:>12.2} {:>12.2} {:>12.1}",
+            policy.name(),
+            sim.metrics.reconfigurations.get(),
+            sim.metrics.tokens_generated.get() as f64 / sim.clock().max(1e-9),
+            sim.metrics.ttft.quantile(0.95),
+            sim.clock(),
+        );
+    }
     Ok(())
 }

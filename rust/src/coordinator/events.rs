@@ -1,0 +1,994 @@
+//! Event-driven serving core: a virtual-clock event queue over arrivals,
+//! per-layer prefill completions, decode steps, PCAP swap start/finish,
+//! and KV-pool evictions, driving the [`super::fsm::PhaseFsm`] per
+//! device.
+//!
+//! **Why this exists.** The paper's evaluation (and
+//! [`super::sim_server::SimServer`], which reproduces it) advances time
+//! in *phase-batch rounds*: prefill a batch, swap once, decode the batch
+//! to completion. That is faithful to the paper's one-request-at-a-time
+//! edge profile, but it cannot represent the regime the paper's §3.4
+//! worries about and where DPR either pays off or thrashes — *continuous
+//! mixed traffic*, where new prompts arrive while earlier requests are
+//! mid-decode and the controller must decide, swap by swap, whether the
+//! single reconfigurable attention slot belongs to prefill or decode.
+//! [`EventServer`] models exactly that: requests arrive on a virtual
+//! clock, prefill progress is visible layer by layer (the final layer's
+//! attention completion is the paper's §3.4 early-trigger point), decode
+//! advances one token-step event at a time, and every PCAP load is an
+//! explicit start→finish interval on the timeline.
+//!
+//! **What is the paper's and what is ours.** The phase FSM, the §3.4
+//! early trigger, and the overlap arithmetic are the paper's mechanisms
+//! (see [`crate::reconfig`]). The *when-to-swap* arbitration under
+//! contention ([`crate::reconfig::SwapPolicy`]) and the multi-request KV
+//! residency ([`crate::kvpool`]) are serving extensions:
+//! [`SwapPolicy::Eager`] reproduces the paper's behavior, while
+//! `Hysteresis`/`Lookahead` exist only here.
+//!
+//! Decode latency accounting differs deliberately from the phase-batch
+//! server: TPOT samples are **wall inter-token gaps** — if the fabric
+//! leaves decode to go prefill a newcomer, the interposed swap pair and
+//! prefill time land in the resident requests' token gaps. That is the
+//! latency a co-tenant actually observes, and it is what makes
+//! swap-policy quality measurable.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashSet};
+
+use anyhow::{bail, Result};
+
+use crate::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
+use crate::fpga::DeviceConfig;
+use crate::kvpool::{EvictionPolicy, KvPool, KvPoolConfig, PoolError};
+use crate::metrics::ServerMetrics;
+use crate::model::ModelShape;
+use crate::reconfig::policy::{est_prefill_time, round_trip_exposed};
+use crate::reconfig::{
+    OverlapScheduler, SwapController, SwapOutlook, SwapPolicy, RM_DECODE, RM_PREFILL,
+};
+
+use super::fsm::{Phase, PhaseFsm};
+use super::request::{Request, RequestOutcome};
+use super::scheduler::{Policy, Scheduler};
+
+/// Runaway guard: no workload this crate simulates needs more events.
+const MAX_EVENTS: u64 = 20_000_000;
+
+/// Event-log bound (oldest entries win; the log is diagnostics, not
+/// accounting).
+const MAX_LOG: usize = 16_384;
+
+/// One occurrence on the virtual timeline.
+#[derive(Debug, Clone)]
+pub enum SimEvent {
+    /// A request joins the arrival queue.
+    Arrival(Request),
+    /// Prefill finished transformer layer `layer` (progress marker; the
+    /// final layer's *attention* completion is [`SimEvent::PrefillTrigger`]).
+    PrefillLayerDone { id: u64, layer: usize },
+    /// The §3.4 early-trigger point: final-layer prefill attention done,
+    /// only the static-region tail remains — the swap decision point.
+    PrefillTrigger { id: u64 },
+    /// Prefill fully complete; the prompt's KV is resident.
+    PrefillDone { id: u64 },
+    /// A PCAP partial reconfiguration finished loading.
+    SwapDone { to_decode: bool },
+    /// One decode token-step completed for request `id`.
+    DecodeStepDone { id: u64 },
+    /// A KV-pool eviction happened (bookkeeping is synchronous; the
+    /// event marks the preemption on the timeline).
+    KvEvicted { victim: u64 },
+}
+
+impl SimEvent {
+    fn kind(&self) -> &'static str {
+        match self {
+            SimEvent::Arrival(_) => "arrival",
+            SimEvent::PrefillLayerDone { .. } => "prefill-layer",
+            SimEvent::PrefillTrigger { .. } => "prefill-trigger",
+            SimEvent::PrefillDone { .. } => "prefill-done",
+            SimEvent::SwapDone { to_decode: true } => "swap-done-decode",
+            SimEvent::SwapDone { to_decode: false } => "swap-done-prefill",
+            SimEvent::DecodeStepDone { .. } => "decode-step",
+            SimEvent::KvEvicted { .. } => "kv-evicted",
+        }
+    }
+
+    fn subject(&self) -> u64 {
+        match self {
+            SimEvent::Arrival(r) => r.id,
+            SimEvent::PrefillLayerDone { id, .. }
+            | SimEvent::PrefillTrigger { id }
+            | SimEvent::PrefillDone { id }
+            | SimEvent::DecodeStepDone { id } => *id,
+            SimEvent::SwapDone { .. } => u64::MAX,
+            SimEvent::KvEvicted { victim } => *victim,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    at: f64,
+    seq: u64,
+    ev: SimEvent,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Virtual times are finite by construction; ties break by push
+        // order so the simulation is fully deterministic.
+        self.at
+            .partial_cmp(&other.at)
+            .unwrap_or(Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Deterministic min-heap of timestamped events (FIFO within a
+/// timestamp).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn push(&mut self, at: f64, ev: SimEvent) {
+        debug_assert!(at.is_finite(), "event scheduled at non-finite time");
+        self.heap.push(Reverse(Entry { at, seq: self.seq, ev }));
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
+        self.heap.pop().map(|Reverse(e)| (e.at, e.ev))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// One timeline record for diagnostics (`pd-swap simulate --log`).
+#[derive(Debug, Clone, Copy)]
+pub struct EventRecord {
+    pub at: f64,
+    pub kind: &'static str,
+    pub subject: u64,
+}
+
+/// One resident request mid-decode. Shared with the phase-batch
+/// [`super::sim_server::SimServer`].
+#[derive(Debug)]
+pub(crate) struct InFlight {
+    pub(crate) req: Request,
+    /// Tokens currently in the KV cache.
+    pub(crate) ctx: usize,
+    /// Tokens generated so far this serve attempt.
+    pub(crate) tokens: usize,
+    /// When this request's prefill finished (absolute sim time).
+    pub(crate) prefill_done: f64,
+    /// Admission-capped token ceiling for this reservation.
+    pub(crate) token_cap: usize,
+    /// Start of this request's first decode step (TTFT anchor).
+    pub(crate) first_step: Option<f64>,
+    /// Completion time of the latest token (wall TPOT anchor).
+    pub(crate) last_token: Option<f64>,
+}
+
+impl InFlight {
+    pub(crate) fn new(req: Request, prefill_done: f64, token_cap: usize) -> Self {
+        let ctx = req.prompt_len.min(token_cap);
+        Self { req, ctx, tokens: 0, prefill_done, token_cap, first_step: None, last_token: None }
+    }
+
+    /// Generation finished: token budget spent, graph capacity reached,
+    /// or reservation cap hit.
+    pub(crate) fn done(&self, max_seq: usize) -> bool {
+        self.tokens >= self.req.max_new_tokens
+            || self.ctx >= max_seq
+            || self.ctx >= self.token_cap
+    }
+
+    /// Tokens this request can still generate.
+    fn remaining(&self, max_seq: usize) -> usize {
+        self.req
+            .max_new_tokens
+            .saturating_sub(self.tokens)
+            .min(self.token_cap.min(max_seq).saturating_sub(self.ctx))
+    }
+}
+
+/// A prefill in flight on the fabric.
+#[derive(Debug)]
+struct PrefillJob {
+    req: Request,
+    done_at: f64,
+    /// The §3.4 decode swap was started at the trigger point.
+    swap_committed: bool,
+}
+
+/// Configuration for the event-driven server.
+#[derive(Debug, Clone)]
+pub struct EventServerConfig {
+    pub design: AcceleratorDesign,
+    pub device: DeviceConfig,
+    pub shape: ModelShape,
+    /// Paged KV-cache pool sizing + admission/eviction policy.
+    pub pool: KvPoolConfig,
+    /// When to move the attention slot between phases.
+    pub policy: SwapPolicy,
+    /// Use the §3.4 latency-overlapped early trigger for prefill→decode
+    /// swaps (the paper's mechanism; `false` swaps sequentially).
+    pub overlap: bool,
+    /// Cap on concurrently resident requests (decode set + the prefill
+    /// in flight); the KV pool still gates below this.
+    pub max_residents: usize,
+}
+
+impl EventServerConfig {
+    pub fn pd_swap(shape: ModelShape, device: DeviceConfig, policy: SwapPolicy) -> Self {
+        let pool = KvPoolConfig::for_device(&shape, &device);
+        Self {
+            design: AcceleratorDesign::pd_swap(),
+            device,
+            shape,
+            pool,
+            policy,
+            overlap: true,
+            max_residents: 8,
+        }
+    }
+}
+
+/// The continuous event-driven serving simulator (single DPR device).
+pub struct EventServer {
+    cfg: EventServerConfig,
+    model: PhaseModel,
+    swap: SwapController,
+    overlap_sched: OverlapScheduler,
+    fsm: PhaseFsm,
+    kv_pool: KvPool,
+    queue: EventQueue,
+    sched: Scheduler,
+    prefilling: Option<PrefillJob>,
+    decode: Vec<InFlight>,
+    /// Round-robin position in `decode`.
+    cursor: usize,
+    /// A `DecodeStepDone` is scheduled (the decode engine is busy).
+    step_inflight: bool,
+    /// Requests that have prefilled at least once (re-prefill = eviction
+    /// recompute, charged to `metrics.recompute_overhead`).
+    prefilled: HashSet<u64>,
+    /// Requests already evicted once — never victims again.
+    evicted_once: HashSet<u64>,
+    clock: f64,
+    started: bool,
+    log: Vec<EventRecord>,
+    pub metrics: ServerMetrics,
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+impl EventServer {
+    pub fn new(cfg: EventServerConfig) -> Result<Self> {
+        if cfg.design.hosting != AttentionHosting::Reconfigurable {
+            bail!("EventServer models DPR swap scheduling; static designs have no swaps to schedule");
+        }
+        let model = PhaseModel::new(cfg.design.clone(), cfg.device.clone());
+        let swap = SwapController::new(cfg.design.program(&cfg.device)?);
+        let lat = swap.device.reconfig_latency();
+        let overlap_sched = OverlapScheduler::new(model.clone(), lat);
+        let kv_pool = KvPool::new(cfg.pool.clone());
+        Ok(Self {
+            cfg,
+            model,
+            swap,
+            overlap_sched,
+            fsm: PhaseFsm::new(),
+            kv_pool,
+            queue: EventQueue::default(),
+            sched: Scheduler::new(Policy::SwapPerRequest),
+            prefilling: None,
+            decode: Vec::new(),
+            cursor: 0,
+            step_inflight: false,
+            prefilled: HashSet::new(),
+            evicted_once: HashSet::new(),
+            clock: 0.0,
+            started: false,
+            log: Vec::new(),
+            metrics: ServerMetrics::default(),
+            outcomes: Vec::new(),
+        })
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// The paged KV pool (occupancy/conservation stats).
+    pub fn pool(&self) -> &KvPool {
+        &self.kv_pool
+    }
+
+    /// The event timeline (bounded; diagnostics only).
+    pub fn event_log(&self) -> &[EventRecord] {
+        &self.log
+    }
+
+    /// Serve one workload to completion. Single-shot: build a fresh
+    /// server per workload so metrics and device state start cold.
+    pub fn run(&mut self, mut workload: Vec<Request>) -> Result<&ServerMetrics> {
+        if self.started {
+            bail!("EventServer::run is single-shot; build a fresh server per workload");
+        }
+        self.started = true;
+        workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let expected = workload.len() as u64;
+        for r in workload {
+            self.queue.push(r.arrival.max(0.0), SimEvent::Arrival(r));
+        }
+        let mut processed = 0u64;
+        while let Some((at, ev)) = self.queue.pop() {
+            processed += 1;
+            if processed > MAX_EVENTS {
+                bail!("event budget exceeded — serving livelock");
+            }
+            self.clock = self.clock.max(at);
+            if self.log.len() < MAX_LOG {
+                self.log.push(EventRecord { at, kind: ev.kind(), subject: ev.subject() });
+            }
+            self.dispatch(ev)?;
+            self.pump()?;
+        }
+        if self.metrics.requests_completed.get() != expected
+            || !self.sched.is_empty()
+            || self.prefilling.is_some()
+            || !self.decode.is_empty()
+        {
+            bail!(
+                "serving incomplete: {}/{} requests done, {} queued, {} decoding",
+                self.metrics.requests_completed.get(),
+                expected,
+                self.sched.queue_len(),
+                self.decode.len()
+            );
+        }
+        // Mirror the pool's conservation stats into the metric bundle.
+        let high_water = self.kv_pool.stats.high_water_pages as u64;
+        self.metrics.kv_pool_high_water.observe(high_water);
+        let d = self.kv_pool.stats.evicted.saturating_sub(self.metrics.kv_evictions.get());
+        self.metrics.kv_evictions.add(d);
+        let d = self
+            .kv_pool
+            .stats
+            .capped_admissions
+            .saturating_sub(self.metrics.kv_admissions_capped.get());
+        self.metrics.kv_admissions_capped.add(d);
+        Ok(&self.metrics)
+    }
+
+    // -- event handlers ----------------------------------------------------
+
+    fn dispatch(&mut self, ev: SimEvent) -> Result<()> {
+        match ev {
+            SimEvent::Arrival(r) => {
+                self.sched.admit(r);
+                Ok(())
+            }
+            // Progress + timeline markers; bookkeeping already done.
+            SimEvent::PrefillLayerDone { .. } | SimEvent::KvEvicted { .. } => Ok(()),
+            SimEvent::PrefillTrigger { id } => self.on_trigger(id),
+            SimEvent::PrefillDone { id } => self.on_prefill_done(id),
+            SimEvent::SwapDone { .. } => self.on_swap_done(),
+            SimEvent::DecodeStepDone { id } => self.on_step_done(id),
+        }
+    }
+
+    /// §3.4 trigger: final-layer prefill attention done. Decide whether
+    /// to start the decode swap now (overlapping it with the prefill
+    /// tail) or keep the prefill RM for more queued prompts.
+    fn on_trigger(&mut self, id: u64) -> Result<()> {
+        let (job_id, done_at, committed) = match self.prefilling.as_ref() {
+            Some(j) => (j.req.id, j.done_at, j.swap_committed),
+            None => return Ok(()),
+        };
+        if job_id != id || committed {
+            return Ok(());
+        }
+        let shape = self.cfg.shape;
+        // Decode-side work after this prefill lands.
+        let cap = self.kv_pool.token_cap(id).unwrap_or(shape.max_seq);
+        let job_req = self.prefilling.as_ref().unwrap();
+        let prompt = job_req.req.prompt_len.min(cap);
+        let job_rem = job_req
+            .req
+            .max_new_tokens
+            .min(cap.min(shape.max_seq).saturating_sub(prompt));
+        let decode_tokens: usize =
+            self.decode.iter().map(|f| f.remaining(shape.max_seq)).sum::<usize>() + job_rem;
+        if decode_tokens == 0 {
+            return Ok(()); // nothing to decode afterwards: keep prefilling
+        }
+        let o = self.outlook(job_rem, prompt);
+        if !self.cfg.policy.swap_to_decode_at_trigger(&o) {
+            return Ok(()); // policy keeps the prefill RM
+        }
+        let was_live = self.swap.device.is_live(RM_DECODE, self.clock);
+        let ready = self.swap.trigger_decode_swap(self.clock)?;
+        self.fsm
+            .begin_swap(true, ready)
+            .map_err(|e| anyhow::anyhow!("trigger swap: {e}"))?;
+        if !was_live {
+            self.metrics.reconfigurations.inc();
+            self.metrics.swaps_to_decode.inc();
+            self.metrics.reconfig_exposed.record((ready - done_at).max(0.0));
+        }
+        self.prefilling.as_mut().unwrap().swap_committed = true;
+        // Decode admissible at max(prefill_end, decode_ready) — §3.4 rule.
+        self.queue.push(ready.max(done_at), SimEvent::SwapDone { to_decode: true });
+        Ok(())
+    }
+
+    fn on_prefill_done(&mut self, id: u64) -> Result<()> {
+        let Some(job) = self.prefilling.take() else { return Ok(()) };
+        debug_assert_eq!(job.req.id, id);
+        let shape = self.cfg.shape;
+        let cap = self.kv_pool.token_cap(id).unwrap_or(shape.max_seq);
+        self.kv_pool
+            .ensure_tokens(id, job.req.prompt_len.min(cap), self.clock)
+            .map_err(|e| anyhow::anyhow!("prefill KV write: {e}"))?;
+        let f = InFlight::new(job.req, self.clock, cap);
+        if f.done(shape.max_seq) {
+            // Zero-token generation (or capacity-capped at the prompt):
+            // the request completes straight out of prefill.
+            self.finish(f)?;
+        } else {
+            self.decode.push(f);
+        }
+        if !job.swap_committed {
+            self.fsm
+                .finish_prefill()
+                .map_err(|e| anyhow::anyhow!("finish prefill: {e}"))?;
+        }
+        Ok(())
+    }
+
+    fn on_swap_done(&mut self) -> Result<()> {
+        self.swap.device.settle(self.clock);
+        self.fsm
+            .complete_swap(self.clock)
+            .map_err(|e| anyhow::anyhow!("swap completion: {e}"))?;
+        Ok(())
+    }
+
+    fn on_step_done(&mut self, id: u64) -> Result<()> {
+        self.step_inflight = false;
+        let Some(idx) = self.decode.iter().position(|f| f.req.id == id) else {
+            return Ok(());
+        };
+        let shape = self.cfg.shape;
+        {
+            let f = &mut self.decode[idx];
+            f.ctx += 1;
+            f.tokens += 1;
+            let anchor = f.last_token.or(f.first_step).unwrap_or(self.clock);
+            f.last_token = Some(self.clock);
+            let gap = (self.clock - anchor).max(0.0);
+            self.metrics.tpot.record(gap);
+        }
+        self.kv_pool.touch(id, self.clock);
+        if self.decode[idx].done(shape.max_seq) {
+            let f = self.decode.remove(idx);
+            self.finish(f)?;
+            if idx < self.cursor {
+                self.cursor -= 1;
+            }
+        } else {
+            self.cursor = idx + 1;
+        }
+        Ok(())
+    }
+
+    // -- decisions ---------------------------------------------------------
+
+    /// Central decision dispatcher, called after every event: whenever
+    /// the fabric is free, pick the next action (prefill / decode step /
+    /// swap) per the FSM state and the swap policy.
+    fn pump(&mut self) -> Result<()> {
+        loop {
+            match self.fsm.phase() {
+                // PCAP busy or prefill events in flight: wait.
+                Phase::Swapping { .. } | Phase::Prefill => return Ok(()),
+                Phase::Decode => {
+                    if self.step_inflight {
+                        return Ok(());
+                    }
+                    if self.decode.is_empty() {
+                        self.fsm
+                            .finish_request()
+                            .map_err(|e| anyhow::anyhow!("decode drain: {e}"))?;
+                        continue;
+                    }
+                    // Policy decision point 2: yield the fabric to
+                    // waiting prompts?
+                    if self.prefill_candidate_ready() {
+                        let o = self.outlook(0, 0);
+                        if self.cfg.policy.swap_to_prefill_mid_decode(&o) {
+                            return self.begin_prefill_swap();
+                        }
+                    }
+                    if self.try_schedule_step()? {
+                        return Ok(());
+                    }
+                    // Decode set drained while securing KV pages.
+                    continue;
+                }
+                Phase::Idle => {
+                    let can_prefill = self.prefill_candidate_ready();
+                    let has_decode = !self.decode.is_empty();
+                    if !can_prefill && !has_decode {
+                        return Ok(()); // idle until the next arrival
+                    }
+                    let prefill_live = self.swap.device.is_live(RM_PREFILL, self.clock);
+                    let decode_live = self.swap.device.is_live(RM_DECODE, self.clock);
+                    // Contention is resolved relative to the RM that is
+                    // already loaded — staying is free, leaving costs a
+                    // PCAP pair. (Deciding against the live RM with the
+                    // *other* side's rule would let Eager oscillate
+                    // between the two swap decisions forever.)
+                    let go_prefill = if can_prefill && !has_decode {
+                        true
+                    } else if has_decode && !can_prefill {
+                        false
+                    } else if prefill_live {
+                        // Fabric is prefill-configured (we just paid to
+                        // get here, or are mid queue-drain): keep it;
+                        // the §3.4 trigger rule sends it back.
+                        true
+                    } else if decode_live {
+                        // Leaving a live decode RM reuses the mid-decode
+                        // rule: waiting prompts vs. the swap pair.
+                        let o = self.outlook(0, 0);
+                        self.cfg.policy.swap_to_prefill_mid_decode(&o)
+                    } else {
+                        true // cold fabric: nothing is decodable yet
+                    };
+                    if !go_prefill {
+                        return self.begin_decode_entry();
+                    }
+                    if !prefill_live {
+                        return self.begin_prefill_swap();
+                    }
+                    if self.start_prefill()? {
+                        return Ok(());
+                    }
+                    // Extraction failed despite the candidate check
+                    // (defensive): fall back to decode if possible.
+                    if has_decode {
+                        return self.begin_decode_entry();
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Is there an arrived, pool-admissible request at the queue head
+    /// with a residency slot free?
+    fn prefill_candidate_ready(&self) -> bool {
+        if self.decode.len() + usize::from(self.prefilling.is_some()) >= self.cfg.max_residents
+        {
+            return false;
+        }
+        match self.sched.peek() {
+            Some(r) if r.arrival <= self.clock + 1e-12 => self
+                .kv_pool
+                .admission_plan(r.prompt_len, r.max_new_tokens)
+                .admits_immediately(),
+            _ => false,
+        }
+    }
+
+    /// Snapshot both phases' backlogs for the policy. `extra_rem` /
+    /// `extra_ctx` fold in the request currently prefilling (trigger-time
+    /// decisions count it as imminent decode work).
+    fn outlook(&self, extra_rem: usize, extra_ctx: usize) -> SwapOutlook {
+        let shape = self.cfg.shape;
+        let (n_pend, tok_pend) = self.sched.arrived_backlog(self.clock);
+        let decode_pending_tokens =
+            self.decode.iter().map(|f| f.remaining(shape.max_seq)).sum::<usize>() + extra_rem;
+        let decode_ready = self.decode.len() + usize::from(extra_rem > 0);
+        let rep_ctx = self
+            .decode
+            .iter()
+            .map(|f| f.ctx)
+            .max()
+            .unwrap_or(0)
+            .max(extra_ctx)
+            .max(1);
+        let est_decode_step =
+            self.model.decode_step_paged(&shape, rep_ctx, self.cfg.pool.page_tokens).total;
+        let mean_prompt = if n_pend > 0 { (tok_pend / n_pend).max(1) } else { 1 };
+        SwapOutlook {
+            pending_prefill: n_pend,
+            pending_prefill_tokens: tok_pend,
+            est_prefill_time: est_prefill_time(&self.model, &shape, n_pend, tok_pend),
+            decode_ready,
+            decode_pending_tokens,
+            est_decode_step,
+            reconfig_latency: self.overlap_sched.reconfig_latency,
+            est_round_trip_exposed: round_trip_exposed(&self.overlap_sched, &shape, mean_prompt),
+        }
+    }
+
+    /// Start (or skip, if already live) the PCAP load of the prefill RM.
+    fn begin_prefill_swap(&mut self) -> Result<()> {
+        let was_live = self.swap.device.is_live(RM_PREFILL, self.clock);
+        let ready = self.swap.ensure_prefill(self.clock)?;
+        self.fsm
+            .begin_swap(false, ready)
+            .map_err(|e| anyhow::anyhow!("prefill swap: {e}"))?;
+        if !was_live {
+            self.metrics.reconfigurations.inc();
+            self.metrics.swaps_to_prefill.inc();
+        }
+        self.queue.push(ready, SimEvent::SwapDone { to_decode: false });
+        Ok(())
+    }
+
+    /// Enter decode from Idle (sequential swap — no prefill tail to hide
+    /// behind, so any PCAP time is fully exposed).
+    fn begin_decode_entry(&mut self) -> Result<()> {
+        let was_live = self.swap.device.is_live(RM_DECODE, self.clock);
+        let ready = self.swap.trigger_decode_swap(self.clock)?;
+        self.fsm
+            .begin_swap(true, ready)
+            .map_err(|e| anyhow::anyhow!("decode swap: {e}"))?;
+        if !was_live {
+            self.metrics.reconfigurations.inc();
+            self.metrics.swaps_to_decode.inc();
+            self.metrics.reconfig_exposed.record((ready - self.clock).max(0.0));
+        }
+        self.queue.push(ready, SimEvent::SwapDone { to_decode: true });
+        Ok(())
+    }
+
+    /// Extract the queue head (committing its KV reservation) and put it
+    /// on the fabric: schedules per-layer progress, the §3.4 trigger, and
+    /// completion. Returns false if extraction yielded nothing.
+    fn start_prefill(&mut self) -> Result<bool> {
+        let now = self.clock;
+        let pool = &mut self.kv_pool;
+        let mut batch = self.sched.next_batch_filtered(now, |r| {
+            let plan = pool.admission_plan(r.prompt_len, r.max_new_tokens);
+            plan.admits_immediately()
+                && pool.execute_admission(r.id, 0, plan, now).unwrap_or(false)
+        });
+        let Some(req) = batch.pop() else { return Ok(false) };
+        let id = req.id;
+        let shape = self.cfg.shape;
+        let l = req.prompt_len.max(1);
+        let pre = self.model.prefill(&shape, l);
+        if !self.prefilled.insert(id) {
+            // Second prefill of an evicted request: pure recompute tax.
+            self.metrics.recompute_overhead.record(pre.total);
+        }
+        let done_at = now + pre.total;
+        let trigger_at = if self.cfg.overlap {
+            now + self.overlap_sched.overlapped(&shape, l).trigger
+        } else {
+            done_at
+        };
+        self.fsm
+            .begin_prefill()
+            .map_err(|e| anyhow::anyhow!("begin prefill: {e}"))?;
+        let n_layers = shape.n_layers.max(1);
+        for layer in 1..n_layers {
+            let at = now + pre.total * layer as f64 / n_layers as f64;
+            self.queue.push(at, SimEvent::PrefillLayerDone { id, layer });
+        }
+        self.queue.push(trigger_at.min(done_at), SimEvent::PrefillTrigger { id });
+        self.queue.push(done_at, SimEvent::PrefillDone { id });
+        self.prefilling = Some(PrefillJob { req, done_at, swap_committed: false });
+        Ok(true)
+    }
+
+    /// Schedule the next round-robin decode step, growing the KV
+    /// reservation first (evicting per policy under pool pressure).
+    /// Returns false if the decode set drained instead.
+    fn try_schedule_step(&mut self) -> Result<bool> {
+        let shape = self.cfg.shape;
+        let page_tokens = self.cfg.pool.page_tokens;
+        while !self.decode.is_empty() {
+            self.cursor %= self.decode.len();
+            let i = self.cursor;
+            if self.decode[i].done(shape.max_seq) {
+                let f = self.decode.remove(i);
+                self.finish(f)?;
+                continue;
+            }
+            let id = self.decode[i].req.id;
+            let next_tokens = self.decode[i].ctx + 1;
+            match self.kv_pool.ensure_tokens(id, next_tokens, self.clock) {
+                Ok(()) => {
+                    let ctx = self.decode[i].ctx;
+                    let step = self.model.decode_step_paged(&shape, ctx, page_tokens).total;
+                    if self.decode[i].first_step.is_none() {
+                        self.decode[i].first_step = Some(self.clock);
+                    }
+                    self.queue.push(self.clock + step, SimEvent::DecodeStepDone { id });
+                    self.step_inflight = true;
+                    return Ok(true);
+                }
+                Err(PoolError::Exhausted { .. }) => {
+                    let evict = self.cfg.pool.eviction == EvictionPolicy::EvictAndRecompute;
+                    let victim = if evict {
+                        self.kv_pool.lru_victim(|v| {
+                            v != id
+                                && !self.evicted_once.contains(&v)
+                                && self.decode.iter().any(|f| f.req.id == v)
+                        })
+                    } else {
+                        None
+                    };
+                    if let Some(vid) = victim {
+                        self.kv_pool
+                            .evict_at(vid, self.clock)
+                            .map_err(|e| anyhow::anyhow!("{e}"))?;
+                        self.evicted_once.insert(vid);
+                        let j = self
+                            .decode
+                            .iter()
+                            .position(|f| f.req.id == vid)
+                            .expect("victim must be decoding");
+                        let preempted = self.decode.remove(j);
+                        if j < self.cursor {
+                            self.cursor -= 1;
+                        }
+                        // Back to the queue with the age-based fairness
+                        // tiebreak; its generated tokens are discarded
+                        // and the prompt re-prefilled later.
+                        self.sched.requeue_front(preempted.req);
+                        self.queue.push(self.clock, SimEvent::KvEvicted { victim: vid });
+                        continue;
+                    }
+                    // Capacity-capped: deliver what we have.
+                    let f = self.decode.remove(i);
+                    self.finish(f)?;
+                    continue;
+                }
+                Err(e) => return Err(anyhow::anyhow!("kv grow: {e}")),
+            }
+        }
+        Ok(false)
+    }
+
+    /// Release the pool reservation and record the outcome.
+    fn finish(&mut self, f: InFlight) -> Result<()> {
+        self.kv_pool
+            .complete(f.req.id)
+            .map_err(|e| anyhow::anyhow!("completing request {}: {e}", f.req.id))?;
+        // First token comes out of prefill logits; TTFT counts queueing +
+        // prefill + any exposed swap + the wait for the first decode slot.
+        let first = f.first_step.unwrap_or(f.prefill_done);
+        let ttft = (first - f.req.arrival).max(0.0);
+        let e2e = (self.clock - f.req.arrival).max(0.0);
+        self.metrics.ttft.record(ttft);
+        self.metrics.e2e.record(e2e);
+        self.metrics.tokens_generated.add(f.tokens as u64);
+        self.metrics.requests_completed.inc();
+        let last = f.last_token.unwrap_or(first);
+        self.outcomes.push(RequestOutcome {
+            id: f.req.id,
+            prompt_len: f.req.prompt_len,
+            generated: Vec::new(),
+            ttft,
+            e2e,
+            // Wall span of this request's decode divided by its tokens —
+            // includes interleaved co-tenants' steps AND any interposed
+            // prefill/swap detours (the latency a co-tenant observes).
+            mean_tpot: if f.tokens > 0 { (last - first) / f.tokens as f64 } else { 0.0 },
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::kvpool::AdmissionControl;
+    use crate::model::BITNET_0_73B;
+
+    fn server(policy: SwapPolicy) -> EventServer {
+        EventServer::new(EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy))
+            .unwrap()
+    }
+
+    /// A long-context request decoding while short prompts arrive — the
+    /// contention pattern that separates the policies.
+    fn contended_workload() -> Vec<Request> {
+        let mut w = vec![Request::synthetic(0, 256, 128, 0.0)];
+        for i in 0..5u64 {
+            w.push(Request::synthetic(1 + i, 64, 8, 4.0 + i as f64));
+        }
+        w
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_seq() {
+        let mut q = EventQueue::default();
+        q.push(2.0, SimEvent::PrefillDone { id: 0 });
+        q.push(1.0, SimEvent::PrefillTrigger { id: 1 });
+        q.push(1.0, SimEvent::PrefillDone { id: 2 });
+        q.push(0.5, SimEvent::SwapDone { to_decode: true });
+        assert_eq!(q.len(), 4);
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!(t1, 0.5);
+        assert!(matches!(e1, SimEvent::SwapDone { .. }));
+        // Tie at t=1.0: push order wins.
+        let (_, e2) = q.pop().unwrap();
+        assert!(matches!(e2, SimEvent::PrefillTrigger { id: 1 }));
+        let (_, e3) = q.pop().unwrap();
+        assert!(matches!(e3, SimEvent::PrefillDone { id: 2 }));
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn eager_serves_workload_to_completion() {
+        let mut s = server(SwapPolicy::Eager);
+        let m = s.run(contended_workload()).unwrap();
+        assert_eq!(m.requests_completed.get(), 6);
+        assert_eq!(m.tokens_generated.get(), 128 + 5 * 8);
+        assert!(m.reconfigurations.get() >= 2);
+        assert_eq!(
+            m.reconfigurations.get(),
+            m.swaps_to_prefill.get() + m.swaps_to_decode.get()
+        );
+        let pool = s.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.resident_count(), 0, "pool must drain");
+        assert!(s.clock() > 0.0);
+        // Latency accounting sane for every request.
+        for o in &s.outcomes {
+            assert!(o.ttft >= 0.0 && o.e2e >= o.ttft - 1e-9, "{o:?}");
+        }
+    }
+
+    #[test]
+    fn event_log_covers_the_taxonomy() {
+        let mut s = server(SwapPolicy::Eager);
+        s.run(contended_workload()).unwrap();
+        let kinds: std::collections::HashSet<&'static str> =
+            s.event_log().iter().map(|r| r.kind).collect();
+        for k in [
+            "arrival",
+            "prefill-layer",
+            "prefill-trigger",
+            "prefill-done",
+            "swap-done-decode",
+            "decode-step",
+        ] {
+            assert!(kinds.contains(k), "missing event kind {k}");
+        }
+        // The log is time-ordered.
+        for w in s.event_log().windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn policies_complete_identical_work() {
+        let w = contended_workload();
+        let mut totals = Vec::new();
+        for p in [
+            SwapPolicy::Eager,
+            SwapPolicy::hysteresis_default(),
+            SwapPolicy::lookahead_default(),
+        ] {
+            let mut s = server(p);
+            let m = s.run(w.clone()).unwrap();
+            totals.push((m.requests_completed.get(), m.tokens_generated.get()));
+        }
+        assert!(totals.windows(2).all(|t| t[0] == t[1]), "{totals:?}");
+    }
+
+    #[test]
+    fn hysteresis_thrashes_less_than_eager() {
+        let w = contended_workload();
+        let mut eager = server(SwapPolicy::Eager);
+        eager.run(w.clone()).unwrap();
+        let mut hyst = server(SwapPolicy::hysteresis_default());
+        hyst.run(w).unwrap();
+        assert!(
+            hyst.metrics.reconfigurations.get() < eager.metrics.reconfigurations.get(),
+            "hysteresis {} swaps vs eager {}",
+            hyst.metrics.reconfigurations.get(),
+            eager.metrics.reconfigurations.get()
+        );
+        // Same work, fewer swap stalls: the batch finishes no later.
+        assert!(hyst.clock() <= eager.clock() + 1e-9);
+    }
+
+    #[test]
+    fn zero_token_requests_complete_out_of_prefill() {
+        let mut s = server(SwapPolicy::Eager);
+        let w = vec![
+            Request::synthetic(0, 128, 0, 0.0),
+            Request::synthetic(1, 64, 4, 0.0),
+        ];
+        let m = s.run(w).unwrap();
+        assert_eq!(m.requests_completed.get(), 2);
+        assert_eq!(m.tokens_generated.get(), 4);
+        let zero = s.outcomes.iter().find(|o| o.id == 0).unwrap();
+        assert!(zero.ttft > 0.0, "prefill time counts");
+        assert_eq!(zero.mean_tpot, 0.0);
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn optimistic_pressure_evicts_requeues_and_completes() {
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(40)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut s = EventServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+        s.run(w).unwrap();
+        assert_eq!(s.metrics.requests_completed.get(), 4, "evicted requests finish later");
+        assert!(s.metrics.kv_evictions.get() >= 1, "pool pressure must evict");
+        assert!(s.metrics.recompute_overhead.count() >= 1, "re-prefill charged");
+        let pool = s.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.resident_count(), 0);
+        assert_eq!(pool.stats.admitted, pool.stats.completed + pool.stats.evicted);
+    }
+
+    #[test]
+    fn overlap_hides_trigger_swap_exposure() {
+        // 1800-token prompt: tail ≫ reconfig, and 8 tokens of headroom
+        // below max_seq so a decode swap actually happens.
+        let w = vec![Request::synthetic(0, 1800, 8, 0.0)];
+        let mut with = server(SwapPolicy::Eager);
+        with.run(w.clone()).unwrap();
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.overlap = false;
+        let mut without = EventServer::new(cfg).unwrap();
+        without.run(w).unwrap();
+        // At L=1800 the tail hides the whole PCAP load; sequentially the
+        // full ~45 ms is exposed.
+        assert_eq!(with.metrics.reconfig_exposed.max(), 0.0);
+        assert!(without.metrics.reconfig_exposed.max() > 0.03);
+        assert!(with.clock() < without.clock());
+    }
+
+    #[test]
+    fn run_is_single_shot() {
+        let mut s = server(SwapPolicy::Eager);
+        s.run(vec![Request::synthetic(0, 64, 4, 0.0)]).unwrap();
+        assert!(s.run(vec![]).is_err());
+    }
+}

@@ -109,6 +109,20 @@ impl PhaseFsm {
         }
     }
 
+    /// Finish a prefill *without* a committed decode swap: Prefill ->
+    /// Idle. Used by the continuous event-driven server when the swap
+    /// policy decides to keep the prefill RM and serve another queued
+    /// prompt instead of triggering the §3.4 decode swap.
+    pub fn finish_prefill(&mut self) -> Result<(), FsmError> {
+        match self.phase {
+            Phase::Prefill => {
+                self.phase = Phase::Idle;
+                Ok(())
+            }
+            p => Err(FsmError::IllegalTransition { event: "finish_prefill", phase: p }),
+        }
+    }
+
     /// Finish decoding a request: Decode -> Idle.
     pub fn finish_request(&mut self) -> Result<(), FsmError> {
         match self.phase {
@@ -173,6 +187,23 @@ mod tests {
         f.begin_swap(true, 1.0).unwrap();
         assert!(f.begin_swap(true, 2.0).is_err(), "PCAP is serial");
         assert!(f.begin_prefill().is_err());
+    }
+
+    #[test]
+    fn back_to_back_prefills_without_swap() {
+        // The continuous server's "stay in prefill" path: each prefill
+        // closes with finish_prefill, no swap in between.
+        let mut f = PhaseFsm::new();
+        f.begin_swap(false, 0.01).unwrap();
+        f.complete_swap(0.01).unwrap();
+        for _ in 0..3 {
+            f.begin_prefill().unwrap();
+            f.finish_prefill().unwrap();
+        }
+        assert_eq!(f.phase(), Phase::Idle);
+        assert_eq!(f.swaps, 1, "only the cold load swapped");
+        // finish_prefill is only legal from Prefill.
+        assert!(f.finish_prefill().is_err());
     }
 
     #[test]

@@ -12,17 +12,25 @@
 //!   worries about). Batch extraction is gated per-request by the KV
 //!   pool ([`Scheduler::next_batch_filtered`]) and evicted requests
 //!   re-enter at the queue front ([`Scheduler::requeue_front`]).
-//! * [`sim_server`] — event-driven serving simulation on the KV260 model:
+//! * [`sim_server`] — phase-batch serving simulation on the KV260 model:
 //!   every figure in the paper's evaluation is a query against this. It
 //!   owns a [`crate::kvpool::KvPool`]: requests are admitted only when
 //!   their pages fit the modeled DDR KV budget, decode rounds interleave
 //!   round-robin across residents, and pool exhaustion triggers the
 //!   configured eviction policy (evict-and-recompute or cap-in-place).
+//! * [`events`] — the continuous event-driven serving core: a
+//!   virtual-clock event queue over arrivals, per-layer prefill
+//!   completions, decode steps, PCAP swap start/finish, and KV-pool
+//!   evictions, with swap-scheduling policies
+//!   ([`crate::reconfig::SwapPolicy`]) arbitrating the single
+//!   reconfigurable attention slot under mixed traffic (our serving
+//!   extension; `EagerSwap` reproduces the paper's behavior).
 //! * [`live`] — the same coordinator logic driving *real* PJRT execution
 //!   of the AOT artifacts (tokens are real; FPGA timing is reported from
 //!   the simulator running in lockstep). Requires the `pjrt` cargo
 //!   feature (and an XLA installation).
 
+pub mod events;
 pub mod fsm;
 #[cfg(feature = "pjrt")]
 pub mod live;
@@ -30,9 +38,12 @@ pub mod request;
 pub mod scheduler;
 pub mod sim_server;
 
+pub use events::{EventQueue, EventRecord, EventServer, EventServerConfig, SimEvent};
 pub use fsm::{Phase, PhaseFsm};
 #[cfg(feature = "pjrt")]
 pub use live::{LiveServer, LiveServerConfig};
-pub use request::{Request, RequestOutcome, WorkloadConfig, generate_workload};
+pub use request::{
+    generate_workload, Request, RequestOutcome, requests_from_trace, WorkloadConfig,
+};
 pub use scheduler::{Policy, Scheduler};
 pub use sim_server::{SimServer, SimServerConfig};

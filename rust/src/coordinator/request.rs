@@ -14,18 +14,22 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Arrival time (seconds since workload start).
     pub arrival: f64,
+    /// Times this request has been preempted back into the queue
+    /// (KV-pool eviction). Drives the scheduler's age-based fairness
+    /// tiebreak: see [`super::Scheduler::requeue_front`].
+    pub requeues: u32,
 }
 
 impl Request {
     /// Simulator-side request (length only).
     pub fn synthetic(id: u64, prompt_len: usize, max_new_tokens: usize, arrival: f64) -> Self {
-        Self { id, prompt: Vec::new(), prompt_len, max_new_tokens, arrival }
+        Self { id, prompt: Vec::new(), prompt_len, max_new_tokens, arrival, requeues: 0 }
     }
 
     /// Live request with real token ids.
     pub fn with_tokens(id: u64, prompt: Vec<i32>, max_new_tokens: usize, arrival: f64) -> Self {
         let prompt_len = prompt.len();
-        Self { id, prompt, prompt_len, max_new_tokens, arrival }
+        Self { id, prompt, prompt_len, max_new_tokens, arrival, requeues: 0 }
     }
 }
 
@@ -71,6 +75,17 @@ impl Default for WorkloadConfig {
             vocab: 0,
         }
     }
+}
+
+/// Lift [`crate::model::TraceEntry`]s (the layer-agnostic trace
+/// generator's output) into coordinator [`Request`]s, ids in arrival
+/// order.
+pub fn requests_from_trace(entries: &[crate::model::TraceEntry]) -> Vec<Request> {
+    entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| Request::synthetic(i as u64, e.prompt_len, e.gen_len, e.arrival))
+        .collect()
 }
 
 /// Generate a Poisson-arrival workload.

@@ -62,6 +62,21 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Head of the queue (the next request strict FIFO would serve).
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    /// `(count, total prompt tokens)` of queued requests that have
+    /// already arrived at `now` — the prefill-side backlog the swap
+    /// policies weigh against interrupting decode.
+    pub fn arrived_backlog(&self, now: f64) -> (usize, usize) {
+        self.queue
+            .iter()
+            .filter(|r| r.arrival <= now + 1e-12)
+            .fold((0, 0), |(n, t), r| (n + 1, t + r.prompt_len))
+    }
+
     /// Earliest arrival among queued requests (for clock advancement).
     pub fn next_arrival(&self) -> Option<f64> {
         self.queue.iter().map(|r| r.arrival).fold(None, |acc, a| {
@@ -105,11 +120,29 @@ impl Scheduler {
         batch
     }
 
-    /// Preemption hook: an evicted request goes back to the queue front
-    /// so it is re-served (and re-prefilled) before newer arrivals.
-    pub fn requeue_front(&mut self, r: Request) {
+    /// Preemption hook: an evicted request goes back toward the queue
+    /// front so it is re-served (and re-prefilled) promptly — with an
+    /// age-based fairness tiebreak. A first preemption returns to the
+    /// very front (the recompute tax should not also pay a full queueing
+    /// delay), but a request preempted `k` times yields `k−1` positions
+    /// to the waiters it has already delayed, and never jumps ahead of a
+    /// request that arrived before it did. Without this, a long-context
+    /// decode that keeps losing its KV reservation parks at the head
+    /// forever and — because batch extraction is strict FIFO — starves
+    /// every newly arrived prefill behind it.
+    pub fn requeue_front(&mut self, mut r: Request) {
         self.requeued += 1;
-        self.queue.push_front(r);
+        r.requeues += 1;
+        // Insert after the LAST strictly-older entry (earlier yields may
+        // have interleaved younger requests ahead of older ones, so a
+        // prefix scan would undercount).
+        let older = self
+            .queue
+            .iter()
+            .rposition(|q| q.arrival < r.arrival)
+            .map_or(0, |i| i + 1);
+        let yielded = (r.requeues as usize - 1).min(self.queue.len());
+        self.queue.insert(older.max(yielded).min(self.queue.len()), r);
     }
 
     /// True when nothing is queued.
@@ -199,6 +232,48 @@ mod tests {
         assert_eq!(s.requeued, 1);
         assert_eq!(s.dispatched, 4, "request 1 dispatched twice");
         assert_eq!(s.dispatched, s.admitted + s.requeued);
+    }
+
+    #[test]
+    fn repeated_requeue_yields_to_waiters() {
+        let mut s = Scheduler::new(Policy::SwapPerRequest);
+        s.admit(req(0, 0.0)); // long-context request, will thrash
+        s.admit(req(1, 0.1));
+        s.admit(req(2, 0.2));
+        // First preemption: straight back to the front.
+        let long = s.next_batch(1.0).pop().unwrap();
+        s.requeue_front(long);
+        let long = s.next_batch(1.0).pop().unwrap();
+        assert_eq!(long.id, 0);
+        // Second preemption: yields one position — request 1 now runs
+        // before the thrashing request.
+        s.requeue_front(long);
+        assert_eq!(s.next_batch(1.0).pop().unwrap().id, 1);
+        let long = s.next_batch(1.0).pop().unwrap();
+        assert_eq!(long.id, 0);
+        // Third preemption: yields two positions, but only one waiter is
+        // left, so it lands at the back.
+        s.requeue_front(long);
+        assert_eq!(s.next_batch(1.0).pop().unwrap().id, 2);
+        assert_eq!(s.next_batch(1.0).pop().unwrap().id, 0);
+        assert!(s.is_empty());
+        assert_eq!(s.dispatched, s.admitted + s.requeued);
+    }
+
+    #[test]
+    fn requeue_never_jumps_older_arrivals() {
+        let mut s = Scheduler::new(Policy::BatchedPhases { max_batch: 8 });
+        s.admit(req(0, 0.0));
+        s.admit(req(1, 5.0));
+        let batch = s.next_batch(10.0);
+        assert_eq!(batch.len(), 2);
+        // Both preempted, oldest first: 0 goes back to the front, and 1
+        // — though preempted for the first time — must not cut ahead of
+        // the older request 0.
+        s.requeue_front(batch[0].clone());
+        s.requeue_front(batch[1].clone());
+        let order: Vec<u64> = s.next_batch(10.0).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1]);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Event-driven serving simulation on the modeled KV260.
+//! Phase-batch serving simulation on the modeled KV260 — the paper's
+//! round-synchronous flow.
 //!
 //! Drives the full stack — scheduler → KV pool → FSM → swap controller →
 //! phase latency model — over a workload, with a simulated clock. This is
@@ -6,6 +7,16 @@
 //! runs a PD-Swap device (DPR + overlap), a PD-Swap device without
 //! overlap, or a static baseline (no swaps at all), selected by
 //! configuration.
+//!
+//! Time advances in *phase-batch rounds* (prefill the batch, swap once,
+//! decode the batch to completion), which is faithful to the paper's
+//! evaluation but cannot represent arrivals landing mid-decode. For
+//! *continuous mixed traffic* — swap-policy arbitration, per-layer
+//! prefill progress, wall inter-token latency — use the event-driven
+//! core in [`super::events::EventServer`]; this module remains the
+//! batch-synchronous reference the paper figures are reproduced on, and
+//! shares its per-request bookkeeping ([`super::events::InFlight`]) with
+//! that engine.
 //!
 //! Multi-request serving (our extension beyond the paper's single-request
 //! flow) is KV-capacity aware: every batch member holds a page
@@ -27,6 +38,7 @@ use crate::metrics::ServerMetrics;
 use crate::model::ModelShape;
 use crate::reconfig::{OverlapScheduler, SwapController, RM_PREFILL};
 
+use super::events::InFlight;
 use super::fsm::PhaseFsm;
 use super::request::{Request, RequestOutcome};
 use super::scheduler::{Policy, Scheduler};
@@ -67,29 +79,6 @@ impl SimServerConfig {
             overlap: false,
             pool,
         }
-    }
-}
-
-/// One batch member mid-decode.
-struct InFlight {
-    req: Request,
-    /// Tokens currently in the KV cache.
-    ctx: usize,
-    /// Tokens generated so far this serve attempt.
-    tokens: usize,
-    /// When this request's prefill finished (absolute sim time).
-    prefill_done: f64,
-    /// Admission-capped token ceiling for this reservation.
-    token_cap: usize,
-}
-
-impl InFlight {
-    /// Generation finished: token budget spent, graph capacity reached,
-    /// or reservation cap hit.
-    fn done(&self, max_seq: usize) -> bool {
-        self.tokens >= self.req.max_new_tokens
-            || self.ctx >= max_seq
-            || self.ctx >= self.token_cap
     }
 }
 
@@ -282,8 +271,7 @@ impl SimServer {
             .zip(prefill_done)
             .map(|(req, prefill_done)| {
                 let token_cap = self.kv_pool.token_cap(req.id).unwrap_or(shape.max_seq);
-                let ctx = req.prompt_len.min(token_cap);
-                InFlight { req, ctx, tokens: 0, prefill_done, token_cap }
+                InFlight::new(req, prefill_done, token_cap)
             })
             .collect();
 
@@ -325,7 +313,9 @@ impl SimServer {
                                 v != id && !self.evicted_once.contains(&v)
                             });
                             let Some(vid) = victim else { break false };
-                            self.kv_pool.evict(vid).map_err(|e| anyhow::anyhow!("{e}"))?;
+                            self.kv_pool
+                                .evict_at(vid, self.clock)
+                                .map_err(|e| anyhow::anyhow!("{e}"))?;
                             self.evicted_once.insert(vid);
                             let j = active
                                 .iter()

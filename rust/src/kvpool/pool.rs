@@ -141,6 +141,9 @@ pub enum PoolError {
     Exhausted { id: u64, tokens: usize },
 }
 
+/// Bound on the timestamped eviction log (diagnostics, not accounting).
+const EVICTION_LOG_CAP: usize = 4096;
+
 /// The paged KV-cache pool.
 #[derive(Debug, Clone)]
 pub struct KvPool {
@@ -148,11 +151,21 @@ pub struct KvPool {
     residents: BTreeMap<u64, Reservation>,
     reserved_total: usize,
     pub stats: PoolStats,
+    /// Timestamped `(when, victim)` eviction records, bounded at
+    /// [`EVICTION_LOG_CAP`] — the serving simulators surface these as
+    /// timeline events.
+    pub eviction_log: Vec<(f64, u64)>,
 }
 
 impl KvPool {
     pub fn new(cfg: KvPoolConfig) -> Self {
-        Self { cfg, residents: BTreeMap::new(), reserved_total: 0, stats: PoolStats::default() }
+        Self {
+            cfg,
+            residents: BTreeMap::new(),
+            reserved_total: 0,
+            stats: PoolStats::default(),
+            eviction_log: Vec::new(),
+        }
     }
 
     pub fn config(&self) -> &KvPoolConfig {
@@ -390,6 +403,17 @@ impl KvPool {
         Ok(freed)
     }
 
+    /// [`Self::evict`] with a simulation timestamp: additionally records
+    /// `(now, id)` on [`Self::eviction_log`] so the serving simulators
+    /// can surface the preemption as a timeline event.
+    pub fn evict_at(&mut self, id: u64, now: f64) -> Result<usize, PoolError> {
+        let freed = self.evict(id)?;
+        if self.eviction_log.len() < EVICTION_LOG_CAP {
+            self.eviction_log.push((now, id));
+        }
+        Ok(freed)
+    }
+
     /// Verify the pool's conservation invariants (property-test hook).
     pub fn check_invariants(&self) -> Result<(), String> {
         let sum_reserved: usize = self.residents.values().map(|r| r.reserved).sum();
@@ -546,8 +570,9 @@ mod tests {
         }
         assert_eq!(p.lru_victim(|_| true), Some(2));
         assert_eq!(p.lru_victim(|id| id != 2), Some(1));
-        p.evict(2).unwrap();
+        p.evict_at(2, 6.0).unwrap();
         assert_eq!(p.stats.evicted, 1);
+        assert_eq!(p.eviction_log, vec![(6.0, 2)]);
         p.check_invariants().unwrap();
     }
 

@@ -12,7 +12,10 @@
 
 use anyhow::{bail, Result};
 
-use pd_swap::coordinator::{generate_workload, Policy, SimServer, SimServerConfig, WorkloadConfig};
+use pd_swap::coordinator::{
+    generate_workload, requests_from_trace, EventServer, EventServerConfig, Policy, SimServer,
+    SimServerConfig, WorkloadConfig,
+};
 #[cfg(feature = "pjrt")]
 use pd_swap::coordinator::{LiveServer, LiveServerConfig};
 use pd_swap::dse::{explore, DseConfig};
@@ -20,7 +23,8 @@ use pd_swap::engines::{AcceleratorDesign, AttentionHosting};
 use pd_swap::eval;
 use pd_swap::fpga::KV260;
 use pd_swap::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
-use pd_swap::model::BITNET_0_73B;
+use pd_swap::model::{TraceSpec, BITNET_0_73B};
+use pd_swap::reconfig::SwapPolicy;
 #[cfg(feature = "pjrt")]
 use pd_swap::runtime::{SamplerConfig, SamplingMode};
 use pd_swap::util::cli::Args;
@@ -51,7 +55,10 @@ USAGE:
   pd-swap generate --artifacts DIR --prompt 1,2,3 [--n 16] [--temperature F] [--top-k K]
   pd-swap serve --artifacts DIR [--requests 8] [--gen 32] [--seed 0]
   pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]
-                   [--pool-pages N] [--optimistic] [--evict]";
+                   [--pool-pages N] [--optimistic] [--evict]
+  pd-swap simulate --policy <eager|hysteresis|lookahead>   (event-driven core)
+                   [--trace interactive|mixed|bursty] [--rate R] [--long-ctx N]
+                   [--requests N] [--seed S] [--max-residents N] [--log]";
 
 fn info() -> Result<()> {
     let design = AcceleratorDesign::pd_swap();
@@ -257,7 +264,80 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Continuous event-driven serving with a swap-scheduling policy
+/// (`--policy eager|hysteresis|lookahead`).
+fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
+    let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+    if args.flag("no-overlap") {
+        cfg.overlap = false;
+    }
+    cfg.max_residents = args.get_usize("max-residents", cfg.max_residents);
+    let pool = cfg.pool.clone();
+    let pool = pool.with_total_pages(args.get_usize("pool-pages", pool.total_pages));
+    let admission = if args.flag("optimistic") {
+        AdmissionControl::Optimistic
+    } else {
+        AdmissionControl::WorstCase
+    };
+    let eviction = if args.flag("evict") {
+        EvictionPolicy::EvictAndRecompute
+    } else {
+        EvictionPolicy::KeepResident
+    };
+    cfg.pool = pool.with_policies(admission, eviction);
+
+    let n = args.get_usize("requests", 16);
+    let seed = args.get_u64("seed", 0);
+    let rate = args.get_f64("rate", 0.05);
+    let spec = match args.get_or("trace", "interactive") {
+        "interactive" => TraceSpec::interactive(n, rate, seed),
+        "mixed" => TraceSpec::mixed_long_context(
+            n,
+            rate,
+            args.get_usize("long-ctx", BITNET_0_73B.max_seq),
+            seed,
+        ),
+        "bursty" => TraceSpec::bursty(n, seed),
+        other => bail!("unknown trace '{other}' (try interactive|mixed|bursty)"),
+    };
+    let entries = spec.generate();
+    println!(
+        "simulating {} requests on the event-driven core: {} trace ({:.1} offered tok/s), {} policy",
+        entries.len(),
+        args.get_or("trace", "interactive"),
+        TraceSpec::offered_tokens_per_sec(&entries),
+        policy.name(),
+    );
+    let mut server = EventServer::new(cfg)?;
+    server.run(requests_from_trace(&entries))?;
+    println!("{}", server.metrics.report());
+    println!(
+        "makespan {:.1} s -> {:.2} tok/s end-to-end, decode throughput {:.2} tok/s (wall TPOT)",
+        server.clock(),
+        server.metrics.tokens_generated.get() as f64 / server.clock().max(1e-9),
+        server.metrics.decode_throughput(),
+    );
+    if args.flag("log") {
+        println!("\nevent timeline ({} records):", server.event_log().len());
+        for r in server.event_log() {
+            println!("  {:>12.6}s  {:<18} #{}", r.at, r.kind, r.subject);
+        }
+    }
+    Ok(())
+}
+
 fn simulate(args: &Args) -> Result<()> {
+    let policy_name = args.get_or("policy", "per-request");
+    if let Some(policy) = SwapPolicy::from_name(policy_name) {
+        return simulate_events(args, policy);
+    }
+    if !matches!(policy_name, "per-request" | "batched") {
+        bail!(
+            "unknown --policy '{policy_name}' \
+             (try per-request|batched for the phase-batch engine, \
+             eager|hysteresis|lookahead for the event-driven core)"
+        );
+    }
     let mut cfg = if args.flag("static") {
         SimServerConfig::tellme_static(BITNET_0_73B, KV260.clone())
     } else {

@@ -41,11 +41,16 @@ impl Peak {
     }
 }
 
-/// Log-bucketed latency histogram (microseconds, factor-of-2 buckets from
-/// 1 µs to ~1.2 hours) with exact min/max/mean tracking.
+/// Latency histogram: log-bucketed (microseconds, factor-of-2 buckets
+/// from 1 µs to ~1.2 hours) with exact min/max/mean tracking, plus an
+/// exact-sample reservoir so p50/p95/p99 are exact for runs up to
+/// [`SAMPLE_CAP`] observations (every simulation in this crate) and
+/// bucket-approximate beyond that.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     buckets: Vec<u64>,
+    /// First `SAMPLE_CAP` raw observations (exact quantiles).
+    samples: Vec<f64>,
     count: u64,
     sum: f64,
     min: f64,
@@ -54,10 +59,14 @@ pub struct Histogram {
 
 const N_BUCKETS: usize = 32;
 
+/// Exact-quantile reservoir bound (512 KiB of f64 at the cap).
+pub const SAMPLE_CAP: usize = 1 << 16;
+
 impl Default for Histogram {
     fn default() -> Self {
         Self {
             buckets: vec![0; N_BUCKETS],
+            samples: Vec::new(),
             count: 0,
             sum: 0.0,
             min: f64::INFINITY,
@@ -79,6 +88,9 @@ impl Histogram {
 
     pub fn record(&mut self, seconds: f64) {
         self.buckets[Self::bucket_of(seconds)] += 1;
+        if self.samples.len() < SAMPLE_CAP {
+            self.samples.push(seconds);
+        }
         self.count += 1;
         self.sum += seconds;
         self.min = self.min.min(seconds);
@@ -105,12 +117,36 @@ impl Histogram {
         if self.count == 0 { 0.0 } else { self.max }
     }
 
-    /// Approximate quantile from bucket edges (upper bound of the bucket
-    /// containing the q-th sample).
+    /// Quantile of the recorded distribution: exact while every
+    /// observation is in the sample reservoir, otherwise approximate
+    /// from bucket edges. For several quantiles at once use
+    /// [`Self::quantiles`], which sorts the reservoir a single time.
     pub fn quantile(&self, q: f64) -> f64 {
+        self.quantiles(&[q])[0]
+    }
+
+    /// Batch quantiles with one sort of the sample reservoir.
+    pub fn quantiles(&self, qs: &[f64]) -> Vec<f64> {
         if self.count == 0 {
-            return 0.0;
+            return vec![0.0; qs.len()];
         }
+        if self.count as usize <= self.samples.len() {
+            let mut xs = self.samples.clone();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return qs
+                .iter()
+                .map(|q| {
+                    let rank = (q.clamp(0.0, 1.0) * xs.len() as f64).ceil() as usize;
+                    xs[rank.max(1).min(xs.len()) - 1]
+                })
+                .collect();
+        }
+        qs.iter().map(|&q| self.bucket_quantile(q)).collect()
+    }
+
+    /// Bucket-edge estimate (upper bound of the bucket containing the
+    /// q-th sample) — the over-reservoir fallback.
+    fn bucket_quantile(&self, q: f64) -> f64 {
         let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
         let mut seen = 0;
         for (i, &n) in self.buckets.iter().enumerate() {
@@ -121,18 +157,34 @@ impl Histogram {
         }
         self.max
     }
+
+    /// `{count, mean, p50, p95, p99, max}` as a JSON object — the shape
+    /// the `BENCH_*.json` regression reports use for latency series.
+    pub fn summary_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let ps = self.quantiles(&[0.50, 0.95, 0.99]);
+        Value::Obj(vec![
+            ("count".into(), Value::Num(self.count as f64)),
+            ("mean_s".into(), Value::Num(self.mean())),
+            ("p50_s".into(), Value::Num(ps[0])),
+            ("p95_s".into(), Value::Num(ps[1])),
+            ("p99_s".into(), Value::Num(ps[2])),
+            ("max_s".into(), Value::Num(self.max())),
+        ])
+    }
 }
 
 impl fmt::Display for Histogram {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ps = self.quantiles(&[0.50, 0.95, 0.99]);
         write!(
             f,
             "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
             self.count,
             self.mean() * 1e3,
-            self.quantile(0.50) * 1e3,
-            self.quantile(0.95) * 1e3,
-            self.quantile(0.99) * 1e3,
+            ps[0] * 1e3,
+            ps[1] * 1e3,
+            ps[2] * 1e3,
             self.max() * 1e3
         )
     }
@@ -144,6 +196,11 @@ pub struct ServerMetrics {
     pub requests_completed: Counter,
     pub tokens_generated: Counter,
     pub reconfigurations: Counter,
+    /// Reconfigurations loading the prefill RM (continuous serving only;
+    /// `reconfigurations` is the sum of both directions).
+    pub swaps_to_prefill: Counter,
+    /// Reconfigurations loading the decode RM.
+    pub swaps_to_decode: Counter,
     /// Time-to-first-token per request.
     pub ttft: Histogram,
     /// Per-token decode latency.
@@ -166,10 +223,12 @@ pub struct ServerMetrics {
 impl ServerMetrics {
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} swaps={}\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {}\n  kv-pool: high-water {} pages, evictions {}, capped admissions {}, recompute {:.1} ms total",
+            "requests={} tokens={} swaps={} (to-prefill {}, to-decode {})\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {}\n  kv-pool: high-water {} pages, evictions {}, capped admissions {}, recompute {:.1} ms total",
             self.requests_completed.get(),
             self.tokens_generated.get(),
             self.reconfigurations.get(),
+            self.swaps_to_prefill.get(),
+            self.swaps_to_decode.get(),
             self.ttft,
             self.tpot,
             self.e2e,
@@ -238,6 +297,43 @@ mod tests {
             assert!(v >= last, "q={q}");
             last = v;
         }
+    }
+
+    #[test]
+    fn quantiles_are_exact_within_reservoir() {
+        let mut h = Histogram::default();
+        // 100 samples 1..=100 ms: exact p50 = 50 ms, p95 = 95 ms,
+        // p99 = 99 ms — a log-bucketed estimate could only answer with a
+        // power-of-two edge.
+        for ms in 1..=100 {
+            h.record(ms as f64 / 1e3);
+        }
+        assert_eq!(h.quantile(0.50), 0.050);
+        assert_eq!(h.quantile(0.95), 0.095);
+        assert_eq!(h.quantile(0.99), 0.099);
+        assert_eq!(h.quantile(1.0), 0.100);
+        assert_eq!(h.quantile(0.0), 0.001);
+    }
+
+    #[test]
+    fn summary_json_has_percentile_keys() {
+        let mut h = Histogram::default();
+        h.record(0.004);
+        h.record(0.008);
+        let v = h.summary_json();
+        assert_eq!(v.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("p50_s").unwrap().as_f64(), Some(0.004));
+        assert_eq!(v.get("p99_s").unwrap().as_f64(), Some(0.008));
+        assert!(v.get("mean_s").is_some() && v.get("max_s").is_some());
+    }
+
+    #[test]
+    fn report_includes_swap_directions() {
+        let mut m = ServerMetrics::default();
+        m.swaps_to_prefill.add(3);
+        m.swaps_to_decode.add(4);
+        m.reconfigurations.add(7);
+        assert!(m.report().contains("(to-prefill 3, to-decode 4)"));
     }
 
     #[test]

@@ -9,4 +9,7 @@ pub mod shapes;
 pub mod workload;
 
 pub use shapes::{ModelShape, Precision, BITNET_0_73B, E2E_100M, TEST, TINY};
-pub use workload::{ComponentOps, DecodeStepWork, PhaseWork, PrefillWork};
+pub use workload::{
+    ArrivalPattern, ComponentOps, DecodeStepWork, LengthClass, PhaseWork, PrefillWork,
+    TraceEntry, TraceSpec,
+};

@@ -1,4 +1,5 @@
-//! Per-phase op and byte accounting (the numerators of Eqs. 3 and 5).
+//! Per-phase op and byte accounting (the numerators of Eqs. 3 and 5),
+//! plus trace-driven workload specification for the serving simulators.
 //!
 //! Counts MAC operations and DDR bytes for each pipeline component so the
 //! engine latency models and the roofline analysis share one source of
@@ -9,6 +10,16 @@
 //!   fit in URAM at 0.73B scale — URAM holds the working set / LUT tables);
 //! * KV cache: fp16 in DDR, read in full every decode step, written one
 //!   token per step.
+//!
+//! The trace half ([`TraceSpec`]) describes *arrival processes* — Poisson
+//! rates, on/off burst patterns, context-length mixtures — as plain
+//! `(arrival, prompt_len, gen_len)` entries, deliberately below the
+//! coordinator layer so the event-driven server, the benches, and the CLI
+//! all draw from one generator
+//! ([`crate::coordinator::requests_from_trace`] lifts entries into
+//! requests).
+
+use crate::util::rng::Rng;
 
 use super::shapes::ModelShape;
 
@@ -149,6 +160,181 @@ impl PhaseWork for DecodeStepWork {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Trace-driven workload specification (serving extension, not in the paper)
+// ---------------------------------------------------------------------------
+
+/// How requests arrive over virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Memoryless arrivals at a constant mean rate (req/s).
+    Poisson { rate: f64 },
+    /// On/off (interrupted Poisson) bursts: `burst_rate` for the first
+    /// `on_secs` of every `period_secs`, `base_rate` for the rest — the
+    /// "several short requests land together" regime §3.4 worries about.
+    Bursty {
+        base_rate: f64,
+        burst_rate: f64,
+        on_secs: f64,
+        period_secs: f64,
+    },
+}
+
+impl ArrivalPattern {
+    /// Instantaneous rate at time `t` (for thinning).
+    fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalPattern::Poisson { rate } => rate,
+            ArrivalPattern::Bursty { base_rate, burst_rate, on_secs, period_secs } => {
+                if period_secs <= 0.0 {
+                    return base_rate;
+                }
+                if t.rem_euclid(period_secs) < on_secs {
+                    burst_rate
+                } else {
+                    base_rate
+                }
+            }
+        }
+    }
+
+    /// Upper bound of the rate function (thinning envelope).
+    fn rate_max(&self) -> f64 {
+        match *self {
+            ArrivalPattern::Poisson { rate } => rate,
+            ArrivalPattern::Bursty { base_rate, burst_rate, .. } => base_rate.max(burst_rate),
+        }
+    }
+}
+
+/// One component of the context-length mixture.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthClass {
+    /// Relative weight (need not be normalized).
+    pub weight: f64,
+    /// Prompt length range, sampled log-uniformly (short prompts common,
+    /// long ones present).
+    pub prompt: (usize, usize),
+    /// Generation length range, sampled uniformly.
+    pub gen: (usize, usize),
+}
+
+/// One generated trace entry: what arrives, when, and how big.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEntry {
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// Index into the spec's mixture (for per-class reporting).
+    pub class: usize,
+}
+
+/// A trace-driven workload: an arrival process plus a context-length
+/// mixture. Generation is deterministic in the seed.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub n_requests: usize,
+    pub arrivals: ArrivalPattern,
+    pub mixture: Vec<LengthClass>,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// Interactive edge-assistant traffic: short prompts, short answers.
+    pub fn interactive(n_requests: usize, rate: f64, seed: u64) -> Self {
+        Self {
+            n_requests,
+            arrivals: ArrivalPattern::Poisson { rate },
+            mixture: vec![LengthClass { weight: 1.0, prompt: (32, 512), gen: (16, 128) }],
+            seed,
+        }
+    }
+
+    /// Mixed continuous traffic at long context: mostly interactive
+    /// requests with a long-context analytics class whose prompt+gen
+    /// reaches `long_ctx` tokens — the regime where swap-policy choice
+    /// (hysteresis/lookahead vs. eager) matters.
+    pub fn mixed_long_context(n_requests: usize, rate: f64, long_ctx: usize, seed: u64) -> Self {
+        let long_hi = long_ctx.saturating_sub(256).max(1024);
+        Self {
+            n_requests,
+            arrivals: ArrivalPattern::Poisson { rate },
+            mixture: vec![
+                LengthClass { weight: 0.75, prompt: (64, 512), gen: (16, 96) },
+                LengthClass { weight: 0.25, prompt: (long_hi / 2, long_hi), gen: (64, 256) },
+            ],
+            seed,
+        }
+    }
+
+    /// Bursty short-request traffic (the §3.4 "multiple short-token
+    /// requests" scenario): quiet baseline with periodic arrival storms.
+    pub fn bursty(n_requests: usize, seed: u64) -> Self {
+        Self {
+            n_requests,
+            arrivals: ArrivalPattern::Bursty {
+                base_rate: 0.02,
+                burst_rate: 1.0,
+                on_secs: 20.0,
+                period_secs: 300.0,
+            },
+            mixture: vec![LengthClass { weight: 1.0, prompt: (32, 384), gen: (8, 64) }],
+            seed,
+        }
+    }
+
+    /// Generate the trace: non-homogeneous Poisson arrivals via Lewis
+    /// thinning against the pattern's rate envelope, lengths drawn from
+    /// the mixture. Entries are sorted by arrival.
+    pub fn generate(&self) -> Vec<TraceEntry> {
+        assert!(!self.mixture.is_empty(), "trace needs at least one length class");
+        assert!(
+            self.arrivals.rate_max() > 0.0,
+            "arrival pattern has zero peak rate: no request would ever arrive"
+        );
+        let mut rng = Rng::new(self.seed);
+        let envelope = self.arrivals.rate_max();
+        let total_w: f64 = self.mixture.iter().map(|c| c.weight.max(0.0)).sum();
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(self.n_requests);
+        while out.len() < self.n_requests {
+            t += rng.exponential(envelope);
+            // Thinning: keep the candidate with prob rate(t)/envelope.
+            if rng.f64() * envelope > self.arrivals.rate_at(t) {
+                continue;
+            }
+            // Pick a mixture class by weight.
+            let mut pick = rng.f64() * total_w.max(1e-300);
+            let mut class = 0;
+            for (i, c) in self.mixture.iter().enumerate() {
+                pick -= c.weight.max(0.0);
+                if pick <= 0.0 {
+                    class = i;
+                    break;
+                }
+            }
+            let c = &self.mixture[class];
+            let (plo, phi) = c.prompt;
+            let (plo, phi) = (plo.max(1), phi.max(plo.max(1)));
+            let lp = (plo as f64).ln() + rng.f64() * ((phi as f64).ln() - (plo as f64).ln());
+            let prompt_len = (lp.exp().round() as usize).clamp(plo, phi);
+            let (glo, ghi) = c.gen;
+            let gen_len = rng.range(glo.min(ghi), ghi.max(glo));
+            out.push(TraceEntry { arrival: t, prompt_len, gen_len, class });
+        }
+        out
+    }
+
+    /// Mean offered load in tokens (prompt + gen) per second, from the
+    /// generated entries — a quick sanity number for bench headers.
+    pub fn offered_tokens_per_sec(entries: &[TraceEntry]) -> f64 {
+        let Some(last) = entries.last() else { return 0.0 };
+        let span = last.arrival.max(1e-9);
+        let tokens: usize = entries.iter().map(|e| e.prompt_len + e.gen_len).sum();
+        tokens as f64 / span
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +392,64 @@ mod tests {
             .add(&w.attention())
             .add(&w.norm_elementwise());
         assert_eq!(t, s);
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let spec = TraceSpec::mixed_long_context(64, 0.1, 16 * 1024, 7);
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.gen_len, y.gen_len);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn mixture_respects_class_ranges() {
+        let spec = TraceSpec::mixed_long_context(256, 0.5, 16 * 1024, 3);
+        let entries = spec.generate();
+        let mut long_seen = 0;
+        for e in &entries {
+            let c = &spec.mixture[e.class];
+            assert!((c.prompt.0..=c.prompt.1).contains(&e.prompt_len), "prompt {e:?}");
+            assert!((c.gen.0..=c.gen.1).contains(&e.gen_len), "gen {e:?}");
+            if e.class == 1 {
+                long_seen += 1;
+                assert!(e.prompt_len >= (16 * 1024 - 256) / 2);
+            }
+        }
+        // ~25% weight: both classes must actually appear.
+        assert!(long_seen > 16 && long_seen < 128, "long class count {long_seen}");
+    }
+
+    #[test]
+    fn poisson_rate_roughly_holds() {
+        let spec = TraceSpec::interactive(400, 2.0, 11);
+        let entries = spec.generate();
+        let span = entries.last().unwrap().arrival;
+        let rate = entries.len() as f64 / span;
+        assert!((1.6..2.4).contains(&rate), "empirical rate {rate:.2}");
+    }
+
+    #[test]
+    fn bursty_trace_clusters_arrivals() {
+        let spec = TraceSpec::bursty(200, 5);
+        let entries = spec.generate();
+        // Inter-arrival CV² well above 1 distinguishes the on/off process
+        // from plain Poisson (CV² ≈ 1).
+        let gaps: Vec<f64> =
+            entries.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 1.5, "cv² {cv2:.2} — arrivals not bursty");
+        assert!(TraceSpec::offered_tokens_per_sec(&entries) > 0.0);
     }
 }

@@ -18,6 +18,10 @@ use crate::engines::PhaseModel;
 use crate::fpga::FpgaDevice;
 use crate::model::ModelShape;
 
+pub mod policy;
+
+pub use policy::{round_trip_exposed, SwapOutlook, SwapPolicy};
+
 /// Names of the two attention RMs (shared with `AcceleratorDesign`).
 pub const RM_PREFILL: &str = "attn-prefill";
 pub const RM_DECODE: &str = "attn-decode";
@@ -175,6 +179,79 @@ mod tests {
         let t = s.overlapped(&BITNET_0_73B, 2048);
         assert!(t.exposed == 0.0, "exposed {:.1} ms", t.exposed * 1e3);
         assert!((t.hidden_fraction - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_longer_than_reconfig_is_fully_hidden() {
+        // Edge case: once the §3.4 tail alone exceeds the PCAP load, the
+        // swap must be *entirely* free — decode-ready co-incides with
+        // prefill end and the exposed term is exactly zero, not merely
+        // small (downstream accounting records it in histograms, so a
+        // tiny negative or epsilon value would poison means).
+        let s = scheduler();
+        for l in [1024, 2048] {
+            let t = s.overlapped(&BITNET_0_73B, l);
+            assert!(t.tail > t.reconfig, "L={l}: tail {:.1} ms", t.tail * 1e3);
+            assert_eq!(t.exposed, 0.0, "L={l}");
+            assert_eq!(t.decode_ready, t.prefill_end, "L={l}");
+            assert!((t.hidden_fraction - 1.0).abs() < 1e-12, "L={l}");
+        }
+    }
+
+    #[test]
+    fn single_layer_model_keeps_trigger_before_prefill_end() {
+        // Degenerate 1-layer shape: the "final layer" is the only layer,
+        // so the trigger is the whole prefill minus that one layer's
+        // post-attention tail. The timeline invariants must survive:
+        // 0 ≤ trigger ≤ prefill_end and exposed ∈ [0, reconfig].
+        let mut shape = BITNET_0_73B;
+        shape.n_layers = 1;
+        let s = scheduler();
+        for l in [1, 16, 128, 2048] {
+            let t = s.overlapped(&shape, l);
+            assert!(t.trigger >= 0.0, "L={l}: trigger {:.4}", t.trigger);
+            assert!(t.trigger <= t.prefill_end + 1e-12, "L={l}");
+            assert!((0.0..=t.reconfig + 1e-12).contains(&t.exposed), "L={l}");
+            assert!(t.decode_ready >= t.prefill_end, "L={l}");
+            // The sequential baseline's trigger IS prefill end.
+            let q = s.sequential(&shape, l);
+            assert_eq!(q.trigger, q.prefill_end, "L={l}");
+            assert!(t.decode_ready <= q.decode_ready + 1e-12, "L={l}");
+        }
+    }
+
+    #[test]
+    fn tiny_prompt_exposes_most_of_the_reconfig() {
+        // L=1 prefill has an almost-zero tail: the overlap mechanism
+        // degrades gracefully toward the sequential cost instead of
+        // underflowing.
+        let s = scheduler();
+        let t = s.overlapped(&BITNET_0_73B, 1);
+        assert!(t.tail < t.reconfig);
+        assert!(t.exposed > 0.0 && t.exposed <= t.reconfig + 1e-12);
+        assert!((t.exposed - (t.reconfig - t.tail)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_token_decode_pays_the_swap_but_no_steps() {
+        // A request with max_new_tokens = 0 still triggers the decode
+        // swap under the paper's flow (the controller cannot know the
+        // generation is empty before sampling); the timeline is valid
+        // and the decode span contributes nothing.
+        let design = AcceleratorDesign::pd_swap();
+        let device = design.program(&KV260).unwrap();
+        let lat = device.reconfig_latency();
+        let model = PhaseModel::new(design, KV260.clone());
+        assert_eq!(model.decode_span(&BITNET_0_73B, 64, 0), 0.0);
+        let s = OverlapScheduler::new(model, lat);
+        let t = s.overlapped(&BITNET_0_73B, 64);
+        let mut ctl = SwapController::new(device);
+        let t0 = ctl.ensure_prefill(0.0).unwrap();
+        let ready = ctl.trigger_decode_swap(t0 + t.trigger).unwrap();
+        let admit = ctl.decode_admissible_at(t0 + t.prefill_end, ready);
+        assert!(admit >= t0 + t.prefill_end);
+        // e2e for the zero-token request = prefill + exposed swap only.
+        assert!((admit - t0 - t.prefill_end - t.exposed).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Swap-scheduling policies for continuous serving under DPR.
+//!
+//! **What is the paper's and what is ours:** the paper's controller
+//! (§3.2.1/§3.4) serves one request at a time, so its only policy is
+//! [`SwapPolicy::Eager`] — trigger the decode swap the moment the final
+//! layer's prefill attention finishes (the early trigger of Fig. 5) and
+//! swap back to prefill as soon as the next request wants the fabric.
+//! Under *continuous mixed traffic* that eagerness thrashes the PCAP:
+//! every arrival interrupts decode for a full swap pair (~2×45 ms plus
+//! the latency of the interposed prefill). [`SwapPolicy::Hysteresis`] and
+//! [`SwapPolicy::Lookahead`] are our serving extensions — they decide
+//! *when a swap is worth it*, not how it is overlapped; all three use the
+//! paper's §3.4 early-trigger overlap for the prefill→decode direction
+//! whenever the engine enables it.
+//!
+//! The engine ([`crate::coordinator::events::EventServer`]) consults a
+//! policy at exactly two decision points, passing a [`SwapOutlook`]
+//! snapshot of both phases' backlogs:
+//!
+//! 1. **At the prefill trigger point** (final-layer attention done):
+//!    commit to the decode swap now, or keep the prefill RM and serve
+//!    more queued prompts first?
+//! 2. **Between decode steps**: interrupt decoding to go prefill the
+//!    waiting prompts, or keep generating?
+//!
+//! The engine itself handles the forced cases (nothing to decode → stay
+//! in prefill; nothing to prefill → stay in decode), so policies only
+//! ever arbitrate genuine contention.
+
+use crate::engines::PhaseModel;
+use crate::model::ModelShape;
+
+use super::OverlapScheduler;
+
+/// Snapshot of both phases' pending work at a policy decision point.
+/// All times are estimates from the analytic phase model — the policy is
+/// deciding the future, so exactness is impossible by construction.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapOutlook {
+    /// Arrived-but-not-prefilled requests (admissible or not).
+    pub pending_prefill: usize,
+    /// Sum of their prompt lengths.
+    pub pending_prefill_tokens: usize,
+    /// Estimated time to prefill all of them, seconds.
+    pub est_prefill_time: f64,
+    /// Residents with generation budget left (decode-side backlog).
+    pub decode_ready: usize,
+    /// Sum of their remaining generation tokens.
+    pub decode_pending_tokens: usize,
+    /// Current per-token decode latency estimate, seconds.
+    pub est_decode_step: f64,
+    /// Full PCAP load latency, seconds.
+    pub reconfig_latency: f64,
+    /// Estimated *exposed* reconfiguration cost of a prefill round trip
+    /// (decode→prefill swap is fully exposed; the return swap hides
+    /// behind the §3.4 tail of whatever would be prefilled).
+    pub est_round_trip_exposed: f64,
+}
+
+/// When to move the reconfigurable attention slot between phases.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SwapPolicy {
+    /// The paper's baseline: swap at the final-layer attention trigger
+    /// after every prefill, and yield the fabric to a waiting prompt
+    /// after the very next decode step. One swap pair per request —
+    /// optimal at the paper's single-request workload, pathological
+    /// under continuous arrivals.
+    Eager,
+    /// Phase stickiness: stay in the current phase until the *other*
+    /// phase's backlog crosses a threshold. Avoids bitstream thrash by
+    /// batching phase changes; the thresholds trade TTFT (prompts wait
+    /// longer) for decode throughput (fewer exposed swaps).
+    Hysteresis {
+        /// Swap decode→prefill only once this many prompts wait.
+        prefill_backlog: usize,
+        /// While prefilling, keep the prefill RM until the decode side
+        /// has at least this many tokens pending (then switch).
+        decode_backlog_tokens: usize,
+    },
+    /// Amortization arithmetic: swap decode→prefill only when the
+    /// waiting prefill work is at least `amortize` times the exposed
+    /// round-trip reconfiguration cost (computed with the
+    /// [`OverlapScheduler`]'s §3.4 overlap arithmetic), so the PCAP tax
+    /// is always a bounded fraction of useful work.
+    Lookahead {
+        /// Required ratio of useful prefill work to exposed swap cost.
+        amortize: f64,
+    },
+}
+
+impl SwapPolicy {
+    /// Parse a CLI/bench name.
+    pub fn from_name(name: &str) -> Option<SwapPolicy> {
+        match name {
+            "eager" => Some(SwapPolicy::Eager),
+            "hysteresis" => Some(SwapPolicy::hysteresis_default()),
+            "lookahead" => Some(SwapPolicy::lookahead_default()),
+            _ => None,
+        }
+    }
+
+    /// Hysteresis tuned for edge mixed traffic: leave decode once three
+    /// prompts wait; once prefilling, drain the queue unless the decode
+    /// backlog turns critical (a high valve — returning early would pay
+    /// a whole extra round trip per remaining prompt).
+    pub fn hysteresis_default() -> SwapPolicy {
+        SwapPolicy::Hysteresis { prefill_backlog: 3, decode_backlog_tokens: 4096 }
+    }
+
+    /// Lookahead requiring 8× useful work per exposed swap-second.
+    pub fn lookahead_default() -> SwapPolicy {
+        SwapPolicy::Lookahead { amortize: 8.0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SwapPolicy::Eager => "eager",
+            SwapPolicy::Hysteresis { .. } => "hysteresis",
+            SwapPolicy::Lookahead { .. } => "lookahead",
+        }
+    }
+
+    /// Decision point 1 — prefill trigger: commit to the decode swap now?
+    /// (`false` = keep the prefill RM and serve more prompts first.)
+    /// Only called when decode-side work exists; the engine stays in
+    /// prefill unconditionally when there is nothing to decode.
+    pub fn swap_to_decode_at_trigger(&self, o: &SwapOutlook) -> bool {
+        if o.pending_prefill == 0 {
+            return true; // nothing more to prefill: always go decode
+        }
+        match *self {
+            // Paper flow: one prompt, one swap pair.
+            SwapPolicy::Eager => true,
+            // Keep prefilling until the decode side has real backlog.
+            SwapPolicy::Hysteresis { decode_backlog_tokens, .. } => {
+                o.decode_pending_tokens >= decode_backlog_tokens.max(1)
+            }
+            // Prefilling the next queued prompt now costs only its
+            // prefill; returning for it later costs that prefill PLUS a
+            // swap round trip. So keep draining unless the decode
+            // backlog dwarfs the remaining prefill investment.
+            SwapPolicy::Lookahead { amortize } => {
+                o.decode_pending_tokens as f64 * o.est_decode_step
+                    >= amortize * (o.est_prefill_time + o.est_round_trip_exposed.max(1e-9))
+            }
+        }
+    }
+
+    /// Decision point 2 — between decode steps: interrupt decoding and
+    /// swap to prefill? Only called when prefill-side work exists *and*
+    /// decode work remains; the engine swaps unconditionally when the
+    /// decode set drains.
+    pub fn swap_to_prefill_mid_decode(&self, o: &SwapOutlook) -> bool {
+        match *self {
+            // Any waiting prompt grabs the fabric immediately.
+            SwapPolicy::Eager => o.pending_prefill > 0,
+            SwapPolicy::Hysteresis { prefill_backlog, .. } => {
+                o.pending_prefill >= prefill_backlog.max(1)
+            }
+            SwapPolicy::Lookahead { amortize } => {
+                o.est_prefill_time >= amortize * o.est_round_trip_exposed.max(1e-9)
+            }
+        }
+    }
+}
+
+/// Estimate the exposed cost of a decode→prefill→decode round trip for
+/// [`SwapOutlook::est_round_trip_exposed`]: the outbound swap is fully
+/// exposed (decode work is stalled for the whole PCAP load), while the
+/// return swap overlaps with the §3.4 tail of a representative pending
+/// prompt.
+pub fn round_trip_exposed(
+    ov: &OverlapScheduler,
+    shape: &ModelShape,
+    representative_prompt: usize,
+) -> f64 {
+    let back = ov.overlapped(shape, representative_prompt.max(1)).exposed;
+    ov.reconfig_latency + back
+}
+
+/// Estimated time to prefill `prompt_tokens` spread over `n` prompts
+/// (used for [`SwapOutlook::est_prefill_time`]): models each prompt at
+/// the mean length rather than summing per-prompt calls, so the engine
+/// can compute it in O(1) per decision.
+pub fn est_prefill_time(
+    model: &PhaseModel,
+    shape: &ModelShape,
+    n: usize,
+    prompt_tokens: usize,
+) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let mean = (prompt_tokens / n).max(1);
+    model.prefill(shape, mean).total * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outlook() -> SwapOutlook {
+        SwapOutlook {
+            pending_prefill: 2,
+            pending_prefill_tokens: 512,
+            est_prefill_time: 3.0,
+            decode_ready: 2,
+            decode_pending_tokens: 64,
+            est_decode_step: 0.05,
+            reconfig_latency: 0.045,
+            est_round_trip_exposed: 0.06,
+        }
+    }
+
+    #[test]
+    fn eager_always_swaps() {
+        let o = outlook();
+        assert!(SwapPolicy::Eager.swap_to_decode_at_trigger(&o));
+        assert!(SwapPolicy::Eager.swap_to_prefill_mid_decode(&o));
+        let idle = SwapOutlook { pending_prefill: 0, ..o };
+        assert!(!SwapPolicy::Eager.swap_to_prefill_mid_decode(&idle));
+    }
+
+    #[test]
+    fn hysteresis_sticks_until_backlog() {
+        let p = SwapPolicy::Hysteresis { prefill_backlog: 3, decode_backlog_tokens: 96 };
+        let o = outlook();
+        // 2 waiting prompts < 3: keep decoding.
+        assert!(!p.swap_to_prefill_mid_decode(&o));
+        let deep = SwapOutlook { pending_prefill: 3, ..o };
+        assert!(p.swap_to_prefill_mid_decode(&deep));
+        // Decode backlog 64 < 96: keep prefilling at the trigger.
+        assert!(!p.swap_to_decode_at_trigger(&o));
+        let heavy = SwapOutlook { decode_pending_tokens: 200, ..o };
+        assert!(p.swap_to_decode_at_trigger(&heavy));
+        // Nothing left to prefill: always go decode.
+        let drained = SwapOutlook { pending_prefill: 0, ..o };
+        assert!(p.swap_to_decode_at_trigger(&drained));
+    }
+
+    #[test]
+    fn lookahead_amortizes_swap_cost() {
+        let p = SwapPolicy::Lookahead { amortize: 8.0 };
+        let o = outlook();
+        // 3.0 s of prefill work vs 8 × 0.06 s = 0.48 s: worth leaving
+        // decode for.
+        assert!(p.swap_to_prefill_mid_decode(&o));
+        let tiny = SwapOutlook { est_prefill_time: 0.3, ..o };
+        assert!(!p.swap_to_prefill_mid_decode(&tiny));
+        // At the trigger with 3.0 s of prompts still queued: decode
+        // backlog 64 × 0.05 = 3.2 s < 8 × (3.0 + 0.06) s — keep
+        // draining the queue.
+        assert!(!p.swap_to_decode_at_trigger(&o));
+        // Once the remaining prefill investment is tiny, decode wins:
+        // 3.2 s ≥ 8 × (0.1 + 0.06) s.
+        let drained = SwapOutlook { est_prefill_time: 0.1, pending_prefill: 1, ..o };
+        assert!(p.swap_to_decode_at_trigger(&drained));
+        // And an empty queue always goes to decode.
+        let empty = SwapOutlook { pending_prefill: 0, ..o };
+        assert!(p.swap_to_decode_at_trigger(&empty));
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for n in ["eager", "hysteresis", "lookahead"] {
+            assert_eq!(SwapPolicy::from_name(n).unwrap().name(), n);
+        }
+        assert!(SwapPolicy::from_name("nope").is_none());
+    }
+}

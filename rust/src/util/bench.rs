@@ -110,6 +110,169 @@ pub fn write_json_report<'p>(
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// Bench-regression gating (`benches/baselines/*.json` vs live reports)
+// ---------------------------------------------------------------------------
+
+use crate::util::json::Value;
+
+/// One regression gate from a committed baseline file: a dotted path
+/// into the live `BENCH_*.json` report, the expected value, and the
+/// direction in which deviation counts as a regression.
+#[derive(Debug, Clone)]
+pub struct Gate {
+    /// Dotted path; numeric segments index arrays (`contexts.0.speedup`).
+    pub path: String,
+    pub value: f64,
+    /// `true`: regression when current < value×(1−tol). `false` (a
+    /// latency-style metric): regression when current > value×(1+tol).
+    pub higher_is_better: bool,
+    pub tolerance: f64,
+    /// Advisory gates are reported but never fail the comparison — used
+    /// for estimated baselines awaiting a `--bless` calibration run.
+    pub advisory: bool,
+}
+
+/// Verdict on one gate.
+#[derive(Debug, Clone)]
+pub struct GateResult {
+    pub gate: Gate,
+    /// Value found in the live report (`None`: path missing).
+    pub current: Option<f64>,
+    pub regressed: bool,
+}
+
+/// The full comparison verdict for one report.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    pub results: Vec<GateResult>,
+}
+
+impl Comparison {
+    /// Gates that regressed and are not advisory — these fail the build.
+    pub fn failures(&self) -> Vec<&GateResult> {
+        self.results
+            .iter()
+            .filter(|r| r.regressed && !r.gate.advisory)
+            .collect()
+    }
+
+    pub fn ok(&self) -> bool {
+        self.failures().is_empty()
+    }
+}
+
+/// Resolve a dotted path (`policies.eager.swaps`, `contexts.1.speedup`)
+/// in a JSON report; numeric segments index arrays.
+pub fn lookup_path<'v>(v: &'v Value, path: &str) -> Option<&'v Value> {
+    let mut cur = v;
+    for seg in path.split('.') {
+        cur = match seg.parse::<usize>() {
+            Ok(i) => cur.as_arr()?.get(i)?,
+            Err(_) => cur.get(seg)?,
+        };
+    }
+    Some(cur)
+}
+
+/// Parse the `gates` array of a baseline document. Malformed entries are
+/// skipped (the baseline is hand-maintained; a typo should not panic the
+/// gate runner — `bench_check` reports the parsed-gate count instead).
+pub fn parse_gates(baseline: &Value) -> Vec<Gate> {
+    let default_tol = baseline
+        .get("tolerance")
+        .and_then(Value::as_f64)
+        .unwrap_or(0.10);
+    let Some(gates) = baseline.get("gates").and_then(Value::as_arr) else {
+        return Vec::new();
+    };
+    gates
+        .iter()
+        .filter_map(|g| {
+            Some(Gate {
+                path: g.get("path")?.as_str()?.to_string(),
+                value: g.get("value")?.as_f64()?,
+                higher_is_better: g
+                    .get("higher_is_better")
+                    .and_then(Value::as_bool)
+                    .unwrap_or(true),
+                tolerance: g.get("tolerance").and_then(Value::as_f64).unwrap_or(default_tol),
+                advisory: g.get("advisory").and_then(Value::as_bool).unwrap_or(false),
+            })
+        })
+        .collect()
+}
+
+/// Compare a live `BENCH_*.json` report against its committed baseline:
+/// every gate whose current value falls outside `value × (1 ∓ tolerance)`
+/// in the regression direction (or whose path vanished from the report)
+/// is flagged. The CI `bench-smoke` job fails on any non-advisory flag.
+pub fn compare_reports(baseline: &Value, current: &Value) -> Comparison {
+    let mut results = Vec::new();
+    for gate in parse_gates(baseline) {
+        let cur = lookup_path(current, &gate.path).and_then(Value::as_f64);
+        let regressed = match cur {
+            None => true, // the metric disappeared: that IS a regression
+            Some(c) => {
+                if gate.higher_is_better {
+                    c < gate.value * (1.0 - gate.tolerance)
+                } else {
+                    c > gate.value * (1.0 + gate.tolerance)
+                }
+            }
+        };
+        results.push(GateResult { gate, current: cur, regressed });
+    }
+    Comparison { results }
+}
+
+/// `--bless` support: rewrite each gate's expected `value` from the
+/// current report and clear its `advisory` marker. Run on a machine with
+/// a toolchain after intentional performance changes, then commit the
+/// updated baseline.
+pub fn bless_baseline(baseline: &Value, current: &Value) -> Value {
+    let Value::Obj(pairs) = baseline else {
+        return baseline.clone();
+    };
+    let pairs = pairs
+        .iter()
+        .map(|(k, v)| {
+            if k != "gates" {
+                return (k.clone(), v.clone());
+            }
+            let Some(gates) = v.as_arr() else {
+                return (k.clone(), v.clone());
+            };
+            let blessed: Vec<Value> = gates
+                .iter()
+                .map(|g| {
+                    let Value::Obj(gp) = g else { return g.clone() };
+                    let measured = g
+                        .get("path")
+                        .and_then(Value::as_str)
+                        .and_then(|p| lookup_path(current, p))
+                        .and_then(Value::as_f64);
+                    let gp = gp
+                        .iter()
+                        .filter(|(gk, _)| gk != "advisory" && gk != "_note")
+                        .map(|(gk, gv)| {
+                            if gk == "value" {
+                                if let Some(m) = measured {
+                                    return (gk.clone(), Value::Num(m));
+                                }
+                            }
+                            (gk.clone(), gv.clone())
+                        })
+                        .collect();
+                    Value::Obj(gp)
+                })
+                .collect();
+            (k.clone(), Value::Arr(blessed))
+        })
+        .collect();
+    Value::Obj(pairs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +305,65 @@ mod tests {
         let back = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.get("x").unwrap().as_f64(), Some(1.5));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compare_reports_gates_and_blesses() {
+        use crate::util::json;
+        let baseline = json::parse(
+            r#"{
+              "tolerance": 0.10,
+              "gates": [
+                {"path": "a.tokens_per_sec", "value": 100.0},
+                {"path": "rows.1.speedup", "value": 1.0, "tolerance": 0.0},
+                {"path": "lat.p95_s", "value": 2.0, "higher_is_better": false},
+                {"path": "a.estimated", "value": 5.0, "advisory": true},
+                {"path": "gone.metric", "value": 1.0}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let current = json::parse(
+            r#"{
+              "a": {"tokens_per_sec": 95.0, "estimated": 1.0},
+              "rows": [{"speedup": 0.5}, {"speedup": 1.001}],
+              "lat": {"p95_s": 2.5}
+            }"#,
+        )
+        .unwrap();
+        let cmp = compare_reports(&baseline, &current);
+        assert_eq!(cmp.results.len(), 5);
+        // 95 ≥ 100×0.9: fine. speedup 1.001 ≥ 1.0: fine. p95 2.5 > 2.2:
+        // regression. advisory regressed but doesn't fail. missing path
+        // regresses.
+        let failed: Vec<&str> =
+            cmp.failures().iter().map(|r| r.gate.path.as_str()).collect();
+        assert_eq!(failed, vec!["lat.p95_s", "gone.metric"]);
+        assert!(!cmp.ok());
+        let advisory = &cmp.results[3];
+        assert!(advisory.regressed && advisory.gate.advisory);
+
+        // Blessing rewrites values from the live report and clears the
+        // advisory marker; unmatched paths keep their old value.
+        let blessed = bless_baseline(&baseline, &current);
+        let gates = parse_gates(&blessed);
+        assert_eq!(gates[0].value, 95.0);
+        assert_eq!(gates[2].value, 2.5);
+        assert_eq!(gates[3].value, 1.0);
+        assert!(!gates[3].advisory, "bless clears advisory");
+        assert_eq!(gates[4].value, 1.0, "missing path keeps old value");
+        let cmp2 = compare_reports(&blessed, &current);
+        assert_eq!(cmp2.failures().len(), 1, "only the vanished metric still fails");
+    }
+
+    #[test]
+    fn lookup_path_walks_objects_and_arrays() {
+        use crate::util::json;
+        let v = json::parse(r#"{"a": [10, {"b": {"c": 42}}]}"#).unwrap();
+        assert_eq!(lookup_path(&v, "a.0").unwrap().as_f64(), Some(10.0));
+        assert_eq!(lookup_path(&v, "a.1.b.c").unwrap().as_f64(), Some(42.0));
+        assert!(lookup_path(&v, "a.2").is_none());
+        assert!(lookup_path(&v, "a.1.x").is_none());
     }
 
     #[test]

@@ -2,14 +2,16 @@
 //! reconfiguration substrates (driven by the in-crate `util::prop`
 //! mini-framework; proptest is unavailable offline).
 
-use pd_swap::coordinator::{Policy, Request, Scheduler, SimServer, SimServerConfig};
+use pd_swap::coordinator::{
+    EventServer, EventServerConfig, Policy, Request, Scheduler, SimServer, SimServerConfig,
+};
 use pd_swap::dse::{evaluate_grid_point, DseConfig};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
 use pd_swap::fpga::{ResourceVec, KV260};
 use pd_swap::kvpool::{AdmissionControl, AdmissionDecision, EvictionPolicy, KvPool, KvPoolConfig};
 use pd_swap::memory::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
 use pd_swap::model::BITNET_0_73B;
-use pd_swap::reconfig::OverlapScheduler;
+use pd_swap::reconfig::{OverlapScheduler, SwapPolicy};
 use pd_swap::util::prop::{check, Config};
 use pd_swap::util::rng::Rng;
 
@@ -461,6 +463,167 @@ fn prop_scheduler_conservation_under_rejection() {
                     "counter conservation broken: dispatched {} != admitted {} + requeued {}",
                     s.dispatched, s.admitted, s.requeued
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Regression (issue: `requeue_front` starvation): a long-context
+/// request that keeps losing its KV reservation must not park at the
+/// queue head forever — the age-based fairness tiebreak lets waiters
+/// through as its preemption count grows, and nothing is lost or served
+/// twice in the process.
+#[test]
+fn prop_requeue_fairness_prevents_starvation() {
+    check(
+        cfg(256),
+        |rng, size| {
+            let n_waiters = rng.range(1, size.max(2).min(24));
+            let preempt_rounds = rng.range(1, 12) as u32;
+            (n_waiters, preempt_rounds)
+        },
+        |&(n_waiters, preempt_rounds)| {
+            let mut s = Scheduler::new(Policy::SwapPerRequest);
+            // The thrashing long-context request arrives first...
+            s.admit(Request::synthetic(0, 2048, 64, 0.0));
+            // ...then the waiters it would starve under blind push_front.
+            for i in 0..n_waiters {
+                s.admit(Request::synthetic(1 + i as u64, 64, 8, 0.1 + i as f64 * 0.1));
+            }
+            let mut preempts = 0u32;
+            let mut served = Vec::new();
+            let mut guard = 0;
+            while !s.is_empty() {
+                guard += 1;
+                if guard > 10_000 {
+                    return Err("scheduler livelock".into());
+                }
+                for r in s.next_batch(f64::MAX) {
+                    if r.id == 0 && preempts < preempt_rounds {
+                        preempts += 1;
+                        s.requeue_front(r);
+                    } else {
+                        served.push(r.id);
+                    }
+                }
+            }
+            if served.len() != n_waiters + 1 {
+                return Err(format!("served {} of {}", served.len(), n_waiters + 1));
+            }
+            let mut ids = served.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != served.len() {
+                return Err("a request was served twice".into());
+            }
+            // Fairness bound: by the time the thrasher finally runs, at
+            // least min(preempts − 1, n_waiters) waiters got through.
+            // (Under the old blind push_front this count was always 0.)
+            let pos = served.iter().position(|&id| id == 0).unwrap();
+            let floor = ((preempts as usize).saturating_sub(1)).min(n_waiters);
+            if pos < floor {
+                return Err(format!(
+                    "starvation: only {pos} waiters served before the \
+                     {preempts}-times-preempted request (need >= {floor})"
+                ));
+            }
+            if s.dispatched != s.admitted + s.requeued {
+                return Err("counter conservation broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Event-driven serving sanity under random traffic, pool pressure, and
+/// all three swap policies: every request completes exactly once, the
+/// pool drains with balanced accounting, latency accounting stays
+/// ordered, and swap-direction counters sum to the reconfiguration
+/// total.
+#[test]
+fn prop_event_server_serves_all() {
+    check(
+        cfg(32),
+        |rng, size| {
+            let n = rng.range(1, (size / 6).max(2));
+            let policy = match rng.below(3) {
+                0 => SwapPolicy::Eager,
+                1 => SwapPolicy::hysteresis_default(),
+                _ => SwapPolicy::lookahead_default(),
+            };
+            let total_pages = rng.range(16, 512);
+            let admission = if rng.chance(0.5) {
+                AdmissionControl::WorstCase
+            } else {
+                AdmissionControl::Optimistic
+            };
+            let eviction = if rng.chance(0.5) {
+                EvictionPolicy::EvictAndRecompute
+            } else {
+                EvictionPolicy::KeepResident
+            };
+            let max_residents = rng.range(1, 8);
+            let mut t = 0.0;
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| {
+                    t += rng.f64() * 3.0;
+                    // gen 0 included: zero-token decode must complete.
+                    Request::synthetic(i as u64, rng.range(1, 1024), rng.below(64), t)
+                })
+                .collect();
+            (policy, total_pages, admission, eviction, max_residents, reqs)
+        },
+        |(policy, total_pages, admission, eviction, max_residents, reqs)| {
+            let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), *policy);
+            cfg.max_residents = *max_residents;
+            cfg.pool = cfg
+                .pool
+                .clone()
+                .with_total_pages(*total_pages)
+                .with_policies(*admission, *eviction);
+            let mut srv = EventServer::new(cfg).map_err(|e| e.to_string())?;
+            srv.run(reqs.clone()).map_err(|e| e.to_string())?;
+            if srv.metrics.requests_completed.get() != reqs.len() as u64 {
+                return Err(format!(
+                    "completed {} of {}",
+                    srv.metrics.requests_completed.get(),
+                    reqs.len()
+                ));
+            }
+            let mut seen: Vec<u64> = srv.outcomes.iter().map(|o| o.id).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            if seen.len() != reqs.len() {
+                return Err("an outcome is missing or duplicated".into());
+            }
+            let max_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+            if srv.metrics.tokens_generated.get() > max_tokens as u64 {
+                return Err("generated more tokens than requested".into());
+            }
+            if srv.metrics.reconfigurations.get()
+                != srv.metrics.swaps_to_prefill.get() + srv.metrics.swaps_to_decode.get()
+            {
+                return Err("swap-direction counters do not sum to the total".into());
+            }
+            let pool = srv.pool();
+            pool.check_invariants()?;
+            if pool.resident_count() != 0 || pool.used_pages() != 0 {
+                return Err("pool not drained".into());
+            }
+            if srv.metrics.kv_evictions.get() != pool.stats.evicted {
+                return Err("eviction counters disagree".into());
+            }
+            for o in &srv.outcomes {
+                if o.ttft < 0.0 || o.e2e < o.ttft - 1e-9 || o.mean_tpot < 0.0 {
+                    return Err(format!("latency accounting broken: {o:?}"));
+                }
+            }
+            // The timeline is ordered.
+            for w in srv.event_log().windows(2) {
+                if w[1].at + 1e-9 < w[0].at {
+                    return Err("event log out of order".into());
+                }
             }
             Ok(())
         },
