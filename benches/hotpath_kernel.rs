@@ -1,0 +1,274 @@
+//! Bench: the analytic hot-path kernel — surface-cached vs uncached
+//! latency evaluation, measured where it matters: a single model query,
+//! the full §4.3 DSE grid (`dse::explore`), and a mixed-trace
+//! `EventServer` run whose per-token-step events hammer the model.
+//!
+//! Both paths are *bit-identical by construction* (the surface caches the
+//! closed-form coefficients, not sampled values), so this bench first
+//! proves agreement — max relative error across the paper grid, the
+//! context breakpoints, and page sizes must be ≤ 1e-9 (it is exactly 0) —
+//! and only then measures the speedup. Hard acceptance asserted here and
+//! gated by `benches/baselines/BENCH_hotpath.json`:
+//!
+//! * cached `explore` (serial, same reduction) ≥ 5× the uncached path on
+//!   the paper grid;
+//! * surface-driven `EventServer` ≥ 3× the direct phase-model path on a
+//!   mixed long-context trace, with identical virtual-clock results.
+//!
+//! Emits `BENCH_hotpath.json` (override with `-- --out PATH`).
+//!
+//! Run: `cargo bench --bench hotpath_kernel` (CI adds `-- --smoke`)
+
+use pd_swap::coordinator::{requests_from_trace, EventServer, EventServerConfig, Request};
+use pd_swap::dse::{explore, explore_threads, explore_uncached, DseConfig, DseKernel};
+use pd_swap::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
+use pd_swap::fpga::KV260;
+use pd_swap::model::{TraceSpec, BITNET_0_73B};
+use pd_swap::reconfig::SwapPolicy;
+use pd_swap::util::bench;
+use pd_swap::util::cli::Args;
+use pd_swap::util::json::Value;
+
+/// Contexts probed for agreement: small, the paged-burst knee, the
+/// prefill projection breakpoint neighbourhood, and the long tail.
+fn probe_contexts(surface: &LatencySurface) -> Vec<usize> {
+    let knee = surface.prefill_projection_breakpoint();
+    let mut ls = vec![1, 2, 7, 8, 63, 64, 128, 512, 768, 2047, 2048];
+    for d in [-1i64, 0, 1] {
+        let l = (knee.round() as i64 + d).max(1) as usize;
+        ls.push(l.min(BITNET_0_73B.max_seq));
+    }
+    ls.sort_unstable();
+    ls.dedup();
+    ls
+}
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    let scale = a.abs().max(b.abs());
+    if scale == 0.0 {
+        0.0
+    } else {
+        (a - b).abs() / scale
+    }
+}
+
+/// Max relative deviation between surface and phase model over the paper
+/// grid (subsampled), all probe contexts, page sizes, both hostings.
+fn agreement(cfg_dpr: &DseConfig, cfg_static: &DseConfig) -> f64 {
+    let mut worst = 0.0f64;
+    for cfg in [cfg_dpr, cfg_static] {
+        let kernel = DseKernel::new(cfg);
+        for (i, (t, p, d)) in cfg.grid().into_iter().enumerate() {
+            if i % 7 != 0 {
+                continue; // subsample: every 7th grid point
+            }
+            let fast = kernel.evaluate(t, p, d);
+            let slow = pd_swap::dse::evaluate_grid_point(cfg, t, p, d);
+            assert_eq!(fast.feasible, slow.feasible, "({t},{p},{d})");
+            if !fast.feasible {
+                continue;
+            }
+            worst = worst.max(rel_err(fast.objective, slow.objective));
+            let surface = LatencySurface::new(&fast.design, &cfg.device, &cfg.shape, 32);
+            let model = PhaseModel::new(fast.design.clone(), cfg.device.clone());
+            for l in probe_contexts(&surface) {
+                worst = worst.max(rel_err(
+                    surface.prefill(l).total,
+                    model.prefill(&cfg.shape, l).total,
+                ));
+                worst = worst.max(rel_err(
+                    surface.decode_step(l).total,
+                    model.decode_step(&cfg.shape, l).total,
+                ));
+                for pt in [1, 8, 32, 128] {
+                    worst = worst.max(rel_err(
+                        surface.decode_step_paged(l, pt).total,
+                        model.decode_step_paged(&cfg.shape, l, pt).total,
+                    ));
+                }
+            }
+        }
+    }
+    worst
+}
+
+/// Backlog-heavy mixed long-context trace: arrivals queue up behind the
+/// long decodes, so the policy outlook (several model queries per event)
+/// stays on the hot path — the serving regime the surface exists for.
+fn mixed_workload() -> Vec<Request> {
+    let spec = TraceSpec::mixed_long_context(40, 0.5, BITNET_0_73B.max_seq, 42);
+    requests_from_trace(&spec.generate())
+}
+
+fn run_event_server(use_surface: bool, wl: Vec<Request>) -> (f64, u64) {
+    let mut cfg = EventServerConfig::pd_swap(
+        BITNET_0_73B,
+        KV260.clone(),
+        SwapPolicy::hysteresis_default(),
+    );
+    cfg.use_surface = use_surface;
+    let mut srv = EventServer::new(cfg).expect("config must program");
+    srv.run(wl).expect("serving must not fail");
+    (srv.clock(), srv.metrics.tokens_generated.get())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let out = args.get_or("out", "BENCH_hotpath.json");
+    let smoke = args.flag("smoke");
+
+    let cfg_dpr = DseConfig::paper_default(
+        BITNET_0_73B,
+        KV260.clone(),
+        AttentionHosting::Reconfigurable,
+    );
+    let cfg_static =
+        DseConfig::paper_default(BITNET_0_73B, KV260.clone(), AttentionHosting::StaticBoth);
+
+    // -- agreement first: a fast wrong kernel is worthless -----------------
+    bench::section("surface vs phase-model agreement");
+    let max_rel_err = agreement(&cfg_dpr, &cfg_static);
+    println!("max relative error across grid x contexts x pages: {max_rel_err:.3e}");
+    assert!(
+        max_rel_err <= 1e-9,
+        "surface diverged from the phase model: {max_rel_err:.3e} > 1e-9"
+    );
+
+    // -- single-query microbench -------------------------------------------
+    bench::section("analytic kernel microbench (decode_step_paged, 64 contexts)");
+    let model = PhaseModel::new(AcceleratorDesign::pd_swap(), KV260.clone());
+    let surface = LatencySurface::new(&AcceleratorDesign::pd_swap(), &KV260, &BITNET_0_73B, 32);
+    let contexts: Vec<usize> = (1..=64).map(|i| i * 32).collect();
+    let (mb_warm, mb_iters) = if smoke { (10, 200) } else { (100, 2_000) };
+    let s_direct = bench::run("PhaseModel::decode_step_paged", mb_warm, mb_iters, || {
+        for &l in &contexts {
+            std::hint::black_box(model.decode_step_paged(&BITNET_0_73B, l, 32));
+        }
+    });
+    println!("{s_direct}");
+    let s_surface = bench::run("LatencySurface::decode_step_paged", mb_warm, mb_iters, || {
+        for &l in &contexts {
+            std::hint::black_box(surface.decode_step_paged(l, 32));
+        }
+    });
+    println!("{s_surface}");
+    let micro_speedup = s_direct.mean.as_secs_f64() / s_surface.mean.as_secs_f64();
+    println!("microbench speedup: {micro_speedup:.1}x");
+
+    // -- DSE grid ----------------------------------------------------------
+    bench::section("dse::explore on the paper grid (cached kernel vs uncached)");
+    let grid_points = cfg_dpr.grid().len();
+    // Smoke keeps enough iterations that one noisy-neighbor interval on a
+    // shared CI runner cannot sink the gated ratios below.
+    let (dse_warm, dse_iters) = if smoke { (1, 6) } else { (2, 12) };
+    let s_uncached = bench::run("explore (uncached reference, serial)", dse_warm, dse_iters, || {
+        std::hint::black_box(explore_uncached(&cfg_dpr).unwrap());
+    });
+    println!("{s_uncached}");
+    let s_cached = bench::run("explore (surface kernel, serial)", dse_warm, dse_iters, || {
+        std::hint::black_box(explore_threads(&cfg_dpr, 1).unwrap());
+    });
+    println!("{s_cached}");
+    let s_parallel = bench::run("explore (surface kernel, parallel)", dse_warm, dse_iters, || {
+        std::hint::black_box(explore(&cfg_dpr).unwrap());
+    });
+    println!("{s_parallel}");
+    // Same grid, same reduction: identical winners by construction.
+    let a = explore_uncached(&cfg_dpr).unwrap();
+    let b = explore_threads(&cfg_dpr, 4).unwrap();
+    assert_eq!(a.best.design.name, b.best.design.name, "kernel changed the DSE winner");
+    assert_eq!(a.feasible, b.feasible);
+    assert!(rel_err(a.best.objective, b.best.objective) <= 1e-9);
+    let dse_speedup = s_uncached.mean.as_secs_f64() / s_cached.mean.as_secs_f64();
+    let dse_parallel_speedup = s_uncached.mean.as_secs_f64() / s_parallel.mean.as_secs_f64();
+    println!(
+        "kernel speedup {dse_speedup:.1}x (serial/serial), {dse_parallel_speedup:.1}x with threads"
+    );
+    // Full runs enforce the 5x acceptance bar; smoke (CI, short run on a
+    // shared runner) enforces the satellite's hard invariant — cached
+    // must never be slower than uncached — and leaves the 5x as an
+    // advisory baseline gate until `--bless` calibrates it on a
+    // reference machine (the repo's convention for unmeasured numbers).
+    let dse_bar = if smoke { 1.0 } else { 5.0 };
+    assert!(
+        dse_speedup >= dse_bar,
+        "DSE kernel speedup {dse_speedup:.2}x below the {dse_bar}x bar"
+    );
+
+    // -- EventServer mixed trace -------------------------------------------
+    bench::section("EventServer mixed 2k-context trace (surface vs direct)");
+    let wl = mixed_workload();
+    let (clock_direct, tokens_direct) = run_event_server(false, wl.clone());
+    let (clock_surface, tokens_surface) = run_event_server(true, wl.clone());
+    assert_eq!(
+        clock_direct.to_bits(),
+        clock_surface.to_bits(),
+        "virtual clocks must be bit-identical"
+    );
+    assert_eq!(tokens_direct, tokens_surface);
+    println!(
+        "{} requests, {} tokens, {:.1} s of virtual KV260 time",
+        wl.len(),
+        tokens_surface,
+        clock_surface
+    );
+    let (ev_warm, ev_iters) = if smoke { (1, 5) } else { (1, 8) };
+    let s_ev_direct = bench::run("EventServer (direct phase model)", ev_warm, ev_iters, || {
+        std::hint::black_box(run_event_server(false, wl.clone()));
+    });
+    println!("{s_ev_direct}");
+    let s_ev_surface = bench::run("EventServer (latency surface)", ev_warm, ev_iters, || {
+        std::hint::black_box(run_event_server(true, wl.clone()));
+    });
+    println!("{s_ev_surface}");
+    let ev_speedup = s_ev_direct.mean.as_secs_f64() / s_ev_surface.mean.as_secs_f64();
+    println!("event-server speedup: {ev_speedup:.1}x");
+    let ev_bar = if smoke { 1.0 } else { 3.0 };
+    assert!(
+        ev_speedup >= ev_bar,
+        "EventServer surface speedup {ev_speedup:.2}x below the {ev_bar}x bar"
+    );
+
+    let report = Value::Obj(vec![
+        ("bench".into(), Value::Str("hotpath_kernel".into())),
+        (
+            "agreement".into(),
+            Value::Obj(vec![("max_rel_err".into(), Value::Num(max_rel_err))]),
+        ),
+        (
+            "microbench".into(),
+            Value::Obj(vec![
+                ("uncached_us_per_64_calls".into(), Value::Num(s_direct.mean_ms() * 1e3)),
+                ("cached_us_per_64_calls".into(), Value::Num(s_surface.mean_ms() * 1e3)),
+                ("speedup".into(), Value::Num(micro_speedup)),
+            ]),
+        ),
+        (
+            "dse_explore".into(),
+            Value::Obj(vec![
+                ("grid_points".into(), Value::Num(grid_points as f64)),
+                ("feasible".into(), Value::Num(a.feasible as f64)),
+                ("uncached_ms".into(), Value::Num(s_uncached.mean_ms())),
+                ("cached_serial_ms".into(), Value::Num(s_cached.mean_ms())),
+                ("cached_parallel_ms".into(), Value::Num(s_parallel.mean_ms())),
+                ("speedup".into(), Value::Num(dse_speedup)),
+                ("parallel_speedup".into(), Value::Num(dse_parallel_speedup)),
+            ]),
+        ),
+        (
+            "event_server".into(),
+            Value::Obj(vec![
+                ("requests".into(), Value::Num(wl.len() as f64)),
+                ("tokens".into(), Value::Num(tokens_surface as f64)),
+                ("virtual_clock_s".into(), Value::Num(clock_surface)),
+                ("uncached_ms".into(), Value::Num(s_ev_direct.mean_ms())),
+                ("cached_ms".into(), Value::Num(s_ev_surface.mean_ms())),
+                ("speedup".into(), Value::Num(ev_speedup)),
+            ]),
+        ),
+    ]);
+    match bench::write_json_report(out, &report) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

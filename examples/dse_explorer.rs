@@ -36,7 +36,7 @@ fn main() -> Result<()> {
             "\n--- {label}: exploring {} candidates ---",
             cfg.tlmm_grid.len() * cfg.prefill_grid.len() * cfg.decode_grid.len()
         );
-        let res = explore(&cfg);
+        let res = explore(&cfg)?;
         println!("feasible: {} / {}", res.feasible, res.explored);
 
         let mut t = Table::new(vec![

@@ -35,10 +35,11 @@
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashSet};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
+use crate::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
 use crate::fpga::DeviceConfig;
 use crate::kvpool::{EvictionPolicy, KvPool, KvPoolConfig, PoolError};
 use crate::metrics::ServerMetrics;
@@ -240,6 +241,20 @@ pub struct EventServerConfig {
     /// Cap on concurrently resident requests (decode set + the prefill
     /// in flight); the KV pool still gates below this.
     pub max_residents: usize,
+    /// Drive the hot path from a precomputed
+    /// [`crate::engines::LatencySurface`] (O(1) per query) instead of
+    /// re-deriving the phase model per token-step event. Bit-identical
+    /// results either way — the direct path exists for the
+    /// `hotpath_kernel` bench and the equivalence tests.
+    pub use_surface: bool,
+    /// Optional pre-built surface to use instead of constructing one in
+    /// [`EventServer::new`] — sweeps that build many servers for the same
+    /// design (the `codesign` joint exploration) share construction
+    /// through a [`crate::engines::SurfaceCache`]. Must have been built
+    /// for this config's (design, device, shape, `pool.page_tokens`);
+    /// the cache keys on exactly that tuple. Ignored when `use_surface`
+    /// is false.
+    pub surface: Option<Arc<LatencySurface>>,
 }
 
 impl EventServerConfig {
@@ -253,6 +268,8 @@ impl EventServerConfig {
             policy,
             overlap: true,
             max_residents: 8,
+            use_surface: true,
+            surface: None,
         }
     }
 }
@@ -261,6 +278,9 @@ impl EventServerConfig {
 pub struct EventServer {
     cfg: EventServerConfig,
     model: PhaseModel,
+    /// O(1) analytic kernel for the per-event hot path (None = direct
+    /// phase-model evaluation; see `EventServerConfig::use_surface`).
+    surface: Option<LatencySurface>,
     swap: SwapController,
     overlap_sched: OverlapScheduler,
     fsm: PhaseFsm,
@@ -291,6 +311,26 @@ impl EventServer {
             bail!("EventServer models DPR swap scheduling; static designs have no swaps to schedule");
         }
         let model = PhaseModel::new(cfg.design.clone(), cfg.device.clone());
+        let surface = cfg.use_surface.then(|| match &cfg.surface {
+            Some(shared) => {
+                // A mismatched injection would silently simulate a
+                // different accelerator; the key makes it one comparison.
+                debug_assert_eq!(
+                    shared.key(),
+                    &crate::engines::SurfaceKey::new(
+                        &cfg.design,
+                        &cfg.device,
+                        &cfg.shape,
+                        cfg.pool.page_tokens,
+                    ),
+                    "injected latency surface was built for a different configuration"
+                );
+                shared.as_ref().clone()
+            }
+            None => {
+                LatencySurface::new(&cfg.design, &cfg.device, &cfg.shape, cfg.pool.page_tokens)
+            }
+        });
         let swap = SwapController::new(cfg.design.program(&cfg.device)?);
         let lat = swap.device.reconfig_latency();
         let overlap_sched = OverlapScheduler::new(model.clone(), lat);
@@ -298,6 +338,7 @@ impl EventServer {
         Ok(Self {
             cfg,
             model,
+            surface,
             swap,
             overlap_sched,
             fsm: PhaseFsm::new(),
@@ -330,6 +371,55 @@ impl EventServer {
     /// The event timeline (bounded; diagnostics only).
     pub fn event_log(&self) -> &[EventRecord] {
         &self.log
+    }
+
+    // -- analytic kernel (surface-accelerated, bit-identical fallback) -----
+
+    fn prefill_lat(&self, l: usize) -> crate::engines::PrefillLatency {
+        match &self.surface {
+            Some(s) => s.prefill(l),
+            None => self.model.prefill(&self.cfg.shape, l),
+        }
+    }
+
+    /// One decode step at context `l` under the pool's page size.
+    fn decode_step_total(&self, l: usize) -> f64 {
+        match &self.surface {
+            Some(s) => s.decode_step_paged(l, self.cfg.pool.page_tokens).total,
+            None => {
+                self.model.decode_step_paged(&self.cfg.shape, l, self.cfg.pool.page_tokens).total
+            }
+        }
+    }
+
+    /// §3.4 early-trigger offset into a prefill of `l` tokens.
+    fn trigger_offset(&self, l: usize) -> f64 {
+        match &self.surface {
+            Some(s) => s.overlapped(l, self.overlap_sched.reconfig_latency).trigger,
+            None => self.overlap_sched.overlapped(&self.cfg.shape, l).trigger,
+        }
+    }
+
+    /// Estimated time to prefill the arrived backlog (policy outlook).
+    fn est_prefill(&self, n: usize, prompt_tokens: usize) -> f64 {
+        match &self.surface {
+            Some(s) => {
+                crate::reconfig::policy::est_prefill_time_with(
+                    |l| s.prefill(l).total,
+                    n,
+                    prompt_tokens,
+                )
+            }
+            None => est_prefill_time(&self.model, &self.cfg.shape, n, prompt_tokens),
+        }
+    }
+
+    /// Exposed cost of a decode→prefill→decode round trip (policy outlook).
+    fn round_trip(&self, mean_prompt: usize) -> f64 {
+        match &self.surface {
+            Some(s) => s.round_trip_exposed(mean_prompt, self.overlap_sched.reconfig_latency),
+            None => round_trip_exposed(&self.overlap_sched, &self.cfg.shape, mean_prompt),
+        }
     }
 
     /// Serve one workload to completion. Single-shot: build a fresh
@@ -623,18 +713,17 @@ impl EventServer {
             .unwrap_or(0)
             .max(extra_ctx)
             .max(1);
-        let est_decode_step =
-            self.model.decode_step_paged(&shape, rep_ctx, self.cfg.pool.page_tokens).total;
+        let est_decode_step = self.decode_step_total(rep_ctx);
         let mean_prompt = if n_pend > 0 { (tok_pend / n_pend).max(1) } else { 1 };
         SwapOutlook {
             pending_prefill: n_pend,
             pending_prefill_tokens: tok_pend,
-            est_prefill_time: est_prefill_time(&self.model, &shape, n_pend, tok_pend),
+            est_prefill_time: self.est_prefill(n_pend, tok_pend),
             decode_ready,
             decode_pending_tokens,
             est_decode_step,
             reconfig_latency: self.overlap_sched.reconfig_latency,
-            est_round_trip_exposed: round_trip_exposed(&self.overlap_sched, &shape, mean_prompt),
+            est_round_trip_exposed: self.round_trip(mean_prompt),
         }
     }
 
@@ -685,14 +774,14 @@ impl EventServer {
         let id = req.id;
         let shape = self.cfg.shape;
         let l = req.prompt_len.max(1);
-        let pre = self.model.prefill(&shape, l);
+        let pre = self.prefill_lat(l);
         if !self.prefilled.insert(id) {
             // Second prefill of an evicted request: pure recompute tax.
             self.metrics.recompute_overhead.record(pre.total);
         }
         let done_at = now + pre.total;
         let trigger_at = if self.cfg.overlap {
-            now + self.overlap_sched.overlapped(&shape, l).trigger
+            now + self.trigger_offset(l)
         } else {
             done_at
         };
@@ -715,7 +804,6 @@ impl EventServer {
     /// Returns false if the decode set drained instead.
     fn try_schedule_step(&mut self) -> Result<bool> {
         let shape = self.cfg.shape;
-        let page_tokens = self.cfg.pool.page_tokens;
         while !self.decode.is_empty() {
             self.cursor %= self.decode.len();
             let i = self.cursor;
@@ -729,7 +817,7 @@ impl EventServer {
             match self.kv_pool.ensure_tokens(id, next_tokens, self.clock) {
                 Ok(()) => {
                     let ctx = self.decode[i].ctx;
-                    let step = self.model.decode_step_paged(&shape, ctx, page_tokens).total;
+                    let step = self.decode_step_total(ctx);
                     if self.decode[i].first_step.is_none() {
                         self.decode[i].first_step = Some(self.clock);
                     }
@@ -983,6 +1071,43 @@ mod tests {
         assert_eq!(with.metrics.reconfig_exposed.max(), 0.0);
         assert!(without.metrics.reconfig_exposed.max() > 0.03);
         assert!(with.clock() < without.clock());
+    }
+
+    #[test]
+    fn surface_and_direct_kernels_agree_bitwise() {
+        // The surface is a cached restatement of the phase model, not an
+        // approximation: the whole virtual timeline must come out
+        // bit-identical with it on or off, for every policy.
+        for policy in [
+            SwapPolicy::Eager,
+            SwapPolicy::hysteresis_default(),
+            SwapPolicy::lookahead_default(),
+        ] {
+            let w = contended_workload();
+            let mut fast = server(policy);
+            fast.run(w.clone()).unwrap();
+            let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+            cfg.use_surface = false;
+            let mut slow = EventServer::new(cfg).unwrap();
+            slow.run(w).unwrap();
+            assert_eq!(fast.clock().to_bits(), slow.clock().to_bits(), "{policy:?}");
+            assert_eq!(
+                fast.metrics.tokens_generated.get(),
+                slow.metrics.tokens_generated.get()
+            );
+            assert_eq!(
+                fast.metrics.reconfigurations.get(),
+                slow.metrics.reconfigurations.get()
+            );
+            assert_eq!(
+                fast.metrics.tpot.mean().to_bits(),
+                slow.metrics.tpot.mean().to_bits()
+            );
+            assert_eq!(
+                fast.metrics.ttft.mean().to_bits(),
+                slow.metrics.ttft.mean().to_bits()
+            );
+        }
     }
 
     #[test]

@@ -31,7 +31,7 @@ use std::collections::HashSet;
 
 use anyhow::{bail, Result};
 
-use crate::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
+use crate::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
 use crate::fpga::DeviceConfig;
 use crate::kvpool::{EvictionPolicy, KvPool, KvPoolConfig, PoolError};
 use crate::metrics::ServerMetrics;
@@ -85,7 +85,10 @@ impl SimServerConfig {
 /// The simulated server.
 pub struct SimServer {
     cfg: SimServerConfig,
-    model: PhaseModel,
+    /// O(1) cached restatement of the phase model driving the per-request
+    /// prefill and per-token decode rounds (bit-identical to direct
+    /// [`PhaseModel`] calls; the overlap scheduler keeps its own model).
+    surface: LatencySurface,
     swap: Option<SwapController>,
     overlap: Option<OverlapScheduler>,
     fsm: PhaseFsm,
@@ -104,6 +107,8 @@ pub struct SimServer {
 impl SimServer {
     pub fn new(cfg: SimServerConfig) -> Result<Self> {
         let model = PhaseModel::new(cfg.design.clone(), cfg.device.clone());
+        let surface =
+            LatencySurface::new(&cfg.design, &cfg.device, &cfg.shape, cfg.pool.page_tokens);
         let uses_dpr = cfg.design.hosting == AttentionHosting::Reconfigurable;
         let swap = if uses_dpr {
             Some(SwapController::new(cfg.design.program(&cfg.device)?))
@@ -114,14 +119,14 @@ impl SimServer {
         };
         let overlap = if uses_dpr {
             let lat = swap.as_ref().unwrap().device.reconfig_latency();
-            Some(OverlapScheduler::new(model.clone(), lat))
+            Some(OverlapScheduler::new(model, lat))
         } else {
             None
         };
         let kv_pool = KvPool::new(cfg.pool.clone());
         Ok(Self {
             cfg,
-            model,
+            surface,
             swap,
             overlap,
             fsm: PhaseFsm::new(),
@@ -224,7 +229,7 @@ impl SimServer {
         let mut prefill_done = Vec::with_capacity(batch.len());
         for r in &batch {
             self.fsm.begin_prefill().ok();
-            let pre = self.model.prefill(&shape, r.prompt_len);
+            let pre = self.surface.prefill(r.prompt_len);
             self.clock += pre.total;
             prefill_done.push(self.clock);
             if !self.prefilled.insert(r.id) {
@@ -339,7 +344,7 @@ impl SimServer {
                     self.finish_request(f, decode_start)?;
                     continue;
                 }
-                let step = self.model.decode_step_paged(&shape, active[i].ctx, page_tokens).total;
+                let step = self.surface.decode_step_paged(active[i].ctx, page_tokens).total;
                 self.clock += step;
                 self.metrics.tpot.record(step);
                 active[i].ctx += 1;

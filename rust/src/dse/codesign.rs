@@ -1,0 +1,447 @@
+//! Design × policy co-exploration: the §4.3 DSE grid joined with the
+//! serving-policy space, end to end through the event-driven simulator.
+//!
+//! The paper picks hardware (§3.3/§4.3) assuming its one-request-at-a-time
+//! flow; PR 2's serving extension showed the *swap policy* dominates
+//! delivered throughput under continuous mixed traffic. Those two choices
+//! interact — a design with a bigger prefill RM changes how expensive a
+//! decode→prefill round trip is, which changes which policy wins — so the
+//! right question is joint: **which (design, policy) pair serves this
+//! traffic best?** Answering it means running the full DSE grid through
+//! the [`EventServer`] once per policy per trace, which was computationally
+//! out of reach before the [`crate::engines::surface`] kernel made both
+//! the grid evaluation and the per-token simulation O(1) in the analytic
+//! model.
+//!
+//! Everything is deterministic: traces are seeded, simulations run on the
+//! virtual clock, designs are swept in grid order, and ranking ties break
+//! by (grid order, policy order) — so `pd-swap codesign` prints identical
+//! winners on every run and machine.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::{requests_from_trace, EventServer, EventServerConfig, Request};
+use crate::engines::{AttentionHosting, SurfaceCache, SurfaceFactory};
+use crate::fpga::DeviceConfig;
+use crate::kvpool::KvPoolConfig;
+use crate::model::{ModelShape, TraceSpec};
+use crate::reconfig::SwapPolicy;
+use crate::util::json::Value;
+use crate::util::par::{default_threads, par_map};
+use crate::Result;
+
+use super::{DseConfig, DseKernel, DsePoint};
+
+/// A named, seeded arrival trace for the sweep.
+#[derive(Debug, Clone)]
+pub struct TracePreset {
+    pub name: String,
+    pub spec: TraceSpec,
+}
+
+impl TracePreset {
+    /// Resolve a CLI preset name (`interactive` | `mixed` | `bursty`).
+    pub fn by_name(
+        name: &str,
+        n_requests: usize,
+        rate: f64,
+        long_ctx: usize,
+        seed: u64,
+    ) -> Option<TracePreset> {
+        let spec = match name {
+            "interactive" => TraceSpec::interactive(n_requests, rate, seed),
+            "mixed" => TraceSpec::mixed_long_context(n_requests, rate, long_ctx, seed),
+            "bursty" => TraceSpec::bursty(n_requests, seed),
+            _ => return None,
+        };
+        Some(TracePreset { name: name.to_string(), spec })
+    }
+
+    /// The default sweep pair: the mixed long-context trace (where policy
+    /// choice matters most) and the bursty short-prompt trace (the §3.4
+    /// arrival-storm scenario).
+    pub fn defaults(n_requests: usize, rate: f64, long_ctx: usize, seed: u64) -> Vec<TracePreset> {
+        ["mixed", "bursty"]
+            .iter()
+            .map(|n| Self::by_name(n, n_requests, rate, long_ctx, seed).unwrap())
+            .collect()
+    }
+}
+
+/// Joint-sweep configuration.
+#[derive(Debug, Clone)]
+pub struct CodesignConfig {
+    /// The design grid (must use DPR hosting — the event core schedules
+    /// swaps, which static designs do not have).
+    pub dse: DseConfig,
+    /// Swap policies to cross with every design.
+    pub policies: Vec<SwapPolicy>,
+    /// Traffic mixes to evaluate each (design, policy) pair under.
+    pub traces: Vec<TracePreset>,
+    /// Cap on feasible designs swept, best Eq. 6 objective first
+    /// (0 = sweep every feasible grid point).
+    pub max_designs: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+}
+
+impl CodesignConfig {
+    /// The full paper grid × all three policies × the default trace pair.
+    pub fn paper_default(shape: ModelShape, device: DeviceConfig) -> Self {
+        let dse =
+            DseConfig::paper_default(shape, device, AttentionHosting::Reconfigurable);
+        Self {
+            dse,
+            policies: vec![
+                SwapPolicy::Eager,
+                SwapPolicy::hysteresis_default(),
+                SwapPolicy::lookahead_default(),
+            ],
+            traces: TracePreset::defaults(24, 0.05, shape.max_seq, 0),
+            max_designs: 0,
+            threads: 0,
+        }
+    }
+}
+
+/// One (design, policy, trace) simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub design: String,
+    /// Grid index of the design (the determinism anchor for ties).
+    pub design_seq: usize,
+    /// The design's Eq. 6 objective from the DSE pass.
+    pub objective: f64,
+    pub policy: &'static str,
+    /// Position of the policy in the sweep's policy list.
+    pub policy_seq: usize,
+    /// 1 / mean wall inter-token gap — the policy-sensitive metric.
+    pub decode_tps: f64,
+    pub makespan_s: f64,
+    pub makespan_tps: f64,
+    pub swaps: u64,
+    pub exposed_s: f64,
+    pub ttft_p95_s: f64,
+}
+
+/// All cells for one trace, ranked best first.
+#[derive(Debug)]
+pub struct TraceOutcome {
+    pub trace: String,
+    pub offered_tokens_per_sec: f64,
+    /// Ranking: decode throughput desc, then makespan asc, then
+    /// (design grid order, policy order) — a total order, so the winner
+    /// is unique and run-independent.
+    pub ranked: Vec<SweepCell>,
+}
+
+impl TraceOutcome {
+    pub fn winner(&self) -> &SweepCell {
+        &self.ranked[0]
+    }
+}
+
+/// The joint sweep's result.
+#[derive(Debug)]
+pub struct CodesignReport {
+    pub explored: usize,
+    pub feasible: usize,
+    pub designs_swept: usize,
+    pub sims_run: usize,
+    pub traces: Vec<TraceOutcome>,
+}
+
+impl CodesignReport {
+    /// Machine-readable summary (per-trace winner + top ranks).
+    pub fn to_json(&self, top: usize) -> Value {
+        let traces = self
+            .traces
+            .iter()
+            .map(|t| {
+                let cell = |c: &SweepCell| {
+                    Value::Obj(vec![
+                        ("design".into(), Value::Str(c.design.clone())),
+                        ("policy".into(), Value::Str(c.policy.into())),
+                        ("decode_tokens_per_sec".into(), Value::Num(c.decode_tps)),
+                        ("makespan_s".into(), Value::Num(c.makespan_s)),
+                        ("makespan_tokens_per_sec".into(), Value::Num(c.makespan_tps)),
+                        ("swaps".into(), Value::Num(c.swaps as f64)),
+                        ("reconfig_exposed_total_s".into(), Value::Num(c.exposed_s)),
+                        ("ttft_p95_s".into(), Value::Num(c.ttft_p95_s)),
+                        ("dse_objective".into(), Value::Num(c.objective)),
+                    ])
+                };
+                let ranked: Vec<Value> = t.ranked.iter().take(top).map(cell).collect();
+                (
+                    t.trace.clone(),
+                    Value::Obj(vec![
+                        ("offered_tokens_per_sec".into(), Value::Num(t.offered_tokens_per_sec)),
+                        ("winner".into(), cell(t.winner())),
+                        ("top".into(), Value::Arr(ranked)),
+                    ]),
+                )
+            })
+            .collect();
+        Value::Obj(vec![
+            ("bench".into(), Value::Str("codesign".into())),
+            ("explored".into(), Value::Num(self.explored as f64)),
+            ("feasible".into(), Value::Num(self.feasible as f64)),
+            ("designs_swept".into(), Value::Num(self.designs_swept as f64)),
+            ("sims_run".into(), Value::Num(self.sims_run as f64)),
+            ("traces".into(), Value::Obj(traces)),
+        ])
+    }
+}
+
+/// Run one (design, policy) pair over a workload on the event core. The
+/// latency surface comes out of the shared [`SurfaceCache`] via the
+/// sweep-wide [`SurfaceFactory`], so the six (policy × trace) servers of
+/// one design share one construction and a cache miss is pure arithmetic
+/// (the lock is held for nanoseconds, not a memory-model evaluation).
+#[allow(clippy::too_many_arguments)]
+fn simulate_cell(
+    sweep: &CodesignConfig,
+    factory: &SurfaceFactory,
+    surfaces: &Mutex<SurfaceCache>,
+    point: &DsePoint,
+    design_seq: usize,
+    policy: SwapPolicy,
+    policy_seq: usize,
+    workload: Vec<Request>,
+) -> Result<SweepCell> {
+    let mut cfg = EventServerConfig::pd_swap(
+        sweep.dse.shape,
+        sweep.dse.device.clone(),
+        policy,
+    );
+    cfg.design = point.design.clone();
+    cfg.surface = Some(
+        surfaces
+            .lock()
+            .expect("surface cache poisoned")
+            .get_with(factory, &cfg.design),
+    );
+    let mut srv = EventServer::new(cfg)
+        .map_err(|e| anyhow!("{}/{}: {e}", point.design.name, policy.name()))?;
+    srv.run(workload)
+        .map_err(|e| anyhow!("{}/{}: {e}", point.design.name, policy.name()))?;
+    let m = &srv.metrics;
+    Ok(SweepCell {
+        design: point.design.name.clone(),
+        design_seq,
+        objective: point.objective,
+        policy: policy.name(),
+        policy_seq,
+        decode_tps: m.decode_throughput(),
+        makespan_s: srv.clock(),
+        makespan_tps: m.tokens_generated.get() as f64 / srv.clock().max(1e-12),
+        swaps: m.reconfigurations.get(),
+        exposed_s: m.reconfig_exposed.mean() * m.reconfig_exposed.count() as f64,
+        ttft_p95_s: m.ttft.quantile(0.95),
+    })
+}
+
+/// Execute the joint sweep: DSE grid pass (fast kernel, parallel), then
+/// (feasible designs × policies × traces) through the event simulator,
+/// then deterministic per-trace ranking.
+pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
+    if sweep.dse.hosting != AttentionHosting::Reconfigurable {
+        bail!("codesign sweeps swap policies, which need DPR hosting (drop --static)");
+    }
+    if sweep.policies.is_empty() || sweep.traces.is_empty() {
+        bail!("codesign needs at least one policy and one trace");
+    }
+    let threads = if sweep.threads == 0 { default_threads() } else { sweep.threads };
+
+    // -- DSE pass: evaluate the grid, keep feasible designs in grid order.
+    let kernel = DseKernel::new(&sweep.dse);
+    let grid = sweep.dse.grid();
+    let points = par_map(&grid, threads, |&(t, p, d)| kernel.evaluate(t, p, d));
+    let explored = points.len();
+    let mut candidates: Vec<(usize, DsePoint)> = points
+        .into_iter()
+        .enumerate()
+        .filter(|(_, p)| p.feasible)
+        .collect();
+    let feasible = candidates.len();
+    if candidates.is_empty() {
+        bail!("no feasible design among {explored} grid points — widen the search");
+    }
+    // Best objective first; grid order within exact ties.
+    candidates.sort_by(|(sa, a), (sb, b)| {
+        a.objective
+            .partial_cmp(&b.objective)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(sa.cmp(sb))
+    });
+    if sweep.max_designs > 0 {
+        candidates.truncate(sweep.max_designs);
+    }
+
+    // -- Serving pass: every (design × policy × trace) cell, parallel over
+    // designs, deterministic inner order.
+    let workloads: Vec<(String, Vec<Request>, f64)> = sweep
+        .traces
+        .iter()
+        .map(|t| {
+            let entries = t.spec.generate();
+            let offered = TraceSpec::offered_tokens_per_sec(&entries);
+            (t.name.clone(), requests_from_trace(&entries), offered)
+        })
+        .collect();
+    // One factory for the whole serving pass (page size = what
+    // `EventServerConfig::pd_swap` will configure), memoized per design
+    // through the shared cache.
+    let page_tokens =
+        KvPoolConfig::for_device(&sweep.dse.shape, &sweep.dse.device).page_tokens;
+    let factory = SurfaceFactory::new(&sweep.dse.device, &sweep.dse.shape, page_tokens);
+    let surfaces = Mutex::new(SurfaceCache::new());
+    let per_design: Vec<Result<Vec<(usize, SweepCell)>>> =
+        par_map(&candidates, threads, |(design_seq, point)| {
+            let mut cells = Vec::with_capacity(workloads.len() * sweep.policies.len());
+            for (trace_idx, (_, workload, _)) in workloads.iter().enumerate() {
+                for (policy_seq, &policy) in sweep.policies.iter().enumerate() {
+                    let cell = simulate_cell(
+                        sweep,
+                        &factory,
+                        &surfaces,
+                        point,
+                        *design_seq,
+                        policy,
+                        policy_seq,
+                        workload.clone(),
+                    )?;
+                    cells.push((trace_idx, cell));
+                }
+            }
+            Ok(cells)
+        });
+
+    let mut by_trace: Vec<Vec<SweepCell>> = workloads.iter().map(|_| Vec::new()).collect();
+    let mut sims_run = 0usize;
+    for design_cells in per_design {
+        for (trace_idx, cell) in design_cells? {
+            sims_run += 1;
+            by_trace[trace_idx].push(cell);
+        }
+    }
+
+    // -- Rank per trace (total order: throughput, makespan, grid, policy).
+    let traces = workloads
+        .iter()
+        .zip(by_trace)
+        .map(|((name, _, offered), mut cells)| {
+            cells.sort_by(|a, b| {
+                b.decode_tps
+                    .partial_cmp(&a.decode_tps)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(
+                        a.makespan_s
+                            .partial_cmp(&b.makespan_s)
+                            .unwrap_or(std::cmp::Ordering::Equal),
+                    )
+                    .then(a.design_seq.cmp(&b.design_seq))
+                    .then(a.policy_seq.cmp(&b.policy_seq))
+            });
+            TraceOutcome {
+                trace: name.clone(),
+                offered_tokens_per_sec: *offered,
+                ranked: cells,
+            }
+        })
+        .collect();
+
+    Ok(CodesignReport {
+        explored,
+        feasible,
+        designs_swept: candidates.len(),
+        sims_run,
+        traces,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn small_sweep() -> CodesignConfig {
+        let mut sweep = CodesignConfig::paper_default(BITNET_0_73B, KV260.clone());
+        sweep.dse.tlmm_grid = vec![320];
+        sweep.dse.prefill_grid = vec![250, 300];
+        sweep.dse.decode_grid = vec![150, 250];
+        sweep.traces = vec![TracePreset::by_name("mixed", 6, 0.05, 2048, 7).unwrap()];
+        sweep
+    }
+
+    #[test]
+    fn sweep_covers_grid_times_policies_times_traces() {
+        let sweep = small_sweep();
+        let report = run_codesign(&sweep).unwrap();
+        assert_eq!(report.explored, 4);
+        assert!(report.feasible >= 2, "trimmed grid should mostly fit");
+        assert_eq!(report.designs_swept, report.feasible);
+        assert_eq!(
+            report.sims_run,
+            report.designs_swept * sweep.policies.len() * sweep.traces.len()
+        );
+        let t = &report.traces[0];
+        assert_eq!(t.ranked.len(), report.sims_run);
+        // Ranking is by decode throughput, best first.
+        for w in t.ranked.windows(2) {
+            assert!(w[0].decode_tps >= w[1].decode_tps);
+        }
+        assert!(t.winner().decode_tps > 0.0);
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_runs_and_threads() {
+        let mut a_cfg = small_sweep();
+        a_cfg.threads = 1;
+        let mut b_cfg = small_sweep();
+        b_cfg.threads = 4;
+        let a = run_codesign(&a_cfg).unwrap();
+        let b = run_codesign(&b_cfg).unwrap();
+        for (ta, tb) in a.traces.iter().zip(&b.traces) {
+            assert_eq!(ta.winner().design, tb.winner().design);
+            assert_eq!(ta.winner().policy, tb.winner().policy);
+            assert_eq!(
+                ta.winner().decode_tps.to_bits(),
+                tb.winner().decode_tps.to_bits(),
+                "virtual-clock metrics must be bit-stable"
+            );
+            for (ca, cb) in ta.ranked.iter().zip(&tb.ranked) {
+                assert_eq!(ca.design, cb.design);
+                assert_eq!(ca.policy, cb.policy);
+            }
+        }
+    }
+
+    #[test]
+    fn max_designs_caps_the_sweep() {
+        let mut sweep = small_sweep();
+        sweep.max_designs = 1;
+        let report = run_codesign(&sweep).unwrap();
+        assert_eq!(report.designs_swept, 1);
+        assert_eq!(report.sims_run, sweep.policies.len());
+    }
+
+    #[test]
+    fn static_hosting_is_rejected() {
+        let mut sweep = small_sweep();
+        sweep.dse.hosting = AttentionHosting::StaticBoth;
+        assert!(run_codesign(&sweep).is_err());
+    }
+
+    #[test]
+    fn report_json_has_winners() {
+        let report = run_codesign(&small_sweep()).unwrap();
+        let v = report.to_json(3);
+        let mixed = v.get("traces").unwrap().get("mixed").unwrap();
+        assert!(mixed.get("winner").unwrap().get("design").is_some());
+        assert!(mixed.get("top").unwrap().as_arr().unwrap().len() <= 3);
+    }
+}

@@ -15,17 +15,47 @@
 //! static design is the TeLLMe-class baseline, the best DPR design is
 //! PD-Swap.
 //!
+//! ## Hot path
+//!
+//! Grid evaluation runs through [`DseKernel`]: per-grid the
+//! design-independent quantities (memory system, weight-stream time, the
+//! KV-bandwidth variants) are computed once in a
+//! [`crate::engines::SurfaceFactory`], the Eq. 2 / routability check is
+//! replayed as pure [`ResourceVec`] arithmetic (no floorplan objects
+//! allocated), and per-candidate latencies come from an O(1)
+//! [`crate::engines::LatencySurface`] — bit-identical to the uncached
+//! [`evaluate`] reference, which is retained for tests and the
+//! `hotpath_kernel` bench. [`explore`] fans the grid out over scoped
+//! threads ([`crate::util::par`]) and reduces serially in grid order, so
+//! the result is identical for any thread count; the runner-up list is a
+//! bounded top-k heap ([`TopK`]) instead of a clone-everything vector.
+//!
 //! [`implement_with_feedback`] models the Fig. 4b build loop: validate the
 //! floorplan, and on a routability failure shrink the dynamic-region
 //! parallelism and retry ("if overall timing closure still fails ...
 //! iteratively reduce resource utilization in the dynamic partition").
 
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::bail;
+
 use crate::engines::{
     AcceleratorDesign, AttentionHosting, DecodeAttentionEngine, NormEngine,
-    PhaseModel, PrefillAttentionEngine, ScheduleQuality, TlmmEngine,
+    PhaseModel, PrefillAttentionEngine, ScheduleQuality, SurfaceFactory, TlmmEngine,
 };
-use crate::fpga::DeviceConfig;
+use crate::fpga::region::{validate_budget, PBLOCK_FILL_CEILING};
+use crate::fpga::{DeviceConfig, ResourceVec};
 use crate::model::ModelShape;
+use crate::util::par::{default_threads, par_map};
+use crate::Result;
+
+pub mod codesign;
+
+pub use codesign::{run_codesign, CodesignConfig, CodesignReport, TracePreset};
+
+/// Runner-up list size carried in a [`DseResult`].
+pub const TOP_K: usize = 10;
 
 /// Exploration parameters (defaults = the paper's setup).
 #[derive(Debug, Clone)]
@@ -63,6 +93,22 @@ impl DseConfig {
             prefill_grid: (2..=18).map(|i| i * 25).collect(),
             decode_grid: (1..=12).map(|i| i * 25).collect(),
         }
+    }
+
+    /// Grid points in canonical order (tlmm, then prefill, then decode) —
+    /// the order every reduction and determinism contract is defined on.
+    pub fn grid(&self) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::with_capacity(
+            self.tlmm_grid.len() * self.prefill_grid.len() * self.decode_grid.len(),
+        );
+        for &tlmm_pe in &self.tlmm_grid {
+            for &pre_dsp in &self.prefill_grid {
+                for &dec_dsp in &self.decode_grid {
+                    out.push((tlmm_pe, pre_dsp, dec_dsp));
+                }
+            }
+        }
+        out
     }
 }
 
@@ -124,7 +170,11 @@ fn candidate(
     }
 }
 
-/// Evaluate one candidate against constraints + objective.
+/// Evaluate one candidate against constraints + objective — the uncached
+/// reference path: builds the floorplan objects and a full [`PhaseModel`]
+/// per call. The grid explorer uses the bit-identical [`DseKernel`] fast
+/// path instead; this stays as the oracle for tests and the
+/// `hotpath_kernel` bench.
 pub fn evaluate(cfg: &DseConfig, design: AcceleratorDesign) -> DsePoint {
     // Constraint: Eq. 2 / static fit + routability, via the floorplanner.
     let plan = match design.region_plan() {
@@ -157,7 +207,18 @@ pub fn evaluate(cfg: &DseConfig, design: AcceleratorDesign) -> DsePoint {
     let t_pre = model.prefill(&cfg.shape, cfg.l_prefill).total;
     let t_dec_long = model.decode_step(&cfg.shape, cfg.l_long).total;
     let t_dec_short = model.decode_step(&cfg.shape, cfg.l_short).total;
+    finish_point(cfg, design, t_pre, t_dec_long, t_dec_short)
+}
 
+/// Shared tail of both evaluation paths: the Eq. 4 responsiveness check
+/// and the Eq. 6 objective.
+fn finish_point(
+    cfg: &DseConfig,
+    design: AcceleratorDesign,
+    t_pre: f64,
+    t_dec_long: f64,
+    t_dec_short: f64,
+) -> DsePoint {
     // Constraint: user-perceived responsiveness (Eq. 4).
     if t_pre > cfg.t_pre_max {
         return DsePoint {
@@ -192,8 +253,9 @@ pub fn evaluate(cfg: &DseConfig, design: AcceleratorDesign) -> DsePoint {
     }
 }
 
-/// Evaluate one (tlmm, prefill, decode) grid point — exposed for the
-/// property tests and the explorer example.
+/// Evaluate one (tlmm, prefill, decode) grid point through the uncached
+/// reference path — exposed for the property tests and the explorer
+/// example.
 pub fn evaluate_grid_point(
     cfg: &DseConfig,
     tlmm_pe: usize,
@@ -203,52 +265,253 @@ pub fn evaluate_grid_point(
     evaluate(cfg, candidate(cfg, tlmm_pe, pre_dsp, dec_dsp))
 }
 
-/// Full grid exploration.
-pub fn explore(cfg: &DseConfig) -> DseResult {
-    let mut best: Option<DsePoint> = None;
-    let mut top: Vec<DsePoint> = Vec::new();
-    let mut explored = 0;
-    let mut feasible = 0;
+// ---------------------------------------------------------------------------
+// Fast evaluation kernel
+// ---------------------------------------------------------------------------
 
-    for &tlmm_pe in &cfg.tlmm_grid {
-        for &pre_dsp in &cfg.prefill_grid {
-            for &dec_dsp in &cfg.decode_grid {
-                explored += 1;
-                let point = evaluate(cfg, candidate(cfg, tlmm_pe, pre_dsp, dec_dsp));
-                if !point.feasible {
-                    continue;
-                }
-                feasible += 1;
-                top.push(point.clone());
-                // Primary: minimize Eq. 6. Tie-break: prefer the largest
-                // decode engine that still fits — once decode attention is
-                // memory-bound extra PEs are objective-neutral, and the RP
-                // is already sized by the prefill RM, so they are free
-                // ("allocates the maximum available resources to the
-                // active stage", §4.3).
-                let better = match &best {
-                    None => true,
-                    Some(b) => {
-                        point.objective < b.objective - 1e-9
-                            || (point.objective <= b.objective + 1e-9
-                                && point.design.decode_attn.n_dsp
-                                    > b.design.decode_attn.n_dsp)
-                    }
-                };
-                if better {
-                    best = Some(point);
-                }
+/// Per-grid evaluation kernel: one [`SurfaceFactory`] amortizes the
+/// design-independent analytic work, and the Eq. 2 / routability check
+/// sums [`ResourceVec`]s without materializing floorplan objects, then
+/// funnels into the same [`validate_budget`] rule the reference path
+/// uses. Every output is bit-identical to [`evaluate`] (asserted by the
+/// kernel tests and the `prop_surface_matches_phase_model` property
+/// test).
+#[derive(Debug, Clone)]
+pub struct DseKernel {
+    cfg: DseConfig,
+    factory: SurfaceFactory,
+    norm_res: ResourceVec,
+    other_res: ResourceVec,
+    /// The token debug-partition pblock a static design still reserves.
+    static_dummy_pblock: ResourceVec,
+}
+
+impl DseKernel {
+    pub fn new(cfg: &DseConfig) -> Self {
+        // The DSE objective queries monolithic decode steps only; the
+        // paged bandwidth slot just needs *a* page size (32 = the KV-pool
+        // default).
+        let factory = SurfaceFactory::new(&cfg.device, &cfg.shape, 32);
+        let dummy = ResourceVec::ZERO.max(&ResourceVec::new(64.0, 128.0, 0.0, 0.0, 0.0));
+        Self {
+            cfg: cfg.clone(),
+            factory,
+            norm_res: NormEngine::PAPER.resources(),
+            other_res: crate::engines::design::other_static(),
+            static_dummy_pblock: dummy * (1.0 / PBLOCK_FILL_CEILING),
+        }
+    }
+
+    pub fn config(&self) -> &DseConfig {
+        &self.cfg
+    }
+
+    /// Evaluate one grid point without materializing floorplan objects.
+    pub fn evaluate(&self, tlmm_pe: usize, pre_dsp: usize, dec_dsp: usize) -> DsePoint {
+        let cfg = &self.cfg;
+        let design = candidate(cfg, tlmm_pe, pre_dsp, dec_dsp);
+        let tlmm_res = design.tlmm.resources();
+        let pre_res = design.prefill_attn.resources();
+        let dec_res = design.decode_attn.resources();
+        // Replays StaticRegion::total + ReconfigurablePartition::plan in
+        // the same operation order as `AcceleratorDesign::region_plan`.
+        let (static_total, pblock) = match cfg.hosting {
+            AttentionHosting::Reconfigurable => (
+                ResourceVec::ZERO + tlmm_res + self.norm_res + self.other_res,
+                ResourceVec::ZERO.max(&pre_res).max(&dec_res) * (1.0 / PBLOCK_FILL_CEILING),
+            ),
+            AttentionHosting::StaticBoth => (
+                ResourceVec::ZERO + tlmm_res + self.norm_res + self.other_res + pre_res
+                    + dec_res,
+                self.static_dummy_pblock,
+            ),
+        };
+        let total = static_total + pblock;
+        // Same accept/reject rule (and diagnostics) as the reference path:
+        // `region_plan().validate()` funnels into this checker too.
+        if let Err(reason) = validate_budget(static_total, total, &cfg.device) {
+            return DsePoint {
+                design,
+                feasible: false,
+                reject_reason: Some(reason),
+                t_pre: f64::INFINITY,
+                t_dec_long: f64::INFINITY,
+                t_dec_short: f64::INFINITY,
+                objective: f64::INFINITY,
+            };
+        }
+        let surface = self.factory.surface(&design);
+        let t_pre = surface.prefill(cfg.l_prefill).total;
+        let t_dec_long = surface.decode_step(cfg.l_long).total;
+        let t_dec_short = surface.decode_step(cfg.l_short).total;
+        finish_point(cfg, design, t_pre, t_dec_long, t_dec_short)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded top-k
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Ranked {
+    objective: f64,
+    seq: usize,
+    point: DsePoint,
+}
+
+impl PartialEq for Ranked {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Ranked {}
+impl PartialOrd for Ranked {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ranked {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Feasible objectives are finite by construction; ties break by
+        // grid order so the heap is fully deterministic.
+        self.objective
+            .partial_cmp(&other.objective)
+            .unwrap_or(Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Bounded best-k collector ordered by `(objective, sequence)`: O(log k)
+/// per offer, never holding more than `k` points — the replacement for
+/// the clone-every-feasible-point-then-truncate pattern.
+#[derive(Debug)]
+pub struct TopK {
+    cap: usize,
+    /// Max-heap: the worst retained point sits at the top for eviction.
+    heap: BinaryHeap<Ranked>,
+}
+
+impl TopK {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, heap: BinaryHeap::with_capacity(cap + 1) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer one candidate; it is kept iff it ranks inside the best `cap`
+    /// seen so far.
+    pub fn offer(&mut self, objective: f64, seq: usize, point: DsePoint) {
+        if self.cap == 0 {
+            return;
+        }
+        let entry = Ranked { objective, seq, point };
+        if self.heap.len() < self.cap {
+            self.heap.push(entry);
+            return;
+        }
+        if let Some(worst) = self.heap.peek() {
+            if entry.cmp(worst) == Ordering::Less {
+                self.heap.pop();
+                self.heap.push(entry);
             }
         }
     }
-    top.sort_by(|a, b| a.objective.partial_cmp(&b.objective).unwrap());
-    top.truncate(10);
-    DseResult {
-        best: best.expect("no feasible design in the grid — widen the search"),
-        explored,
-        feasible,
-        top,
+
+    /// The retained points, best first (objective ascending, grid order
+    /// within ties — matching a stable sort over the full feasible set).
+    pub fn into_sorted(self) -> Vec<DsePoint> {
+        let mut v = self.heap.into_vec();
+        v.sort_by(|a, b| a.cmp(b));
+        v.into_iter().map(|r| r.point).collect()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Exploration
+// ---------------------------------------------------------------------------
+
+/// Full grid exploration on the fast kernel, parallelized over scoped
+/// threads. Errors (instead of panicking) when no grid point is feasible.
+pub fn explore(cfg: &DseConfig) -> Result<DseResult> {
+    explore_threads(cfg, default_threads())
+}
+
+/// [`explore`] pinned to one thread — the serial reference the
+/// determinism tests compare against.
+pub fn explore_serial(cfg: &DseConfig) -> Result<DseResult> {
+    explore_threads(cfg, 1)
+}
+
+/// [`explore`] with an explicit worker count. The reduction runs serially
+/// over the grid-ordered evaluations, so the returned [`DseResult`] is
+/// identical (bit for bit) for every `threads` value.
+pub fn explore_threads(cfg: &DseConfig, threads: usize) -> Result<DseResult> {
+    let kernel = DseKernel::new(cfg);
+    let grid = cfg.grid();
+    let points = par_map(&grid, threads, |&(t, p, d)| kernel.evaluate(t, p, d));
+    reduce(cfg, points)
+}
+
+/// The uncached exploration path: serial, one floorplan + [`PhaseModel`]
+/// per grid point, same reduction. Retained as the baseline the
+/// `hotpath_kernel` bench measures the kernel speedup against (both paths
+/// must return identical results).
+pub fn explore_uncached(cfg: &DseConfig) -> Result<DseResult> {
+    let points: Vec<DsePoint> = cfg
+        .grid()
+        .into_iter()
+        .map(|(t, p, d)| evaluate_grid_point(cfg, t, p, d))
+        .collect();
+    reduce(cfg, points)
+}
+
+/// Serial grid-order reduction shared by every exploration path.
+fn reduce(cfg: &DseConfig, points: Vec<DsePoint>) -> Result<DseResult> {
+    let explored = points.len();
+    let mut feasible = 0usize;
+    let mut top = TopK::new(TOP_K);
+    let mut best: Option<DsePoint> = None;
+    for (seq, point) in points.into_iter().enumerate() {
+        if !point.feasible {
+            continue;
+        }
+        feasible += 1;
+        // Primary: minimize Eq. 6 (exact comparison — once decode
+        // attention is memory-bound its latency is independent of the
+        // engine size, so the ties that matter are bit-exact under the
+        // surface kernel). Tie-break: prefer the largest decode engine
+        // that still fits — the RP is already sized by the prefill RM, so
+        // the extra PEs are free ("allocates the maximum available
+        // resources to the active stage", §4.3). Further ties keep the
+        // earliest grid point, making the rule a total order that any
+        // evaluation parallelism preserves.
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                point.objective < b.objective
+                    || (point.objective == b.objective
+                        && point.design.decode_attn.n_dsp > b.design.decode_attn.n_dsp)
+            }
+        };
+        if better {
+            best = Some(point.clone());
+        }
+        top.offer(point.objective, seq, point);
+    }
+    let Some(best) = best else {
+        bail!(
+            "no feasible design among {} grid points of {} — widen the search or relax T_pre_max",
+            explored,
+            cfg.shape.name
+        )
+    };
+    Ok(DseResult { best, explored, feasible, top: top.into_sorted() })
 }
 
 /// One iteration record of the Fig. 4b implementation loop.
@@ -256,7 +519,7 @@ pub fn explore(cfg: &DseConfig) -> DseResult {
 pub struct FlowIteration {
     pub attempt: usize,
     pub design_name: String,
-    pub outcome: Result<f64, String>,
+    pub outcome: std::result::Result<f64, String>,
 }
 
 /// The automated implementation flow: try to "place and route" the design
@@ -317,8 +580,8 @@ mod tests {
 
     #[test]
     fn dpr_search_finds_bigger_engines_than_static() {
-        let dpr = explore(&quick_cfg(AttentionHosting::Reconfigurable));
-        let stat = explore(&quick_cfg(AttentionHosting::StaticBoth));
+        let dpr = explore(&quick_cfg(AttentionHosting::Reconfigurable)).unwrap();
+        let stat = explore(&quick_cfg(AttentionHosting::StaticBoth)).unwrap();
         let dpr_attn =
             dpr.best.design.prefill_attn.n_dsp + dpr.best.design.decode_attn.n_dsp;
         let stat_attn =
@@ -332,8 +595,8 @@ mod tests {
 
     #[test]
     fn dpr_objective_beats_static() {
-        let dpr = explore(&quick_cfg(AttentionHosting::Reconfigurable));
-        let stat = explore(&quick_cfg(AttentionHosting::StaticBoth));
+        let dpr = explore(&quick_cfg(AttentionHosting::Reconfigurable)).unwrap();
+        let stat = explore(&quick_cfg(AttentionHosting::StaticBoth)).unwrap();
         assert!(
             dpr.best.objective < stat.best.objective,
             "dpr {:.3} vs static {:.3}",
@@ -345,7 +608,7 @@ mod tests {
     #[test]
     fn all_feasible_points_satisfy_eq2() {
         let cfg = quick_cfg(AttentionHosting::Reconfigurable);
-        let res = explore(&cfg);
+        let res = explore(&cfg).unwrap();
         for p in &res.top {
             let plan = p.design.region_plan().unwrap();
             assert!(plan.validate(&KV260).is_ok(), "{}", p.design.name);
@@ -370,6 +633,76 @@ mod tests {
         let p = evaluate(&cfg, candidate(&cfg, 320, 300, 250));
         assert!(!p.feasible);
         assert!(p.reject_reason.unwrap().contains("T_pre"));
+    }
+
+    #[test]
+    fn kernel_matches_uncached_evaluate_bitwise() {
+        for hosting in [AttentionHosting::Reconfigurable, AttentionHosting::StaticBoth] {
+            let cfg = quick_cfg(hosting);
+            let kernel = DseKernel::new(&cfg);
+            for (t, p, d) in cfg.grid() {
+                let fast = kernel.evaluate(t, p, d);
+                let slow = evaluate_grid_point(&cfg, t, p, d);
+                assert_eq!(fast.feasible, slow.feasible, "({t},{p},{d})");
+                assert_eq!(fast.reject_reason, slow.reject_reason, "({t},{p},{d})");
+                assert_eq!(
+                    fast.objective.to_bits(),
+                    slow.objective.to_bits(),
+                    "({t},{p},{d})"
+                );
+                assert_eq!(fast.t_pre.to_bits(), slow.t_pre.to_bits(), "({t},{p},{d})");
+                assert_eq!(
+                    fast.t_dec_long.to_bits(),
+                    slow.t_dec_long.to_bits(),
+                    "({t},{p},{d})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_grid_is_an_error_not_a_panic() {
+        let mut cfg = quick_cfg(AttentionHosting::Reconfigurable);
+        cfg.t_pre_max = 0.001; // nothing can prefill 768 tokens in 1 ms
+        let err = explore(&cfg).unwrap_err();
+        assert!(err.to_string().contains("no feasible design"), "{err}");
+        assert!(explore_uncached(&cfg).is_err());
+    }
+
+    #[test]
+    fn top_k_is_bounded_sorted_and_deterministic() {
+        let cfg = quick_cfg(AttentionHosting::Reconfigurable);
+        let res = explore(&cfg).unwrap();
+        assert!(res.top.len() <= TOP_K);
+        assert!(!res.top.is_empty());
+        for w in res.top.windows(2) {
+            assert!(w[0].objective <= w[1].objective);
+        }
+        // The best point leads the top list.
+        assert_eq!(res.top[0].objective.to_bits(), res.best.objective.to_bits());
+    }
+
+    #[test]
+    fn parallel_explore_matches_serial() {
+        for hosting in [AttentionHosting::Reconfigurable, AttentionHosting::StaticBoth] {
+            let cfg = quick_cfg(hosting);
+            let serial = explore_serial(&cfg).unwrap();
+            for threads in [2, 3, 8] {
+                let par = explore_threads(&cfg, threads).unwrap();
+                assert_eq!(par.explored, serial.explored);
+                assert_eq!(par.feasible, serial.feasible);
+                assert_eq!(par.best.design.name, serial.best.design.name);
+                assert_eq!(
+                    par.best.objective.to_bits(),
+                    serial.best.objective.to_bits()
+                );
+                assert_eq!(par.top.len(), serial.top.len());
+                for (a, b) in par.top.iter().zip(&serial.top) {
+                    assert_eq!(a.design.name, b.design.name);
+                    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+                }
+            }
+        }
     }
 
     #[test]
@@ -408,7 +741,7 @@ mod tests {
             KV260.clone(),
             AttentionHosting::Reconfigurable,
         );
-        let res = explore(&cfg);
+        let res = explore(&cfg).unwrap();
         let d = &res.best.design;
         assert!(
             (250..=450).contains(&d.prefill_attn.n_dsp),

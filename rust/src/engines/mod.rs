@@ -29,12 +29,14 @@ pub mod attention;
 pub mod design;
 pub mod norm;
 pub mod phase;
+pub mod surface;
 pub mod tlmm;
 
 pub use attention::{DecodeAttentionEngine, PrefillAttentionEngine, ScheduleQuality};
 pub use design::{AcceleratorDesign, AttentionHosting};
 pub use norm::NormEngine;
 pub use phase::{DecodeLatency, PhaseModel, PrefillLatency};
+pub use surface::{LatencySurface, SurfaceCache, SurfaceFactory, SurfaceKey, SurfaceOverlap};
 pub use tlmm::TlmmEngine;
 
 /// Calibration constants (see module docs).

@@ -1,0 +1,557 @@
+//! Latency surfaces: precomputed, O(1) closed forms of the phase model.
+//!
+//! [`PhaseModel`] re-derives every latency from first principles on each
+//! call — including rebuilding [`PortMapping`]s (heap allocations) and
+//! re-running the AXI transfer-time arbitration — which makes it the
+//! single hottest function of both the §4.3 DSE sweep and the serving
+//! simulators (one call per decode token-step event). This module
+//! exploits the model's analytic structure to collapse each query to a
+//! handful of floating-point operations:
+//!
+//! * **decode step** — Eq. 5 is *exactly* linear in context length `l`:
+//!   the attention term is `max(compute_slope · l, memory_slope · l)` and
+//!   projection/norm are constants. The surface caches the two slopes and
+//!   the constants.
+//! * **prefill** — Eq. 3 is piecewise-linear-plus-quadratic in `l`: the
+//!   projection term is `max(l / tps, T_weights)` (one breakpoint at
+//!   `l* = T_weights · tps`, where the pipelined weight stream stops
+//!   binding), attention is a pure `l²` term, and norm is linear. The
+//!   surface caches `tps`, `T_weights`, and the two engine rates.
+//!
+//! **Everything here is exact, nothing is interpolated.** The cached
+//! quantities are the *coefficients* of the closed forms (engine MAC
+//! rates, effective KV/weight bandwidths), not sampled latency values, and
+//! every evaluation replays the phase model's arithmetic in the same
+//! operation order — so a surface query is bit-identical to the
+//! corresponding [`PhaseModel`] call, including at the breakpoints. The
+//! property tests in `rust/tests/prop_invariants.rs` pin this equivalence
+//! across the paper's DSE grid, all context breakpoints, and both hosting
+//! modes.
+//!
+//! Three layers of caching, coarse to fine:
+//!
+//! * [`LatencySurface`] — one (design, device, shape, page size): the
+//!   serving engines hold one and query it per token step.
+//! * [`SurfaceFactory`] — one (device, shape, page size), amortizing the
+//!   design-independent work (memory system, weight-stream time, the four
+//!   KV-bandwidth variants) across a whole DSE grid: building a surface
+//!   for the next candidate is pure arithmetic.
+//! * [`SurfaceCache`] — a memo of finished surfaces keyed by the design's
+//!   structural hash ([`SurfaceKey`]), for sweeps that revisit designs
+//!   (the `codesign` joint exploration).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::fpga::DeviceConfig;
+use crate::memory::traffic::burst_for;
+use crate::memory::{paged_kv_burst, MemorySystem, Stream};
+use crate::model::ModelShape;
+
+use super::attention::DecodeAttentionEngine;
+use super::design::{AcceleratorDesign, AttentionHosting};
+use super::phase::{DecodeLatency, PrefillLatency};
+
+/// The §3.4 overlap arithmetic evaluated on a surface (mirrors
+/// [`crate::reconfig::OverlapScheduler::overlapped`] bit for bit).
+#[derive(Debug, Clone, Copy)]
+pub struct SurfaceOverlap {
+    /// Total prefill latency.
+    pub prefill_end: f64,
+    /// When the final layer's attention completes (swap trigger point).
+    pub trigger: f64,
+    /// Prefill tail available to hide the PCAP load.
+    pub tail: f64,
+    /// When the decode RM is live.
+    pub decode_ready: f64,
+    /// Reconfiguration latency NOT hidden by the tail.
+    pub exposed: f64,
+}
+
+/// Precomputed latency surface for one (design, device, shape, page size).
+#[derive(Debug, Clone)]
+pub struct LatencySurface {
+    shape: ModelShape,
+    /// TLMM projection throughput (tokens/s) on this shape.
+    tlmm_tps: f64,
+    /// One full packed-weight stream (the `T_weights` floor of Eqs. 3/5).
+    t_weights: f64,
+    /// Norm/element-wise time per token.
+    norm_per_token: f64,
+    /// Prefill attention sustained MAC rate.
+    pre_attn_rate: f64,
+    /// Decode attention sustained MAC rate.
+    dec_attn_rate: f64,
+    /// Effective K+V bandwidth at the monolithic (64-beat) burst.
+    kv_bw_mono: f64,
+    /// Page size the paged bandwidth below was computed for.
+    page_tokens: usize,
+    /// Effective K+V bandwidth at the paged burst shape.
+    kv_bw_paged: f64,
+    /// Decode projection constant: `max(1/tps, T_weights)`.
+    dec_proj: f64,
+    /// Last-layer post-attention fraction of a layer's projection work.
+    tail_frac: f64,
+    /// Kept for cold queries at page sizes other than `page_tokens`.
+    decode_attn: DecodeAttentionEngine,
+    mem: MemorySystem,
+    /// Structural identity of the configuration this surface was built
+    /// for — lets consumers ([`crate::coordinator::EventServer`]) verify
+    /// an injected surface actually matches their config.
+    key: SurfaceKey,
+}
+
+impl LatencySurface {
+    /// Build the surface. `page_tokens` selects which paged-burst
+    /// bandwidth is precomputed (queries at other page sizes still work,
+    /// they just recompute the burst shape).
+    pub fn new(
+        design: &AcceleratorDesign,
+        device: &DeviceConfig,
+        shape: &ModelShape,
+        page_tokens: usize,
+    ) -> Self {
+        SurfaceFactory::new(device, shape, page_tokens).surface(design)
+    }
+
+    pub fn shape(&self) -> &ModelShape {
+        &self.shape
+    }
+
+    /// The structural key of the (design, device, shape, page size) this
+    /// surface was built for.
+    pub fn key(&self) -> &SurfaceKey {
+        &self.key
+    }
+
+    /// The `T_weights` decode floor (also the prefill stream bound).
+    pub fn weight_stream_time(&self) -> f64 {
+        self.t_weights
+    }
+
+    /// Cached sustained MAC rate of the prefill attention engine.
+    pub fn prefill_attn_mac_rate(&self) -> f64 {
+        self.pre_attn_rate
+    }
+
+    /// Cached sustained MAC rate of the decode attention engine.
+    pub fn decode_attn_mac_rate(&self) -> f64 {
+        self.dec_attn_rate
+    }
+
+    /// Cached effective K+V bandwidth (monolithic burst).
+    pub fn kv_bandwidth(&self) -> f64 {
+        self.kv_bw_mono
+    }
+
+    /// Eq. 3 in closed form — equals `PhaseModel::prefill` exactly.
+    pub fn prefill(&self, l: usize) -> PrefillLatency {
+        let lf = l as f64;
+        let projection = (lf / self.tlmm_tps).max(self.t_weights);
+        let macs =
+            self.shape.n_layers as f64 * (lf * lf / 2.0) * self.shape.d_model as f64 * 2.0;
+        let attention = macs / self.pre_attn_rate;
+        let norm = self.norm_per_token * lf;
+        PrefillLatency {
+            projection,
+            attention,
+            norm_elementwise: norm,
+            weights: self.t_weights,
+            total: projection + attention + norm,
+        }
+    }
+
+    /// Eq. 5 in closed form — equals `PhaseModel::decode_step` exactly.
+    pub fn decode_step(&self, l: usize) -> DecodeLatency {
+        self.decode_with_bw(l, self.kv_bw_mono)
+    }
+
+    /// Paged Eq. 5 — equals `PhaseModel::decode_step_paged` exactly. Hits
+    /// the precomputed bandwidth when `page_tokens` matches construction.
+    pub fn decode_step_paged(&self, l: usize, page_tokens: usize) -> DecodeLatency {
+        let bw = if page_tokens == self.page_tokens {
+            self.kv_bw_paged
+        } else {
+            self.decode_attn
+                .kv_bandwidth_with_burst(&self.mem, paged_kv_burst(&self.shape, page_tokens))
+        };
+        self.decode_with_bw(l, bw)
+    }
+
+    fn decode_with_bw(&self, l: usize, bw: f64) -> DecodeLatency {
+        let macs = 2.0 * (l * self.shape.d_model) as f64 * self.shape.n_layers as f64;
+        let compute = macs / self.dec_attn_rate;
+        let memory = self.shape.kv_bytes(l) / bw;
+        let attention = compute.max(memory);
+        DecodeLatency {
+            projection: self.dec_proj,
+            attention,
+            norm_elementwise: self.norm_per_token,
+            total: self.dec_proj + attention + self.norm_per_token,
+        }
+    }
+
+    /// Decode throughput (tokens/s) at context `l`.
+    pub fn decode_throughput(&self, l: usize) -> f64 {
+        self.decode_step(l).tokens_per_sec()
+    }
+
+    /// The §3.4 prefill tail after the final layer's attention — equals
+    /// `PhaseModel::prefill_tail_after_last_attention` exactly.
+    pub fn prefill_tail(&self, l: usize) -> f64 {
+        let pre = self.prefill(l);
+        let proj_per_layer = pre.projection / self.shape.n_layers as f64;
+        let norm_per_layer = pre.norm_elementwise / self.shape.n_layers as f64;
+        proj_per_layer * self.tail_frac + norm_per_layer
+    }
+
+    /// The §3.4 early-trigger timeline for a given PCAP load latency —
+    /// mirrors `OverlapScheduler::overlapped` bit for bit.
+    pub fn overlapped(&self, l: usize, reconfig_latency: f64) -> SurfaceOverlap {
+        let prefill_end = self.prefill(l).total;
+        let tail = self.prefill_tail(l);
+        let trigger = prefill_end - tail;
+        let decode_ready = (trigger + reconfig_latency).max(prefill_end);
+        let exposed = decode_ready - prefill_end;
+        SurfaceOverlap { prefill_end, trigger, tail, decode_ready, exposed }
+    }
+
+    /// Exposed cost of a decode→prefill→decode round trip — mirrors
+    /// [`crate::reconfig::round_trip_exposed`] on the surface.
+    pub fn round_trip_exposed(
+        &self,
+        representative_prompt: usize,
+        reconfig_latency: f64,
+    ) -> f64 {
+        let back = self.overlapped(representative_prompt.max(1), reconfig_latency).exposed;
+        reconfig_latency + back
+    }
+
+    /// Prefill-projection breakpoint `l* = T_weights · tps`: below it the
+    /// weight stream binds, above it PE compute does. Exposed so tests
+    /// can probe the exact knee.
+    pub fn prefill_projection_breakpoint(&self) -> f64 {
+        self.t_weights * self.tlmm_tps
+    }
+}
+
+/// Design-independent precomputation for one (device, shape, page size):
+/// turning a DSE candidate into a [`LatencySurface`] becomes pure
+/// arithmetic (no allocation, no port-model evaluation).
+#[derive(Debug, Clone)]
+pub struct SurfaceFactory {
+    shape: ModelShape,
+    device: DeviceConfig,
+    clock_hz: f64,
+    mem: MemorySystem,
+    /// `weight_stream_time` is engine-size independent (the stream is
+    /// striped over all ports regardless of PE count).
+    t_weights: f64,
+    page_tokens: usize,
+    /// K+V bandwidth by (kv_optimized_ports, paged): engine-size
+    /// independent — only the port mapping and burst shape matter.
+    kv_bw_opt_mono: f64,
+    kv_bw_base_mono: f64,
+    kv_bw_opt_paged: f64,
+    kv_bw_base_paged: f64,
+    tail_frac: f64,
+}
+
+impl SurfaceFactory {
+    pub fn new(device: &DeviceConfig, shape: &ModelShape, page_tokens: usize) -> Self {
+        let mem = MemorySystem::for_device(device);
+        // Any PE count serves: weight_stream_time ignores it.
+        let t_weights = super::TlmmEngine { n_pe: 1 }.weight_stream_time(shape, &mem);
+        let probe = |kv_opt: bool, burst| {
+            DecodeAttentionEngine {
+                n_dsp: 1,
+                schedule: super::ScheduleQuality::Tailored,
+                kv_optimized_ports: kv_opt,
+            }
+            .kv_bandwidth_with_burst(&mem, burst)
+        };
+        let mono = burst_for(Stream::K);
+        let paged = paged_kv_burst(shape, page_tokens);
+        let d = shape.d_model as f64;
+        let dff = shape.d_ff as f64;
+        Self {
+            shape: *shape,
+            device: device.clone(),
+            clock_hz: device.clock_hz(),
+            t_weights,
+            page_tokens,
+            kv_bw_opt_mono: probe(true, mono),
+            kv_bw_base_mono: probe(false, mono),
+            kv_bw_opt_paged: probe(true, paged),
+            kv_bw_base_paged: probe(false, paged),
+            tail_frac: (3.0 * d * dff + d * d) / (4.0 * d * d + 3.0 * d * dff),
+            mem,
+        }
+    }
+
+    /// Build the surface for one design: pure arithmetic.
+    pub fn surface(&self, design: &AcceleratorDesign) -> LatencySurface {
+        let tlmm_tps = design.tlmm.tokens_per_sec(&self.shape);
+        let (kv_mono, kv_paged) = if design.decode_attn.kv_optimized_ports {
+            (self.kv_bw_opt_mono, self.kv_bw_opt_paged)
+        } else {
+            (self.kv_bw_base_mono, self.kv_bw_base_paged)
+        };
+        LatencySurface {
+            shape: self.shape,
+            tlmm_tps,
+            t_weights: self.t_weights,
+            norm_per_token: design.norm.time_per_token(&self.shape, self.clock_hz),
+            pre_attn_rate: design.prefill_attn.mac_rate(self.clock_hz),
+            dec_attn_rate: design.decode_attn.mac_rate(self.clock_hz),
+            kv_bw_mono: kv_mono,
+            page_tokens: self.page_tokens,
+            kv_bw_paged: kv_paged,
+            dec_proj: (1.0 / tlmm_tps).max(self.t_weights),
+            tail_frac: self.tail_frac,
+            decode_attn: design.decode_attn,
+            mem: self.mem.clone(),
+            key: self.key_for(design),
+        }
+    }
+
+    /// The [`SurfaceKey`] a surface built by this factory for `design`
+    /// will carry.
+    pub fn key_for(&self, design: &AcceleratorDesign) -> SurfaceKey {
+        SurfaceKey::new(design, &self.device, &self.shape, self.page_tokens)
+    }
+}
+
+/// Structural identity of a (design, device, shape, page size) tuple —
+/// the memo key for [`SurfaceCache`]. Floats enter as bit patterns, so
+/// two configurations collide only if they are numerically identical.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SurfaceKey {
+    tlmm_pe: usize,
+    norm_lanes: usize,
+    pre_dsp: usize,
+    pre_tailored: bool,
+    dec_dsp: usize,
+    dec_tailored: bool,
+    kv_opt: bool,
+    dpr: bool,
+    shape: (usize, usize, usize, usize, usize, usize, u64),
+    device: (u64, u64, u64, usize, u64, u64),
+    page_tokens: usize,
+}
+
+impl SurfaceKey {
+    pub fn new(
+        design: &AcceleratorDesign,
+        device: &DeviceConfig,
+        shape: &ModelShape,
+        page_tokens: usize,
+    ) -> Self {
+        use super::ScheduleQuality;
+        Self {
+            tlmm_pe: design.tlmm.n_pe,
+            norm_lanes: design.norm.lanes,
+            pre_dsp: design.prefill_attn.n_dsp,
+            pre_tailored: design.prefill_attn.schedule == ScheduleQuality::Tailored,
+            dec_dsp: design.decode_attn.n_dsp,
+            dec_tailored: design.decode_attn.schedule == ScheduleQuality::Tailored,
+            kv_opt: design.decode_attn.kv_optimized_ports,
+            dpr: design.hosting == AttentionHosting::Reconfigurable,
+            shape: (
+                shape.n_layers,
+                shape.d_model,
+                shape.n_heads,
+                shape.d_ff,
+                shape.vocab,
+                shape.max_seq,
+                shape.kv_precision.bytes().to_bits(),
+            ),
+            device: (
+                device.clock_mhz.to_bits(),
+                device.hp_port_peak.to_bits(),
+                device.ddr_aggregate_peak.to_bits(),
+                device.n_hp_ports,
+                device.ddr_bytes.to_bits(),
+                device.pcap_bytes_per_sec.to_bits(),
+            ),
+            page_tokens,
+        }
+    }
+}
+
+/// Memoized surface construction keyed by [`SurfaceKey`] — for sweeps
+/// that evaluate the same design repeatedly (policy × trace joints).
+#[derive(Debug, Default)]
+pub struct SurfaceCache {
+    map: HashMap<SurfaceKey, Arc<LatencySurface>>,
+}
+
+impl SurfaceCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch (or build and memoize) the surface for a configuration.
+    /// Cold misses pay a full [`SurfaceFactory`] construction; sweeps
+    /// that hold a factory should prefer [`Self::get_with`].
+    pub fn get(
+        &mut self,
+        design: &AcceleratorDesign,
+        device: &DeviceConfig,
+        shape: &ModelShape,
+        page_tokens: usize,
+    ) -> Arc<LatencySurface> {
+        let key = SurfaceKey::new(design, device, shape, page_tokens);
+        self.map
+            .entry(key)
+            .or_insert_with(|| Arc::new(LatencySurface::new(design, device, shape, page_tokens)))
+            .clone()
+    }
+
+    /// Fetch (or build and memoize) through an existing factory: a miss
+    /// is pure arithmetic, so this stays cheap even under a shared lock
+    /// (the `codesign` sweep's pattern).
+    pub fn get_with(
+        &mut self,
+        factory: &SurfaceFactory,
+        design: &AcceleratorDesign,
+    ) -> Arc<LatencySurface> {
+        self.map
+            .entry(factory.key_for(design))
+            .or_insert_with(|| Arc::new(factory.surface(design)))
+            .clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::PhaseModel;
+    use crate::fpga::KV260;
+    use crate::model::BITNET_0_73B;
+
+    fn surface() -> LatencySurface {
+        LatencySurface::new(&AcceleratorDesign::pd_swap(), &KV260, &BITNET_0_73B, 32)
+    }
+
+    fn model() -> PhaseModel {
+        PhaseModel::new(AcceleratorDesign::pd_swap(), KV260.clone())
+    }
+
+    #[test]
+    fn prefill_matches_phase_model_bitwise() {
+        let s = surface();
+        let m = model();
+        for l in [0, 1, 63, 64, 128, 767, 768, 2047, 2048] {
+            let a = m.prefill(&BITNET_0_73B, l);
+            let b = s.prefill(l);
+            assert_eq!(a.projection.to_bits(), b.projection.to_bits(), "L={l}");
+            assert_eq!(a.attention.to_bits(), b.attention.to_bits(), "L={l}");
+            assert_eq!(a.total.to_bits(), b.total.to_bits(), "L={l}");
+        }
+    }
+
+    #[test]
+    fn decode_matches_phase_model_bitwise() {
+        let s = surface();
+        let m = model();
+        for l in [1, 2, 64, 512, 1024, 2048] {
+            assert_eq!(
+                m.decode_step(&BITNET_0_73B, l).total.to_bits(),
+                s.decode_step(l).total.to_bits(),
+                "L={l}"
+            );
+            for pt in [1, 2, 8, 32, 128] {
+                assert_eq!(
+                    m.decode_step_paged(&BITNET_0_73B, l, pt).total.to_bits(),
+                    s.decode_step_paged(l, pt).total.to_bits(),
+                    "L={l} pt={pt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tail_matches_phase_model_bitwise() {
+        let s = surface();
+        let m = model();
+        for l in [1, 128, 768, 2048] {
+            assert_eq!(
+                m.prefill_tail_after_last_attention(&BITNET_0_73B, l).to_bits(),
+                s.prefill_tail(l).to_bits(),
+                "L={l}"
+            );
+        }
+    }
+
+    #[test]
+    fn projection_breakpoint_is_the_knee() {
+        // Just below the breakpoint the weight stream binds (projection is
+        // flat at T_weights); just above, compute binds (it grows).
+        let s = surface();
+        let knee = s.prefill_projection_breakpoint();
+        let lo = knee.floor() as usize - 1;
+        let hi = knee.ceil() as usize + 1;
+        assert_eq!(s.prefill(lo).projection, s.weight_stream_time());
+        assert!(s.prefill(hi).projection > s.weight_stream_time());
+    }
+
+    #[test]
+    fn overlap_matches_scheduler() {
+        use crate::reconfig::OverlapScheduler;
+        let design = AcceleratorDesign::pd_swap();
+        let device = design.program(&KV260).unwrap();
+        let lat = device.reconfig_latency();
+        let sched = OverlapScheduler::new(model(), lat);
+        let s = surface();
+        for l in [1, 64, 128, 768, 2048] {
+            let a = sched.overlapped(&BITNET_0_73B, l);
+            let b = s.overlapped(l, lat);
+            assert_eq!(a.trigger.to_bits(), b.trigger.to_bits(), "L={l}");
+            assert_eq!(a.exposed.to_bits(), b.exposed.to_bits(), "L={l}");
+            assert_eq!(a.decode_ready.to_bits(), b.decode_ready.to_bits(), "L={l}");
+        }
+    }
+
+    #[test]
+    fn factory_surface_equals_direct_surface() {
+        let factory = SurfaceFactory::new(&KV260, &BITNET_0_73B, 32);
+        let tellme = AcceleratorDesign::tellme_static();
+        let a = factory.surface(&tellme);
+        let b = LatencySurface::new(&tellme, &KV260, &BITNET_0_73B, 32);
+        for l in [1, 64, 2048] {
+            assert_eq!(a.prefill(l).total.to_bits(), b.prefill(l).total.to_bits());
+            assert_eq!(a.decode_step(l).total.to_bits(), b.decode_step(l).total.to_bits());
+        }
+    }
+
+    #[test]
+    fn cache_hits_on_identical_designs() {
+        let mut cache = SurfaceCache::new();
+        let d1 = AcceleratorDesign::pd_swap();
+        let mut d2 = AcceleratorDesign::pd_swap();
+        d2.name = "renamed".into(); // names are labels, not structure
+        let a = cache.get(&d1, &KV260, &BITNET_0_73B, 32);
+        let b = cache.get(&d2, &KV260, &BITNET_0_73B, 32);
+        assert_eq!(cache.len(), 1, "structurally identical designs share a surface");
+        assert!(Arc::ptr_eq(&a, &b));
+        let mut d3 = AcceleratorDesign::pd_swap();
+        d3.decode_attn.n_dsp += 25;
+        cache.get(&d3, &KV260, &BITNET_0_73B, 32);
+        assert_eq!(cache.len(), 2);
+        // The factory-backed path lands in the same entries.
+        let factory = SurfaceFactory::new(&KV260, &BITNET_0_73B, 32);
+        let c = cache.get_with(&factory, &d1);
+        assert!(Arc::ptr_eq(&a, &c), "get and get_with share one entry");
+        assert_eq!(cache.len(), 2);
+        assert_eq!(c.key(), &factory.key_for(&d1));
+    }
+}

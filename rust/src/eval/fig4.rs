@@ -6,12 +6,14 @@ use crate::model::BITNET_0_73B;
 use crate::roofline::{Bound, RooflineModel, RooflinePoint};
 use crate::util::table::{fnum, Table};
 
-/// Compute the roofline points at a set of context lengths.
+/// Compute the roofline points at a set of context lengths (the shape's
+/// ceilings are resolved once and reused across lengths).
 pub fn analyze(lengths: &[usize]) -> Vec<(usize, Vec<RooflinePoint>)> {
     let model = RooflineModel::new(AcceleratorDesign::pd_swap(), KV260.clone());
+    let roofs = model.roofs_for(&BITNET_0_73B);
     lengths
         .iter()
-        .map(|&l| (l, model.analyze(&BITNET_0_73B, l)))
+        .map(|&l| (l, roofs.analyze_at(l)))
         .collect()
 }
 

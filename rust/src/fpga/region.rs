@@ -109,33 +109,46 @@ pub struct RegionPlan {
     pub rp: ReconfigurablePartition,
 }
 
+/// Eq. 2 with the routability ceiling, over already-summed resource
+/// vectors: `total` (static + pblock) must fit the device, and its LUT/FF
+/// congestion must clear [`ROUTABILITY_CEILING`]. Shared by
+/// [`RegionPlan::validate`] and the DSE fast kernel
+/// ([`crate::dse::DseKernel`]), so the accept/reject rule — and its
+/// diagnostics — exist in exactly one place.
+pub fn validate_budget(
+    static_total: ResourceVec,
+    total: ResourceVec,
+    device: &DeviceConfig,
+) -> Result<PlanReport, String> {
+    if !total.fits_within(&device.resources) {
+        return Err(format!(
+            "floorplan exceeds {}: need {} have {}",
+            device.name, total, device.resources
+        ));
+    }
+    // Routability/timing closure is a *logic congestion* phenomenon:
+    // the ceiling applies to LUT/FF fill. Hard blocks (BRAM/URAM/DSP)
+    // can legitimately run to ~97% — the paper ships at 96% URAM.
+    let u = total.utilization(&device.resources);
+    let congestion = u.lut.max(u.ff);
+    if congestion > ROUTABILITY_CEILING {
+        return Err(format!(
+            "LUT/FF utilization {:.1}% above routability ceiling {:.0}% — \
+             P&R would fail timing (reduce RM parallelism, §3.3.3)",
+            congestion * 100.0,
+            ROUTABILITY_CEILING * 100.0
+        ));
+    }
+    Ok(PlanReport { static_total, total, peak_utilization: congestion })
+}
+
 impl RegionPlan {
     /// Eq. 2 with the routability ceiling: `static + pblock` must fit the
     /// device scaled by [`ROUTABILITY_CEILING`] in its binding class.
     pub fn validate(&self, device: &DeviceConfig) -> Result<PlanReport, String> {
         let static_total = self.static_region.total();
         let total = static_total + self.rp.pblock;
-        if !total.fits_within(&device.resources) {
-            return Err(format!(
-                "floorplan exceeds {}: need {} have {}",
-                device.name, total, device.resources
-            ));
-        }
-        // Routability/timing closure is a *logic congestion* phenomenon:
-        // the ceiling applies to LUT/FF fill. Hard blocks (BRAM/URAM/DSP)
-        // can legitimately run to ~97% — the paper ships at 96% URAM.
-        let u = total.utilization(&device.resources);
-        let congestion = u.lut.max(u.ff);
-        if congestion > ROUTABILITY_CEILING {
-            return Err(format!(
-                "LUT/FF utilization {:.1}% above routability ceiling {:.0}% — \
-                 P&R would fail timing (reduce RM parallelism, §3.3.3)",
-                congestion * 100.0,
-                ROUTABILITY_CEILING * 100.0
-            ));
-        }
-        let peak = congestion;
-        Ok(PlanReport { static_total, total, peak_utilization: peak })
+        validate_budget(static_total, total, device)
     }
 
     /// The paper's "Equivalent Total": static region + *every* RM counted

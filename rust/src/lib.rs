@@ -14,11 +14,14 @@
 //! * **L3** this crate — loads the HLO artifacts via PJRT ([`runtime`]),
 //!   simulates the KV260 FPGA substrate the paper deploys on ([`fpga`],
 //!   [`memory`], [`engines`]), performs the paper's roofline-guided design
-//!   space exploration ([`roofline`], [`dse`]), manages the DDR KV-cache
-//!   budget as a page-granular pool with admission control and eviction
-//!   ([`kvpool`] — our multi-request extension), and orchestrates
-//!   prefill→decode logic swapping with latency-overlapped dynamic partial
-//!   reconfiguration ([`reconfig`], [`coordinator`]).
+//!   space exploration ([`roofline`], [`dse`] — parallel, driven by the
+//!   O(1) latency surfaces of [`engines::surface`], and joinable with the
+//!   serving-policy space via `pd-swap codesign` / [`dse::codesign`]),
+//!   manages the DDR KV-cache budget as a page-granular pool with
+//!   admission control and eviction ([`kvpool`] — our multi-request
+//!   extension), and orchestrates prefill→decode logic swapping with
+//!   latency-overlapped dynamic partial reconfiguration ([`reconfig`],
+//!   [`coordinator`]).
 //!
 //! The FPGA itself is simulated (DESIGN.md §2 documents every
 //! substitution); the *functional* compute path is real — tokens are

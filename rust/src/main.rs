@@ -4,6 +4,7 @@
 //! pd-swap info                         # device, design, floorplan report
 //! pd-swap eval <table1|table2|fig4a|fig5|fig6|all>
 //! pd-swap dse [--static] [--l-long N] [--alpha F]
+//! pd-swap codesign [--traces mixed,bursty] [--policies eager,hysteresis,lookahead]
 //! pd-swap generate --artifacts DIR --prompt 1,2,3 [--n N] [--temperature F]
 //! pd-swap serve --artifacts DIR [--requests N] [--seed S]
 //! pd-swap simulate [--requests N] [--policy batched] [--no-overlap]
@@ -18,7 +19,7 @@ use pd_swap::coordinator::{
 };
 #[cfg(feature = "pjrt")]
 use pd_swap::coordinator::{LiveServer, LiveServerConfig};
-use pd_swap::dse::{explore, DseConfig};
+use pd_swap::dse::{explore, run_codesign, CodesignConfig, DseConfig, TracePreset};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting};
 use pd_swap::eval;
 use pd_swap::fpga::KV260;
@@ -35,6 +36,7 @@ fn main() -> Result<()> {
         Some("info") => info(),
         Some("eval") => run_eval(&args),
         Some("dse") => run_dse(&args),
+        Some("codesign") => run_codesign_cmd(&args),
         Some("generate") => generate(&args),
         Some("serve") => serve(&args),
         Some("simulate") => simulate(&args),
@@ -52,6 +54,12 @@ USAGE:
   pd-swap info                          device + design + floorplan report
   pd-swap eval <table1|table2|fig4a|fig5|fig6|all>
   pd-swap dse [--static] [--l-long N] [--l-short N] [--alpha F]
+  pd-swap codesign [--requests 24] [--rate 0.05] [--seed 0] [--designs N] [--threads N]
+                   [--traces mixed,bursty] [--policies eager,hysteresis,lookahead]
+                   [--long-ctx N] [--l-long N] [--l-short N] [--alpha F] [--out FILE]
+                   joint (DSE grid x swap policy x trace) sweep through the
+                   event-driven simulator; prints the winning design+policy
+                   per traffic mix (deterministic across runs)
   pd-swap generate --artifacts DIR --prompt 1,2,3 [--n 16] [--temperature F] [--top-k K]
   pd-swap serve --artifacts DIR [--requests 8] [--gen 32] [--seed 0]
   pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]
@@ -142,7 +150,7 @@ fn run_dse(args: &Args) -> Result<()> {
         cfg.prefill_grid.len(),
         cfg.decode_grid.len()
     );
-    let res = explore(&cfg);
+    let res = explore(&cfg)?;
     println!("explored {} candidates, {} feasible", res.explored, res.feasible);
     println!("best: {}", res.best.design.name);
     println!(
@@ -160,6 +168,86 @@ fn run_dse(args: &Args) -> Result<()> {
     println!("runner-ups:");
     for p in res.top.iter().take(5) {
         println!("  {:40} obj {:.3}", p.design.name, p.objective);
+    }
+    Ok(())
+}
+
+/// Joint (design × swap policy × trace) co-exploration — feasible only
+/// because the surface kernel makes grid evaluation and per-token
+/// simulation O(1) in the analytic model.
+fn run_codesign_cmd(args: &Args) -> Result<()> {
+    let mut sweep = CodesignConfig::paper_default(BITNET_0_73B, KV260.clone());
+    sweep.dse.l_long = args.get_usize("l-long", sweep.dse.l_long);
+    sweep.dse.l_short = args.get_usize("l-short", sweep.dse.l_short);
+    sweep.dse.alpha = args.get_f64("alpha", sweep.dse.alpha);
+    sweep.max_designs = args.get_usize("designs", 0);
+    sweep.threads = args.get_usize("threads", 0);
+    let n = args.get_usize("requests", 24);
+    let rate = args.get_f64("rate", 0.05);
+    let seed = args.get_u64("seed", 0);
+    let long_ctx = args.get_usize("long-ctx", BITNET_0_73B.max_seq);
+    if let Some(list) = args.get("traces") {
+        let mut traces = Vec::new();
+        for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match TracePreset::by_name(name, n, rate, long_ctx, seed) {
+                Some(t) => traces.push(t),
+                None => bail!("unknown trace '{name}' (try interactive|mixed|bursty)"),
+            }
+        }
+        sweep.traces = traces;
+    } else {
+        sweep.traces = TracePreset::defaults(n, rate, long_ctx, seed);
+    }
+    if let Some(list) = args.get("policies") {
+        let mut policies = Vec::new();
+        for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match SwapPolicy::from_name(name) {
+                Some(p) => policies.push(p),
+                None => bail!("unknown policy '{name}' (try eager|hysteresis|lookahead)"),
+            }
+        }
+        sweep.policies = policies;
+    }
+
+    println!(
+        "codesign: {} x {} x {} DSE grid x {} policies x {} traces ({} requests each, seed {seed})",
+        sweep.dse.tlmm_grid.len(),
+        sweep.dse.prefill_grid.len(),
+        sweep.dse.decode_grid.len(),
+        sweep.policies.len(),
+        sweep.traces.len(),
+        n,
+    );
+    let report = run_codesign(&sweep)?;
+    println!(
+        "explored {} grid points, {} feasible; swept {} designs end-to-end ({} simulations)",
+        report.explored, report.feasible, report.designs_swept, report.sims_run,
+    );
+    for t in &report.traces {
+        println!(
+            "\n--- trace '{}' (offered {:.1} tok/s) ---",
+            t.trace, t.offered_tokens_per_sec
+        );
+        println!(
+            "{:<40} {:<11} {:>9} {:>9} {:>6} {:>11} {:>11}",
+            "design", "policy", "dec t/s", "e2e t/s", "swaps", "exposed s", "ttft p95 s"
+        );
+        for c in t.ranked.iter().take(5) {
+            println!(
+                "{:<40} {:<11} {:>9.2} {:>9.2} {:>6} {:>11.2} {:>11.1}",
+                c.design, c.policy, c.decode_tps, c.makespan_tps, c.swaps, c.exposed_s,
+                c.ttft_p95_s,
+            );
+        }
+        let w = t.winner();
+        println!(
+            "winner: {} + {} — {:.2} tok/s decode (wall TPOT), makespan {:.1} s",
+            w.design, w.policy, w.decode_tps, w.makespan_s
+        );
+    }
+    if let Some(out) = args.get("out") {
+        let path = pd_swap::util::bench::write_json_report(out, &report.to_json(10))?;
+        println!("\nwrote {path}");
     }
     Ok(())
 }

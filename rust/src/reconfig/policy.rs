@@ -188,11 +188,23 @@ pub fn est_prefill_time(
     n: usize,
     prompt_tokens: usize,
 ) -> f64 {
+    est_prefill_time_with(|l| model.prefill(shape, l).total, n, prompt_tokens)
+}
+
+/// [`est_prefill_time`] over any prefill-latency oracle — the serving
+/// engines pass a [`crate::engines::LatencySurface`] closure here so the
+/// estimate costs O(1) with no phase-model re-derivation. The arithmetic
+/// is shared with the model-backed path, so both are bit-identical.
+pub fn est_prefill_time_with(
+    prefill_total: impl Fn(usize) -> f64,
+    n: usize,
+    prompt_tokens: usize,
+) -> f64 {
     if n == 0 {
         return 0.0;
     }
     let mean = (prompt_tokens / n).max(1);
-    model.prefill(shape, mean).total * n as f64
+    prefill_total(mean) * n as f64
 }
 
 #[cfg(test)]

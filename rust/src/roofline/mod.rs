@@ -8,7 +8,7 @@
 //! compute-bound region, and the decode-stage linears close to their
 //! (streaming) roof.
 
-use crate::engines::{AcceleratorDesign, calib};
+use crate::engines::{AcceleratorDesign, LatencySurface, calib};
 use crate::fpga::DeviceConfig;
 use crate::memory::MemorySystem;
 use crate::model::{ComponentOps, DecodeStepWork, ModelShape, PhaseWork, PrefillWork};
@@ -51,65 +51,85 @@ pub fn ridge_point(compute_roof: f64, memory_roof: f64) -> f64 {
     compute_roof / memory_roof
 }
 
+/// Per-kernel ceilings resolved for one shape — the expensive half of
+/// [`RooflineModel::analyze`] (engine rates, effective bandwidths, the
+/// weight-stream evaluation), cached once so the per-`l` queries the
+/// Fig. 4a sweeps and benches issue are pure arithmetic. Built through a
+/// [`LatencySurface`], so the numbers are bit-identical to the direct
+/// derivation.
+#[derive(Debug, Clone)]
+pub struct ShapeRoofs {
+    shape: ModelShape,
+    /// (compute MAC/s, memory B/s) per kernel.
+    dec_attn: (f64, f64),
+    pre_attn: (f64, f64),
+    linear: (f64, f64),
+}
+
+fn point(kernel: &str, ops: ComponentOps, compute_roof: f64, memory_roof: f64) -> RooflinePoint {
+    let ai = ops.arithmetic_intensity();
+    let attainable = compute_roof.min(ai * memory_roof);
+    let bound = if ai * memory_roof < compute_roof {
+        Bound::Memory
+    } else {
+        Bound::Compute
+    };
+    RooflinePoint {
+        kernel: kernel.to_string(),
+        arithmetic_intensity: ai,
+        attainable_rate: attainable,
+        compute_roof,
+        memory_roof_bytes: memory_roof,
+        bound,
+        roof_fraction: attainable / compute_roof,
+    }
+}
+
+impl ShapeRoofs {
+    /// The three Fig. 4a panels at context length `l`.
+    pub fn analyze_at(&self, l: usize) -> Vec<RooflinePoint> {
+        let pre = PrefillWork { shape: self.shape, l };
+        let dec = DecodeStepWork { shape: self.shape, l };
+        vec![
+            point("decode-attention", dec.attention(), self.dec_attn.0, self.dec_attn.1),
+            point("prefill-attention", pre.attention(), self.pre_attn.0, self.pre_attn.1),
+            point("decode-linear", dec.projection(), self.linear.0, self.linear.1),
+            point("prefill-linear", pre.projection(), self.linear.0, self.linear.1),
+        ]
+    }
+}
+
 impl RooflineModel {
     pub fn new(design: AcceleratorDesign, device: DeviceConfig) -> Self {
         let mem = MemorySystem::for_device(&device);
         Self { design, device, mem }
     }
 
-    fn point(
-        &self,
-        kernel: &str,
-        ops: ComponentOps,
-        compute_roof: f64,
-        memory_roof: f64,
-    ) -> RooflinePoint {
-        let ai = ops.arithmetic_intensity();
-        let attainable = compute_roof.min(ai * memory_roof);
-        let bound = if ai * memory_roof < compute_roof {
-            Bound::Memory
-        } else {
-            Bound::Compute
-        };
-        RooflinePoint {
-            kernel: kernel.to_string(),
-            arithmetic_intensity: ai,
-            attainable_rate: attainable,
-            compute_roof,
-            memory_roof_bytes: memory_roof,
-            bound,
-            roof_fraction: attainable / compute_roof,
+    /// Resolve the per-kernel ceilings for `shape` once; reuse the result
+    /// across context lengths (the hot pattern of the eval sweeps).
+    pub fn roofs_for(&self, shape: &ModelShape) -> ShapeRoofs {
+        let clock = self.device.clock_hz();
+        let surface = LatencySurface::new(&self.design, &self.device, shape, 32);
+        // Linear (TLMM): lookup-accumulate roof vs the weight stream.
+        let tlmm_roof = self.design.tlmm.n_pe as f64 * 4.0 * clock;
+        let weight_bw = shape.ternary_weight_bytes() / surface.weight_stream_time();
+        ShapeRoofs {
+            shape: *shape,
+            // Decode attention: engine MAC roof vs its KV bandwidth.
+            dec_attn: (surface.decode_attn_mac_rate(), surface.kv_bandwidth()),
+            // Prefill attention: engine MAC roof vs general DDR streaming.
+            pre_attn: (
+                surface.prefill_attn_mac_rate(),
+                self.mem.aggregate_peak * calib::KV_CONTROLLER_EFF,
+            ),
+            linear: (tlmm_roof, weight_bw),
         }
     }
 
-    /// The three Fig. 4a panels at context length `l`.
+    /// The three Fig. 4a panels at context length `l` (one-shot form of
+    /// [`Self::roofs_for`] + [`ShapeRoofs::analyze_at`]).
     pub fn analyze(&self, shape: &ModelShape, l: usize) -> Vec<RooflinePoint> {
-        let clock = self.device.clock_hz();
-        let pre = PrefillWork { shape: *shape, l };
-        let dec = DecodeStepWork { shape: *shape, l };
-
-        // Decode attention: engine MAC roof vs its KV bandwidth.
-        let dec_attn = self.point(
-            "decode-attention",
-            dec.attention(),
-            self.design.decode_attn.mac_rate(clock),
-            self.design.decode_attn.kv_bandwidth(&self.mem),
-        );
-        // Prefill attention: engine MAC roof vs general DDR streaming.
-        let pre_attn = self.point(
-            "prefill-attention",
-            pre.attention(),
-            self.design.prefill_attn.mac_rate(clock),
-            self.mem.aggregate_peak * calib::KV_CONTROLLER_EFF,
-        );
-        // Linear (TLMM): lookup-accumulate roof vs the weight stream.
-        let tlmm_roof = self.design.tlmm.n_pe as f64 * 4.0 * clock;
-        let weight_bw = shape.ternary_weight_bytes()
-            / self.design.tlmm.weight_stream_time(shape, &self.mem);
-        let dec_lin = self.point("decode-linear", dec.projection(), tlmm_roof, weight_bw);
-        let pre_lin = self.point("prefill-linear", pre.projection(), tlmm_roof, weight_bw);
-
-        vec![dec_attn, pre_attn, dec_lin, pre_lin]
+        self.roofs_for(shape).analyze_at(l)
     }
 }
 

@@ -14,10 +14,13 @@
 //!   shrinking-lite) used for the coordinator/DSE invariants.
 //! * [`cli`] — flag parsing for the `pd-swap` binary and examples.
 //! * [`table`] — fixed-width table rendering shared by eval harnesses.
+//! * [`par`] — deterministic chunked parallel map on scoped threads
+//!   (rayon replacement for the DSE and codesign sweeps).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod table;

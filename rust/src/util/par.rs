@@ -1,0 +1,77 @@
+//! Deterministic data parallelism on `std::thread::scope` (rayon is
+//! unavailable offline).
+//!
+//! [`par_map`] splits the input into at most `threads` contiguous chunks,
+//! evaluates each chunk on its own scoped thread, and joins the results
+//! back **in chunk order** — so the output `Vec` is always index-aligned
+//! with the input, regardless of which worker finished first. Any
+//! reduction the caller runs over that output in index order is therefore
+//! bit-identical to the serial evaluation, which is what the DSE's
+//! determinism contract (`explore_threads(cfg, 1) == explore_threads(cfg,
+//! n)`) rests on.
+
+use std::num::NonZeroUsize;
+
+/// Threads to use by default: physical parallelism, capped so sweeps stay
+/// polite on shared machines.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Map `f` over `items` on up to `threads` scoped threads, preserving
+/// input order. `threads <= 1` (or a small input) degenerates to a plain
+/// serial map with no thread spawned.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|slice| scope.spawn(move || slice.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_matches_serial() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        for threads in [1, 2, 3, 7, 16] {
+            let par = par_map(&items, threads, |x| x * x + 1);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(&empty, 4, |x| *x).is_empty());
+        assert_eq!(par_map(&[42u32], 8, |x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn default_threads_is_sane() {
+        let t = default_threads();
+        assert!((1..=8).contains(&t));
+    }
+}

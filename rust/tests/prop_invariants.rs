@@ -5,8 +5,8 @@
 use pd_swap::coordinator::{
     EventServer, EventServerConfig, Policy, Request, Scheduler, SimServer, SimServerConfig,
 };
-use pd_swap::dse::{evaluate_grid_point, DseConfig};
-use pd_swap::engines::{AcceleratorDesign, AttentionHosting, PhaseModel};
+use pd_swap::dse::{evaluate_grid_point, explore_threads, DseConfig, DseKernel};
+use pd_swap::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
 use pd_swap::fpga::{ResourceVec, KV260};
 use pd_swap::kvpool::{AdmissionControl, AdmissionDecision, EvictionPolicy, KvPool, KvPoolConfig};
 use pd_swap::memory::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
@@ -47,6 +47,172 @@ fn prop_dse_feasible_implies_eq2() {
                 Ok(())
             } else {
                 Err(format!("feasible design violates Eq.2: {total}"))
+            }
+        },
+    );
+}
+
+/// The latency surface is a cached restatement of the phase model, not an
+/// approximation: across the paper's DSE grid ranges, both hosting modes,
+/// every context breakpoint (the prefill weight-stream knee, the paged
+/// AXI-burst knee, the extremes), and arbitrary page sizes, the
+/// surface-cached latencies must equal the uncached [`PhaseModel`]
+/// results within 1e-9 relative (they are in fact bit-identical), and the
+/// DSE fast kernel must agree with the uncached `evaluate` verdicts.
+#[test]
+fn prop_surface_matches_phase_model() {
+    fn rel(a: f64, b: f64) -> f64 {
+        let scale = a.abs().max(b.abs());
+        if scale == 0.0 {
+            0.0
+        } else {
+            (a - b).abs() / scale
+        }
+    }
+    check(
+        cfg(48),
+        |rng, _| {
+            (
+                rng.chance(0.5),
+                *rng.choose(&[160usize, 240, 320, 400]),
+                rng.range(2, 18) * 25,  // prefill DSP (paper grid range)
+                rng.range(1, 12) * 25,  // decode DSP
+                rng.range(1, BITNET_0_73B.max_seq),
+                *rng.choose(&[1usize, 2, 4, 8, 16, 32, 64, 128]),
+            )
+        },
+        |&(dpr, tlmm, pre, dec, l_rand, page)| {
+            let hosting = if dpr {
+                AttentionHosting::Reconfigurable
+            } else {
+                AttentionHosting::StaticBoth
+            };
+            let dse = DseConfig::paper_default(BITNET_0_73B, KV260.clone(), hosting);
+            // DSE kernel vs uncached evaluate: same verdict, same numbers.
+            let slow = evaluate_grid_point(&dse, tlmm, pre, dec);
+            let fast = DseKernel::new(&dse).evaluate(tlmm, pre, dec);
+            if fast.feasible != slow.feasible || fast.reject_reason != slow.reject_reason {
+                return Err(format!(
+                    "kernel verdict diverged at ({tlmm},{pre},{dec}): {:?} vs {:?}",
+                    fast.reject_reason, slow.reject_reason
+                ));
+            }
+            if fast.feasible && rel(fast.objective, slow.objective) > 1e-9 {
+                return Err(format!(
+                    "kernel objective diverged: {} vs {}",
+                    fast.objective, slow.objective
+                ));
+            }
+            // Latency surface vs phase model at the breakpoints + a random
+            // context (valid for infeasible designs too — latency math
+            // does not need a floorplan).
+            let design = slow.design.clone();
+            let model = PhaseModel::new(design.clone(), KV260.clone());
+            let surface = LatencySurface::new(&design, &KV260, &BITNET_0_73B, 32);
+            let knee = surface.prefill_projection_breakpoint().round() as usize;
+            let max_seq = BITNET_0_73B.max_seq;
+            let contexts = [
+                1,
+                2,
+                7,
+                8, // paged-burst knee at head_dim 64 / fp16
+                knee.saturating_sub(1).clamp(1, max_seq),
+                knee.clamp(1, max_seq),
+                (knee + 1).clamp(1, max_seq),
+                l_rand,
+                max_seq - 1,
+                max_seq,
+            ];
+            for l in contexts {
+                let e = rel(surface.prefill(l).total, model.prefill(&BITNET_0_73B, l).total);
+                if e > 1e-9 {
+                    return Err(format!("prefill diverged at L={l}: {e:.3e}"));
+                }
+                let e = rel(
+                    surface.decode_step(l).total,
+                    model.decode_step(&BITNET_0_73B, l).total,
+                );
+                if e > 1e-9 {
+                    return Err(format!("decode diverged at L={l}: {e:.3e}"));
+                }
+                let e = rel(
+                    surface.decode_step_paged(l, page).total,
+                    model.decode_step_paged(&BITNET_0_73B, l, page).total,
+                );
+                if e > 1e-9 {
+                    return Err(format!("paged decode diverged at L={l} page={page}: {e:.3e}"));
+                }
+                let e = rel(
+                    surface.prefill_tail(l),
+                    model.prefill_tail_after_last_attention(&BITNET_0_73B, l),
+                );
+                if e > 1e-9 {
+                    return Err(format!("prefill tail diverged at L={l}: {e:.3e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Parallel `explore` is a pure evaluation fan-out over a serial
+/// reduction: for any grid and any worker count it must return the
+/// *identical* `DseResult` (winner, counts, top-k names and bit-exact
+/// objectives) as the single-threaded path.
+#[test]
+fn prop_parallel_explore_matches_serial() {
+    check(
+        cfg(24),
+        |rng, _| {
+            let tlmm = vec![*rng.choose(&[160usize, 240, 320, 400])];
+            let pre: Vec<usize> =
+                (0..rng.range(2, 4)).map(|_| rng.range(2, 18) * 25).collect();
+            let dec: Vec<usize> =
+                (0..rng.range(2, 4)).map(|_| rng.range(1, 12) * 25).collect();
+            let threads = rng.range(2, 8);
+            let dpr = rng.chance(0.7);
+            (tlmm, pre, dec, threads, dpr)
+        },
+        |(tlmm, pre, dec, threads, dpr)| {
+            let hosting = if *dpr {
+                AttentionHosting::Reconfigurable
+            } else {
+                AttentionHosting::StaticBoth
+            };
+            let mut dse = DseConfig::paper_default(BITNET_0_73B, KV260.clone(), hosting);
+            dse.tlmm_grid = tlmm.clone();
+            dse.prefill_grid = pre.clone();
+            dse.decode_grid = dec.clone();
+            match (explore_threads(&dse, 1), explore_threads(&dse, *threads)) {
+                (Err(_), Err(_)) => Ok(()), // both agree: nothing feasible
+                (Ok(s), Ok(p)) => {
+                    if s.explored != p.explored || s.feasible != p.feasible {
+                        return Err("counts diverged".into());
+                    }
+                    if s.best.design.name != p.best.design.name
+                        || s.best.objective.to_bits() != p.best.objective.to_bits()
+                    {
+                        return Err(format!(
+                            "winner diverged: {} vs {}",
+                            s.best.design.name, p.best.design.name
+                        ));
+                    }
+                    if s.top.len() != p.top.len() {
+                        return Err("top-k length diverged".into());
+                    }
+                    for (a, b) in s.top.iter().zip(&p.top) {
+                        if a.design.name != b.design.name
+                            || a.objective.to_bits() != b.objective.to_bits()
+                        {
+                            return Err(format!(
+                                "top-k order diverged: {} vs {}",
+                                a.design.name, b.design.name
+                            ));
+                        }
+                    }
+                    Ok(())
+                }
+                _ => Err("serial and parallel disagreed on feasibility".into()),
             }
         },
     );

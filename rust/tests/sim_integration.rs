@@ -32,8 +32,8 @@ fn dse_to_serving_pipeline() {
     let mut static_cfg = dpr_cfg.clone();
     static_cfg.hosting = AttentionHosting::StaticBoth;
 
-    let dpr = explore(&dpr_cfg);
-    let stat = explore(&static_cfg);
+    let dpr = explore(&dpr_cfg).unwrap();
+    let stat = explore(&static_cfg).unwrap();
 
     let wl = generate_workload(&WorkloadConfig {
         n_requests: 8,
