@@ -54,8 +54,12 @@ fn rel_err(a: f64, b: f64) -> f64 {
 
 /// Max relative deviation between surface and phase model over the paper
 /// grid (subsampled), all probe contexts, page sizes, both hostings.
-fn agreement(cfg_dpr: &DseConfig, cfg_static: &DseConfig) -> f64 {
+/// Returns `(single-stream worst, batched worst)` — the batched decode
+/// closed forms (B in {1, 2, 4, 8}) are gated separately in
+/// `BENCH_hotpath.json` so a regression names the kernel that moved.
+fn agreement(cfg_dpr: &DseConfig, cfg_static: &DseConfig) -> (f64, f64) {
     let mut worst = 0.0f64;
+    let mut worst_batched = 0.0f64;
     for cfg in [cfg_dpr, cfg_static] {
         let kernel = DseKernel::new(cfg);
         for (i, (t, p, d)) in cfg.grid().into_iter().enumerate() {
@@ -86,10 +90,21 @@ fn agreement(cfg_dpr: &DseConfig, cfg_static: &DseConfig) -> f64 {
                         model.decode_step_paged(&cfg.shape, l, pt).total,
                     ));
                 }
+                for b in [1usize, 2, 4, 8] {
+                    let ctxs = vec![l; b];
+                    worst_batched = worst_batched.max(rel_err(
+                        surface.decode_step_batched(&ctxs).total,
+                        model.decode_step_batched(&cfg.shape, &ctxs).total,
+                    ));
+                    worst_batched = worst_batched.max(rel_err(
+                        surface.decode_step_batched_paged(&ctxs, 32).total,
+                        model.decode_step_batched_paged(&cfg.shape, &ctxs, 32).total,
+                    ));
+                }
             }
         }
     }
-    worst
+    (worst, worst_batched)
 }
 
 /// Backlog-heavy mixed long-context trace: arrivals queue up behind the
@@ -127,11 +142,16 @@ fn main() {
 
     // -- agreement first: a fast wrong kernel is worthless -----------------
     bench::section("surface vs phase-model agreement");
-    let max_rel_err = agreement(&cfg_dpr, &cfg_static);
+    let (max_rel_err, batched_rel_err) = agreement(&cfg_dpr, &cfg_static);
     println!("max relative error across grid x contexts x pages: {max_rel_err:.3e}");
+    println!("max relative error, batched decode (B in 1,2,4,8): {batched_rel_err:.3e}");
     assert!(
         max_rel_err <= 1e-9,
         "surface diverged from the phase model: {max_rel_err:.3e} > 1e-9"
+    );
+    assert!(
+        batched_rel_err <= 1e-9,
+        "batched surface diverged from the phase model: {batched_rel_err:.3e} > 1e-9"
     );
 
     // -- single-query microbench -------------------------------------------
@@ -233,7 +253,10 @@ fn main() {
         ("bench".into(), Value::Str("hotpath_kernel".into())),
         (
             "agreement".into(),
-            Value::Obj(vec![("max_rel_err".into(), Value::Num(max_rel_err))]),
+            Value::Obj(vec![
+                ("max_rel_err".into(), Value::Num(max_rel_err)),
+                ("batched_max_rel_err".into(), Value::Num(batched_rel_err)),
+            ]),
         ),
         (
             "microbench".into(),

@@ -32,6 +32,32 @@
 //! prefill time land in the resident requests' token gaps. That is the
 //! latency a co-tenant actually observes, and it is what makes
 //! swap-policy quality measurable.
+//!
+//! **Multi-stream decode** ([`EventServerConfig::decode_batch`] > 1,
+//! another beyond-paper extension): each decode token-step event batches
+//! up to `decode_batch` pool-resident streams in the same round-robin
+//! order the single-stream path (and [`super::sim_server::SimServer`])
+//! uses, stepping them through one
+//! [`crate::engines::LatencySurface::decode_step_batched_paged`] call —
+//! the batch shares a single pass over the packed weight stream, so every
+//! resident beyond the first amortizes the `T_weights` decode floor while
+//! paying only its own paged KV traffic. `decode_batch = 1` keeps the
+//! paper-faithful single-stream event path bit-for-bit (regression-pinned
+//! by the batch-1 equivalence tests).
+//!
+//! ```
+//! use pd_swap::coordinator::{EventServer, EventServerConfig, Request};
+//! use pd_swap::fpga::KV260;
+//! use pd_swap::model::BITNET_0_73B;
+//! use pd_swap::reconfig::SwapPolicy;
+//!
+//! let cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+//! let mut server = EventServer::new(cfg).unwrap();
+//! server.run(vec![Request::synthetic(0, 128, 8, 0.0)]).unwrap();
+//! assert_eq!(server.metrics.requests_completed.get(), 1);
+//! assert_eq!(server.metrics.tokens_generated.get(), 8);
+//! assert!(server.clock() > 0.0);
+//! ```
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashSet};
@@ -77,6 +103,10 @@ pub enum SimEvent {
     SwapDone { to_decode: bool },
     /// One decode token-step completed for request `id`.
     DecodeStepDone { id: u64 },
+    /// One *batched* decode token-step completed: every stream in `ids`
+    /// (round-robin selection order) gained one token, sharing a single
+    /// weight-stream pass (multi-stream decode, `decode_batch > 1`).
+    DecodeBatchDone { ids: Vec<u64> },
     /// A KV-pool eviction happened (bookkeeping is synchronous; the
     /// event marks the preemption on the timeline).
     KvEvicted { victim: u64 },
@@ -92,6 +122,7 @@ impl SimEvent {
             SimEvent::SwapDone { to_decode: true } => "swap-done-decode",
             SimEvent::SwapDone { to_decode: false } => "swap-done-prefill",
             SimEvent::DecodeStepDone { .. } => "decode-step",
+            SimEvent::DecodeBatchDone { .. } => "decode-batch",
             SimEvent::KvEvicted { .. } => "kv-evicted",
         }
     }
@@ -103,6 +134,7 @@ impl SimEvent {
             | SimEvent::PrefillTrigger { id }
             | SimEvent::PrefillDone { id }
             | SimEvent::DecodeStepDone { id } => *id,
+            SimEvent::DecodeBatchDone { ids } => ids.first().copied().unwrap_or(u64::MAX),
             SimEvent::SwapDone { .. } => u64::MAX,
             SimEvent::KvEvicted { victim } => *victim,
         }
@@ -241,6 +273,13 @@ pub struct EventServerConfig {
     /// Cap on concurrently resident requests (decode set + the prefill
     /// in flight); the KV pool still gates below this.
     pub max_residents: usize,
+    /// Streams stepped per decode token-step event. 1 = the paper's
+    /// single-stream decode flow (bit-identical to the pre-batching
+    /// engine); B > 1 batches up to B pool-resident streams per step in
+    /// round-robin order, sharing one weight-stream pass
+    /// ([`crate::engines::PhaseModel::decode_step_batched`]) — our
+    /// multi-stream serving extension.
+    pub decode_batch: usize,
     /// Drive the hot path from a precomputed
     /// [`crate::engines::LatencySurface`] (O(1) per query) instead of
     /// re-deriving the phase model per token-step event. Bit-identical
@@ -268,6 +307,7 @@ impl EventServerConfig {
             policy,
             overlap: true,
             max_residents: 8,
+            decode_batch: 1,
             use_surface: true,
             surface: None,
         }
@@ -291,8 +331,13 @@ pub struct EventServer {
     decode: Vec<InFlight>,
     /// Round-robin position in `decode`.
     cursor: usize,
-    /// A `DecodeStepDone` is scheduled (the decode engine is busy).
+    /// A `DecodeStepDone`/`DecodeBatchDone` is scheduled (the decode
+    /// engine is busy).
     step_inflight: bool,
+    /// Test knob: route `decode_batch == 1` through the batched
+    /// scheduling path so the equivalence tests can prove it reproduces
+    /// the single-stream path's virtual clocks bit for bit.
+    force_batched: bool,
     /// Requests that have prefilled at least once (re-prefill = eviction
     /// recompute, charged to `metrics.recompute_overhead`).
     prefilled: HashSet<u64>,
@@ -311,26 +356,36 @@ impl EventServer {
             bail!("EventServer models DPR swap scheduling; static designs have no swaps to schedule");
         }
         let model = PhaseModel::new(cfg.design.clone(), cfg.device.clone());
-        let surface = cfg.use_surface.then(|| match &cfg.surface {
-            Some(shared) => {
-                // A mismatched injection would silently simulate a
-                // different accelerator; the key makes it one comparison.
-                debug_assert_eq!(
-                    shared.key(),
-                    &crate::engines::SurfaceKey::new(
+        let surface = if cfg.use_surface {
+            Some(match &cfg.surface {
+                Some(shared) => {
+                    // A mismatched injection would silently simulate a
+                    // different accelerator; the key makes it one
+                    // comparison, so check it even in release builds.
+                    let expect = crate::engines::SurfaceKey::new(
                         &cfg.design,
                         &cfg.device,
                         &cfg.shape,
                         cfg.pool.page_tokens,
-                    ),
-                    "injected latency surface was built for a different configuration"
-                );
-                shared.as_ref().clone()
-            }
-            None => {
-                LatencySurface::new(&cfg.design, &cfg.device, &cfg.shape, cfg.pool.page_tokens)
-            }
-        });
+                    );
+                    if shared.key() != &expect {
+                        bail!(
+                            "injected latency surface was built for a different \
+                             configuration (design/device/shape/page-size mismatch)"
+                        );
+                    }
+                    shared.as_ref().clone()
+                }
+                None => LatencySurface::new(
+                    &cfg.design,
+                    &cfg.device,
+                    &cfg.shape,
+                    cfg.pool.page_tokens,
+                ),
+            })
+        } else {
+            None
+        };
         let swap = SwapController::new(cfg.design.program(&cfg.device)?);
         let lat = swap.device.reconfig_latency();
         let overlap_sched = OverlapScheduler::new(model.clone(), lat);
@@ -349,6 +404,7 @@ impl EventServer {
             decode: Vec::new(),
             cursor: 0,
             step_inflight: false,
+            force_batched: false,
             prefilled: HashSet::new(),
             evicted_once: HashSet::new(),
             clock: 0.0,
@@ -389,6 +445,18 @@ impl EventServer {
             None => {
                 self.model.decode_step_paged(&self.cfg.shape, l, self.cfg.pool.page_tokens).total
             }
+        }
+    }
+
+    /// One *batched* decode step over per-stream contexts `ctxs` (shared
+    /// weight stream, per-stream paged KV) under the pool's page size.
+    fn decode_batch_total(&self, ctxs: &[usize]) -> f64 {
+        match &self.surface {
+            Some(s) => s.decode_step_batched_paged(ctxs, self.cfg.pool.page_tokens).total,
+            None => self
+                .model
+                .decode_step_batched_paged(&self.cfg.shape, ctxs, self.cfg.pool.page_tokens)
+                .total,
         }
     }
 
@@ -488,6 +556,7 @@ impl EventServer {
             SimEvent::PrefillDone { id } => self.on_prefill_done(id),
             SimEvent::SwapDone { .. } => self.on_swap_done(),
             SimEvent::DecodeStepDone { id } => self.on_step_done(id),
+            SimEvent::DecodeBatchDone { ids } => self.on_batch_done(&ids),
         }
     }
 
@@ -568,8 +637,13 @@ impl EventServer {
         Ok(())
     }
 
-    fn on_step_done(&mut self, id: u64) -> Result<()> {
-        self.step_inflight = false;
+    /// Apply one completed token to stream `id` at the current clock:
+    /// context/token growth, the wall inter-token TPOT sample, the pool
+    /// LRU touch, completion, and the round-robin cursor advance. The
+    /// single source of per-stream token semantics — shared by the
+    /// single-stream and batched completion handlers so the two engines
+    /// cannot drift.
+    fn apply_token_step(&mut self, id: u64) -> Result<()> {
         let Some(idx) = self.decode.iter().position(|f| f.req.id == id) else {
             return Ok(());
         };
@@ -592,6 +666,24 @@ impl EventServer {
             }
         } else {
             self.cursor = idx + 1;
+        }
+        Ok(())
+    }
+
+    fn on_step_done(&mut self, id: u64) -> Result<()> {
+        self.step_inflight = false;
+        self.apply_token_step(id)
+    }
+
+    /// A batched decode step completed: every stream in `ids` gained one
+    /// token at `self.clock`. Per-stream bookkeeping is
+    /// [`Self::apply_token_step`] in selection order — the same helper
+    /// the single-stream handler uses, so a batch of one reproduces the
+    /// single-stream path bit for bit.
+    fn on_batch_done(&mut self, ids: &[u64]) -> Result<()> {
+        self.step_inflight = false;
+        for &id in ids {
+            self.apply_token_step(id)?;
         }
         Ok(())
     }
@@ -624,7 +716,13 @@ impl EventServer {
                             return self.begin_prefill_swap();
                         }
                     }
-                    if self.try_schedule_step()? {
+                    let batched = self.cfg.decode_batch > 1 || self.force_batched;
+                    let scheduled = if batched {
+                        self.try_schedule_batch_step()?
+                    } else {
+                        self.try_schedule_step()?
+                    };
+                    if scheduled {
                         return Ok(());
                     }
                     // Decode set drained while securing KV pages.
@@ -713,7 +811,19 @@ impl EventServer {
             .unwrap_or(0)
             .max(extra_ctx)
             .max(1);
-        let est_decode_step = self.decode_step_total(rep_ctx);
+        // Policies price decode work at what a token actually costs under
+        // the configured residency: with multi-stream decode the batched
+        // step amortizes the shared weight stream across the (capped)
+        // batch, so the per-token estimate is `batched total / batch`.
+        // `decode_batch == 1` keeps the original single-stream estimate
+        // bit for bit.
+        let batch = self.cfg.decode_batch.max(1);
+        let est_decode_step = if batch <= 1 {
+            self.decode_step_total(rep_ctx)
+        } else {
+            let eff = batch.min(decode_ready.max(1));
+            self.decode_batch_total(&vec![rep_ctx; eff]) / eff as f64
+        };
         let mean_prompt = if n_pend > 0 { (tok_pend / n_pend).max(1) } else { 1 };
         SwapOutlook {
             pending_prefill: n_pend,
@@ -866,6 +976,120 @@ impl EventServer {
             }
         }
         Ok(false)
+    }
+
+    /// Multi-stream variant of [`Self::try_schedule_step`]: select up to
+    /// `decode_batch` pool-resident streams in the same round-robin order
+    /// (securing each stream's next KV slot, evicting per policy under
+    /// pool pressure), then schedule ONE batched step event covering all
+    /// of them — the batch shares a single weight-stream pass. A batch of
+    /// one degenerates to the single-stream path bit for bit (the
+    /// per-candidate handling below mirrors it line by line). Returns
+    /// false if the decode set drained instead.
+    fn try_schedule_batch_step(&mut self) -> Result<bool> {
+        let shape = self.cfg.shape;
+        let b_max = self.cfg.decode_batch.max(1);
+        let mut ids: Vec<u64> = Vec::new();
+        let mut ctxs: Vec<usize> = Vec::new();
+        while !self.decode.is_empty() && ids.len() < b_max {
+            let len = self.decode.len();
+            // Round-robin: the engine cursor picks the first stream; each
+            // further candidate follows the previously selected one.
+            let i = match ids.last() {
+                None => {
+                    self.cursor %= len;
+                    self.cursor
+                }
+                Some(last) => {
+                    let j = self
+                        .decode
+                        .iter()
+                        .position(|f| f.req.id == *last)
+                        .expect("selected stream cannot vanish during selection");
+                    (j + 1) % len
+                }
+            };
+            let id = self.decode[i].req.id;
+            if ids.contains(&id) {
+                break; // wrapped: every ready stream is already batched
+            }
+            if self.decode[i].done(shape.max_seq) {
+                let f = self.decode.remove(i);
+                self.finish(f)?;
+                if i < self.cursor {
+                    self.cursor -= 1;
+                }
+                continue;
+            }
+            let next_tokens = self.decode[i].ctx + 1;
+            match self.kv_pool.ensure_tokens(id, next_tokens, self.clock) {
+                Ok(()) => {
+                    if self.decode[i].first_step.is_none() {
+                        self.decode[i].first_step = Some(self.clock);
+                    }
+                    ids.push(id);
+                    ctxs.push(self.decode[i].ctx);
+                }
+                Err(PoolError::Exhausted { .. }) => {
+                    let evict = self.cfg.pool.eviction == EvictionPolicy::EvictAndRecompute;
+                    let victim = if evict {
+                        // Streams already in this batch hold the pages the
+                        // step is about to use — never victims.
+                        self.kv_pool.lru_victim(|v| {
+                            v != id
+                                && !ids.contains(&v)
+                                && !self.evicted_once.contains(&v)
+                                && self.decode.iter().any(|f| f.req.id == v)
+                        })
+                    } else {
+                        None
+                    };
+                    if let Some(vid) = victim {
+                        self.kv_pool
+                            .evict_at(vid, self.clock)
+                            .map_err(|e| anyhow::anyhow!("{e}"))?;
+                        self.evicted_once.insert(vid);
+                        let j = self
+                            .decode
+                            .iter()
+                            .position(|f| f.req.id == vid)
+                            .expect("victim must be decoding");
+                        let preempted = self.decode.remove(j);
+                        if j < self.cursor {
+                            self.cursor -= 1;
+                        }
+                        self.sched.requeue_front(preempted.req);
+                        self.queue.push(self.clock, SimEvent::KvEvicted { victim: vid });
+                        continue;
+                    }
+                    if !ids.is_empty() {
+                        // The exhaustion may be transient — caused by the
+                        // batch's own page growth (batch-mates are never
+                        // victims). Schedule the partial batch; completing
+                        // it can free pages, and this stream gets retried
+                        // at its round-robin turn instead of being
+                        // silently truncated.
+                        break;
+                    }
+                    // No stream can make progress: deliver what we have
+                    // (the single-stream path's capacity-capped rule).
+                    let f = self.decode.remove(i);
+                    self.finish(f)?;
+                    if i < self.cursor {
+                        self.cursor -= 1;
+                    }
+                    continue;
+                }
+                Err(e) => return Err(anyhow::anyhow!("kv grow: {e}")),
+            }
+        }
+        if ids.is_empty() {
+            return Ok(false);
+        }
+        let step = self.decode_batch_total(&ctxs);
+        self.queue.push(self.clock + step, SimEvent::DecodeBatchDone { ids });
+        self.step_inflight = true;
+        Ok(true)
     }
 
     /// Release the pool reservation and record the outcome.
@@ -1108,6 +1332,138 @@ mod tests {
                 slow.metrics.ttft.mean().to_bits()
             );
         }
+    }
+
+    /// The hotpath-kernel bench's backlog-heavy mixed long-context trace
+    /// (`benches/hotpath_kernel.rs::mixed_workload`) — the regression
+    /// anchor the batch-1 equivalence is pinned on.
+    fn bench_mixed_trace() -> Vec<Request> {
+        use crate::model::TraceSpec;
+        let spec = TraceSpec::mixed_long_context(40, 0.5, BITNET_0_73B.max_seq, 42);
+        crate::coordinator::requests_from_trace(&spec.generate())
+    }
+
+    /// The swap-policy bench's arrival-storm trace shape (scaled down).
+    fn bench_bursty_trace() -> Vec<Request> {
+        use crate::model::TraceSpec;
+        let spec = TraceSpec::bursty(24, 5);
+        crate::coordinator::requests_from_trace(&spec.generate())
+    }
+
+    #[test]
+    fn batched_path_at_batch1_reproduces_single_path_bitwise() {
+        // `decode_batch = 1` must reproduce today's virtual clocks bit
+        // for bit on the bench traces — through BOTH code paths: the
+        // single-stream scheduler (the default dispatch) and the batched
+        // scheduler forced onto a batch of one (`force_batched`). This is
+        // the regression pin that lets the paper's figures trust the
+        // batch-1 engine regardless of which path future refactors take.
+        for (name, wl) in [
+            ("mixed", bench_mixed_trace()),
+            ("bursty", bench_bursty_trace()),
+        ] {
+            for policy in [SwapPolicy::Eager, SwapPolicy::hysteresis_default()] {
+                let mut single = server(policy);
+                single.run(wl.clone()).unwrap();
+                let mut forced = server(policy);
+                forced.force_batched = true;
+                forced.run(wl.clone()).unwrap();
+                assert_eq!(
+                    single.clock().to_bits(),
+                    forced.clock().to_bits(),
+                    "{name}/{policy:?}: virtual clocks diverged"
+                );
+                assert_eq!(
+                    single.metrics.tokens_generated.get(),
+                    forced.metrics.tokens_generated.get()
+                );
+                assert_eq!(
+                    single.metrics.reconfigurations.get(),
+                    forced.metrics.reconfigurations.get()
+                );
+                assert_eq!(
+                    single.metrics.tpot.mean().to_bits(),
+                    forced.metrics.tpot.mean().to_bits(),
+                    "{name}/{policy:?}: wall TPOT diverged"
+                );
+                assert_eq!(
+                    single.metrics.ttft.mean().to_bits(),
+                    forced.metrics.ttft.mean().to_bits()
+                );
+                assert_eq!(
+                    single.metrics.e2e.mean().to_bits(),
+                    forced.metrics.e2e.mean().to_bits()
+                );
+                // Same per-request outcomes in the same completion order.
+                assert_eq!(single.outcomes.len(), forced.outcomes.len());
+                for (a, b) in single.outcomes.iter().zip(&forced.outcomes) {
+                    assert_eq!(a.id, b.id, "{name}: completion order changed");
+                    assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+                    assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multistream_decode_amortizes_the_weight_stream() {
+        // Four simultaneous residents: at decode_batch 4 every step
+        // shares one weight pass, so the workload finishes sooner and the
+        // wall inter-token gap shrinks vs the batch-1 engine.
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 64, 0.0)).collect();
+        let mut b1 = server(SwapPolicy::Eager);
+        b1.run(w.clone()).unwrap();
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.decode_batch = 4;
+        let mut b4 = EventServer::new(cfg).unwrap();
+        b4.run(w).unwrap();
+        assert_eq!(
+            b1.metrics.tokens_generated.get(),
+            b4.metrics.tokens_generated.get(),
+            "same work either way"
+        );
+        assert!(
+            b4.clock() < b1.clock(),
+            "batched {:.2}s vs single {:.2}s — batching must shorten the makespan",
+            b4.clock(),
+            b1.clock()
+        );
+        assert!(
+            b4.metrics.tpot.mean() < b1.metrics.tpot.mean(),
+            "batched wall TPOT {:.1}ms vs single {:.1}ms",
+            b4.metrics.tpot.mean() * 1e3,
+            b1.metrics.tpot.mean() * 1e3
+        );
+        b4.pool().check_invariants().unwrap();
+        assert_eq!(b4.pool().resident_count(), 0);
+        // The batched timeline actually used batched step events.
+        assert!(b4.event_log().iter().any(|r| r.kind == "decode-batch"));
+    }
+
+    #[test]
+    fn batched_decode_under_pool_pressure_completes_everyone() {
+        // Optimistic admission + small pool: eviction happens mid-batch
+        // selection; every request must still complete exactly once.
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.decode_batch = 4;
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(40)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut s = EventServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+        s.run(w).unwrap();
+        assert_eq!(s.metrics.requests_completed.get(), 4);
+        assert!(s.metrics.kv_evictions.get() >= 1, "pool pressure must evict");
+        let pool = s.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.resident_count(), 0);
+        assert_eq!(pool.stats.admitted, pool.stats.completed + pool.stats.evicted);
     }
 
     #[test]

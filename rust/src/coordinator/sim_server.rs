@@ -12,11 +12,14 @@
 //! decode the batch to completion), which is faithful to the paper's
 //! evaluation but cannot represent arrivals landing mid-decode. For
 //! *continuous mixed traffic* — swap-policy arbitration, per-layer
-//! prefill progress, wall inter-token latency — use the event-driven
-//! core in [`super::events::EventServer`]; this module remains the
-//! batch-synchronous reference the paper figures are reproduced on, and
-//! shares its per-request bookkeeping ([`super::events::InFlight`]) with
-//! that engine.
+//! prefill progress, wall inter-token latency, multi-stream batched
+//! decode — use the event-driven core in [`super::events::EventServer`];
+//! this module remains the batch-synchronous reference the paper figures
+//! are reproduced on, and shares its per-request bookkeeping (the
+//! crate-private `InFlight`) with that engine. The decode rounds here
+//! interleave residents round-robin one stream at a time — the event
+//! core's `decode_batch` preserves exactly this ordering when it groups
+//! streams into shared-weight-stream batched steps.
 //!
 //! Multi-request serving (our extension beyond the paper's single-request
 //! flow) is KV-capacity aware: every batch member holds a page

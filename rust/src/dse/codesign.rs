@@ -13,10 +13,42 @@
 //! the grid evaluation and the per-token simulation O(1) in the analytic
 //! model.
 //!
+//! The sweep has a fourth axis beyond (design × policy × trace): the
+//! **decode batch** ([`CodesignConfig::decode_batches`], CLI
+//! `--decode-batch 1,4`). Batch-1 is the paper's single-stream decode
+//! engine; larger batches step several pool-resident streams through one
+//! shared weight-stream pass
+//! ([`crate::engines::LatencySurface::decode_step_batched_paged`]), which
+//! lifts decode throughput for *every* design but not uniformly — the
+//! weight-stream floor it amortizes is design-independent while the
+//! per-stream KV and compute terms are not — so the winning design or
+//! policy can flip as B grows. [`CodesignReport::batch_flips`] reports
+//! exactly that, per trace. The [`SurfaceCache`] stays keyed per design:
+//! the per-B closed forms are evaluated from batch-independent cached
+//! coefficients, so a (design, B) key would memoize nothing extra.
+//!
 //! Everything is deterministic: traces are seeded, simulations run on the
 //! virtual clock, designs are swept in grid order, and ranking ties break
-//! by (grid order, policy order) — so `pd-swap codesign` prints identical
-//! winners on every run and machine.
+//! by (grid order, policy order, batch order) — so `pd-swap codesign`
+//! prints identical winners on every run and machine.
+//!
+//! ```
+//! use pd_swap::dse::{run_codesign, CodesignConfig, TracePreset};
+//! use pd_swap::fpga::KV260;
+//! use pd_swap::model::BITNET_0_73B;
+//!
+//! let mut sweep = CodesignConfig::paper_default(BITNET_0_73B, KV260.clone());
+//! // Tiny grid + one short trace so the example runs in milliseconds.
+//! sweep.dse.tlmm_grid = vec![320];
+//! sweep.dse.prefill_grid = vec![300];
+//! sweep.dse.decode_grid = vec![250];
+//! sweep.traces = vec![TracePreset::by_name("mixed", 4, 0.05, 2048, 7).unwrap()];
+//! sweep.decode_batches = vec![1, 4];
+//! let report = run_codesign(&sweep).unwrap();
+//! assert_eq!(report.sims_run, 3 * 2); // 3 policies x 2 decode batches
+//! let winner = report.traces[0].winner();
+//! assert!(winner.decode_tps > 0.0);
+//! ```
 
 use std::sync::Mutex;
 
@@ -80,6 +112,9 @@ pub struct CodesignConfig {
     pub policies: Vec<SwapPolicy>,
     /// Traffic mixes to evaluate each (design, policy) pair under.
     pub traces: Vec<TracePreset>,
+    /// Decode batch sizes to cross with every (design, policy, trace)
+    /// cell (1 = the paper's single-stream decode flow).
+    pub decode_batches: Vec<usize>,
     /// Cap on feasible designs swept, best Eq. 6 objective first
     /// (0 = sweep every feasible grid point).
     pub max_designs: usize,
@@ -100,6 +135,7 @@ impl CodesignConfig {
                 SwapPolicy::lookahead_default(),
             ],
             traces: TracePreset::defaults(24, 0.05, shape.max_seq, 0),
+            decode_batches: vec![1],
             max_designs: 0,
             threads: 0,
         }
@@ -117,6 +153,10 @@ pub struct SweepCell {
     pub policy: &'static str,
     /// Position of the policy in the sweep's policy list.
     pub policy_seq: usize,
+    /// Streams stepped per decode token-step event (1 = paper flow).
+    pub decode_batch: usize,
+    /// Position of the batch in the sweep's decode-batch list.
+    pub batch_seq: usize,
     /// 1 / mean wall inter-token gap — the policy-sensitive metric.
     pub decode_tps: f64,
     pub makespan_s: f64,
@@ -132,8 +172,8 @@ pub struct TraceOutcome {
     pub trace: String,
     pub offered_tokens_per_sec: f64,
     /// Ranking: decode throughput desc, then makespan asc, then
-    /// (design grid order, policy order) — a total order, so the winner
-    /// is unique and run-independent.
+    /// (design grid order, policy order, batch order) — a total order, so
+    /// the winner is unique and run-independent.
     pub ranked: Vec<SweepCell>,
 }
 
@@ -141,6 +181,24 @@ impl TraceOutcome {
     pub fn winner(&self) -> &SweepCell {
         &self.ranked[0]
     }
+
+    /// Best cell restricted to one decode batch (the per-B winner the
+    /// flip analysis compares). `None` if the batch was not swept.
+    pub fn winner_for_batch(&self, decode_batch: usize) -> Option<&SweepCell> {
+        self.ranked.iter().find(|c| c.decode_batch == decode_batch)
+    }
+}
+
+/// Per-trace verdict of the decode-batch axis: does multi-stream decode
+/// change which (design, policy) pair should ship?
+#[derive(Debug)]
+pub struct BatchFlip {
+    pub trace: String,
+    /// `(decode_batch, design, policy)` winner per swept batch, in sweep
+    /// order.
+    pub winners: Vec<(usize, String, &'static str)>,
+    /// True if any two batches disagree on the winning design or policy.
+    pub flips: bool,
 }
 
 /// The joint sweep's result.
@@ -150,10 +208,36 @@ pub struct CodesignReport {
     pub feasible: usize,
     pub designs_swept: usize,
     pub sims_run: usize,
+    /// The decode-batch axis the sweep crossed in (sweep order).
+    pub decode_batches: Vec<usize>,
     pub traces: Vec<TraceOutcome>,
 }
 
 impl CodesignReport {
+    /// Per-trace decode-batch flip analysis: the winner restricted to
+    /// each swept batch, and whether multi-stream decode changes the
+    /// (design, policy) that should ship. Deterministic — derived from
+    /// the already-total ranking order.
+    pub fn batch_flips(&self) -> Vec<BatchFlip> {
+        self.traces
+            .iter()
+            .map(|t| {
+                let winners: Vec<(usize, String, &'static str)> = self
+                    .decode_batches
+                    .iter()
+                    .filter_map(|&b| {
+                        t.winner_for_batch(b)
+                            .map(|c| (b, c.design.clone(), c.policy))
+                    })
+                    .collect();
+                let flips = winners
+                    .windows(2)
+                    .any(|w| w[0].1 != w[1].1 || w[0].2 != w[1].2);
+                BatchFlip { trace: t.trace.clone(), winners, flips }
+            })
+            .collect()
+    }
+
     /// Machine-readable summary (per-trace winner + top ranks).
     pub fn to_json(&self, top: usize) -> Value {
         let traces = self
@@ -164,6 +248,7 @@ impl CodesignReport {
                     Value::Obj(vec![
                         ("design".into(), Value::Str(c.design.clone())),
                         ("policy".into(), Value::Str(c.policy.into())),
+                        ("decode_batch".into(), Value::Num(c.decode_batch as f64)),
                         ("decode_tokens_per_sec".into(), Value::Num(c.decode_tps)),
                         ("makespan_s".into(), Value::Num(c.makespan_s)),
                         ("makespan_tokens_per_sec".into(), Value::Num(c.makespan_tps)),
@@ -174,14 +259,32 @@ impl CodesignReport {
                     ])
                 };
                 let ranked: Vec<Value> = t.ranked.iter().take(top).map(cell).collect();
+                let by_batch: Vec<(String, Value)> = self
+                    .decode_batches
+                    .iter()
+                    .filter_map(|&b| {
+                        t.winner_for_batch(b).map(|c| (format!("b{b}"), cell(c)))
+                    })
+                    .collect();
                 (
                     t.trace.clone(),
                     Value::Obj(vec![
                         ("offered_tokens_per_sec".into(), Value::Num(t.offered_tokens_per_sec)),
                         ("winner".into(), cell(t.winner())),
+                        ("winner_by_decode_batch".into(), Value::Obj(by_batch)),
                         ("top".into(), Value::Arr(ranked)),
                     ]),
                 )
+            })
+            .collect();
+        let flips: Vec<Value> = self
+            .batch_flips()
+            .into_iter()
+            .map(|f| {
+                Value::Obj(vec![
+                    ("trace".into(), Value::Str(f.trace)),
+                    ("flips".into(), Value::Bool(f.flips)),
+                ])
             })
             .collect();
         Value::Obj(vec![
@@ -190,6 +293,13 @@ impl CodesignReport {
             ("feasible".into(), Value::Num(self.feasible as f64)),
             ("designs_swept".into(), Value::Num(self.designs_swept as f64)),
             ("sims_run".into(), Value::Num(self.sims_run as f64)),
+            (
+                "decode_batches".into(),
+                Value::Arr(
+                    self.decode_batches.iter().map(|&b| Value::Num(b as f64)).collect(),
+                ),
+            ),
+            ("decode_batch_flips".into(), Value::Arr(flips)),
             ("traces".into(), Value::Obj(traces)),
         ])
     }
@@ -209,6 +319,8 @@ fn simulate_cell(
     design_seq: usize,
     policy: SwapPolicy,
     policy_seq: usize,
+    decode_batch: usize,
+    batch_seq: usize,
     workload: Vec<Request>,
 ) -> Result<SweepCell> {
     let mut cfg = EventServerConfig::pd_swap(
@@ -217,6 +329,10 @@ fn simulate_cell(
         policy,
     );
     cfg.design = point.design.clone();
+    cfg.decode_batch = decode_batch;
+    // Surfaces are batch-independent (the per-B closed form reuses the
+    // cached coefficients), so all decode batches of a design share one
+    // cache entry.
     cfg.surface = Some(
         surfaces
             .lock()
@@ -234,6 +350,8 @@ fn simulate_cell(
         objective: point.objective,
         policy: policy.name(),
         policy_seq,
+        decode_batch,
+        batch_seq,
         decode_tps: m.decode_throughput(),
         makespan_s: srv.clock(),
         makespan_tps: m.tokens_generated.get() as f64 / srv.clock().max(1e-12),
@@ -252,6 +370,9 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
     }
     if sweep.policies.is_empty() || sweep.traces.is_empty() {
         bail!("codesign needs at least one policy and one trace");
+    }
+    if sweep.decode_batches.is_empty() || sweep.decode_batches.iter().any(|&b| b == 0) {
+        bail!("codesign needs at least one decode batch, all >= 1");
     }
     let threads = if sweep.threads == 0 { default_threads() } else { sweep.threads };
 
@@ -300,20 +421,28 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
     let surfaces = Mutex::new(SurfaceCache::new());
     let per_design: Vec<Result<Vec<(usize, SweepCell)>>> =
         par_map(&candidates, threads, |(design_seq, point)| {
-            let mut cells = Vec::with_capacity(workloads.len() * sweep.policies.len());
+            let mut cells = Vec::with_capacity(
+                workloads.len() * sweep.policies.len() * sweep.decode_batches.len(),
+            );
             for (trace_idx, (_, workload, _)) in workloads.iter().enumerate() {
                 for (policy_seq, &policy) in sweep.policies.iter().enumerate() {
-                    let cell = simulate_cell(
-                        sweep,
-                        &factory,
-                        &surfaces,
-                        point,
-                        *design_seq,
-                        policy,
-                        policy_seq,
-                        workload.clone(),
-                    )?;
-                    cells.push((trace_idx, cell));
+                    for (batch_seq, &decode_batch) in
+                        sweep.decode_batches.iter().enumerate()
+                    {
+                        let cell = simulate_cell(
+                            sweep,
+                            &factory,
+                            &surfaces,
+                            point,
+                            *design_seq,
+                            policy,
+                            policy_seq,
+                            decode_batch,
+                            batch_seq,
+                            workload.clone(),
+                        )?;
+                        cells.push((trace_idx, cell));
+                    }
                 }
             }
             Ok(cells)
@@ -328,7 +457,8 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
         }
     }
 
-    // -- Rank per trace (total order: throughput, makespan, grid, policy).
+    // -- Rank per trace (total order: throughput, makespan, grid, policy,
+    // batch).
     let traces = workloads
         .iter()
         .zip(by_trace)
@@ -344,6 +474,7 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
                     )
                     .then(a.design_seq.cmp(&b.design_seq))
                     .then(a.policy_seq.cmp(&b.policy_seq))
+                    .then(a.batch_seq.cmp(&b.batch_seq))
             });
             TraceOutcome {
                 trace: name.clone(),
@@ -358,6 +489,7 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
         feasible,
         designs_swept: candidates.len(),
         sims_run,
+        decode_batches: sweep.decode_batches.clone(),
         traces,
     })
 }
@@ -427,6 +559,68 @@ mod tests {
         let report = run_codesign(&sweep).unwrap();
         assert_eq!(report.designs_swept, 1);
         assert_eq!(report.sims_run, sweep.policies.len());
+    }
+
+    #[test]
+    fn decode_batch_axis_multiplies_cells_and_ranks_deterministically() {
+        let mut sweep = small_sweep();
+        sweep.max_designs = 1;
+        sweep.decode_batches = vec![1, 4];
+        let report = run_codesign(&sweep).unwrap();
+        assert_eq!(report.sims_run, sweep.policies.len() * 2);
+        let t = &report.traces[0];
+        assert_eq!(t.ranked.len(), report.sims_run);
+        // Both batch restrictions have a winner, and the per-B winners
+        // agree with the global ranking's first hit.
+        let w1 = t.winner_for_batch(1).expect("batch-1 cells exist");
+        let w4 = t.winner_for_batch(4).expect("batch-4 cells exist");
+        assert_eq!(w1.decode_batch, 1);
+        assert_eq!(w4.decode_batch, 4);
+        // Multi-stream decode amortizes the shared weight stream: for the
+        // backlog-insensitive policies the batch-4 cell of a design can
+        // never decode slower than its batch-1 cell (identical swap
+        // decisions, pointwise-smaller token gaps).
+        for p in ["eager", "hysteresis"] {
+            let cell = |b: usize| {
+                t.ranked
+                    .iter()
+                    .find(|c| c.policy == p && c.decode_batch == b)
+                    .unwrap()
+            };
+            assert!(
+                cell(4).decode_tps >= cell(1).decode_tps,
+                "{p}: batch-4 {:.2} tok/s vs batch-1 {:.2} tok/s",
+                cell(4).decode_tps,
+                cell(1).decode_tps
+            );
+        }
+        // Flip analysis is consistent with the per-B winners.
+        let flips = report.batch_flips();
+        assert_eq!(flips.len(), 1);
+        assert_eq!(flips[0].winners.len(), 2);
+        let expect_flip = w1.design != w4.design || w1.policy != w4.policy;
+        assert_eq!(flips[0].flips, expect_flip);
+        // Determinism across thread counts, including the batch column.
+        let mut again = small_sweep();
+        again.max_designs = 1;
+        again.decode_batches = vec![1, 4];
+        again.threads = 4;
+        let b = run_codesign(&again).unwrap();
+        for (ca, cb) in report.traces[0].ranked.iter().zip(&b.traces[0].ranked) {
+            assert_eq!(ca.design, cb.design);
+            assert_eq!(ca.policy, cb.policy);
+            assert_eq!(ca.decode_batch, cb.decode_batch);
+            assert_eq!(ca.decode_tps.to_bits(), cb.decode_tps.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_decode_batch_is_rejected() {
+        let mut sweep = small_sweep();
+        sweep.decode_batches = vec![1, 0];
+        assert!(run_codesign(&sweep).is_err());
+        sweep.decode_batches = vec![];
+        assert!(run_codesign(&sweep).is_err());
     }
 
     #[test]

@@ -52,7 +52,10 @@ use crate::Result;
 
 pub mod codesign;
 
-pub use codesign::{run_codesign, CodesignConfig, CodesignReport, TracePreset};
+pub use codesign::{
+    run_codesign, BatchFlip, CodesignConfig, CodesignReport, SweepCell, TraceOutcome,
+    TracePreset,
+};
 
 /// Runner-up list size carried in a [`DseResult`].
 pub const TOP_K: usize = 10;

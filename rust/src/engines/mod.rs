@@ -35,7 +35,7 @@ pub mod tlmm;
 pub use attention::{DecodeAttentionEngine, PrefillAttentionEngine, ScheduleQuality};
 pub use design::{AcceleratorDesign, AttentionHosting};
 pub use norm::NormEngine;
-pub use phase::{DecodeLatency, PhaseModel, PrefillLatency};
+pub use phase::{BatchedDecodeLatency, DecodeLatency, PhaseModel, PrefillLatency};
 pub use surface::{LatencySurface, SurfaceCache, SurfaceFactory, SurfaceKey, SurfaceOverlap};
 pub use tlmm::TlmmEngine;
 

@@ -32,6 +32,47 @@ impl DecodeLatency {
     }
 }
 
+/// Breakdown of one *batched* decode step: `batch` resident streams each
+/// emit one token, sharing a single pass over the packed weight stream
+/// (the projection term amortizes `T_weights`) while every stream pays
+/// its own KV-cache attention traffic. Batch-1 is bit-identical to
+/// [`DecodeLatency`] from [`PhaseModel::decode_step_paged`].
+#[derive(Debug, Clone, Copy)]
+pub struct BatchedDecodeLatency {
+    /// Streams stepped together (tokens produced this step).
+    pub batch: usize,
+    /// Shared projection: `max(batch / tps, T_weights)` — one weight
+    /// stream feeds every stream's GEMVs.
+    pub projection: f64,
+    /// Sum of the per-stream attention terms (each stream reads its own
+    /// paged KV cache; the single decode engine serves them in turn).
+    pub attention: f64,
+    /// Element-wise epilogue for all `batch` tokens.
+    pub norm_elementwise: f64,
+    pub total: f64,
+}
+
+impl BatchedDecodeLatency {
+    /// Wall time per generated token (the per-stream inter-token gap when
+    /// every resident stream is in the batch).
+    pub fn per_token(&self) -> f64 {
+        if self.batch == 0 {
+            0.0
+        } else {
+            self.total / self.batch as f64
+        }
+    }
+
+    /// Aggregate tokens/s delivered by the step.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.total == 0.0 {
+            0.0
+        } else {
+            self.batch as f64 / self.total
+        }
+    }
+}
+
 /// Evaluates a design's phase latencies on a device.
 #[derive(Debug, Clone)]
 pub struct PhaseModel {
@@ -98,6 +139,73 @@ impl PhaseModel {
         let projection = self.design.tlmm.projection_time(shape, 1, &self.mem);
         let norm = self.design.norm.time(shape, 1, clock);
         DecodeLatency {
+            projection,
+            attention,
+            norm_elementwise: norm,
+            total: projection + attention + norm,
+        }
+    }
+
+    /// One batched decode step over `ctxs` resident streams (one token
+    /// each, stream *i* attending `ctxs[i]` cached tokens), monolithic
+    /// KV bursts. The projection term is shared — the packed weight
+    /// stream is read once for the whole batch, which is what makes
+    /// multi-stream decode pay off on a bandwidth-bound engine — while
+    /// attention and norm are per-stream. Batch-1 equals
+    /// [`Self::decode_step`] bit for bit; an empty batch is all zeros.
+    pub fn decode_step_batched(
+        &self,
+        shape: &ModelShape,
+        ctxs: &[usize],
+    ) -> BatchedDecodeLatency {
+        let clock = self.device.clock_hz();
+        let attention: f64 = ctxs
+            .iter()
+            .map(|&l| self.design.decode_attn.time(shape, l, &self.mem, clock))
+            .sum();
+        self.batched_decode_latency(shape, ctxs.len(), attention)
+    }
+
+    /// [`Self::decode_step_batched`] against a paged KV cache: every
+    /// stream's attention memory roof is evaluated at the page's burst
+    /// length. Batch-1 equals [`Self::decode_step_paged`] bit for bit.
+    pub fn decode_step_batched_paged(
+        &self,
+        shape: &ModelShape,
+        ctxs: &[usize],
+        page_tokens: usize,
+    ) -> BatchedDecodeLatency {
+        let clock = self.device.clock_hz();
+        let attention: f64 = ctxs
+            .iter()
+            .map(|&l| {
+                self.design.decode_attn.time_paged(shape, l, &self.mem, clock, page_tokens)
+            })
+            .sum();
+        self.batched_decode_latency(shape, ctxs.len(), attention)
+    }
+
+    /// Assemble the batched step around a precomputed attention sum.
+    fn batched_decode_latency(
+        &self,
+        shape: &ModelShape,
+        batch: usize,
+        attention: f64,
+    ) -> BatchedDecodeLatency {
+        if batch == 0 {
+            return BatchedDecodeLatency {
+                batch: 0,
+                projection: 0.0,
+                attention: 0.0,
+                norm_elementwise: 0.0,
+                total: 0.0,
+            };
+        }
+        let clock = self.device.clock_hz();
+        let projection = self.design.tlmm.projection_time(shape, batch, &self.mem);
+        let norm = self.design.norm.time(shape, batch, clock);
+        BatchedDecodeLatency {
+            batch,
             projection,
             attention,
             norm_elementwise: norm,
@@ -212,6 +320,64 @@ mod tests {
         }
         // A degenerate 1-token page is slower at memory-bound contexts.
         assert!(pd.decode_step_paged(&s, 2048, 1).total > pd.decode_step(&s, 2048).total);
+    }
+
+    #[test]
+    fn batch1_batched_decode_is_bitwise_identical() {
+        let pd = pd();
+        let s = BITNET_0_73B;
+        for l in [1, 64, 512, 2048] {
+            let mono = pd.decode_step_batched(&s, &[l]);
+            assert_eq!(mono.total.to_bits(), pd.decode_step(&s, l).total.to_bits(), "L={l}");
+            for pt in [1, 8, 32, 128] {
+                let paged = pd.decode_step_batched_paged(&s, &[l], pt);
+                assert_eq!(
+                    paged.total.to_bits(),
+                    pd.decode_step_paged(&s, l, pt).total.to_bits(),
+                    "L={l} pt={pt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_amortizes_the_weight_stream() {
+        // T_weights dominates a batch-1 step; a batch of B streams shares
+        // one weight pass, so the per-token latency must fall strictly —
+        // and the total must stay below B independent steps.
+        let pd = pd();
+        let s = BITNET_0_73B;
+        for l in [64, 512, 2048] {
+            let single = pd.decode_step_paged(&s, l, 32).total;
+            let mut last_per_token = f64::INFINITY;
+            for b in [1usize, 2, 4, 8] {
+                let step = pd.decode_step_batched_paged(&s, &vec![l; b], 32);
+                assert_eq!(step.batch, b);
+                assert!(step.total <= b as f64 * single + 1e-12, "L={l} B={b}");
+                assert!(
+                    step.per_token() < last_per_token,
+                    "L={l} B={b}: per-token did not fall"
+                );
+                last_per_token = step.per_token();
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_handles_mixed_contexts_and_empty() {
+        let pd = pd();
+        let s = BITNET_0_73B;
+        let mixed = pd.decode_step_batched_paged(&s, &[64, 512, 2048], 32);
+        let sum_attn: f64 = [64, 512, 2048]
+            .iter()
+            .map(|&l| pd.decode_step_paged(&s, l, 32).attention)
+            .sum();
+        assert_eq!(mixed.attention.to_bits(), sum_attn.to_bits());
+        assert!(mixed.total > 0.0 && mixed.per_token() > 0.0);
+        let empty = pd.decode_step_batched(&s, &[]);
+        assert_eq!(empty.total, 0.0);
+        assert_eq!(empty.per_token(), 0.0);
+        assert_eq!(empty.tokens_per_sec(), 0.0);
     }
 
     #[test]

@@ -1,17 +1,25 @@
 //! Latency surfaces: precomputed, O(1) closed forms of the phase model.
 //!
-//! [`PhaseModel`] re-derives every latency from first principles on each
-//! call — including rebuilding [`PortMapping`]s (heap allocations) and
-//! re-running the AXI transfer-time arbitration — which makes it the
-//! single hottest function of both the §4.3 DSE sweep and the serving
-//! simulators (one call per decode token-step event). This module
-//! exploits the model's analytic structure to collapse each query to a
-//! handful of floating-point operations:
+//! [`PhaseModel`](super::PhaseModel) re-derives every latency from first
+//! principles on each
+//! call — including rebuilding [`crate::memory::PortMapping`]s (heap
+//! allocations) and re-running the AXI transfer-time arbitration — which
+//! makes it the single hottest function of both the §4.3 DSE sweep and
+//! the serving simulators (one call per decode token-step event). This
+//! module exploits the model's analytic structure to collapse each query
+//! to a handful of floating-point operations:
 //!
 //! * **decode step** — Eq. 5 is *exactly* linear in context length `l`:
 //!   the attention term is `max(compute_slope · l, memory_slope · l)` and
 //!   projection/norm are constants. The surface caches the two slopes and
 //!   the constants.
+//! * **batched decode step** — for `B` resident streams the projection
+//!   term is `max(B / tps, T_weights)` (one shared weight stream for the
+//!   whole batch), attention is the per-stream sum, and norm scales with
+//!   `B`. The per-`B` closed form needs no new coefficients — the batch
+//!   knee sits at `B* = T_weights · tps`
+//!   ([`LatencySurface::decode_batch_breakpoint`]), the same knee the
+//!   prefill projection has in `l`.
 //! * **prefill** — Eq. 3 is piecewise-linear-plus-quadratic in `l`: the
 //!   projection term is `max(l / tps, T_weights)` (one breakpoint at
 //!   `l* = T_weights · tps`, where the pipelined weight stream stops
@@ -23,10 +31,29 @@
 //! rates, effective KV/weight bandwidths), not sampled latency values, and
 //! every evaluation replays the phase model's arithmetic in the same
 //! operation order — so a surface query is bit-identical to the
-//! corresponding [`PhaseModel`] call, including at the breakpoints. The
-//! property tests in `rust/tests/prop_invariants.rs` pin this equivalence
-//! across the paper's DSE grid, all context breakpoints, and both hosting
-//! modes.
+//! corresponding [`PhaseModel`](super::PhaseModel) call, including at the
+//! breakpoints and at
+//! every decode batch size. The property tests in
+//! `rust/tests/prop_invariants.rs` pin this equivalence across the
+//! paper's DSE grid, all context breakpoints, batch sizes, and both
+//! hosting modes.
+//!
+//! ```
+//! use pd_swap::engines::{AcceleratorDesign, LatencySurface};
+//! use pd_swap::fpga::KV260;
+//! use pd_swap::model::BITNET_0_73B;
+//!
+//! // The paper's shipped design on the KV260, 32-token KV pages.
+//! let surface = LatencySurface::new(
+//!     &AcceleratorDesign::pd_swap(), &KV260, &BITNET_0_73B, 32);
+//! let step = surface.decode_step(64);
+//! assert!((26.0..30.0).contains(&step.tokens_per_sec())); // paper: 27.8 tok/s
+//!
+//! // Four resident streams share one weight pass: the per-token wall
+//! // latency drops below the batch-1 step.
+//! let batched = surface.decode_step_batched_paged(&[64; 4], 32);
+//! assert!(batched.per_token() < step.total);
+//! ```
 //!
 //! Three layers of caching, coarse to fine:
 //!
@@ -50,7 +77,7 @@ use crate::model::ModelShape;
 
 use super::attention::DecodeAttentionEngine;
 use super::design::{AcceleratorDesign, AttentionHosting};
-use super::phase::{DecodeLatency, PrefillLatency};
+use super::phase::{BatchedDecodeLatency, DecodeLatency, PrefillLatency};
 
 /// The §3.4 overlap arithmetic evaluated on a surface (mirrors
 /// [`crate::reconfig::OverlapScheduler::overlapped`] bit for bit).
@@ -169,26 +196,91 @@ impl LatencySurface {
     /// Paged Eq. 5 — equals `PhaseModel::decode_step_paged` exactly. Hits
     /// the precomputed bandwidth when `page_tokens` matches construction.
     pub fn decode_step_paged(&self, l: usize, page_tokens: usize) -> DecodeLatency {
-        let bw = if page_tokens == self.page_tokens {
-            self.kv_bw_paged
-        } else {
-            self.decode_attn
-                .kv_bandwidth_with_burst(&self.mem, paged_kv_burst(&self.shape, page_tokens))
-        };
-        self.decode_with_bw(l, bw)
+        self.decode_with_bw(l, self.kv_bw_for_page(page_tokens))
     }
 
-    fn decode_with_bw(&self, l: usize, bw: f64) -> DecodeLatency {
+    /// One stream's decode-attention term (Eq. 5 roofline) at an
+    /// effective K+V bandwidth — shared by the single and batched steps
+    /// so both replay identical arithmetic.
+    fn attn_with_bw(&self, l: usize, bw: f64) -> f64 {
         let macs = 2.0 * (l * self.shape.d_model) as f64 * self.shape.n_layers as f64;
         let compute = macs / self.dec_attn_rate;
         let memory = self.shape.kv_bytes(l) / bw;
-        let attention = compute.max(memory);
+        compute.max(memory)
+    }
+
+    fn decode_with_bw(&self, l: usize, bw: f64) -> DecodeLatency {
+        let attention = self.attn_with_bw(l, bw);
         DecodeLatency {
             projection: self.dec_proj,
             attention,
             norm_elementwise: self.norm_per_token,
             total: self.dec_proj + attention + self.norm_per_token,
         }
+    }
+
+    /// Resolve the effective K+V bandwidth for a page size (cached when
+    /// it matches construction, recomputed otherwise).
+    fn kv_bw_for_page(&self, page_tokens: usize) -> f64 {
+        if page_tokens == self.page_tokens {
+            self.kv_bw_paged
+        } else {
+            self.decode_attn
+                .kv_bandwidth_with_burst(&self.mem, paged_kv_burst(&self.shape, page_tokens))
+        }
+    }
+
+    /// One batched decode step over `ctxs` resident streams, monolithic
+    /// KV bursts — equals [`PhaseModel::decode_step_batched`](super::PhaseModel::decode_step_batched)
+    /// exactly. The projection term `max(B / tps, T_weights)` shares one
+    /// weight-stream pass across the batch; attention sums per stream.
+    pub fn decode_step_batched(&self, ctxs: &[usize]) -> BatchedDecodeLatency {
+        self.batched_with_bw(ctxs, self.kv_bw_mono)
+    }
+
+    /// Paged batched step — equals
+    /// [`PhaseModel::decode_step_batched_paged`](super::PhaseModel::decode_step_batched_paged)
+    /// exactly, and is bit-identical to [`Self::decode_step_paged`] at
+    /// batch 1 (the serving engines' regression anchor).
+    pub fn decode_step_batched_paged(
+        &self,
+        ctxs: &[usize],
+        page_tokens: usize,
+    ) -> BatchedDecodeLatency {
+        self.batched_with_bw(ctxs, self.kv_bw_for_page(page_tokens))
+    }
+
+    fn batched_with_bw(&self, ctxs: &[usize], bw: f64) -> BatchedDecodeLatency {
+        let batch = ctxs.len();
+        if batch == 0 {
+            return BatchedDecodeLatency {
+                batch: 0,
+                projection: 0.0,
+                attention: 0.0,
+                norm_elementwise: 0.0,
+                total: 0.0,
+            };
+        }
+        let attention: f64 = ctxs.iter().map(|&l| self.attn_with_bw(l, bw)).sum();
+        let projection = (batch as f64 / self.tlmm_tps).max(self.t_weights);
+        let norm = self.norm_per_token * batch as f64;
+        BatchedDecodeLatency {
+            batch,
+            projection,
+            attention,
+            norm_elementwise: norm,
+            total: projection + attention + norm,
+        }
+    }
+
+    /// The batch knee `B* = T_weights · tps`: below it the shared weight
+    /// stream binds the batched projection (every extra stream is almost
+    /// free), above it TLMM compute binds (per-token projection cost goes
+    /// flat). Numerically the same knee as
+    /// [`Self::prefill_projection_breakpoint`] — decode at batch `B` does
+    /// exactly a `B`-token projection pass.
+    pub fn decode_batch_breakpoint(&self) -> f64 {
+        self.t_weights * self.tlmm_tps
     }
 
     /// Decode throughput (tokens/s) at context `l`.
@@ -477,6 +569,73 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batched_decode_matches_phase_model_bitwise() {
+        let s = surface();
+        let m = model();
+        for l in [1, 64, 512, 2048] {
+            for b in [1usize, 2, 4, 8] {
+                let ctxs = vec![l; b];
+                assert_eq!(
+                    m.decode_step_batched(&BITNET_0_73B, &ctxs).total.to_bits(),
+                    s.decode_step_batched(&ctxs).total.to_bits(),
+                    "L={l} B={b}"
+                );
+                for pt in [1, 8, 32, 128] {
+                    let a = m.decode_step_batched_paged(&BITNET_0_73B, &ctxs, pt);
+                    let b2 = s.decode_step_batched_paged(&ctxs, pt);
+                    assert_eq!(a.projection.to_bits(), b2.projection.to_bits(), "L={l} B={b}");
+                    assert_eq!(a.attention.to_bits(), b2.attention.to_bits(), "L={l} B={b}");
+                    assert_eq!(a.total.to_bits(), b2.total.to_bits(), "L={l} B={b} pt={pt}");
+                }
+            }
+        }
+        // Mixed per-stream contexts too.
+        let mixed = [7usize, 64, 1999, 2048];
+        assert_eq!(
+            m.decode_step_batched_paged(&BITNET_0_73B, &mixed, 32).total.to_bits(),
+            s.decode_step_batched_paged(&mixed, 32).total.to_bits()
+        );
+    }
+
+    #[test]
+    fn batch1_batched_equals_single_step_bitwise() {
+        let s = surface();
+        for l in [1, 64, 733, 2048] {
+            assert_eq!(
+                s.decode_step_batched(&[l]).total.to_bits(),
+                s.decode_step(l).total.to_bits(),
+                "L={l}"
+            );
+            for pt in [1, 8, 32, 128] {
+                assert_eq!(
+                    s.decode_step_batched_paged(&[l], pt).total.to_bits(),
+                    s.decode_step_paged(l, pt).total.to_bits(),
+                    "L={l} pt={pt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_breakpoint_is_the_projection_knee() {
+        // Below B* the shared weight stream binds (projection flat at
+        // T_weights); above it TLMM compute binds and grows with B.
+        let s = surface();
+        let knee = s.decode_batch_breakpoint();
+        assert_eq!(knee, s.prefill_projection_breakpoint());
+        let lo = (knee.floor() as usize).saturating_sub(1).max(1);
+        let hi = knee.ceil() as usize + 1;
+        assert_eq!(
+            s.decode_step_batched_paged(&vec![64; lo], 32).projection,
+            s.weight_stream_time()
+        );
+        assert!(
+            s.decode_step_batched_paged(&vec![64; hi], 32).projection
+                > s.weight_stream_time()
+        );
     }
 
     #[test]

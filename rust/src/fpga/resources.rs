@@ -174,7 +174,7 @@ pub struct DeviceConfig {
     /// Total DDR capacity (bytes) shared by PS + PL — bounds the KV-cache
     /// pool ([`crate::kvpool`]) after weights and the activation reserve.
     pub ddr_bytes: f64,
-    /// Number of PL<->DDR high-performance ports.
+    /// Number of `PL<->DDR` high-performance ports.
     pub n_hp_ports: usize,
     /// Peak DDR bandwidth of one HP port (bytes/s).
     pub hp_port_peak: f64,

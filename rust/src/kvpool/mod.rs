@@ -36,6 +36,26 @@
 //!
 //! This is an extension beyond the paper (which never multi-tenants the
 //! KV DDR); EXPERIMENTS.md/CHANGES.md label it as such.
+//!
+//! ```
+//! use pd_swap::fpga::KV260;
+//! use pd_swap::kvpool::{KvPool, KvPoolConfig};
+//! use pd_swap::model::BITNET_0_73B;
+//!
+//! // Pool sized from the KV260's DDR minus weights and the reserve.
+//! let cfg = KvPoolConfig::for_device(&BITNET_0_73B, &KV260);
+//! let mut pool = KvPool::new(cfg);
+//!
+//! // Admit a request (256-token prompt, up to 64 generated), write its
+//! // prompt KV, grow one decode token, then release everything.
+//! let plan = pool.admission_plan(256, 64);
+//! assert!(plan.admits_immediately());
+//! pool.execute_admission(7, 256, plan, 0.0).unwrap();
+//! pool.ensure_tokens(7, 257, 1.0).unwrap();
+//! pool.complete(7).unwrap();
+//! assert_eq!(pool.resident_count(), 0);
+//! pool.check_invariants().unwrap();
+//! ```
 
 pub mod policy;
 pub mod pool;

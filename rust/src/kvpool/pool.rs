@@ -152,7 +152,7 @@ pub struct KvPool {
     reserved_total: usize,
     pub stats: PoolStats,
     /// Timestamped `(when, victim)` eviction records, bounded at
-    /// [`EVICTION_LOG_CAP`] — the serving simulators surface these as
+    /// `EVICTION_LOG_CAP` — the serving simulators surface these as
     /// timeline events.
     pub eviction_log: Vec<(f64, u64)>,
 }

@@ -21,22 +21,34 @@
 //!   admission control and eviction ([`kvpool`] — our multi-request
 //!   extension), and orchestrates prefill→decode logic swapping with
 //!   latency-overlapped dynamic partial reconfiguration ([`reconfig`],
-//!   [`coordinator`]).
+//!   [`coordinator`]). Decode is modeled batch-1 (the paper's engine)
+//!   *and* batch-B: multi-stream decode shares one pass over the packed
+//!   weight stream per step
+//!   ([`engines::PhaseModel::decode_step_batched`]), which the event
+//!   server serves ([`coordinator::EventServerConfig::decode_batch`]) and
+//!   `pd-swap codesign --decode-batch` co-optimizes.
 //!
-//! The FPGA itself is simulated (DESIGN.md §2 documents every
-//! substitution); the *functional* compute path is real — tokens are
-//! produced by executing the AOT artifacts on the PJRT CPU client.
-//! The PJRT path is gated behind the `pjrt` cargo feature (default off)
-//! so the simulator, DSE, and eval layers build and test without an XLA
-//! installation; see `third_party/xla-stub/` for how the binding is
-//! satisfied when the feature is enabled without the real library.
+//! The FPGA itself is simulated; the *functional* compute path is real —
+//! tokens are produced by executing the AOT artifacts on the PJRT CPU
+//! client. The PJRT path is gated behind the `pjrt` cargo feature
+//! (default off) so the simulator, DSE, and eval layers build and test
+//! without an XLA installation; see `third_party/xla-stub/` for how the
+//! binding is satisfied when the feature is enabled without the real
+//! library.
+//!
+//! **Where to start reading:** `docs/ARCHITECTURE.md` maps every paper
+//! section/equation to the module implementing it and marks the labeled
+//! beyond-paper extensions; the top-level `README.md` has the quickstart
+//! and the bench/bless workflow.
 //!
 //! ## Quick start
 //!
 //! ```bash
-//! make artifacts            # AOT-compile the HLO artifacts (runs python)
+//! cargo run --release -- eval fig6       # regenerate the paper's Fig. 6
+//! cargo run --release -- simulate --policy hysteresis --trace mixed
+//! cargo run --release -- codesign --decode-batch 1,4
+//! make artifacts                         # AOT-compile the HLO artifacts (python)
 //! cargo run --release --example quickstart
-//! cargo run --release -- eval fig6   # regenerate the paper's Fig. 6
 //! ```
 
 pub mod baselines;

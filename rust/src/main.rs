@@ -5,6 +5,7 @@
 //! pd-swap eval <table1|table2|fig4a|fig5|fig6|all>
 //! pd-swap dse [--static] [--l-long N] [--alpha F]
 //! pd-swap codesign [--traces mixed,bursty] [--policies eager,hysteresis,lookahead]
+//!                  [--decode-batch 1,4]
 //! pd-swap generate --artifacts DIR --prompt 1,2,3 [--n N] [--temperature F]
 //! pd-swap serve --artifacts DIR [--requests N] [--seed S]
 //! pd-swap simulate [--requests N] [--policy batched] [--no-overlap]
@@ -56,17 +57,20 @@ USAGE:
   pd-swap dse [--static] [--l-long N] [--l-short N] [--alpha F]
   pd-swap codesign [--requests 24] [--rate 0.05] [--seed 0] [--designs N] [--threads N]
                    [--traces mixed,bursty] [--policies eager,hysteresis,lookahead]
-                   [--long-ctx N] [--l-long N] [--l-short N] [--alpha F] [--out FILE]
-                   joint (DSE grid x swap policy x trace) sweep through the
-                   event-driven simulator; prints the winning design+policy
-                   per traffic mix (deterministic across runs)
+                   [--decode-batch 1,4] [--long-ctx N] [--l-long N] [--l-short N]
+                   [--alpha F] [--out FILE]
+                   joint (DSE grid x swap policy x decode batch x trace) sweep
+                   through the event-driven simulator; prints the winning
+                   design+policy per traffic mix and whether multi-stream
+                   decode flips it (deterministic across runs)
   pd-swap generate --artifacts DIR --prompt 1,2,3 [--n 16] [--temperature F] [--top-k K]
   pd-swap serve --artifacts DIR [--requests 8] [--gen 32] [--seed 0]
   pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]
                    [--pool-pages N] [--optimistic] [--evict]
   pd-swap simulate --policy <eager|hysteresis|lookahead>   (event-driven core)
                    [--trace interactive|mixed|bursty] [--rate R] [--long-ctx N]
-                   [--requests N] [--seed S] [--max-residents N] [--log]";
+                   [--requests N] [--seed S] [--max-residents N]
+                   [--decode-batch B] [--log]";
 
 fn info() -> Result<()> {
     let design = AcceleratorDesign::pd_swap();
@@ -208,13 +212,15 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
         }
         sweep.policies = policies;
     }
+    sweep.decode_batches = args.get_usize_list("decode-batch", &[1]);
 
     println!(
-        "codesign: {} x {} x {} DSE grid x {} policies x {} traces ({} requests each, seed {seed})",
+        "codesign: {} x {} x {} DSE grid x {} policies x {} decode batches x {} traces ({} requests each, seed {seed})",
         sweep.dse.tlmm_grid.len(),
         sweep.dse.prefill_grid.len(),
         sweep.dse.decode_grid.len(),
         sweep.policies.len(),
+        sweep.decode_batches.len(),
         sweep.traces.len(),
         n,
     );
@@ -229,21 +235,44 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
             t.trace, t.offered_tokens_per_sec
         );
         println!(
-            "{:<40} {:<11} {:>9} {:>9} {:>6} {:>11} {:>11}",
-            "design", "policy", "dec t/s", "e2e t/s", "swaps", "exposed s", "ttft p95 s"
+            "{:<40} {:<11} {:>5} {:>9} {:>9} {:>6} {:>11} {:>11}",
+            "design", "policy", "B", "dec t/s", "e2e t/s", "swaps", "exposed s", "ttft p95 s"
         );
         for c in t.ranked.iter().take(5) {
             println!(
-                "{:<40} {:<11} {:>9.2} {:>9.2} {:>6} {:>11.2} {:>11.1}",
-                c.design, c.policy, c.decode_tps, c.makespan_tps, c.swaps, c.exposed_s,
-                c.ttft_p95_s,
+                "{:<40} {:<11} {:>5} {:>9.2} {:>9.2} {:>6} {:>11.2} {:>11.1}",
+                c.design, c.policy, c.decode_batch, c.decode_tps, c.makespan_tps, c.swaps,
+                c.exposed_s, c.ttft_p95_s,
             );
         }
         let w = t.winner();
         println!(
-            "winner: {} + {} — {:.2} tok/s decode (wall TPOT), makespan {:.1} s",
-            w.design, w.policy, w.decode_tps, w.makespan_s
+            "winner: {} + {} @ decode-batch {} — {:.2} tok/s decode (wall TPOT), makespan {:.1} s",
+            w.design, w.policy, w.decode_batch, w.decode_tps, w.makespan_s
         );
+    }
+    // Decode-batch flip verdicts: does multi-stream decode change what
+    // should ship? (Printed only when the axis was actually swept.)
+    if report.decode_batches.len() > 1 {
+        println!();
+        for f in report.batch_flips() {
+            if f.flips {
+                let list = f
+                    .winners
+                    .iter()
+                    .map(|(b, d, p)| format!("B={b} -> {d} + {p}"))
+                    .collect::<Vec<_>>()
+                    .join("; ");
+                println!("trace '{}': decode batch FLIPS the winner: {list}", f.trace);
+            } else if let Some((_, d, p)) = f.winners.first() {
+                println!(
+                    "trace '{}': no flip — {d} + {p} wins at every decode batch \
+                     (the shared weight stream amortizes equally across these \
+                     designs/policies at this traffic)",
+                    f.trace
+                );
+            }
+        }
     }
     if let Some(out) = args.get("out") {
         let path = pd_swap::util::bench::write_json_report(out, &report.to_json(10))?;
@@ -360,6 +389,10 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         cfg.overlap = false;
     }
     cfg.max_residents = args.get_usize("max-residents", cfg.max_residents);
+    cfg.decode_batch = args.get_usize("decode-batch", cfg.decode_batch);
+    if cfg.decode_batch == 0 {
+        bail!("--decode-batch must be >= 1 (1 = the paper's single-stream decode)");
+    }
     let pool = cfg.pool.clone();
     let pool = pool.with_total_pages(args.get_usize("pool-pages", pool.total_pages));
     let admission = if args.flag("optimistic") {
@@ -390,11 +423,12 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
     };
     let entries = spec.generate();
     println!(
-        "simulating {} requests on the event-driven core: {} trace ({:.1} offered tok/s), {} policy",
+        "simulating {} requests on the event-driven core: {} trace ({:.1} offered tok/s), {} policy, decode batch {}",
         entries.len(),
         args.get_or("trace", "interactive"),
         TraceSpec::offered_tokens_per_sec(&entries),
         policy.name(),
+        cfg.decode_batch,
     );
     let mut server = EventServer::new(cfg)?;
     server.run(requests_from_trace(&entries))?;

@@ -10,6 +10,6 @@ pub mod workload;
 
 pub use shapes::{ModelShape, Precision, BITNET_0_73B, E2E_100M, TEST, TINY};
 pub use workload::{
-    ArrivalPattern, ComponentOps, DecodeStepWork, LengthClass, PhaseWork, PrefillWork,
-    TraceEntry, TraceSpec,
+    ArrivalPattern, BatchedDecodeWork, ComponentOps, DecodeStepWork, LengthClass, PhaseWork,
+    PrefillWork, TraceEntry, TraceSpec,
 };

@@ -160,6 +160,63 @@ impl PhaseWork for DecodeStepWork {
     }
 }
 
+/// One *batched* decode step: `batch` resident streams each emit one
+/// token, every stream attending its own context of `l` tokens.
+///
+/// The paper's decode engine is batch-1 (one resident request), which is
+/// what makes `T_weights` the decode floor: the entire packed ternary
+/// weight set streams from DDR for a single token's GEMVs. With `batch`
+/// resident streams the weight traffic is *shared* — the same tile pass
+/// feeds every stream's activations — while the KV traffic stays
+/// per-stream (each stream reads its own cache). So projection arithmetic
+/// intensity grows ~linearly with `batch` and attention intensity stays
+/// flat: the roofline mechanics behind multi-stream decode serving (our
+/// extension beyond the paper; see `docs/ARCHITECTURE.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchedDecodeWork {
+    pub shape: ModelShape,
+    /// Per-stream context length (uniform across the batch).
+    pub l: usize,
+    /// Resident streams stepping together.
+    pub batch: usize,
+}
+
+impl PhaseWork for BatchedDecodeWork {
+    /// `batch` tokens' GEMVs against ONE shared pass over the packed
+    /// weights — the amortization that batching exists for. Composed
+    /// from [`DecodeStepWork`] so the single-stream accounting stays the
+    /// one source of the per-token formulas: MACs and activation writes
+    /// scale with the batch, the weight read does not.
+    fn projection(&self) -> ComponentOps {
+        let one = DecodeStepWork { shape: self.shape, l: self.l }.projection();
+        ComponentOps {
+            macs: one.macs * self.batch as f64,
+            read_bytes: one.read_bytes,
+            write_bytes: one.write_bytes * self.batch as f64,
+        }
+    }
+
+    /// Per-stream KV streaming: `batch` independent caches are read in
+    /// full, so bytes and MACs both scale with the batch (AI is flat).
+    fn attention(&self) -> ComponentOps {
+        let one = DecodeStepWork { shape: self.shape, l: self.l }.attention();
+        ComponentOps {
+            macs: one.macs * self.batch as f64,
+            read_bytes: one.read_bytes * self.batch as f64,
+            write_bytes: one.write_bytes * self.batch as f64,
+        }
+    }
+
+    fn norm_elementwise(&self) -> ComponentOps {
+        let one = DecodeStepWork { shape: self.shape, l: self.l }.norm_elementwise();
+        ComponentOps {
+            macs: one.macs * self.batch as f64,
+            read_bytes: one.read_bytes,
+            write_bytes: one.write_bytes,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Trace-driven workload specification (serving extension, not in the paper)
 // ---------------------------------------------------------------------------
@@ -375,6 +432,26 @@ mod tests {
         );
         // Decode attention is memory-dominated: < 1 MAC/byte.
         assert!(dec.arithmetic_intensity() < 1.0);
+    }
+
+    #[test]
+    fn batched_decode_amortizes_weight_traffic() {
+        // Projection AI grows ~linearly with the batch (shared weight
+        // stream); attention AI is flat (per-stream KV).
+        let b1 = BatchedDecodeWork { shape: BITNET_0_73B, l: 1024, batch: 1 };
+        let b8 = BatchedDecodeWork { shape: BITNET_0_73B, l: 1024, batch: 8 };
+        let r_proj =
+            b8.projection().arithmetic_intensity() / b1.projection().arithmetic_intensity();
+        assert!((7.5..8.05).contains(&r_proj), "proj AI ratio {r_proj:.2}");
+        let r_attn =
+            b8.attention().arithmetic_intensity() / b1.attention().arithmetic_intensity();
+        assert!((r_attn - 1.0).abs() < 1e-9, "attn AI ratio {r_attn:.3}");
+        // Batch-1 matches the single-stream accounting exactly.
+        let one = DecodeStepWork { shape: BITNET_0_73B, l: 1024 };
+        assert_eq!(b1.projection().macs, one.projection().macs);
+        assert_eq!(b1.projection().read_bytes, one.projection().read_bytes);
+        assert_eq!(b1.attention(), one.attention());
+        assert_eq!(b1.norm_elementwise(), one.norm_elementwise());
     }
 
     #[test]

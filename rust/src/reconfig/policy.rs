@@ -26,6 +26,35 @@
 //! The engine itself handles the forced cases (nothing to decode → stay
 //! in prefill; nothing to prefill → stay in decode), so policies only
 //! ever arbitrate genuine contention.
+//!
+//! When the engine runs multi-stream decode
+//! ([`EventServerConfig::decode_batch`](crate::coordinator::EventServerConfig) > 1),
+//! [`SwapOutlook::est_decode_step`] is the *amortized per-token* batched
+//! step — resident streams share one weight-stream pass — so the same
+//! policy arithmetic automatically values decode backlog higher when
+//! batching makes it cheaper to drain.
+//!
+//! ```
+//! use pd_swap::reconfig::{SwapOutlook, SwapPolicy};
+//!
+//! // Three prompts wait; the decode side still owes 512 tokens.
+//! let outlook = SwapOutlook {
+//!     pending_prefill: 3,
+//!     pending_prefill_tokens: 768,
+//!     est_prefill_time: 5.2,
+//!     decode_ready: 2,
+//!     decode_pending_tokens: 512,
+//!     est_decode_step: 0.036,
+//!     reconfig_latency: 0.045,
+//!     est_round_trip_exposed: 0.06,
+//! };
+//! // The paper's eager flow yields the fabric to any waiting prompt;
+//! // hysteresis demands a deeper backlog before paying the swap pair.
+//! assert!(SwapPolicy::Eager.swap_to_prefill_mid_decode(&outlook));
+//! assert!(SwapPolicy::hysteresis_default().swap_to_prefill_mid_decode(&outlook));
+//! let shallow = SwapOutlook { pending_prefill: 1, ..outlook };
+//! assert!(!SwapPolicy::hysteresis_default().swap_to_prefill_mid_decode(&shallow));
+//! ```
 
 use crate::engines::PhaseModel;
 use crate::model::ModelShape;
@@ -47,7 +76,15 @@ pub struct SwapOutlook {
     pub decode_ready: usize,
     /// Sum of their remaining generation tokens.
     pub decode_pending_tokens: usize,
-    /// Current per-token decode latency estimate, seconds.
+    /// Current per-token decode latency estimate, seconds. With
+    /// multi-stream decode ([`EventServerConfig::decode_batch`] > 1 on
+    /// the engine) this is the *amortized* batched step
+    /// (`batched total / batch`), so policies price decode work at what
+    /// it actually costs under the configured residency — batching is
+    /// folded in here rather than carried as a separate field no policy
+    /// would read.
+    ///
+    /// [`EventServerConfig::decode_batch`]: crate::coordinator::EventServerConfig
     pub est_decode_step: f64,
     /// Full PCAP load latency, seconds.
     pub reconfig_latency: f64,

@@ -11,7 +11,9 @@
 use crate::engines::{AcceleratorDesign, LatencySurface, calib};
 use crate::fpga::DeviceConfig;
 use crate::memory::MemorySystem;
-use crate::model::{ComponentOps, DecodeStepWork, ModelShape, PhaseWork, PrefillWork};
+use crate::model::{
+    BatchedDecodeWork, ComponentOps, DecodeStepWork, ModelShape, PhaseWork, PrefillWork,
+};
 
 /// Which ceiling binds a kernel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,6 +99,43 @@ impl ShapeRoofs {
             point("prefill-linear", pre.projection(), self.linear.0, self.linear.1),
         ]
     }
+
+    /// The decode kernels' roofline points at batch `b` (per-stream
+    /// context `l`): `b` resident streams share ONE pass over the packed
+    /// weights, so the decode-linear arithmetic intensity grows ~linearly
+    /// with `b` and marches toward the compute ridge, while decode
+    /// attention reads `b` independent KV caches and its intensity stays
+    /// flat — the roofline argument for multi-stream decode serving (our
+    /// extension beyond the paper's batch-1 engine).
+    pub fn analyze_batched_at(&self, l: usize, b: usize) -> Vec<RooflinePoint> {
+        let work = BatchedDecodeWork { shape: self.shape, l, batch: b.max(1) };
+        vec![
+            point(
+                &format!("decode-attention@b{}", b.max(1)),
+                work.attention(),
+                self.dec_attn.0,
+                self.dec_attn.1,
+            ),
+            point(
+                &format!("decode-linear@b{}", b.max(1)),
+                work.projection(),
+                self.linear.0,
+                self.linear.1,
+            ),
+        ]
+    }
+
+    /// Smallest batch at which the shared weight stream stops binding the
+    /// decode linears — the batched decode-linear point crosses the
+    /// compute/bandwidth ridge. `None` if no batch up to `max_batch`
+    /// crosses (then decode projection stays memory-bound at any
+    /// plausible residency).
+    pub fn decode_linear_crossover_batch(&self, l: usize, max_batch: usize) -> Option<usize> {
+        (1..=max_batch.max(1)).find(|&b| {
+            let work = BatchedDecodeWork { shape: self.shape, l, batch: b };
+            work.projection().arithmetic_intensity() * self.linear.1 >= self.linear.0
+        })
+    }
 }
 
 impl RooflineModel {
@@ -130,6 +169,22 @@ impl RooflineModel {
     /// [`Self::roofs_for`] + [`ShapeRoofs::analyze_at`]).
     pub fn analyze(&self, shape: &ModelShape, l: usize) -> Vec<RooflinePoint> {
         self.roofs_for(shape).analyze_at(l)
+    }
+
+    /// Per-batch decode roofline points (one-shot form of
+    /// [`Self::roofs_for`] + [`ShapeRoofs::analyze_batched_at`]): one
+    /// `(decode-attention, decode-linear)` pair per entry of `batches`.
+    pub fn analyze_batched(
+        &self,
+        shape: &ModelShape,
+        l: usize,
+        batches: &[usize],
+    ) -> Vec<RooflinePoint> {
+        let roofs = self.roofs_for(shape);
+        batches
+            .iter()
+            .flat_map(|&b| roofs.analyze_batched_at(l, b))
+            .collect()
     }
 }
 
@@ -190,6 +245,55 @@ mod tests {
                 Bound::Memory => assert!(p.arithmetic_intensity < ridge),
             }
         }
+    }
+
+    #[test]
+    fn batched_decode_linear_marches_to_the_ridge() {
+        // Batching shares the weight stream: decode-linear AI grows
+        // ~linearly with B and eventually crosses into the compute-bound
+        // regime; decode-attention AI stays flat (per-stream KV).
+        let m = model();
+        let roofs = m.roofs_for(&BITNET_0_73B);
+        let mut last_lin_ai = 0.0;
+        for b in [1usize, 2, 4, 8, 16] {
+            let pts = roofs.analyze_batched_at(1024, b);
+            let lin = by_name(&pts, &format!("decode-linear@b{b}"));
+            assert!(lin.arithmetic_intensity > last_lin_ai, "B={b}");
+            last_lin_ai = lin.arithmetic_intensity;
+            let attn = by_name(&pts, &format!("decode-attention@b{b}"));
+            let attn1 = by_name(&roofs.analyze_batched_at(1024, 1), "decode-attention@b1");
+            let r = attn.arithmetic_intensity / attn1.arithmetic_intensity;
+            assert!((r - 1.0).abs() < 1e-9, "B={b}: attention AI moved ({r})");
+        }
+        // Batch-1 matches the Fig. 4a single-stream point exactly.
+        let single = by_name(&roofs.analyze_at(1024), "decode-linear");
+        let b1 = by_name(&roofs.analyze_batched_at(1024, 1), "decode-linear@b1");
+        assert_eq!(single.arithmetic_intensity, b1.arithmetic_intensity);
+        assert_eq!(single.bound, b1.bound);
+    }
+
+    #[test]
+    fn decode_linear_crossover_batch_is_consistent() {
+        let m = model();
+        let roofs = m.roofs_for(&BITNET_0_73B);
+        let cross = roofs
+            .decode_linear_crossover_batch(1024, 256)
+            .expect("shared weight stream must eventually saturate compute");
+        assert!(cross > 1, "batch-1 decode linears are memory-bound (the paper's floor)");
+        // The verdicts at either side of the crossover agree with the
+        // per-point bound classification.
+        let below = by_name(
+            &roofs.analyze_batched_at(1024, cross - 1),
+            &format!("decode-linear@b{}", cross - 1),
+        );
+        assert_eq!(below.bound, Bound::Memory);
+        let at = by_name(
+            &roofs.analyze_batched_at(1024, cross),
+            &format!("decode-linear@b{cross}"),
+        );
+        assert_eq!(at.bound, Bound::Compute);
+        // No crossover inside a too-small window.
+        assert_eq!(roofs.decode_linear_crossover_batch(1024, 1), None);
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! * `decode.hlo.txt` — the single-token autoregressive step,
 //! * `weights.bin` + `manifest.json` — weights and the IO contract.
 //!
-//! [`InferenceEngine`] compiles each HLO module once with the PJRT CPU
+//! `InferenceEngine` (behind the `pjrt` feature, so not linkable from a
+//! default build's docs) compiles each HLO module once with the PJRT CPU
 //! client and keeps the weight tensors uploaded as device buffers so the
 //! per-call cost is just the small dynamic inputs (tokens, positions) plus
 //! the KV cache round-trip (see `kv_cache` for why the cache currently

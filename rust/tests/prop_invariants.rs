@@ -149,6 +149,139 @@ fn prop_surface_matches_phase_model() {
                 if e > 1e-9 {
                     return Err(format!("prefill tail diverged at L={l}: {e:.3e}"));
                 }
+                // Batched decode: per-B closed forms over the same grid,
+                // for B in {1, 2, 4, 8} (uniform and mixed contexts).
+                for b in [1usize, 2, 4, 8] {
+                    let ctxs = vec![l; b];
+                    let e = rel(
+                        surface.decode_step_batched(&ctxs).total,
+                        model.decode_step_batched(&BITNET_0_73B, &ctxs).total,
+                    );
+                    if e > 1e-9 {
+                        return Err(format!("batched decode diverged at L={l} B={b}: {e:.3e}"));
+                    }
+                    let e = rel(
+                        surface.decode_step_batched_paged(&ctxs, page).total,
+                        model
+                            .decode_step_batched_paged(&BITNET_0_73B, &ctxs, page)
+                            .total,
+                    );
+                    if e > 1e-9 {
+                        return Err(format!(
+                            "paged batched decode diverged at L={l} B={b} page={page}: {e:.3e}"
+                        ));
+                    }
+                }
+            }
+            // Mixed per-stream contexts across the breakpoints.
+            let mixed = [1usize, l_rand, max_seq.min(knee.max(1)), max_seq];
+            let e = rel(
+                surface.decode_step_batched_paged(&mixed, page).total,
+                model.decode_step_batched_paged(&BITNET_0_73B, &mixed, page).total,
+            );
+            if e > 1e-9 {
+                return Err(format!("mixed-context batched decode diverged: {e:.3e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batch-1 of the batched decode step is *bit-identical* to the
+/// single-stream decode step — on both the phase model and the surface,
+/// monolithic and paged, across random designs, contexts, and page
+/// sizes. This is the anchor that lets the batch-1 serving path (the
+/// paper's figures) trust the batched kernel.
+#[test]
+fn prop_batch1_decode_is_bitwise_single_step() {
+    check(
+        cfg(64),
+        |rng, _| {
+            (
+                rng.chance(0.5),
+                *rng.choose(&[160usize, 240, 320, 400]),
+                rng.range(2, 18) * 25,
+                rng.range(1, 12) * 25,
+                rng.range(1, BITNET_0_73B.max_seq),
+                *rng.choose(&[1usize, 2, 8, 32, 128]),
+            )
+        },
+        |&(dpr, tlmm, pre, dec, l, page)| {
+            let hosting = if dpr {
+                AttentionHosting::Reconfigurable
+            } else {
+                AttentionHosting::StaticBoth
+            };
+            let dse = DseConfig::paper_default(BITNET_0_73B, KV260.clone(), hosting);
+            let design = evaluate_grid_point(&dse, tlmm, pre, dec).design;
+            let model = PhaseModel::new(design.clone(), KV260.clone());
+            let surface = LatencySurface::new(&design, &KV260, &BITNET_0_73B, 32);
+            let a = model.decode_step_batched(&BITNET_0_73B, &[l]).total.to_bits();
+            let b = model.decode_step(&BITNET_0_73B, l).total.to_bits();
+            if a != b {
+                return Err(format!("model batch-1 differs from decode_step at L={l}"));
+            }
+            let a = model
+                .decode_step_batched_paged(&BITNET_0_73B, &[l], page)
+                .total
+                .to_bits();
+            let b = model.decode_step_paged(&BITNET_0_73B, l, page).total.to_bits();
+            if a != b {
+                return Err(format!(
+                    "model batch-1 differs from decode_step_paged at L={l} page={page}"
+                ));
+            }
+            let a = surface.decode_step_batched(&[l]).total.to_bits();
+            let b = surface.decode_step(l).total.to_bits();
+            if a != b {
+                return Err(format!("surface batch-1 differs from decode_step at L={l}"));
+            }
+            let a = surface.decode_step_batched_paged(&[l], page).total.to_bits();
+            let b = surface.decode_step_paged(l, page).total.to_bits();
+            if a != b {
+                return Err(format!(
+                    "surface batch-1 differs from decode_step_paged at L={l} page={page}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batched-decode structure: the total is monotone in batch size, the
+/// per-token latency never grows with B (the shared weight stream can
+/// only help), and the projection term is exactly
+/// `max(B / tps, T_weights)` with its knee at
+/// `LatencySurface::decode_batch_breakpoint`.
+#[test]
+fn prop_batched_decode_monotone_and_kneed() {
+    let surface = LatencySurface::new(
+        &AcceleratorDesign::pd_swap(),
+        &KV260,
+        &BITNET_0_73B,
+        32,
+    );
+    check(
+        cfg(128),
+        |rng, _| (rng.range(1, BITNET_0_73B.max_seq), rng.range(1, 24)),
+        |&(l, b)| {
+            let step_b = surface.decode_step_batched_paged(&vec![l; b], 32);
+            let step_b1 = surface.decode_step_batched_paged(&vec![l; b + 1], 32);
+            if step_b1.total <= step_b.total {
+                return Err(format!("total not monotone at L={l} B={b}"));
+            }
+            if step_b1.per_token() > step_b.per_token() + 1e-12 {
+                return Err(format!("per-token grew with batch at L={l} B={b}"));
+            }
+            let knee = surface.decode_batch_breakpoint();
+            let expect_stream_bound = (b as f64) < knee;
+            let stream_bound = step_b.projection == surface.weight_stream_time();
+            if expect_stream_bound != stream_bound && (b as f64 - knee).abs() > 1e-6 {
+                return Err(format!(
+                    "projection knee misplaced: B={b} knee={knee:.2} proj={} T_w={}",
+                    step_b.projection,
+                    surface.weight_stream_time()
+                ));
             }
             Ok(())
         },

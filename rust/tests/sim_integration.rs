@@ -245,3 +245,72 @@ fn ablation_matrix() {
     assert!(nov.1 > full.1, "overlap ablation: {:.4} vs {:.4}", nov.1, full.1);
     assert!((nov.0 / full.0 - 1.0).abs() < 0.01, "decode speed should be unchanged");
 }
+
+/// End-to-end decode-batch codesign: the joint sweep crossed with the
+/// multi-stream decode axis produces a deterministic per-batch winner
+/// table and a flip verdict for every trace — the machine-readable form
+/// `pd-swap codesign --decode-batch 1,4` publishes as a CI artifact.
+#[test]
+fn codesign_decode_batch_axis_end_to_end() {
+    use pd_swap::dse::{run_codesign, CodesignConfig, TracePreset};
+
+    let mut sweep = CodesignConfig::paper_default(BITNET_0_73B, KV260.clone());
+    sweep.dse.tlmm_grid = vec![320];
+    sweep.dse.prefill_grid = vec![250, 300];
+    sweep.dse.decode_grid = vec![150, 250];
+    sweep.traces = vec![
+        TracePreset::by_name("mixed", 6, 0.05, 2048, 7).unwrap(),
+        TracePreset::by_name("bursty", 6, 0.05, 2048, 7).unwrap(),
+    ];
+    sweep.decode_batches = vec![1, 4];
+    let report = run_codesign(&sweep).unwrap();
+    assert_eq!(
+        report.sims_run,
+        report.designs_swept * sweep.policies.len() * sweep.traces.len() * 2
+    );
+
+    // Every trace gets a winner per batch and a flip verdict.
+    let flips = report.batch_flips();
+    assert_eq!(flips.len(), 2);
+    for f in &flips {
+        assert_eq!(f.winners.len(), 2, "{}: one winner per swept batch", f.trace);
+        let expect = f.winners[0].1 != f.winners[1].1 || f.winners[0].2 != f.winners[1].2;
+        assert_eq!(f.flips, expect, "{}", f.trace);
+    }
+
+    // The JSON artifact carries the batch axis and the verdicts.
+    let v = report.to_json(5);
+    let batches = v.get("decode_batches").unwrap().as_arr().unwrap();
+    assert_eq!(batches.len(), 2);
+    assert_eq!(v.get("decode_batch_flips").unwrap().as_arr().unwrap().len(), 2);
+    let mixed = v.get("traces").unwrap().get("mixed").unwrap();
+    let by_batch = mixed.get("winner_by_decode_batch").unwrap();
+    assert!(by_batch.get("b1").is_some() && by_batch.get("b4").is_some());
+    assert!(
+        mixed
+            .get("winner")
+            .unwrap()
+            .get("decode_batch")
+            .unwrap()
+            .as_f64()
+            .is_some()
+    );
+
+    // Determinism across runs (fresh config, different thread count).
+    let mut again = CodesignConfig::paper_default(BITNET_0_73B, KV260.clone());
+    again.dse.tlmm_grid = vec![320];
+    again.dse.prefill_grid = vec![250, 300];
+    again.dse.decode_grid = vec![150, 250];
+    again.traces = vec![
+        TracePreset::by_name("mixed", 6, 0.05, 2048, 7).unwrap(),
+        TracePreset::by_name("bursty", 6, 0.05, 2048, 7).unwrap(),
+    ];
+    again.decode_batches = vec![1, 4];
+    again.threads = 3;
+    let b = run_codesign(&again).unwrap();
+    for (fa, fb) in flips.iter().zip(b.batch_flips()) {
+        assert_eq!(fa.trace, fb.trace);
+        assert_eq!(fa.flips, fb.flips);
+        assert_eq!(fa.winners, fb.winners);
+    }
+}
