@@ -1,0 +1,167 @@
+//! Codesign-report differ: compare two `codesign-report.json` artifacts'
+//! per-trace winners and flag flips.
+//!
+//! The `pd-swap codesign` sweep is fully deterministic, so across two
+//! commits a per-trace winner (design + policy + decode batch + KV pool)
+//! changes ONLY when the model, the sweep axes, or an intended
+//! performance characteristic changed. CI's bench-smoke job downloads the
+//! previous successful run's `codesign-report` artifact and runs this
+//! differ against the fresh report: an unexplained flip is a regression
+//! signal that would otherwise hide inside a green build.
+//!
+//! ```text
+//! cargo run --example codesign_diff -- --prev old.json --curr new.json [--warn]
+//! ```
+//!
+//! Exit status: 0 when the winners agree (or `--warn` was passed — flips
+//! are then emitted as GitHub `::warning::` annotations with a labeled
+//! diff); 1 when winners flipped without `--warn`; 2 on unreadable input
+//! (except that `--warn` downgrades an unreadable `--prev` to a skipped
+//! diff — a corrupt previous artifact is an infra hiccup, not a signal).
+//! Traces present in only one report are reported but never count as
+//! flips (the axis legitimately changes when the sweep config does).
+
+use std::process::ExitCode;
+
+use pd_swap::dse::PoolVariant;
+use pd_swap::util::cli::Args;
+use pd_swap::util::json::{parse, Value};
+
+/// The identity of one winner cell, as compared across reports.
+#[derive(Debug, PartialEq)]
+struct Winner {
+    design: String,
+    policy: String,
+    decode_batch: i64,
+    pool: String,
+}
+
+impl Winner {
+    fn from_cell(cell: &Value) -> Option<Winner> {
+        Some(Winner {
+            design: cell.get("design")?.as_str()?.to_string(),
+            policy: cell.get("policy")?.as_str()?.to_string(),
+            decode_batch: cell.get("decode_batch")?.as_f64()? as i64,
+            // Older reports (pre-pool-axis) carry no pool column; treat
+            // it as the default variant so adding the axis is not a flip.
+            pool: cell
+                .get("pool")
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| PoolVariant::paper_default().label()),
+        })
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "{} + {} @ B={} / {}",
+            self.design, self.policy, self.decode_batch, self.pool
+        )
+    }
+}
+
+fn load(path: &str) -> Result<Value, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse(&text).map_err(|e| format!("{path}: {e:?}"))
+}
+
+/// Trace-name → winner map from a report.
+fn winners(report: &Value) -> Vec<(String, Winner)> {
+    let Some(Value::Obj(traces)) = report.get("traces") else {
+        return Vec::new();
+    };
+    traces
+        .iter()
+        .filter_map(|(name, t)| {
+            t.get("winner")
+                .and_then(Winner::from_cell)
+                .map(|w| (name.clone(), w))
+        })
+        .collect()
+}
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let Some(prev_path) = args.get("prev") else {
+        eprintln!("usage: codesign_diff --prev FILE --curr FILE [--warn]");
+        return ExitCode::from(2);
+    };
+    let Some(curr_path) = args.get("curr") else {
+        eprintln!("usage: codesign_diff --prev FILE --curr FILE [--warn]");
+        return ExitCode::from(2);
+    };
+    let warn_only = args.flag("warn");
+
+    let curr = match load(curr_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("codesign_diff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let prev = match load(prev_path) {
+        Ok(p) => p,
+        Err(e) if warn_only => {
+            // Best-effort mode: a truncated/corrupt previous artifact is
+            // an infra hiccup (interrupted upload, partial download), not
+            // a regression signal — skip the diff instead of failing CI.
+            println!("codesign_diff: previous report unreadable ({e}); skipping diff");
+            return ExitCode::SUCCESS;
+        }
+        Err(e) => {
+            eprintln!("codesign_diff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let prev_winners = winners(&prev);
+    let curr_winners = winners(&curr);
+    if curr_winners.is_empty() {
+        eprintln!("codesign_diff: no per-trace winners in {curr_path}");
+        return ExitCode::from(2);
+    }
+
+    let mut flips = 0usize;
+    for (trace, cw) in &curr_winners {
+        match prev_winners.iter().find(|(t, _)| t == trace) {
+            None => {
+                println!("trace '{trace}': new in this report ({}) — not a flip", cw.label());
+            }
+            Some((_, pw)) if pw == cw => {
+                println!("trace '{trace}': winner unchanged ({})", cw.label());
+            }
+            Some((_, pw)) => {
+                flips += 1;
+                let line = format!(
+                    "trace '{trace}': winner FLIPPED: {} -> {}",
+                    pw.label(),
+                    cw.label()
+                );
+                if warn_only {
+                    // GitHub annotation: visible in the job summary
+                    // without failing the build (an intended model change
+                    // legitimately flips winners).
+                    println!("::warning title=codesign winner flip::{line}");
+                } else {
+                    println!("{line}");
+                }
+            }
+        }
+    }
+    for (trace, pw) in &prev_winners {
+        if !curr_winners.iter().any(|(t, _)| t == trace) {
+            println!("trace '{trace}': dropped from this report (was {})", pw.label());
+        }
+    }
+
+    if flips == 0 {
+        println!("codesign_diff: no winner flips across {} traces", curr_winners.len());
+        ExitCode::SUCCESS
+    } else if warn_only {
+        println!("codesign_diff: {flips} winner flip(s) — warning only (--warn)");
+        ExitCode::SUCCESS
+    } else {
+        println!("codesign_diff: {flips} winner flip(s)");
+        ExitCode::FAILURE
+    }
+}

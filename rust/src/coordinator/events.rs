@@ -36,14 +36,28 @@
 //! **Multi-stream decode** ([`EventServerConfig::decode_batch`] > 1,
 //! another beyond-paper extension): each decode token-step event batches
 //! up to `decode_batch` pool-resident streams in the same round-robin
-//! order the single-stream path (and [`super::sim_server::SimServer`])
-//! uses, stepping them through one
+//! order [`super::sim_server::SimServer`] uses, stepping them through one
 //! [`crate::engines::LatencySurface::decode_step_batched_paged`] call —
 //! the batch shares a single pass over the packed weight stream, so every
 //! resident beyond the first amortizes the `T_weights` decode floor while
-//! paying only its own paged KV traffic. `decode_batch = 1` keeps the
-//! paper-faithful single-stream event path bit-for-bit (regression-pinned
-//! by the batch-1 equivalence tests).
+//! paying only its own paged KV traffic. There is exactly ONE decode
+//! scheduler: a batch of one *is* the paper's single-stream flow (the
+//! batch-1 closed form is bit-identical to the single-step form, and a
+//! single-selection step emits the same `DecodeStepDone` event the
+//! pre-batching engine did), so the paper-faithful timeline is preserved
+//! bit-for-bit without a duplicated single-stream path.
+//!
+//! **Allocation-free hot path.** The steady-state decode loop performs no
+//! heap allocation: the batch selection writes into scratch buffers owned
+//! by the server (one step event is in flight at a time, so the buffers
+//! are stable until the completion handler reads them), the completion
+//! event carries no heap payload, and the policy outlook is maintained
+//! incrementally — arrival/extraction/requeue update two counters instead
+//! of re-scanning the queue, and the batched decode estimate uses the
+//! uniform-context closed form
+//! ([`crate::engines::LatencySurface::decode_step_uniform_paged`]) instead
+//! of materializing a per-decision context vector. The `hotpath_kernel`
+//! bench gates this with a counting allocator.
 //!
 //! ```
 //! use pd_swap::coordinator::{EventServer, EventServerConfig, Request};
@@ -103,10 +117,14 @@ pub enum SimEvent {
     SwapDone { to_decode: bool },
     /// One decode token-step completed for request `id`.
     DecodeStepDone { id: u64 },
-    /// One *batched* decode token-step completed: every stream in `ids`
-    /// (round-robin selection order) gained one token, sharing a single
-    /// weight-stream pass (multi-stream decode, `decode_batch > 1`).
-    DecodeBatchDone { ids: Vec<u64> },
+    /// One *batched* decode token-step completed: the `n` streams the
+    /// server's scratch selection buffer holds (round-robin selection
+    /// order, `first` leading) each gained one token, sharing a single
+    /// weight-stream pass (multi-stream decode, `decode_batch > 1`). The
+    /// event deliberately carries no heap payload — at most one step
+    /// event is in flight, so the selection buffer is stable until this
+    /// completion is handled and the steady-state loop never allocates.
+    DecodeBatchDone { first: u64, n: usize },
     /// A KV-pool eviction happened (bookkeeping is synchronous; the
     /// event marks the preemption on the timeline).
     KvEvicted { victim: u64 },
@@ -134,7 +152,7 @@ impl SimEvent {
             | SimEvent::PrefillTrigger { id }
             | SimEvent::PrefillDone { id }
             | SimEvent::DecodeStepDone { id } => *id,
-            SimEvent::DecodeBatchDone { ids } => ids.first().copied().unwrap_or(u64::MAX),
+            SimEvent::DecodeBatchDone { first, .. } => *first,
             SimEvent::SwapDone { .. } => u64::MAX,
             SimEvent::KvEvicted { victim } => *victim,
         }
@@ -294,6 +312,11 @@ pub struct EventServerConfig {
     /// the cache keys on exactly that tuple. Ignored when `use_surface`
     /// is false.
     pub surface: Option<Arc<LatencySurface>>,
+    /// The caller already validated this design's floorplan (the codesign
+    /// sweep's DSE pass runs the same [`crate::fpga::region::validate_budget`]
+    /// rule on every candidate): skip the per-server revalidation and
+    /// program the device directly. Debug builds still assert validity.
+    pub assume_feasible: bool,
 }
 
 impl EventServerConfig {
@@ -310,6 +333,7 @@ impl EventServerConfig {
             decode_batch: 1,
             use_surface: true,
             surface: None,
+            assume_feasible: false,
         }
     }
 }
@@ -334,10 +358,26 @@ pub struct EventServer {
     /// A `DecodeStepDone`/`DecodeBatchDone` is scheduled (the decode
     /// engine is busy).
     step_inflight: bool,
-    /// Test knob: route `decode_batch == 1` through the batched
-    /// scheduling path so the equivalence tests can prove it reproduces
-    /// the single-stream path's virtual clocks bit for bit.
-    force_batched: bool,
+    /// Scratch: ids selected for the in-flight (batched) step, in
+    /// round-robin order. Owned by the server so the completion event
+    /// needs no heap payload; capacity is retained across steps, so the
+    /// steady-state loop never allocates.
+    batch_ids: Vec<u64>,
+    /// Scratch: the selected streams' contexts (parallel to `batch_ids`).
+    batch_ctxs: Vec<usize>,
+    /// Incrementally maintained arrived-backlog count (every queued
+    /// request has arrived — arrivals enter through their timeline event
+    /// — so this equals `sched.arrived_backlog(clock).0` at all times;
+    /// the policy outlook asserts that in debug builds instead of
+    /// re-scanning the queue per decision).
+    backlog_n: usize,
+    /// Incrementally maintained arrived-backlog prompt-token sum (the
+    /// `sched.arrived_backlog(clock).1` twin of `backlog_n`).
+    backlog_tokens: usize,
+    /// Incrementally maintained sum of the decode set's remaining
+    /// generation tokens: +remaining on entry, −1 per applied token,
+    /// −remaining on any removal (completion, capacity cap, eviction).
+    decode_rem_tokens: usize,
     /// Requests that have prefilled at least once (re-prefill = eviction
     /// recompute, charged to `metrics.recompute_overhead`).
     prefilled: HashSet<u64>,
@@ -386,7 +426,12 @@ impl EventServer {
         } else {
             None
         };
-        let swap = SwapController::new(cfg.design.program(&cfg.device)?);
+        let programmed = if cfg.assume_feasible {
+            cfg.design.program_prevalidated(&cfg.device)?
+        } else {
+            cfg.design.program(&cfg.device)?
+        };
+        let swap = SwapController::new(programmed);
         let lat = swap.device.reconfig_latency();
         let overlap_sched = OverlapScheduler::new(model.clone(), lat);
         let kv_pool = KvPool::new(cfg.pool.clone());
@@ -404,7 +449,11 @@ impl EventServer {
             decode: Vec::new(),
             cursor: 0,
             step_inflight: false,
-            force_batched: false,
+            batch_ids: Vec::new(),
+            batch_ctxs: Vec::new(),
+            backlog_n: 0,
+            backlog_tokens: 0,
+            decode_rem_tokens: 0,
             prefilled: HashSet::new(),
             evicted_once: HashSet::new(),
             clock: 0.0,
@@ -456,6 +505,19 @@ impl EventServer {
             None => self
                 .model
                 .decode_step_batched_paged(&self.cfg.shape, ctxs, self.cfg.pool.page_tokens)
+                .total,
+        }
+    }
+
+    /// Uniform-context batched step (`batch` streams all at context `l`)
+    /// — bit-identical to [`Self::decode_batch_total`] over `[l; batch]`
+    /// without materializing the slice (the policy outlook's estimate).
+    fn decode_uniform_total(&self, l: usize, batch: usize) -> f64 {
+        match &self.surface {
+            Some(s) => s.decode_step_uniform_paged(l, batch, self.cfg.pool.page_tokens).total,
+            None => self
+                .model
+                .decode_step_uniform_paged(&self.cfg.shape, l, batch, self.cfg.pool.page_tokens)
                 .total,
         }
     }
@@ -547,6 +609,11 @@ impl EventServer {
     fn dispatch(&mut self, ev: SimEvent) -> Result<()> {
         match ev {
             SimEvent::Arrival(r) => {
+                // Incremental outlook: the request is in the queue AND has
+                // arrived (its timeline event just fired), so it joins the
+                // backlog counters here and leaves them at extraction.
+                self.backlog_n += 1;
+                self.backlog_tokens += r.prompt_len;
                 self.sched.admit(r);
                 Ok(())
             }
@@ -556,7 +623,7 @@ impl EventServer {
             SimEvent::PrefillDone { id } => self.on_prefill_done(id),
             SimEvent::SwapDone { .. } => self.on_swap_done(),
             SimEvent::DecodeStepDone { id } => self.on_step_done(id),
-            SimEvent::DecodeBatchDone { ids } => self.on_batch_done(&ids),
+            SimEvent::DecodeBatchDone { first, n } => self.on_batch_done(first, n),
         }
     }
 
@@ -580,8 +647,7 @@ impl EventServer {
             .req
             .max_new_tokens
             .min(cap.min(shape.max_seq).saturating_sub(prompt));
-        let decode_tokens: usize =
-            self.decode.iter().map(|f| f.remaining(shape.max_seq)).sum::<usize>() + job_rem;
+        let decode_tokens: usize = self.decode_rem_tokens + job_rem;
         if decode_tokens == 0 {
             return Ok(()); // nothing to decode afterwards: keep prefilling
         }
@@ -619,6 +685,7 @@ impl EventServer {
             // the request completes straight out of prefill.
             self.finish(f)?;
         } else {
+            self.decode_rem_tokens += f.remaining(shape.max_seq);
             self.decode.push(f);
         }
         if !job.swap_committed {
@@ -657,9 +724,13 @@ impl EventServer {
             let gap = (self.clock - anchor).max(0.0);
             self.metrics.tpot.record(gap);
         }
+        // The applied token shrinks both remaining-token bounds by one.
+        self.decode_rem_tokens = self.decode_rem_tokens.saturating_sub(1);
         self.kv_pool.touch(id, self.clock);
         if self.decode[idx].done(shape.max_seq) {
             let f = self.decode.remove(idx);
+            self.decode_rem_tokens =
+                self.decode_rem_tokens.saturating_sub(f.remaining(shape.max_seq));
             self.finish(f)?;
             if idx < self.cursor {
                 self.cursor -= 1;
@@ -675,15 +746,21 @@ impl EventServer {
         self.apply_token_step(id)
     }
 
-    /// A batched decode step completed: every stream in `ids` gained one
-    /// token at `self.clock`. Per-stream bookkeeping is
-    /// [`Self::apply_token_step`] in selection order — the same helper
-    /// the single-stream handler uses, so a batch of one reproduces the
-    /// single-stream path bit for bit.
-    fn on_batch_done(&mut self, ids: &[u64]) -> Result<()> {
+    /// A batched decode step completed: every stream the scratch
+    /// selection buffer holds gained one token at `self.clock`.
+    /// Per-stream bookkeeping is [`Self::apply_token_step`] in selection
+    /// order — the same helper the single-stream handler uses, so the two
+    /// completion shapes cannot drift. The buffer is read by index (one
+    /// step in flight at a time, nothing mutates it mid-handling).
+    fn on_batch_done(&mut self, first: u64, n: usize) -> Result<()> {
         self.step_inflight = false;
-        for &id in ids {
+        debug_assert_eq!(self.batch_ids.len(), n, "selection buffer out of sync");
+        debug_assert_eq!(self.batch_ids.first().copied(), Some(first));
+        let mut k = 0;
+        while k < n && k < self.batch_ids.len() {
+            let id = self.batch_ids[k];
             self.apply_token_step(id)?;
+            k += 1;
         }
         Ok(())
     }
@@ -716,13 +793,7 @@ impl EventServer {
                             return self.begin_prefill_swap();
                         }
                     }
-                    let batched = self.cfg.decode_batch > 1 || self.force_batched;
-                    let scheduled = if batched {
-                        self.try_schedule_batch_step()?
-                    } else {
-                        self.try_schedule_step()?
-                    };
-                    if scheduled {
+                    if self.try_schedule_step()? {
                         return Ok(());
                     }
                     // Decode set drained while securing KV pages.
@@ -797,11 +868,29 @@ impl EventServer {
     /// Snapshot both phases' backlogs for the policy. `extra_rem` /
     /// `extra_ctx` fold in the request currently prefilling (trigger-time
     /// decisions count it as imminent decode work).
+    ///
+    /// **Incremental-outlook invariant.** The backlog quantities are NOT
+    /// recomputed here: `backlog_n`/`backlog_tokens` track the arrived
+    /// queue (updated at arrival, extraction, and eviction-requeue) and
+    /// `decode_rem_tokens` tracks the decode set's remaining generation
+    /// budget (updated at entry, per applied token, and at every
+    /// removal), so a policy decision costs O(1) plus a fold over the
+    /// `max_residents`-bounded decode set for the representative context.
+    /// Debug builds assert both counters against the full re-scan.
     fn outlook(&self, extra_rem: usize, extra_ctx: usize) -> SwapOutlook {
         let shape = self.cfg.shape;
-        let (n_pend, tok_pend) = self.sched.arrived_backlog(self.clock);
-        let decode_pending_tokens =
-            self.decode.iter().map(|f| f.remaining(shape.max_seq)).sum::<usize>() + extra_rem;
+        let (n_pend, tok_pend) = (self.backlog_n, self.backlog_tokens);
+        debug_assert_eq!(
+            (n_pend, tok_pend),
+            self.sched.arrived_backlog(self.clock),
+            "incremental backlog counters diverged from the queue"
+        );
+        debug_assert_eq!(
+            self.decode_rem_tokens,
+            self.decode.iter().map(|f| f.remaining(shape.max_seq)).sum::<usize>(),
+            "incremental decode-remaining counter diverged from the decode set"
+        );
+        let decode_pending_tokens = self.decode_rem_tokens + extra_rem;
         let decode_ready = self.decode.len() + usize::from(extra_rem > 0);
         let rep_ctx = self
             .decode
@@ -816,13 +905,14 @@ impl EventServer {
         // step amortizes the shared weight stream across the (capped)
         // batch, so the per-token estimate is `batched total / batch`.
         // `decode_batch == 1` keeps the original single-stream estimate
-        // bit for bit.
+        // bit for bit, and the uniform-context closed form keeps the
+        // B > 1 estimate allocation-free.
         let batch = self.cfg.decode_batch.max(1);
         let est_decode_step = if batch <= 1 {
             self.decode_step_total(rep_ctx)
         } else {
             let eff = batch.min(decode_ready.max(1));
-            self.decode_batch_total(&vec![rep_ctx; eff]) / eff as f64
+            self.decode_uniform_total(rep_ctx, eff) / eff as f64
         };
         let mean_prompt = if n_pend > 0 { (tok_pend / n_pend).max(1) } else { 1 };
         SwapOutlook {
@@ -881,6 +971,10 @@ impl EventServer {
                 && pool.execute_admission(r.id, 0, plan, now).unwrap_or(false)
         });
         let Some(req) = batch.pop() else { return Ok(false) };
+        // Extraction removes the head from the arrived backlog.
+        debug_assert!(self.backlog_n > 0, "extracted a request the backlog never saw");
+        self.backlog_n = self.backlog_n.saturating_sub(1);
+        self.backlog_tokens = self.backlog_tokens.saturating_sub(req.prompt_len);
         let id = req.id;
         let shape = self.cfg.shape;
         let l = req.prompt_len.max(1);
@@ -909,88 +1003,32 @@ impl EventServer {
         Ok(true)
     }
 
-    /// Schedule the next round-robin decode step, growing the KV
-    /// reservation first (evicting per policy under pool pressure).
-    /// Returns false if the decode set drained instead.
+    /// The ONE decode scheduler: select up to `decode_batch` pool-resident
+    /// streams in round-robin order (securing each stream's next KV slot,
+    /// evicting per policy under pool pressure), then schedule ONE step
+    /// event covering all of them — the batch shares a single
+    /// weight-stream pass. A selection of one *is* the paper's
+    /// single-stream flow: it emits the same `DecodeStepDone` event at
+    /// the same virtual time (the batch-1 closed form is bit-identical to
+    /// the single-step form), which is how `decode_batch = 1` preserves
+    /// the pre-batching engine's timeline bit for bit without a second
+    /// scheduler. PR 4's `batched_path_at_batch1_reproduces_single_path_bitwise`
+    /// proved this selection loop equivalent to the legacy single-stream
+    /// path before that path was deleted.
+    ///
+    /// The selection writes into the server-owned scratch buffers
+    /// (`batch_ids`/`batch_ctxs`), which stay stable until the completion
+    /// handler reads them — the steady-state loop performs no heap
+    /// allocation. Returns false if the decode set drained instead.
     fn try_schedule_step(&mut self) -> Result<bool> {
         let shape = self.cfg.shape;
-        while !self.decode.is_empty() {
-            self.cursor %= self.decode.len();
-            let i = self.cursor;
-            if self.decode[i].done(shape.max_seq) {
-                let f = self.decode.remove(i);
-                self.finish(f)?;
-                continue;
-            }
-            let id = self.decode[i].req.id;
-            let next_tokens = self.decode[i].ctx + 1;
-            match self.kv_pool.ensure_tokens(id, next_tokens, self.clock) {
-                Ok(()) => {
-                    let ctx = self.decode[i].ctx;
-                    let step = self.decode_step_total(ctx);
-                    if self.decode[i].first_step.is_none() {
-                        self.decode[i].first_step = Some(self.clock);
-                    }
-                    self.queue.push(self.clock + step, SimEvent::DecodeStepDone { id });
-                    self.step_inflight = true;
-                    return Ok(true);
-                }
-                Err(PoolError::Exhausted { .. }) => {
-                    let evict = self.cfg.pool.eviction == EvictionPolicy::EvictAndRecompute;
-                    let victim = if evict {
-                        self.kv_pool.lru_victim(|v| {
-                            v != id
-                                && !self.evicted_once.contains(&v)
-                                && self.decode.iter().any(|f| f.req.id == v)
-                        })
-                    } else {
-                        None
-                    };
-                    if let Some(vid) = victim {
-                        self.kv_pool
-                            .evict_at(vid, self.clock)
-                            .map_err(|e| anyhow::anyhow!("{e}"))?;
-                        self.evicted_once.insert(vid);
-                        let j = self
-                            .decode
-                            .iter()
-                            .position(|f| f.req.id == vid)
-                            .expect("victim must be decoding");
-                        let preempted = self.decode.remove(j);
-                        if j < self.cursor {
-                            self.cursor -= 1;
-                        }
-                        // Back to the queue with the age-based fairness
-                        // tiebreak; its generated tokens are discarded
-                        // and the prompt re-prefilled later.
-                        self.sched.requeue_front(preempted.req);
-                        self.queue.push(self.clock, SimEvent::KvEvicted { victim: vid });
-                        continue;
-                    }
-                    // Capacity-capped: deliver what we have.
-                    let f = self.decode.remove(i);
-                    self.finish(f)?;
-                    continue;
-                }
-                Err(e) => return Err(anyhow::anyhow!("kv grow: {e}")),
-            }
-        }
-        Ok(false)
-    }
-
-    /// Multi-stream variant of [`Self::try_schedule_step`]: select up to
-    /// `decode_batch` pool-resident streams in the same round-robin order
-    /// (securing each stream's next KV slot, evicting per policy under
-    /// pool pressure), then schedule ONE batched step event covering all
-    /// of them — the batch shares a single weight-stream pass. A batch of
-    /// one degenerates to the single-stream path bit for bit (the
-    /// per-candidate handling below mirrors it line by line). Returns
-    /// false if the decode set drained instead.
-    fn try_schedule_batch_step(&mut self) -> Result<bool> {
-        let shape = self.cfg.shape;
         let b_max = self.cfg.decode_batch.max(1);
-        let mut ids: Vec<u64> = Vec::new();
-        let mut ctxs: Vec<usize> = Vec::new();
+        // Take the scratch buffers for the selection loop (borrow-splits
+        // them from `self`); capacity is retained, so no allocation.
+        let mut ids = std::mem::take(&mut self.batch_ids);
+        let mut ctxs = std::mem::take(&mut self.batch_ctxs);
+        ids.clear();
+        ctxs.clear();
         while !self.decode.is_empty() && ids.len() < b_max {
             let len = self.decode.len();
             // Round-robin: the engine cursor picks the first stream; each
@@ -1015,6 +1053,8 @@ impl EventServer {
             }
             if self.decode[i].done(shape.max_seq) {
                 let f = self.decode.remove(i);
+                self.decode_rem_tokens =
+                    self.decode_rem_tokens.saturating_sub(f.remaining(shape.max_seq));
                 self.finish(f)?;
                 if i < self.cursor {
                     self.cursor -= 1;
@@ -1055,9 +1095,17 @@ impl EventServer {
                             .position(|f| f.req.id == vid)
                             .expect("victim must be decoding");
                         let preempted = self.decode.remove(j);
+                        self.decode_rem_tokens = self
+                            .decode_rem_tokens
+                            .saturating_sub(preempted.remaining(shape.max_seq));
                         if j < self.cursor {
                             self.cursor -= 1;
                         }
+                        // Back to the queue with the age-based fairness
+                        // tiebreak; it rejoins the arrived backlog (its
+                        // arrival is in the past by construction).
+                        self.backlog_n += 1;
+                        self.backlog_tokens += preempted.req.prompt_len;
                         self.sched.requeue_front(preempted.req);
                         self.queue.push(self.clock, SimEvent::KvEvicted { victim: vid });
                         continue;
@@ -1072,8 +1120,10 @@ impl EventServer {
                         break;
                     }
                     // No stream can make progress: deliver what we have
-                    // (the single-stream path's capacity-capped rule).
+                    // (capacity-capped generation).
                     let f = self.decode.remove(i);
+                    self.decode_rem_tokens =
+                        self.decode_rem_tokens.saturating_sub(f.remaining(shape.max_seq));
                     self.finish(f)?;
                     if i < self.cursor {
                         self.cursor -= 1;
@@ -1084,11 +1134,26 @@ impl EventServer {
             }
         }
         if ids.is_empty() {
+            self.batch_ids = ids;
+            self.batch_ctxs = ctxs;
             return Ok(false);
         }
+        // One closed-form evaluation for the whole selection; a selection
+        // of one goes out as the paper's single-stream step event (same
+        // arithmetic — the batch-1 form is bit-identical to the single
+        // form — and the same event kind the pre-batching engine logged).
         let step = self.decode_batch_total(&ctxs);
-        self.queue.push(self.clock + step, SimEvent::DecodeBatchDone { ids });
+        if ids.len() == 1 {
+            self.queue.push(self.clock + step, SimEvent::DecodeStepDone { id: ids[0] });
+        } else {
+            self.queue.push(
+                self.clock + step,
+                SimEvent::DecodeBatchDone { first: ids[0], n: ids.len() },
+            );
+        }
         self.step_inflight = true;
+        self.batch_ids = ids;
+        self.batch_ctxs = ctxs;
         Ok(true)
     }
 
@@ -1350,59 +1415,200 @@ mod tests {
         crate::coordinator::requests_from_trace(&spec.generate())
     }
 
+    /// Run a trace through the unified core at a decode batch, with the
+    /// surface kernel on or off.
+    fn run_unified(
+        policy: SwapPolicy,
+        decode_batch: usize,
+        use_surface: bool,
+        wl: Vec<Request>,
+    ) -> EventServer {
+        let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+        cfg.decode_batch = decode_batch;
+        cfg.use_surface = use_surface;
+        let mut s = EventServer::new(cfg).unwrap();
+        s.run(wl).unwrap();
+        s
+    }
+
     #[test]
-    fn batched_path_at_batch1_reproduces_single_path_bitwise() {
-        // `decode_batch = 1` must reproduce today's virtual clocks bit
-        // for bit on the bench traces — through BOTH code paths: the
-        // single-stream scheduler (the default dispatch) and the batched
-        // scheduler forced onto a batch of one (`force_batched`). This is
-        // the regression pin that lets the paper's figures trust the
-        // batch-1 engine regardless of which path future refactors take.
+    fn unified_core_reproduces_pr4_clocks_across_backends_and_batches() {
+        // The PR 4 contract chain, post-collapse. PR 4 proved (test
+        // `batched_path_at_batch1_reproduces_single_path_bitwise`) that
+        // the batched selection loop at a batch of one reproduces the
+        // legacy single-stream scheduler's virtual clocks bitwise on
+        // these exact traces. PR 5 collapsed the engine onto that
+        // selection loop unchanged — the de-allocation swapped per-step
+        // `Vec`s for value-identical scratch buffers, the batch-1 step
+        // still evaluates the closed form that is bit-identical to the
+        // single-step form, and a single selection emits the same
+        // `DecodeStepDone` event. The live regression pin that remains:
+        // the whole timeline must come out bit-identical from the two
+        // independent arithmetic backends (surface vs direct phase
+        // model), per trace, per policy, at batch 1 AND batch 4 —
+        // clocks, wall TPOT, TTFT, e2e, and per-request outcome order.
         for (name, wl) in [
             ("mixed", bench_mixed_trace()),
             ("bursty", bench_bursty_trace()),
         ] {
             for policy in [SwapPolicy::Eager, SwapPolicy::hysteresis_default()] {
-                let mut single = server(policy);
-                single.run(wl.clone()).unwrap();
-                let mut forced = server(policy);
-                forced.force_batched = true;
-                forced.run(wl.clone()).unwrap();
-                assert_eq!(
-                    single.clock().to_bits(),
-                    forced.clock().to_bits(),
-                    "{name}/{policy:?}: virtual clocks diverged"
-                );
-                assert_eq!(
-                    single.metrics.tokens_generated.get(),
-                    forced.metrics.tokens_generated.get()
-                );
-                assert_eq!(
-                    single.metrics.reconfigurations.get(),
-                    forced.metrics.reconfigurations.get()
-                );
-                assert_eq!(
-                    single.metrics.tpot.mean().to_bits(),
-                    forced.metrics.tpot.mean().to_bits(),
-                    "{name}/{policy:?}: wall TPOT diverged"
-                );
-                assert_eq!(
-                    single.metrics.ttft.mean().to_bits(),
-                    forced.metrics.ttft.mean().to_bits()
-                );
-                assert_eq!(
-                    single.metrics.e2e.mean().to_bits(),
-                    forced.metrics.e2e.mean().to_bits()
-                );
-                // Same per-request outcomes in the same completion order.
-                assert_eq!(single.outcomes.len(), forced.outcomes.len());
-                for (a, b) in single.outcomes.iter().zip(&forced.outcomes) {
-                    assert_eq!(a.id, b.id, "{name}: completion order changed");
-                    assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
-                    assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+                for b in [1usize, 4] {
+                    let fast = run_unified(policy, b, true, wl.clone());
+                    let slow = run_unified(policy, b, false, wl.clone());
+                    assert_eq!(
+                        fast.clock().to_bits(),
+                        slow.clock().to_bits(),
+                        "{name}/{policy:?}/B={b}: virtual clocks diverged"
+                    );
+                    assert_eq!(
+                        fast.metrics.tokens_generated.get(),
+                        slow.metrics.tokens_generated.get()
+                    );
+                    assert_eq!(
+                        fast.metrics.reconfigurations.get(),
+                        slow.metrics.reconfigurations.get()
+                    );
+                    assert_eq!(
+                        fast.metrics.tpot.mean().to_bits(),
+                        slow.metrics.tpot.mean().to_bits(),
+                        "{name}/{policy:?}/B={b}: wall TPOT diverged"
+                    );
+                    assert_eq!(
+                        fast.metrics.ttft.mean().to_bits(),
+                        slow.metrics.ttft.mean().to_bits()
+                    );
+                    assert_eq!(
+                        fast.metrics.e2e.mean().to_bits(),
+                        slow.metrics.e2e.mean().to_bits()
+                    );
+                    assert_eq!(fast.outcomes.len(), slow.outcomes.len());
+                    for (a, c) in fast.outcomes.iter().zip(&slow.outcomes) {
+                        assert_eq!(a.id, c.id, "{name}/B={b}: completion order changed");
+                        assert_eq!(a.ttft.to_bits(), c.ttft.to_bits());
+                        assert_eq!(a.e2e.to_bits(), c.e2e.to_bits());
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn batch_cap_is_inert_with_a_single_resident() {
+        // With at most one resident, every selection is a batch of one —
+        // so `decode_batch = 4` must reproduce the `decode_batch = 1`
+        // timeline bit for bit through the SAME unified scheduler (the
+        // only differences a larger cap could introduce are the selection
+        // width and the outlook's amortized estimate, and both collapse
+        // at an effective batch of one).
+        let wl = bench_mixed_trace();
+        for policy in [SwapPolicy::Eager, SwapPolicy::hysteresis_default()] {
+            let run_b = |b: usize| {
+                let mut cfg =
+                    EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+                cfg.max_residents = 1;
+                cfg.decode_batch = b;
+                let mut s = EventServer::new(cfg).unwrap();
+                s.run(wl.clone()).unwrap();
+                s
+            };
+            let b1 = run_b(1);
+            let b4 = run_b(4);
+            assert_eq!(b1.clock().to_bits(), b4.clock().to_bits(), "{policy:?}");
+            assert_eq!(
+                b1.metrics.tpot.mean().to_bits(),
+                b4.metrics.tpot.mean().to_bits()
+            );
+            assert_eq!(
+                b1.metrics.ttft.mean().to_bits(),
+                b4.metrics.ttft.mean().to_bits()
+            );
+            assert_eq!(
+                b1.metrics.tokens_generated.get(),
+                b4.metrics.tokens_generated.get()
+            );
+            // Every step event went out as a single-stream step.
+            assert!(b4.event_log().iter().all(|r| r.kind != "decode-batch"));
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_never_leak_state_across_steps() {
+        // Staggered budgets shrink the live batch 4 → 3 → 2 → 1 as
+        // streams complete, so the scratch selection buffers are reused
+        // at every width. A stale id leaking across steps would either
+        // double-step a stream (token conservation breaks) or step a
+        // departed one (the run errors); determinism across a fresh rerun
+        // pins the exact timeline.
+        let budgets = [8usize, 16, 24, 96];
+        let wl: Vec<Request> = budgets
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| Request::synthetic(i as u64, 128, g, 0.0))
+            .collect();
+        let run = || {
+            let mut cfg =
+                EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+            cfg.decode_batch = 4;
+            let mut s = EventServer::new(cfg).unwrap();
+            s.run(wl.clone()).unwrap();
+            s
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.metrics.tokens_generated.get(),
+            budgets.iter().sum::<usize>() as u64,
+            "every stream generated exactly its budget"
+        );
+        assert_eq!(a.clock().to_bits(), b.clock().to_bits());
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.e2e.to_bits(), y.e2e.to_bits());
+        }
+        a.pool().check_invariants().unwrap();
+        assert_eq!(a.pool().resident_count(), 0);
+        // The shrinking batch exercised both event shapes: true batches
+        // while several streams were live, single-stream steps at the
+        // tail.
+        let kinds: std::collections::HashSet<&'static str> =
+            a.event_log().iter().map(|r| r.kind).collect();
+        assert!(kinds.contains("decode-batch"), "wide batches must have run");
+        assert!(kinds.contains("decode-step"), "the lone tail stream steps single");
+    }
+
+    #[test]
+    fn incremental_outlook_counters_drain_to_zero() {
+        // The incremental backlog/remaining counters are debug-asserted
+        // against full re-scans at every policy decision; at drain they
+        // must all return to zero (conservation end-to-end).
+        for policy in [
+            SwapPolicy::Eager,
+            SwapPolicy::hysteresis_default(),
+            SwapPolicy::lookahead_default(),
+        ] {
+            let mut s = server(policy);
+            s.run(contended_workload()).unwrap();
+            assert_eq!(s.backlog_n, 0, "{policy:?}");
+            assert_eq!(s.backlog_tokens, 0, "{policy:?}");
+            assert_eq!(s.decode_rem_tokens, 0, "{policy:?}");
+        }
+        // Also under eviction pressure (requeues re-enter the backlog).
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(40)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut s = EventServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+        s.run(w).unwrap();
+        assert!(s.metrics.kv_evictions.get() >= 1, "pressure must evict");
+        assert_eq!(s.backlog_n, 0);
+        assert_eq!(s.backlog_tokens, 0);
+        assert_eq!(s.decode_rem_tokens, 0);
     }
 
     #[test]

@@ -12,14 +12,19 @@
 //! decode the batch to completion), which is faithful to the paper's
 //! evaluation but cannot represent arrivals landing mid-decode. For
 //! *continuous mixed traffic* — swap-policy arbitration, per-layer
-//! prefill progress, wall inter-token latency, multi-stream batched
-//! decode — use the event-driven core in [`super::events::EventServer`];
-//! this module remains the batch-synchronous reference the paper figures
-//! are reproduced on, and shares its per-request bookkeeping (the
-//! crate-private `InFlight`) with that engine. The decode rounds here
-//! interleave residents round-robin one stream at a time — the event
-//! core's `decode_batch` preserves exactly this ordering when it groups
-//! streams into shared-weight-stream batched steps.
+//! prefill progress, wall inter-token latency — use the event-driven core
+//! in [`super::events::EventServer`]; this module remains the
+//! batch-synchronous reference the paper figures are reproduced on, and
+//! shares its per-request bookkeeping (the crate-private `InFlight`) with
+//! that engine. The decode rounds here interleave residents round-robin;
+//! with [`SimServerConfig::decode_batch`] > 1 each round-robin position
+//! groups up to that many consecutive ready streams into one
+//! shared-weight-stream batched step
+//! ([`crate::engines::LatencySurface::decode_step_batched_paged`]) — the
+//! same grouping rule the event core uses — and `decode_batch = 1` keeps
+//! the paper-figure-faithful one-stream-at-a-time rounds bit for bit (a
+//! group of one evaluates the batch-1 closed form, which is bit-identical
+//! to the single-step form).
 //!
 //! Multi-request serving (our extension beyond the paper's single-request
 //! flow) is KV-capacity aware: every batch member holds a page
@@ -57,6 +62,10 @@ pub struct SimServerConfig {
     pub overlap: bool,
     /// Paged KV-cache pool sizing + admission/eviction policy.
     pub pool: KvPoolConfig,
+    /// Streams grouped per decode round position (1 = the paper's
+    /// one-stream-at-a-time rounds, bit-identical to the pre-batching
+    /// engine; B > 1 shares one weight-stream pass per group).
+    pub decode_batch: usize,
 }
 
 impl SimServerConfig {
@@ -69,6 +78,7 @@ impl SimServerConfig {
             policy: Policy::SwapPerRequest,
             overlap: true,
             pool,
+            decode_batch: 1,
         }
     }
 
@@ -81,6 +91,7 @@ impl SimServerConfig {
             policy: Policy::SwapPerRequest,
             overlap: false,
             pool,
+            decode_batch: 1,
         }
     }
 }
@@ -283,77 +294,118 @@ impl SimServer {
             })
             .collect();
 
+        let b_max = self.cfg.decode_batch.max(1);
+        // Group scratch, reused across rounds (allocation only grows it
+        // to `b_max` once).
+        let mut group_ids: Vec<u64> = Vec::new();
+        let mut group_ctxs: Vec<usize> = Vec::new();
         while !active.is_empty() {
             let mut i = 0;
             while i < active.len() {
-                if active[i].done(shape.max_seq) {
-                    let f = active.remove(i);
-                    self.finish_request(f, decode_start)?;
-                    continue;
-                }
-                // Secure the KV slot for the next token, evicting per
-                // policy when the pool is exhausted.
-                let id = active[i].req.id;
-                let next_tokens = active[i].ctx + 1;
-                let grew = loop {
-                    match self.kv_pool.ensure_tokens(id, next_tokens, self.clock) {
-                        Ok(()) => break true,
-                        Err(PoolError::Exhausted { .. }) => {
-                            // First sweep any batch-mate that already
-                            // finished generating but has not been visited
-                            // yet this round: completing it releases its
-                            // pages without discarding any work.
-                            let done_mate = active
-                                .iter()
-                                .position(|a| a.req.id != id && a.done(shape.max_seq));
-                            if let Some(j) = done_mate {
-                                let f = active.remove(j);
-                                self.finish_request(f, decode_start)?;
+                // Assemble up to `decode_batch` consecutive ready streams
+                // starting at the round-robin position: each secures its
+                // next KV slot (evicting per policy under pool pressure)
+                // exactly as the one-stream rounds did. A group of one IS
+                // the paper flow — same decisions, and the batch-1 closed
+                // form below is bit-identical to the single-step form.
+                group_ids.clear();
+                group_ctxs.clear();
+                while i < active.len() && group_ids.len() < b_max {
+                    if active[i].done(shape.max_seq) {
+                        let f = active.remove(i);
+                        self.finish_request(f, decode_start)?;
+                        continue;
+                    }
+                    // Secure the KV slot for the next token, evicting per
+                    // policy when the pool is exhausted.
+                    let id = active[i].req.id;
+                    let next_tokens = active[i].ctx + 1;
+                    let grew = loop {
+                        match self.kv_pool.ensure_tokens(id, next_tokens, self.clock) {
+                            Ok(()) => break true,
+                            Err(PoolError::Exhausted { .. }) => {
+                                // First sweep any batch-mate that already
+                                // finished generating but has not been visited
+                                // yet this round: completing it releases its
+                                // pages without discarding any work. (Group
+                                // members are never done — they have not been
+                                // stepped yet.)
+                                let done_mate = active
+                                    .iter()
+                                    .position(|a| a.req.id != id && a.done(shape.max_seq));
+                                if let Some(j) = done_mate {
+                                    let f = active.remove(j);
+                                    self.finish_request(f, decode_start)?;
+                                    if j < i {
+                                        i -= 1;
+                                    }
+                                    continue;
+                                }
+                                if self.cfg.pool.eviction != EvictionPolicy::EvictAndRecompute
+                                {
+                                    break false;
+                                }
+                                // Streams already in this group hold the pages
+                                // the step is about to use — never victims.
+                                let victim = self.kv_pool.lru_victim(|v| {
+                                    v != id
+                                        && !group_ids.contains(&v)
+                                        && !self.evicted_once.contains(&v)
+                                });
+                                let Some(vid) = victim else { break false };
+                                self.kv_pool
+                                    .evict_at(vid, self.clock)
+                                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                                self.evicted_once.insert(vid);
+                                let j = active
+                                    .iter()
+                                    .position(|a| a.req.id == vid)
+                                    .expect("victim must be an active batch member");
+                                let preempted = active.remove(j);
+                                // Preemption hook: back to the queue front — its
+                                // generated-so-far tokens are discarded and its
+                                // prompt re-prefilled on the next attempt.
+                                sched.requeue_front(preempted.req);
                                 if j < i {
                                     i -= 1;
                                 }
-                                continue;
                             }
-                            if self.cfg.pool.eviction != EvictionPolicy::EvictAndRecompute {
-                                break false;
-                            }
-                            let victim = self.kv_pool.lru_victim(|v| {
-                                v != id && !self.evicted_once.contains(&v)
-                            });
-                            let Some(vid) = victim else { break false };
-                            self.kv_pool
-                                .evict_at(vid, self.clock)
-                                .map_err(|e| anyhow::anyhow!("{e}"))?;
-                            self.evicted_once.insert(vid);
-                            let j = active
-                                .iter()
-                                .position(|a| a.req.id == vid)
-                                .expect("victim must be an active batch member");
-                            let preempted = active.remove(j);
-                            // Preemption hook: back to the queue front — its
-                            // generated-so-far tokens are discarded and its
-                            // prompt re-prefilled on the next attempt.
-                            sched.requeue_front(preempted.req);
-                            if j < i {
-                                i -= 1;
-                            }
+                            Err(_) => break false,
                         }
-                        Err(_) => break false,
+                    };
+                    if !grew {
+                        if !group_ids.is_empty() {
+                            // Partial group: step what is secured; this
+                            // stream gets retried at its next round-robin
+                            // turn (completing the group can free pages).
+                            break;
+                        }
+                        // Capacity-capped: deliver what we have.
+                        let f = active.remove(i);
+                        self.finish_request(f, decode_start)?;
+                        continue;
                     }
-                };
-                if !grew {
-                    // Capacity-capped: deliver what we have.
-                    let f = active.remove(i);
-                    self.finish_request(f, decode_start)?;
+                    group_ids.push(id);
+                    group_ctxs.push(active[i].ctx);
+                    i += 1;
+                }
+                if group_ids.is_empty() {
                     continue;
                 }
-                let step = self.surface.decode_step_paged(active[i].ctx, page_tokens).total;
+                // One shared weight-stream pass for the whole group.
+                let step =
+                    self.surface.decode_step_batched_paged(&group_ctxs, page_tokens).total;
                 self.clock += step;
-                self.metrics.tpot.record(step);
-                active[i].ctx += 1;
-                active[i].tokens += 1;
-                self.kv_pool.touch(id, self.clock);
-                i += 1;
+                for &id in &group_ids {
+                    let k = active
+                        .iter()
+                        .position(|a| a.req.id == id)
+                        .expect("group member still active");
+                    self.metrics.tpot.record(step);
+                    active[k].ctx += 1;
+                    active[k].tokens += 1;
+                    self.kv_pool.touch(id, self.clock);
+                }
             }
         }
         self.fsm.finish_request().ok();
@@ -494,6 +546,88 @@ mod tests {
         );
         // And the batch finishes sooner overall.
         assert!(b.clock() <= a.clock() + 1e-9);
+    }
+
+    #[test]
+    fn batched_decode_rounds_amortize_the_weight_stream() {
+        // Four simultaneous residents in one phase-batch: grouping their
+        // decode rounds shares the packed weight stream, so the same work
+        // finishes sooner — and the pool still balances.
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 64, 0.0)).collect();
+        let mut base = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        base.policy = Policy::BatchedPhases { max_batch: 8 };
+        let mut b4_cfg = base.clone();
+        b4_cfg.decode_batch = 4;
+        let mut b1 = SimServer::new(base).unwrap();
+        b1.run(w.clone()).unwrap();
+        let mut b4 = SimServer::new(b4_cfg).unwrap();
+        b4.run(w).unwrap();
+        assert_eq!(
+            b1.metrics.tokens_generated.get(),
+            b4.metrics.tokens_generated.get(),
+            "same work either way"
+        );
+        assert!(
+            b4.clock() < b1.clock(),
+            "grouped rounds {:.2}s vs single {:.2}s",
+            b4.clock(),
+            b1.clock()
+        );
+        b4.pool().check_invariants().unwrap();
+        assert_eq!(b4.pool().resident_count(), 0);
+    }
+
+    #[test]
+    fn decode_batch_cap_is_inert_with_one_resident() {
+        // A single request can only ever form groups of one, so
+        // decode_batch = 4 must reproduce the decode_batch = 1 timeline
+        // bit for bit (the batch-1 closed form is bit-identical to the
+        // single-step form) — the paper-figure guarantee for the
+        // batch-synchronous engine.
+        let w = vec![Request::synthetic(0, 256, 32, 0.0)];
+        let mut cfg1 = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        cfg1.decode_batch = 1;
+        let mut cfg4 = cfg1.clone();
+        cfg4.decode_batch = 4;
+        let mut a = SimServer::new(cfg1).unwrap();
+        a.run(w.clone()).unwrap();
+        let mut b = SimServer::new(cfg4).unwrap();
+        b.run(w).unwrap();
+        assert_eq!(a.clock().to_bits(), b.clock().to_bits());
+        assert_eq!(
+            a.metrics.tpot.mean().to_bits(),
+            b.metrics.tpot.mean().to_bits()
+        );
+        assert_eq!(
+            a.metrics.e2e.mean().to_bits(),
+            b.metrics.e2e.mean().to_bits()
+        );
+    }
+
+    #[test]
+    fn batched_rounds_under_pool_pressure_complete_everyone() {
+        // Optimistic admission + a small pool at decode_batch 4: eviction
+        // happens mid-group assembly; every request still completes
+        // exactly once and the accounting balances.
+        let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        cfg.policy = Policy::BatchedPhases { max_batch: 8 };
+        cfg.decode_batch = 4;
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(40)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut s = SimServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+        s.run(w).unwrap();
+        assert_eq!(s.metrics.requests_completed.get(), 4);
+        assert!(s.metrics.kv_evictions.get() >= 1, "pool pressure must evict");
+        let pool = s.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.resident_count(), 0);
+        assert_eq!(pool.stats.admitted, pool.stats.completed + pool.stats.evicted);
     }
 
     #[test]

@@ -27,10 +27,29 @@
 //! the per-B closed forms are evaluated from batch-independent cached
 //! coefficients, so a (design, B) key would memoize nothing extra.
 //!
+//! The fifth axis is the **KV pool** ([`CodesignConfig::pools`], CLI
+//! `--admission/--eviction/--page-size`): decode is KV-bandwidth-bound
+//! (PD-Swap §3), so admission control × eviction policy × page size can
+//! flip the per-trace winner just like the decode batch does — optimistic
+//! admission packs more residents (more batching headroom) at the cost of
+//! mid-decode evictions, and the page size trades internal fragmentation
+//! against DDR burst efficiency. [`CodesignReport::pool_flips`] reports
+//! the per-trace verdict. Two warm-start mechanisms make the enlarged
+//! grid affordable ([`CodesignConfig::warm_start`]): one
+//! [`SurfaceFactory`] per distinct page size plus the shared
+//! [`SurfaceCache`] means every (design, page) pair pays surface
+//! construction once across all its (policy × batch × admission ×
+//! eviction × trace) cells, and the DSE pass's floorplan-feasibility
+//! verdict is reused (`EventServerConfig::assume_feasible`) instead of
+//! revalidating per cell. The decode-batch axis is additionally clamped
+//! per design by [`crate::engines::AcceleratorDesign::max_decode_batch`]
+//! (activation-buffer BRAM/URAM pressure), and clamped cells are flagged
+//! (`SweepCell::batch_capped`) in the ranking output.
+//!
 //! Everything is deterministic: traces are seeded, simulations run on the
 //! virtual clock, designs are swept in grid order, and ranking ties break
-//! by (grid order, policy order, batch order) — so `pd-swap codesign`
-//! prints identical winners on every run and machine.
+//! by (grid order, policy order, batch order, pool order) — so
+//! `pd-swap codesign` prints identical winners on every run and machine.
 //!
 //! ```
 //! use pd_swap::dse::{run_codesign, CodesignConfig, TracePreset};
@@ -57,7 +76,7 @@ use anyhow::{anyhow, bail};
 use crate::coordinator::{requests_from_trace, EventServer, EventServerConfig, Request};
 use crate::engines::{AttentionHosting, SurfaceCache, SurfaceFactory};
 use crate::fpga::DeviceConfig;
-use crate::kvpool::KvPoolConfig;
+use crate::kvpool::{AdmissionControl, EvictionPolicy, PAGE_TOKENS_DEFAULT};
 use crate::model::{ModelShape, TraceSpec};
 use crate::reconfig::SwapPolicy;
 use crate::util::json::Value;
@@ -102,6 +121,35 @@ impl TracePreset {
     }
 }
 
+/// One point on the sweep's KV-pool axis: how the pool admits, evicts,
+/// and pages. The DDR byte budget stays fixed (derived from the device);
+/// only its management changes per variant.
+#[derive(Debug, Clone)]
+pub struct PoolVariant {
+    pub admission: AdmissionControl,
+    pub eviction: EvictionPolicy,
+    /// Tokens per KV page (budget-preserving re-page via
+    /// [`crate::kvpool::KvPoolConfig::with_page_tokens`]).
+    pub page_tokens: usize,
+}
+
+impl PoolVariant {
+    /// The PR 1 default pool: worst-case admission, keep-resident, the
+    /// burst-knee page size.
+    pub fn paper_default() -> Self {
+        Self {
+            admission: AdmissionControl::WorstCase,
+            eviction: EvictionPolicy::KeepResident,
+            page_tokens: PAGE_TOKENS_DEFAULT,
+        }
+    }
+
+    /// Stable report/ranking label, e.g. `worst-case+keep@pg32`.
+    pub fn label(&self) -> String {
+        format!("{}+{}@pg{}", self.admission.name(), self.eviction.name(), self.page_tokens)
+    }
+}
+
 /// Joint-sweep configuration.
 #[derive(Debug, Clone)]
 pub struct CodesignConfig {
@@ -113,13 +161,23 @@ pub struct CodesignConfig {
     /// Traffic mixes to evaluate each (design, policy) pair under.
     pub traces: Vec<TracePreset>,
     /// Decode batch sizes to cross with every (design, policy, trace)
-    /// cell (1 = the paper's single-stream decode flow).
+    /// cell (1 = the paper's single-stream decode flow). Clamped per
+    /// design by [`crate::engines::AcceleratorDesign::max_decode_batch`].
     pub decode_batches: Vec<usize>,
+    /// KV-pool variants (admission × eviction × page size) to cross with
+    /// every cell. Default: the single PR 1 pool.
+    pub pools: Vec<PoolVariant>,
     /// Cap on feasible designs swept, best Eq. 6 objective first
     /// (0 = sweep every feasible grid point).
     pub max_designs: usize,
     /// Worker threads (0 = auto).
     pub threads: usize,
+    /// Share surface construction (one [`SurfaceFactory`] per page size +
+    /// the sweep-wide [`SurfaceCache`]) and the DSE pass's
+    /// floorplan-feasibility verdicts across cells. `false` forces cold
+    /// per-cell construction — the `hotpath_kernel` bench's baseline for
+    /// the warm-start speedup gate; results are bit-identical either way.
+    pub warm_start: bool,
 }
 
 impl CodesignConfig {
@@ -136,8 +194,10 @@ impl CodesignConfig {
             ],
             traces: TracePreset::defaults(24, 0.05, shape.max_seq, 0),
             decode_batches: vec![1],
+            pools: vec![PoolVariant::paper_default()],
             max_designs: 0,
             threads: 0,
+            warm_start: true,
         }
     }
 }
@@ -153,10 +213,22 @@ pub struct SweepCell {
     pub policy: &'static str,
     /// Position of the policy in the sweep's policy list.
     pub policy_seq: usize,
-    /// Streams stepped per decode token-step event (1 = paper flow).
+    /// Streams stepped per decode token-step event (1 = paper flow) —
+    /// the EFFECTIVE batch after the per-design activation-buffer clamp.
     pub decode_batch: usize,
+    /// The batch the sweep axis requested before clamping.
+    pub requested_batch: usize,
+    /// True when the design's [`max_decode_batch`] cap clamped
+    /// `requested_batch` down to `decode_batch`.
+    ///
+    /// [`max_decode_batch`]: crate::engines::AcceleratorDesign::max_decode_batch
+    pub batch_capped: bool,
     /// Position of the batch in the sweep's decode-batch list.
     pub batch_seq: usize,
+    /// KV-pool variant label ([`PoolVariant::label`]).
+    pub pool: String,
+    /// Position of the pool variant in the sweep's pool list.
+    pub pool_seq: usize,
     /// 1 / mean wall inter-token gap — the policy-sensitive metric.
     pub decode_tps: f64,
     pub makespan_s: f64,
@@ -172,8 +244,8 @@ pub struct TraceOutcome {
     pub trace: String,
     pub offered_tokens_per_sec: f64,
     /// Ranking: decode throughput desc, then makespan asc, then
-    /// (design grid order, policy order, batch order) — a total order, so
-    /// the winner is unique and run-independent.
+    /// (design grid order, policy order, batch order, pool order) — a
+    /// total order, so the winner is unique and run-independent.
     pub ranked: Vec<SweepCell>,
 }
 
@@ -182,10 +254,18 @@ impl TraceOutcome {
         &self.ranked[0]
     }
 
-    /// Best cell restricted to one decode batch (the per-B winner the
-    /// flip analysis compares). `None` if the batch was not swept.
+    /// Best cell restricted to one *requested* decode batch (the per-B
+    /// winner the flip analysis compares; a design whose activation
+    /// headroom clamps the batch still competes in its requested column).
+    /// `None` if the batch was not swept.
     pub fn winner_for_batch(&self, decode_batch: usize) -> Option<&SweepCell> {
-        self.ranked.iter().find(|c| c.decode_batch == decode_batch)
+        self.ranked.iter().find(|c| c.requested_batch == decode_batch)
+    }
+
+    /// Best cell restricted to one KV-pool variant (by sweep position).
+    /// `None` if the variant was not swept.
+    pub fn winner_for_pool(&self, pool_seq: usize) -> Option<&SweepCell> {
+        self.ranked.iter().find(|c| c.pool_seq == pool_seq)
     }
 }
 
@@ -201,15 +281,34 @@ pub struct BatchFlip {
     pub flips: bool,
 }
 
+/// Per-trace verdict of the KV-pool axis: does the pool's management
+/// (admission × eviction × page size) change which (design, policy)
+/// pair should ship?
+#[derive(Debug)]
+pub struct PoolFlip {
+    pub trace: String,
+    /// `(pool label, design, policy)` winner per swept variant, in sweep
+    /// order.
+    pub winners: Vec<(String, String, &'static str)>,
+    /// True if any two variants disagree on the winning design or policy.
+    pub flips: bool,
+}
+
 /// The joint sweep's result.
 #[derive(Debug)]
 pub struct CodesignReport {
     pub explored: usize,
     pub feasible: usize,
     pub designs_swept: usize,
+    /// Ranked cells produced across all traces. Requested-batch columns
+    /// that clamp to an already-simulated effective batch reuse that
+    /// simulation's result (re-labeled), so the number of event-server
+    /// runs actually executed can be lower than this.
     pub sims_run: usize,
     /// The decode-batch axis the sweep crossed in (sweep order).
     pub decode_batches: Vec<usize>,
+    /// The KV-pool axis the sweep crossed in (sweep order, labels).
+    pub pools: Vec<String>,
     pub traces: Vec<TraceOutcome>,
 }
 
@@ -238,6 +337,31 @@ impl CodesignReport {
             .collect()
     }
 
+    /// Per-trace KV-pool flip analysis: the winner restricted to each
+    /// swept pool variant, and whether pool management changes the
+    /// (design, policy) that should ship. Deterministic — derived from
+    /// the already-total ranking order.
+    pub fn pool_flips(&self) -> Vec<PoolFlip> {
+        self.traces
+            .iter()
+            .map(|t| {
+                let winners: Vec<(String, String, &'static str)> = self
+                    .pools
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(seq, label)| {
+                        t.winner_for_pool(seq)
+                            .map(|c| (label.clone(), c.design.clone(), c.policy))
+                    })
+                    .collect();
+                let flips = winners
+                    .windows(2)
+                    .any(|w| w[0].1 != w[1].1 || w[0].2 != w[1].2);
+                PoolFlip { trace: t.trace.clone(), winners, flips }
+            })
+            .collect()
+    }
+
     /// Machine-readable summary (per-trace winner + top ranks).
     pub fn to_json(&self, top: usize) -> Value {
         let traces = self
@@ -249,6 +373,9 @@ impl CodesignReport {
                         ("design".into(), Value::Str(c.design.clone())),
                         ("policy".into(), Value::Str(c.policy.into())),
                         ("decode_batch".into(), Value::Num(c.decode_batch as f64)),
+                        ("requested_decode_batch".into(), Value::Num(c.requested_batch as f64)),
+                        ("batch_capped".into(), Value::Bool(c.batch_capped)),
+                        ("pool".into(), Value::Str(c.pool.clone())),
                         ("decode_tokens_per_sec".into(), Value::Num(c.decode_tps)),
                         ("makespan_s".into(), Value::Num(c.makespan_s)),
                         ("makespan_tokens_per_sec".into(), Value::Num(c.makespan_tps)),
@@ -266,12 +393,21 @@ impl CodesignReport {
                         t.winner_for_batch(b).map(|c| (format!("b{b}"), cell(c)))
                     })
                     .collect();
+                let by_pool: Vec<(String, Value)> = self
+                    .pools
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(seq, label)| {
+                        t.winner_for_pool(seq).map(|c| (label.clone(), cell(c)))
+                    })
+                    .collect();
                 (
                     t.trace.clone(),
                     Value::Obj(vec![
                         ("offered_tokens_per_sec".into(), Value::Num(t.offered_tokens_per_sec)),
                         ("winner".into(), cell(t.winner())),
                         ("winner_by_decode_batch".into(), Value::Obj(by_batch)),
+                        ("winner_by_pool".into(), Value::Obj(by_pool)),
                         ("top".into(), Value::Arr(ranked)),
                     ]),
                 )
@@ -279,6 +415,16 @@ impl CodesignReport {
             .collect();
         let flips: Vec<Value> = self
             .batch_flips()
+            .into_iter()
+            .map(|f| {
+                Value::Obj(vec![
+                    ("trace".into(), Value::Str(f.trace)),
+                    ("flips".into(), Value::Bool(f.flips)),
+                ])
+            })
+            .collect();
+        let pflips: Vec<Value> = self
+            .pool_flips()
             .into_iter()
             .map(|f| {
                 Value::Obj(vec![
@@ -299,46 +445,74 @@ impl CodesignReport {
                     self.decode_batches.iter().map(|&b| Value::Num(b as f64)).collect(),
                 ),
             ),
+            (
+                "pools".into(),
+                Value::Arr(self.pools.iter().map(|p| Value::Str(p.clone())).collect()),
+            ),
             ("decode_batch_flips".into(), Value::Arr(flips)),
+            ("pool_flips".into(), Value::Arr(pflips)),
             ("traces".into(), Value::Obj(traces)),
         ])
     }
 }
 
-/// Run one (design, policy) pair over a workload on the event core. The
-/// latency surface comes out of the shared [`SurfaceCache`] via the
-/// sweep-wide [`SurfaceFactory`], so the six (policy × trace) servers of
-/// one design share one construction and a cache miss is pure arithmetic
-/// (the lock is held for nanoseconds, not a memory-model evaluation).
-#[allow(clippy::too_many_arguments)]
+/// Everything that locates one sweep cell besides the design and trace:
+/// the policy, the (requested) decode batch with the design's activation
+/// cap, and the KV-pool variant.
+struct CellCoord<'a> {
+    design_seq: usize,
+    policy: SwapPolicy,
+    policy_seq: usize,
+    requested_batch: usize,
+    batch_seq: usize,
+    batch_cap: usize,
+    pool: &'a PoolVariant,
+    pool_seq: usize,
+}
+
+/// Run one (design, policy, batch, pool) cell over a workload on the
+/// event core. Warm-started sweeps pull the latency surface out of the
+/// shared [`SurfaceCache`] via the per-page-size [`SurfaceFactory`] —
+/// every server of one (design, page) pair shares one construction, and
+/// a cache miss is pure arithmetic (the lock is held for nanoseconds,
+/// not a memory-model evaluation) — and reuse the DSE pass's
+/// floorplan-feasibility verdict instead of revalidating per server.
 fn simulate_cell(
     sweep: &CodesignConfig,
     factory: &SurfaceFactory,
     surfaces: &Mutex<SurfaceCache>,
     point: &DsePoint,
-    design_seq: usize,
-    policy: SwapPolicy,
-    policy_seq: usize,
-    decode_batch: usize,
-    batch_seq: usize,
+    coord: &CellCoord<'_>,
     workload: Vec<Request>,
 ) -> Result<SweepCell> {
+    let policy = coord.policy;
     let mut cfg = EventServerConfig::pd_swap(
         sweep.dse.shape,
         sweep.dse.device.clone(),
         policy,
     );
     cfg.design = point.design.clone();
+    // Clamp the requested batch by the design's activation headroom.
+    let decode_batch = coord.requested_batch.min(coord.batch_cap).max(1);
     cfg.decode_batch = decode_batch;
-    // Surfaces are batch-independent (the per-B closed form reuses the
-    // cached coefficients), so all decode batches of a design share one
-    // cache entry.
-    cfg.surface = Some(
-        surfaces
-            .lock()
-            .expect("surface cache poisoned")
-            .get_with(factory, &cfg.design),
-    );
+    cfg.pool = cfg
+        .pool
+        .clone()
+        .with_page_tokens(coord.pool.page_tokens)
+        .with_policies(coord.pool.admission, coord.pool.eviction);
+    if sweep.warm_start {
+        // Surfaces are batch- and policy-independent (the per-B closed
+        // forms reuse the cached coefficients), so all cells of a
+        // (design, page size) pair share one cache entry; the DSE pass
+        // already ran the floorplan rule on this design.
+        cfg.assume_feasible = true;
+        cfg.surface = Some(
+            surfaces
+                .lock()
+                .expect("surface cache poisoned")
+                .get_with(factory, &cfg.design),
+        );
+    }
     let mut srv = EventServer::new(cfg)
         .map_err(|e| anyhow!("{}/{}: {e}", point.design.name, policy.name()))?;
     srv.run(workload)
@@ -346,12 +520,16 @@ fn simulate_cell(
     let m = &srv.metrics;
     Ok(SweepCell {
         design: point.design.name.clone(),
-        design_seq,
+        design_seq: coord.design_seq,
         objective: point.objective,
         policy: policy.name(),
-        policy_seq,
+        policy_seq: coord.policy_seq,
         decode_batch,
-        batch_seq,
+        requested_batch: coord.requested_batch,
+        batch_capped: decode_batch < coord.requested_batch,
+        batch_seq: coord.batch_seq,
+        pool: coord.pool.label(),
+        pool_seq: coord.pool_seq,
         decode_tps: m.decode_throughput(),
         makespan_s: srv.clock(),
         makespan_tps: m.tokens_generated.get() as f64 / srv.clock().max(1e-12),
@@ -373,6 +551,9 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
     }
     if sweep.decode_batches.is_empty() || sweep.decode_batches.iter().any(|&b| b == 0) {
         bail!("codesign needs at least one decode batch, all >= 1");
+    }
+    if sweep.pools.is_empty() || sweep.pools.iter().any(|p| p.page_tokens == 0) {
+        bail!("codesign needs at least one KV-pool variant, all with page size >= 1");
     }
     let threads = if sweep.threads == 0 { default_threads() } else { sweep.threads };
 
@@ -412,36 +593,86 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
             (t.name.clone(), requests_from_trace(&entries), offered)
         })
         .collect();
-    // One factory for the whole serving pass (page size = what
-    // `EventServerConfig::pd_swap` will configure), memoized per design
-    // through the shared cache.
-    let page_tokens =
-        KvPoolConfig::for_device(&sweep.dse.shape, &sweep.dse.device).page_tokens;
-    let factory = SurfaceFactory::new(&sweep.dse.device, &sweep.dse.shape, page_tokens);
+    // Warm start, part 1: one factory per DISTINCT page size on the pool
+    // axis — the design-independent analytic work (memory system, weight
+    // stream, paged KV bandwidths) is paid once per page size for the
+    // whole sweep, and the shared cache memoizes the finished surface per
+    // (design, page) so every (policy × batch × admission × eviction ×
+    // trace) cell of that pair reuses one construction.
+    let mut page_sizes: Vec<usize> = sweep.pools.iter().map(|p| p.page_tokens).collect();
+    page_sizes.sort_unstable();
+    page_sizes.dedup();
+    let factories: Vec<(usize, SurfaceFactory)> = page_sizes
+        .iter()
+        .map(|&pt| (pt, SurfaceFactory::new(&sweep.dse.device, &sweep.dse.shape, pt)))
+        .collect();
+    let factory_for = |pt: usize| -> &SurfaceFactory {
+        &factories
+            .iter()
+            .find(|(p, _)| *p == pt)
+            .expect("factory exists for every swept page size")
+            .1
+    };
     let surfaces = Mutex::new(SurfaceCache::new());
     let per_design: Vec<Result<Vec<(usize, SweepCell)>>> =
         par_map(&candidates, threads, |(design_seq, point)| {
+            // Warm start, part 2: the activation-headroom batch cap (and,
+            // inside `simulate_cell`, the floorplan verdict) is computed
+            // once per design, not once per cell.
+            let batch_cap =
+                point.design.max_decode_batch(&sweep.dse.device, &sweep.dse.shape);
             let mut cells = Vec::with_capacity(
-                workloads.len() * sweep.policies.len() * sweep.decode_batches.len(),
+                workloads.len()
+                    * sweep.policies.len()
+                    * sweep.decode_batches.len()
+                    * sweep.pools.len(),
             );
+            // Requested batches that clamp to the SAME effective batch
+            // (e.g. `--decode-batch 64,512` on a design whose cap is 13)
+            // would run bit-identical simulations — memoize per
+            // (trace, policy, effective batch, pool) and re-label the
+            // cached cell for the duplicate requested column instead.
+            let mut effective_memo: Vec<((usize, usize, usize, usize), SweepCell)> =
+                Vec::new();
             for (trace_idx, (_, workload, _)) in workloads.iter().enumerate() {
                 for (policy_seq, &policy) in sweep.policies.iter().enumerate() {
-                    for (batch_seq, &decode_batch) in
+                    for (batch_seq, &requested_batch) in
                         sweep.decode_batches.iter().enumerate()
                     {
-                        let cell = simulate_cell(
-                            sweep,
-                            &factory,
-                            &surfaces,
-                            point,
-                            *design_seq,
-                            policy,
-                            policy_seq,
-                            decode_batch,
-                            batch_seq,
-                            workload.clone(),
-                        )?;
-                        cells.push((trace_idx, cell));
+                        for (pool_seq, pool) in sweep.pools.iter().enumerate() {
+                            let effective = requested_batch.min(batch_cap).max(1);
+                            let key = (trace_idx, policy_seq, effective, pool_seq);
+                            if let Some((_, cached)) =
+                                effective_memo.iter().find(|(k, _)| *k == key)
+                            {
+                                let mut cell = cached.clone();
+                                cell.requested_batch = requested_batch;
+                                cell.batch_seq = batch_seq;
+                                cell.batch_capped = effective < requested_batch;
+                                cells.push((trace_idx, cell));
+                                continue;
+                            }
+                            let coord = CellCoord {
+                                design_seq: *design_seq,
+                                policy,
+                                policy_seq,
+                                requested_batch,
+                                batch_seq,
+                                batch_cap,
+                                pool,
+                                pool_seq,
+                            };
+                            let cell = simulate_cell(
+                                sweep,
+                                factory_for(pool.page_tokens),
+                                &surfaces,
+                                point,
+                                &coord,
+                                workload.clone(),
+                            )?;
+                            effective_memo.push((key, cell.clone()));
+                            cells.push((trace_idx, cell));
+                        }
                     }
                 }
             }
@@ -458,7 +689,7 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
     }
 
     // -- Rank per trace (total order: throughput, makespan, grid, policy,
-    // batch).
+    // batch, pool).
     let traces = workloads
         .iter()
         .zip(by_trace)
@@ -475,6 +706,7 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
                     .then(a.design_seq.cmp(&b.design_seq))
                     .then(a.policy_seq.cmp(&b.policy_seq))
                     .then(a.batch_seq.cmp(&b.batch_seq))
+                    .then(a.pool_seq.cmp(&b.pool_seq))
             });
             TraceOutcome {
                 trace: name.clone(),
@@ -490,6 +722,7 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
         designs_swept: candidates.len(),
         sims_run,
         decode_batches: sweep.decode_batches.clone(),
+        pools: sweep.pools.iter().map(PoolVariant::label).collect(),
         traces,
     })
 }
@@ -612,6 +845,131 @@ mod tests {
             assert_eq!(ca.decode_batch, cb.decode_batch);
             assert_eq!(ca.decode_tps.to_bits(), cb.decode_tps.to_bits());
         }
+    }
+
+    fn pool_axis() -> Vec<PoolVariant> {
+        vec![
+            PoolVariant::paper_default(),
+            PoolVariant {
+                admission: AdmissionControl::Optimistic,
+                eviction: EvictionPolicy::EvictAndRecompute,
+                page_tokens: PAGE_TOKENS_DEFAULT,
+            },
+            PoolVariant {
+                admission: AdmissionControl::WorstCase,
+                eviction: EvictionPolicy::KeepResident,
+                page_tokens: 64,
+            },
+        ]
+    }
+
+    #[test]
+    fn pool_axis_multiplies_cells_and_reports_flips() {
+        let mut sweep = small_sweep();
+        sweep.max_designs = 1;
+        sweep.pools = pool_axis();
+        let report = run_codesign(&sweep).unwrap();
+        assert_eq!(report.sims_run, sweep.policies.len() * 3);
+        assert_eq!(report.pools.len(), 3);
+        let t = &report.traces[0];
+        assert_eq!(t.ranked.len(), report.sims_run);
+        // Every pool variant has a restricted winner, and the flip
+        // verdict is consistent with them.
+        let flips = report.pool_flips();
+        assert_eq!(flips.len(), 1);
+        assert_eq!(flips[0].winners.len(), 3);
+        let expect = flips[0]
+            .winners
+            .windows(2)
+            .any(|w| w[0].1 != w[1].1 || w[0].2 != w[1].2);
+        assert_eq!(flips[0].flips, expect);
+        // The JSON artifact carries the axis and the verdicts.
+        let v = report.to_json(5);
+        assert_eq!(v.get("pools").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("pool_flips").unwrap().as_arr().unwrap().len(), 1);
+        let mixed = v.get("traces").unwrap().get("mixed").unwrap();
+        let by_pool = mixed.get("winner_by_pool").unwrap();
+        for p in &report.pools {
+            assert!(by_pool.get(p).is_some(), "missing winner for pool '{p}'");
+        }
+        // Determinism across thread counts, including the pool column.
+        let mut again = small_sweep();
+        again.max_designs = 1;
+        again.pools = pool_axis();
+        again.threads = 4;
+        let b = run_codesign(&again).unwrap();
+        for (ca, cb) in report.traces[0].ranked.iter().zip(&b.traces[0].ranked) {
+            assert_eq!(ca.design, cb.design);
+            assert_eq!(ca.policy, cb.policy);
+            assert_eq!(ca.pool, cb.pool);
+            assert_eq!(ca.decode_tps.to_bits(), cb.decode_tps.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_and_cold_sweeps_are_bit_identical() {
+        // Warm start shares surface construction and reuses the DSE
+        // pass's floorplan verdicts; it must be a pure performance
+        // optimization — every ranked cell identical to the bit.
+        let mut warm = small_sweep();
+        warm.pools = pool_axis();
+        warm.decode_batches = vec![1, 4];
+        let mut cold = warm.clone();
+        cold.warm_start = false;
+        let a = run_codesign(&warm).unwrap();
+        let b = run_codesign(&cold).unwrap();
+        assert_eq!(a.sims_run, b.sims_run);
+        for (ta, tb) in a.traces.iter().zip(&b.traces) {
+            for (ca, cb) in ta.ranked.iter().zip(&tb.ranked) {
+                assert_eq!(ca.design, cb.design);
+                assert_eq!(ca.policy, cb.policy);
+                assert_eq!(ca.pool, cb.pool);
+                assert_eq!(ca.decode_batch, cb.decode_batch);
+                assert_eq!(ca.decode_tps.to_bits(), cb.decode_tps.to_bits());
+                assert_eq!(ca.makespan_s.to_bits(), cb.makespan_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_batch_requests_are_clamped_and_flagged() {
+        // Request a decode batch far beyond any KV260 design's
+        // activation-buffer headroom: the sweep must clamp it, flag the
+        // cells, and still rank the requested column.
+        let mut sweep = small_sweep();
+        sweep.max_designs = 1;
+        sweep.decode_batches = vec![1, 64, 512];
+        let report = run_codesign(&sweep).unwrap();
+        let t = &report.traces[0];
+        let w = t.winner_for_batch(512).expect("requested column still ranked");
+        assert!(w.batch_capped, "512 streams cannot fit the activation headroom");
+        assert!(w.decode_batch < 512);
+        assert_eq!(w.requested_batch, 512);
+        // Batch-1 cells are never capped.
+        let w1 = t.winner_for_batch(1).unwrap();
+        assert!(!w1.batch_capped);
+        assert_eq!(w1.decode_batch, 1);
+        // 64 and 512 clamp to the same effective batch: the duplicate
+        // column reuses the memoized simulation, so the two cells are
+        // bit-identical apart from their requested-batch label.
+        let w64 = t.winner_for_batch(64).unwrap();
+        assert_eq!(w64.decode_batch, w.decode_batch);
+        assert_eq!(w64.decode_tps.to_bits(), w.decode_tps.to_bits());
+        assert_eq!(w64.makespan_s.to_bits(), w.makespan_s.to_bits());
+    }
+
+    #[test]
+    fn empty_pool_axis_is_rejected() {
+        let mut sweep = small_sweep();
+        sweep.pools = vec![];
+        assert!(run_codesign(&sweep).is_err());
+        let mut sweep = small_sweep();
+        sweep.pools = vec![PoolVariant {
+            admission: AdmissionControl::WorstCase,
+            eviction: EvictionPolicy::KeepResident,
+            page_tokens: 0,
+        }];
+        assert!(run_codesign(&sweep).is_err());
     }
 
     #[test]

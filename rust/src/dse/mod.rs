@@ -53,8 +53,8 @@ use crate::Result;
 pub mod codesign;
 
 pub use codesign::{
-    run_codesign, BatchFlip, CodesignConfig, CodesignReport, SweepCell, TraceOutcome,
-    TracePreset,
+    run_codesign, BatchFlip, CodesignConfig, CodesignReport, PoolFlip, PoolVariant,
+    SweepCell, TraceOutcome, TracePreset,
 };
 
 /// Runner-up list size carried in a [`DseResult`].

@@ -7,6 +7,7 @@ use crate::fpga::{
     DeviceConfig, FpgaDevice, ReconfigurableModule, ReconfigurablePartition, RegionPlan,
     ResourceVec, StaticRegion,
 };
+use crate::model::ModelShape;
 
 use super::attention::{DecodeAttentionEngine, PrefillAttentionEngine, ScheduleQuality};
 use super::norm::NormEngine;
@@ -129,6 +130,52 @@ impl AcceleratorDesign {
         FpgaDevice::program(device.clone(), self.region_plan()?)
     }
 
+    /// [`Self::program`] for callers that already validated this design's
+    /// floorplan (the DSE/codesign sweeps run the exact
+    /// [`crate::fpga::region::validate_budget`] rule on every candidate
+    /// before simulating it): the per-device revalidation is skipped, so
+    /// the feasibility verdict is paid once per design instead of once
+    /// per (policy × trace × batch × pool) cell.
+    pub fn program_prevalidated(&self, device: &DeviceConfig) -> Result<FpgaDevice> {
+        Ok(FpgaDevice::program_prevalidated(device.clone(), self.region_plan()?))
+    }
+
+    /// Activation-buffer cap on multi-stream decode for this design:
+    /// every concurrently stepped decode stream needs its own fp16
+    /// hidden-state double buffer plus residual (`3 × d_model × 2` bytes)
+    /// in on-chip memory. The first stream's buffers are part of the base
+    /// design ("Other" static URAM); extra streams must fit the
+    /// floorplan's FREE BRAM/URAM headroom on the device — so bigger
+    /// attention RMs (a larger pblock) leave room for fewer resident
+    /// streams, which is exactly the engine-size ↔ residency trade the
+    /// codesign sweep clamps its `--decode-batch` axis with. Designs
+    /// whose floorplan does not validate cap at 1, and the result never
+    /// exceeds [`Self::DECODE_BATCH_CEILING`].
+    pub fn max_decode_batch(&self, device: &DeviceConfig, shape: &ModelShape) -> usize {
+        // One BRAM36 block is 36 Kbit; one URAM block is 288 Kbit.
+        const BRAM36_BYTES: f64 = 4_608.0;
+        const URAM_BYTES: f64 = 36_864.0;
+        let Ok(plan) = self.region_plan() else { return 1 };
+        let Ok(report) = plan.validate(device) else { return 1 };
+        let free = device.resources - report.total;
+        let headroom_bytes =
+            free.bram36.max(0.0) * BRAM36_BYTES + free.uram.max(0.0) * URAM_BYTES;
+        let per_stream_bytes = (3 * shape.d_model) as f64 * 2.0;
+        let extra = (headroom_bytes / per_stream_bytes)
+            .floor()
+            .clamp(0.0, (Self::DECODE_BATCH_CEILING - 1) as f64);
+        1 + extra as usize
+    }
+
+    /// Hard ceiling on [`Self::max_decode_batch`]: even with unbounded
+    /// on-chip headroom (a far larger part than the KV260), the model
+    /// refuses more than this many concurrently stepped decode streams —
+    /// past it the shared-weight-stream amortization is far beyond its
+    /// knee (`B* = T_weights · tps` ≈ single digits on the paper design)
+    /// and control/scheduling overheads the resource model does not
+    /// capture would dominate.
+    pub const DECODE_BATCH_CEILING: usize = 64;
+
     /// Total resources if everything had to be resident at once (the
     /// Table 2 "Equivalent Total" for PD-Swap; the actual total for the
     /// static baseline).
@@ -197,5 +244,38 @@ mod tests {
         let dev = AcceleratorDesign::pd_swap().program(&KV260).unwrap();
         let ms = dev.reconfig_latency() * 1e3;
         assert!((35.0..55.0).contains(&ms), "reconfig {ms:.1} ms");
+    }
+
+    #[test]
+    fn prevalidated_programming_matches_validated() {
+        let d = AcceleratorDesign::pd_swap();
+        let a = d.program(&KV260).unwrap();
+        let b = d.program_prevalidated(&KV260).unwrap();
+        assert_eq!(
+            a.reconfig_latency().to_bits(),
+            b.reconfig_latency().to_bits(),
+            "skipping revalidation must not change the programmed device"
+        );
+    }
+
+    #[test]
+    fn decode_batch_cap_tracks_floorplan_headroom() {
+        use crate::model::BITNET_0_73B;
+        let paper = AcceleratorDesign::pd_swap();
+        let cap = paper.max_decode_batch(&KV260, &BITNET_0_73B);
+        // The shipped design leaves a few BRAM/URAM blocks free: several
+        // streams fit, but nothing unbounded.
+        assert!((4..=64).contains(&cap), "paper cap {cap}");
+        // A smaller decode RM shrinks the pblock and frees on-chip
+        // memory: the cap can only grow.
+        let mut small = AcceleratorDesign::pd_swap();
+        small.prefill_attn.n_dsp = 250;
+        small.decode_attn.n_dsp = 150;
+        let cap_small = small.max_decode_batch(&KV260, &BITNET_0_73B);
+        assert!(cap_small >= cap, "small RMs {cap_small} vs paper {cap}");
+        // An infeasible floorplan caps at the paper's single stream.
+        let mut broken = AcceleratorDesign::pd_swap();
+        broken.prefill_attn.n_dsp = 800;
+        assert_eq!(broken.max_decode_batch(&KV260, &BITNET_0_73B), 1);
     }
 }

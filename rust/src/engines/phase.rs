@@ -185,6 +185,30 @@ impl PhaseModel {
         self.batched_decode_latency(shape, ctxs.len(), attention)
     }
 
+    /// Uniform-context batched step: `batch` streams all attending `l`
+    /// cached tokens, paged KV. Bit-identical to
+    /// [`Self::decode_step_batched_paged`] over `&[l; batch]` — the
+    /// per-stream attention term is computed once and accumulated in the
+    /// same left-to-right order the slice path's `sum()` uses — but takes
+    /// no slice, so callers that only know a representative context (the
+    /// swap-policy outlook) never materialize a `vec![l; batch]`.
+    pub fn decode_step_uniform_paged(
+        &self,
+        shape: &ModelShape,
+        l: usize,
+        batch: usize,
+        page_tokens: usize,
+    ) -> BatchedDecodeLatency {
+        let clock = self.device.clock_hz();
+        let per_stream =
+            self.design.decode_attn.time_paged(shape, l, &self.mem, clock, page_tokens);
+        let mut attention = 0.0;
+        for _ in 0..batch {
+            attention += per_stream;
+        }
+        self.batched_decode_latency(shape, batch, attention)
+    }
+
     /// Assemble the batched step around a precomputed attention sum.
     fn batched_decode_latency(
         &self,
@@ -336,6 +360,34 @@ mod tests {
                     pd.decode_step_paged(&s, l, pt).total.to_bits(),
                     "L={l} pt={pt}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_batched_decode_is_bitwise_the_slice_path() {
+        // The allocation-free uniform entry point must replay the slice
+        // path's arithmetic exactly — including the summation order — so
+        // the policy outlook can switch to it without moving a bit.
+        let pd = pd();
+        let s = BITNET_0_73B;
+        for l in [1, 64, 733, 2048] {
+            for b in [0usize, 1, 2, 3, 4, 7, 8] {
+                for pt in [1, 8, 32, 128] {
+                    let uniform = pd.decode_step_uniform_paged(&s, l, b, pt);
+                    let slice = pd.decode_step_batched_paged(&s, &vec![l; b], pt);
+                    assert_eq!(uniform.batch, slice.batch, "L={l} B={b} pt={pt}");
+                    assert_eq!(
+                        uniform.attention.to_bits(),
+                        slice.attention.to_bits(),
+                        "L={l} B={b} pt={pt}"
+                    );
+                    assert_eq!(
+                        uniform.total.to_bits(),
+                        slice.total.to_bits(),
+                        "L={l} B={b} pt={pt}"
+                    );
+                }
             }
         }
     }

@@ -250,8 +250,44 @@ impl LatencySurface {
         self.batched_with_bw(ctxs, self.kv_bw_for_page(page_tokens))
     }
 
+    /// Uniform-context batched step: `batch` streams all at context `l`,
+    /// paged KV. Bit-identical to [`Self::decode_step_batched_paged`]
+    /// over `&[l; batch]` (the per-stream attention term is computed once
+    /// and accumulated in the slice path's left-to-right order) but takes
+    /// no slice — the swap-policy outlook's per-decision estimate stays
+    /// allocation-free.
+    pub fn decode_step_uniform_paged(
+        &self,
+        l: usize,
+        batch: usize,
+        page_tokens: usize,
+    ) -> BatchedDecodeLatency {
+        self.uniform_with_bw(l, batch, self.kv_bw_for_page(page_tokens))
+    }
+
+    fn uniform_with_bw(&self, l: usize, batch: usize, bw: f64) -> BatchedDecodeLatency {
+        // Replays `batched_with_bw`'s zero-seeded left fold (the same
+        // per-stream value added `batch` times) so the result is
+        // bit-identical at every batch size.
+        let mut attention = 0.0;
+        if batch > 0 {
+            let per_stream = self.attn_with_bw(l, bw);
+            for _ in 0..batch {
+                attention += per_stream;
+            }
+        }
+        self.assemble_batched(batch, attention)
+    }
+
     fn batched_with_bw(&self, ctxs: &[usize], bw: f64) -> BatchedDecodeLatency {
-        let batch = ctxs.len();
+        let attention: f64 = ctxs.iter().map(|&l| self.attn_with_bw(l, bw)).sum();
+        self.assemble_batched(ctxs.len(), attention)
+    }
+
+    /// Shared tail of the slice and uniform batched paths: the projection
+    /// / norm / total assembly exists exactly once, so the two entry
+    /// points cannot drift apart.
+    fn assemble_batched(&self, batch: usize, attention: f64) -> BatchedDecodeLatency {
         if batch == 0 {
             return BatchedDecodeLatency {
                 batch: 0,
@@ -261,7 +297,6 @@ impl LatencySurface {
                 total: 0.0,
             };
         }
-        let attention: f64 = ctxs.iter().map(|&l| self.attn_with_bw(l, bw)).sum();
         let projection = (batch as f64 / self.tlmm_tps).max(self.t_weights);
         let norm = self.norm_per_token * batch as f64;
         BatchedDecodeLatency {
@@ -615,6 +650,30 @@ mod tests {
                     s.decode_step_paged(l, pt).total.to_bits(),
                     "L={l} pt={pt}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_batched_equals_slice_batched_bitwise() {
+        let s = surface();
+        for l in [1, 64, 733, 2048] {
+            for b in [0usize, 1, 2, 3, 4, 7, 8] {
+                for pt in [1, 8, 32, 128] {
+                    let uniform = s.decode_step_uniform_paged(l, b, pt);
+                    let slice = s.decode_step_batched_paged(&vec![l; b], pt);
+                    assert_eq!(uniform.batch, slice.batch, "L={l} B={b} pt={pt}");
+                    assert_eq!(
+                        uniform.attention.to_bits(),
+                        slice.attention.to_bits(),
+                        "L={l} B={b} pt={pt}"
+                    );
+                    assert_eq!(
+                        uniform.total.to_bits(),
+                        slice.total.to_bits(),
+                        "L={l} B={b} pt={pt}"
+                    );
+                }
             }
         }
     }

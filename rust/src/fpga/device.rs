@@ -44,10 +44,27 @@ impl FpgaDevice {
     /// device and returns a device with an empty RP.
     pub fn program(config: DeviceConfig, plan: RegionPlan) -> Result<Self> {
         plan.validate(&config).map_err(|e| anyhow::anyhow!(e))?;
+        Ok(Self::assemble(config, plan))
+    }
+
+    /// [`Self::program`] for floorplans the caller already validated —
+    /// e.g. the DSE pass, whose
+    /// [`crate::fpga::region::validate_budget`] is the same accept/reject
+    /// rule — so sweeps that build many devices per design do not pay the
+    /// validation repeatedly. Debug builds still assert validity.
+    pub fn program_prevalidated(config: DeviceConfig, plan: RegionPlan) -> Self {
+        debug_assert!(
+            plan.validate(&config).is_ok(),
+            "prevalidated floorplan fails validation"
+        );
+        Self::assemble(config, plan)
+    }
+
+    fn assemble(config: DeviceConfig, plan: RegionPlan) -> Self {
         let pcap = PcapModel::for_device(&config);
         let bs = Bitstream::partial_for("rp", &plan.rp.pblock, &config);
         let partial_load_seconds = pcap.load_time(&bs);
-        Ok(Self {
+        Self {
             config,
             plan,
             pcap,
@@ -55,7 +72,7 @@ impl FpgaDevice {
             partial_load_seconds,
             reconfig_count: 0,
             reconfig_seconds_total: 0.0,
-        })
+        }
     }
 
     pub fn state(&self) -> &ReconfigState {

@@ -18,6 +18,25 @@ pub enum AdmissionControl {
     Optimistic,
 }
 
+impl AdmissionControl {
+    /// CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionControl::WorstCase => "worst-case",
+            AdmissionControl::Optimistic => "optimistic",
+        }
+    }
+
+    /// Parse a CLI name (see [`Self::name`]).
+    pub fn from_name(name: &str) -> Option<AdmissionControl> {
+        match name {
+            "worst-case" | "worstcase" | "worst" => Some(AdmissionControl::WorstCase),
+            "optimistic" => Some(AdmissionControl::Optimistic),
+            _ => None,
+        }
+    }
+}
+
 /// What happens when an optimistically admitted request needs a page the
 /// pool no longer has.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,6 +53,27 @@ pub enum EvictionPolicy {
     /// completes. Predictable, starvation-free, but long-context
     /// requests get truncated generations under pressure.
     KeepResident,
+}
+
+impl EvictionPolicy {
+    /// CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicy::EvictAndRecompute => "evict",
+            EvictionPolicy::KeepResident => "keep",
+        }
+    }
+
+    /// Parse a CLI name (see [`Self::name`]).
+    pub fn from_name(name: &str) -> Option<EvictionPolicy> {
+        match name {
+            "evict" | "evict-recompute" | "evict-and-recompute" => {
+                Some(EvictionPolicy::EvictAndRecompute)
+            }
+            "keep" | "keep-resident" => Some(EvictionPolicy::KeepResident),
+            _ => None,
+        }
+    }
 }
 
 /// The pool's verdict on an admission query (see

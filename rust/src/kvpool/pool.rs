@@ -66,6 +66,20 @@ impl KvPoolConfig {
         self
     }
 
+    /// Re-page the pool at a different tokens-per-page granularity while
+    /// preserving the DDR byte budget: the page count is re-derived so
+    /// `budget_bytes()` stays (floor-rounded) constant. This is the
+    /// codesign sweep's page-size axis — smaller pages cut internal
+    /// fragmentation but shorten DDR bursts
+    /// ([`crate::memory::traffic::paged_kv_burst`]), larger pages the
+    /// reverse, so the sweet spot is workload-dependent.
+    pub fn with_page_tokens(mut self, page_tokens: usize) -> Self {
+        let budget = self.budget_bytes();
+        self.page_tokens = page_tokens.max(1);
+        self.total_pages = ((budget / self.page_bytes()).floor() as usize).max(1);
+        self
+    }
+
     pub fn with_policies(mut self, admission: AdmissionControl, eviction: EvictionPolicy) -> Self {
         self.admission = admission;
         self.eviction = eviction;
@@ -499,6 +513,32 @@ mod tests {
         assert_eq!(p.free_pages(), 10);
         assert_eq!(p.resident_count(), 0);
         p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn repaging_preserves_the_byte_budget() {
+        let base = KvPoolConfig::for_device(&BITNET_0_73B, &KV260);
+        let budget = base.budget_bytes();
+        for pt in [1, 8, 16, 64, 128] {
+            let repaged = base.clone().with_page_tokens(pt);
+            assert_eq!(repaged.page_tokens, pt);
+            // Floor rounding loses at most one page of budget.
+            assert!(repaged.budget_bytes() <= budget + 1e-6, "pt={pt}");
+            assert!(
+                repaged.budget_bytes() >= budget - repaged.page_bytes() - 1e-6,
+                "pt={pt}: budget {:.0} vs base {budget:.0}",
+                repaged.budget_bytes()
+            );
+        }
+        // Same page size round-trips to (almost exactly) the same pool —
+        // floor rounding of the float budget may shave one page.
+        let same = base.clone().with_page_tokens(base.page_tokens);
+        assert!(
+            same.total_pages == base.total_pages || same.total_pages + 1 == base.total_pages,
+            "{} vs {}",
+            same.total_pages,
+            base.total_pages
+        );
     }
 
     #[test]

@@ -25,8 +25,11 @@
 //!   *and* batch-B: multi-stream decode shares one pass over the packed
 //!   weight stream per step
 //!   ([`engines::PhaseModel::decode_step_batched`]), which the event
-//!   server serves ([`coordinator::EventServerConfig::decode_batch`]) and
-//!   `pd-swap codesign --decode-batch` co-optimizes.
+//!   server serves through one allocation-free unified scheduler
+//!   ([`coordinator::EventServerConfig::decode_batch`]) and
+//!   `pd-swap codesign --decode-batch` co-optimizes — alongside the
+//!   KV-pool axis (`--admission/--eviction/--page-size`,
+//!   [`dse::codesign::PoolVariant`]).
 //!
 //! The FPGA itself is simulated; the *functional* compute path is real —
 //! tokens are produced by executing the AOT artifacts on the PJRT CPU

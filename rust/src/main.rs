@@ -20,7 +20,7 @@ use pd_swap::coordinator::{
 };
 #[cfg(feature = "pjrt")]
 use pd_swap::coordinator::{LiveServer, LiveServerConfig};
-use pd_swap::dse::{explore, run_codesign, CodesignConfig, DseConfig, TracePreset};
+use pd_swap::dse::{explore, run_codesign, CodesignConfig, DseConfig, PoolVariant, TracePreset};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting};
 use pd_swap::eval;
 use pd_swap::fpga::KV260;
@@ -57,16 +57,20 @@ USAGE:
   pd-swap dse [--static] [--l-long N] [--l-short N] [--alpha F]
   pd-swap codesign [--requests 24] [--rate 0.05] [--seed 0] [--designs N] [--threads N]
                    [--traces mixed,bursty] [--policies eager,hysteresis,lookahead]
-                   [--decode-batch 1,4] [--long-ctx N] [--l-long N] [--l-short N]
-                   [--alpha F] [--out FILE]
-                   joint (DSE grid x swap policy x decode batch x trace) sweep
-                   through the event-driven simulator; prints the winning
-                   design+policy per traffic mix and whether multi-stream
-                   decode flips it (deterministic across runs)
+                   [--decode-batch 1,4] [--admission worst-case,optimistic]
+                   [--eviction keep,evict] [--page-size 32,64]
+                   [--long-ctx N] [--l-long N] [--l-short N]
+                   [--alpha F] [--cold] [--out FILE]
+                   joint (DSE grid x swap policy x decode batch x KV pool x
+                   trace) sweep through the event-driven simulator; prints
+                   the winning design+policy per traffic mix and whether
+                   multi-stream decode or the pool axis flips it
+                   (deterministic across runs; decode batches are clamped
+                   per design by activation-buffer headroom)
   pd-swap generate --artifacts DIR --prompt 1,2,3 [--n 16] [--temperature F] [--top-k K]
   pd-swap serve --artifacts DIR [--requests 8] [--gen 32] [--seed 0]
   pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]
-                   [--pool-pages N] [--optimistic] [--evict]
+                   [--pool-pages N] [--optimistic] [--evict] [--decode-batch B]
   pd-swap simulate --policy <eager|hysteresis|lookahead>   (event-driven core)
                    [--trace interactive|mixed|bursty] [--rate R] [--long-ctx N]
                    [--requests N] [--seed S] [--max-residents N]
@@ -213,14 +217,52 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
         sweep.policies = policies;
     }
     sweep.decode_batches = args.get_usize_list("decode-batch", &[1]);
+    // KV-pool axis: admission x eviction x page size (cross product).
+    let default_pool = PoolVariant::paper_default();
+    let mut admissions = Vec::new();
+    for name in args
+        .get_or("admission", default_pool.admission.name())
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+    {
+        match AdmissionControl::from_name(name) {
+            Some(a) => admissions.push(a),
+            None => bail!("unknown admission '{name}' (try worst-case|optimistic)"),
+        }
+    }
+    let mut evictions = Vec::new();
+    for name in args
+        .get_or("eviction", default_pool.eviction.name())
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+    {
+        match EvictionPolicy::from_name(name) {
+            Some(e) => evictions.push(e),
+            None => bail!("unknown eviction '{name}' (try keep|evict)"),
+        }
+    }
+    let pages = args.get_usize_list("page-size", &[default_pool.page_tokens]);
+    let mut pools = Vec::new();
+    for &admission in &admissions {
+        for &eviction in &evictions {
+            for &page_tokens in &pages {
+                pools.push(PoolVariant { admission, eviction, page_tokens });
+            }
+        }
+    }
+    sweep.pools = pools;
+    sweep.warm_start = !args.flag("cold");
 
     println!(
-        "codesign: {} x {} x {} DSE grid x {} policies x {} decode batches x {} traces ({} requests each, seed {seed})",
+        "codesign: {} x {} x {} DSE grid x {} policies x {} decode batches x {} pools x {} traces ({} requests each, seed {seed})",
         sweep.dse.tlmm_grid.len(),
         sweep.dse.prefill_grid.len(),
         sweep.dse.decode_grid.len(),
         sweep.policies.len(),
         sweep.decode_batches.len(),
+        sweep.pools.len(),
         sweep.traces.len(),
         n,
     );
@@ -235,20 +277,34 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
             t.trace, t.offered_tokens_per_sec
         );
         println!(
-            "{:<40} {:<11} {:>5} {:>9} {:>9} {:>6} {:>11} {:>11}",
-            "design", "policy", "B", "dec t/s", "e2e t/s", "swaps", "exposed s", "ttft p95 s"
+            "{:<40} {:<11} {:>6} {:<26} {:>9} {:>9} {:>6} {:>11} {:>11}",
+            "design", "policy", "B", "pool", "dec t/s", "e2e t/s", "swaps", "exposed s",
+            "ttft p95 s"
         );
         for c in t.ranked.iter().take(5) {
+            // A trailing '*' marks a batch clamped by the design's
+            // activation-buffer headroom (requested > effective).
+            let b = if c.batch_capped {
+                format!("{}*", c.decode_batch)
+            } else {
+                c.decode_batch.to_string()
+            };
             println!(
-                "{:<40} {:<11} {:>5} {:>9.2} {:>9.2} {:>6} {:>11.2} {:>11.1}",
-                c.design, c.policy, c.decode_batch, c.decode_tps, c.makespan_tps, c.swaps,
+                "{:<40} {:<11} {:>6} {:<26} {:>9.2} {:>9.2} {:>6} {:>11.2} {:>11.1}",
+                c.design, c.policy, b, c.pool, c.decode_tps, c.makespan_tps, c.swaps,
                 c.exposed_s, c.ttft_p95_s,
+            );
+        }
+        let capped = t.ranked.iter().filter(|c| c.batch_capped).count();
+        if capped > 0 {
+            println!(
+                "({capped} cells decode-batch-capped by activation-buffer headroom, marked '*')"
             );
         }
         let w = t.winner();
         println!(
-            "winner: {} + {} @ decode-batch {} — {:.2} tok/s decode (wall TPOT), makespan {:.1} s",
-            w.design, w.policy, w.decode_batch, w.decode_tps, w.makespan_s
+            "winner: {} + {} @ decode-batch {} / {} — {:.2} tok/s decode (wall TPOT), makespan {:.1} s",
+            w.design, w.policy, w.decode_batch, w.pool, w.decode_tps, w.makespan_s
         );
     }
     // Decode-batch flip verdicts: does multi-stream decode change what
@@ -269,6 +325,27 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
                     "trace '{}': no flip — {d} + {p} wins at every decode batch \
                      (the shared weight stream amortizes equally across these \
                      designs/policies at this traffic)",
+                    f.trace
+                );
+            }
+        }
+    }
+    // KV-pool flip verdicts (printed only when the pool axis was swept).
+    if report.pools.len() > 1 {
+        println!();
+        for f in report.pool_flips() {
+            if f.flips {
+                let list = f
+                    .winners
+                    .iter()
+                    .map(|(pool, d, p)| format!("{pool} -> {d} + {p}"))
+                    .collect::<Vec<_>>()
+                    .join("; ");
+                println!("trace '{}': KV-pool axis FLIPS the winner: {list}", f.trace);
+            } else if let Some((_, d, p)) = f.winners.first() {
+                println!(
+                    "trace '{}': no flip — {d} + {p} wins under every \
+                     admission/eviction/page-size variant at this traffic",
                     f.trace
                 );
             }
@@ -470,6 +547,10 @@ fn simulate(args: &Args) -> Result<()> {
     }
     if args.flag("no-overlap") {
         cfg.overlap = false;
+    }
+    cfg.decode_batch = args.get_usize("decode-batch", cfg.decode_batch);
+    if cfg.decode_batch == 0 {
+        bail!("--decode-batch must be >= 1 (1 = the paper's one-stream-at-a-time rounds)");
     }
     // KV-pool knobs: size override + admission/eviction policy selection.
     let pool: KvPoolConfig = cfg.pool.clone();

@@ -64,6 +64,15 @@ use super::OverlapScheduler;
 /// Snapshot of both phases' pending work at a policy decision point.
 /// All times are estimates from the analytic phase model — the policy is
 /// deciding the future, so exactness is impossible by construction.
+///
+/// The event engine assembles this snapshot in O(1): the backlog counts
+/// and token sums are maintained incrementally (updated at arrival,
+/// extraction, eviction-requeue, and per applied token — never by
+/// re-scanning the queue or the decode set per decision), and the decode
+/// estimate comes from the uniform-context closed form
+/// ([`crate::engines::LatencySurface::decode_step_uniform_paged`]), so a
+/// policy consultation allocates nothing and costs a handful of
+/// floating-point operations.
 #[derive(Debug, Clone, Copy)]
 pub struct SwapOutlook {
     /// Arrived-but-not-prefilled requests (admissible or not).

@@ -75,6 +75,7 @@ fn oversized_design_is_rejected_at_programming() {
         policy: Policy::SwapPerRequest,
         overlap: true,
         pool: KvPoolConfig::for_device(&BITNET_0_73B, &KV260),
+        decode_batch: 1,
     })
     .err()
     .expect("must fail");
@@ -252,7 +253,8 @@ fn ablation_matrix() {
 /// `pd-swap codesign --decode-batch 1,4` publishes as a CI artifact.
 #[test]
 fn codesign_decode_batch_axis_end_to_end() {
-    use pd_swap::dse::{run_codesign, CodesignConfig, TracePreset};
+    use pd_swap::dse::{run_codesign, CodesignConfig, PoolVariant, TracePreset};
+    use pd_swap::kvpool::PAGE_TOKENS_DEFAULT;
 
     let mut sweep = CodesignConfig::paper_default(BITNET_0_73B, KV260.clone());
     sweep.dse.tlmm_grid = vec![320];
@@ -263,10 +265,20 @@ fn codesign_decode_batch_axis_end_to_end() {
         TracePreset::by_name("bursty", 6, 0.05, 2048, 7).unwrap(),
     ];
     sweep.decode_batches = vec![1, 4];
+    // Cross the KV-pool axis in too: the default pool plus an
+    // optimistic/evicting variant at a larger page size.
+    sweep.pools = vec![
+        PoolVariant::paper_default(),
+        PoolVariant {
+            admission: AdmissionControl::Optimistic,
+            eviction: EvictionPolicy::EvictAndRecompute,
+            page_tokens: 2 * PAGE_TOKENS_DEFAULT,
+        },
+    ];
     let report = run_codesign(&sweep).unwrap();
     assert_eq!(
         report.sims_run,
-        report.designs_swept * sweep.policies.len() * sweep.traces.len() * 2
+        report.designs_swept * sweep.policies.len() * sweep.traces.len() * 2 * 2
     );
 
     // Every trace gets a winner per batch and a flip verdict.
@@ -286,6 +298,11 @@ fn codesign_decode_batch_axis_end_to_end() {
     let mixed = v.get("traces").unwrap().get("mixed").unwrap();
     let by_batch = mixed.get("winner_by_decode_batch").unwrap();
     assert!(by_batch.get("b1").is_some() && by_batch.get("b4").is_some());
+    let by_pool = mixed.get("winner_by_pool").unwrap();
+    for label in &report.pools {
+        assert!(by_pool.get(label).is_some(), "missing pool winner '{label}'");
+    }
+    assert_eq!(v.get("pool_flips").unwrap().as_arr().unwrap().len(), 2);
     assert!(
         mixed
             .get("winner")
@@ -306,6 +323,7 @@ fn codesign_decode_batch_axis_end_to_end() {
         TracePreset::by_name("bursty", 6, 0.05, 2048, 7).unwrap(),
     ];
     again.decode_batches = vec![1, 4];
+    again.pools = sweep.pools.clone();
     again.threads = 3;
     let b = run_codesign(&again).unwrap();
     for (fa, fb) in flips.iter().zip(b.batch_flips()) {
