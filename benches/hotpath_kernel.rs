@@ -201,6 +201,10 @@ fn allocs_per_decode_token(decode_batch: usize, gen_a: usize, gen_b: usize) -> (
         // token-valued estimates), so the two runs' swap/prefill event
         // structure is identical and every non-decode allocation cancels
         // in the subtraction.
+        //
+        // `pd_swap()` leaves `trace: false` — this probe is the hard gate
+        // that the tracing-DISABLED default (the TraceRecorder off path)
+        // stays allocation-free on the decode hot path.
         let mut cfg =
             EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
         cfg.decode_batch = decode_batch;
@@ -376,14 +380,17 @@ fn main() {
     let (allocs_b4, raw_b4) = allocs_per_decode_token(4, 1700, 2000);
     println!("B=4: {allocs_b4:.6} allocations per decode token ({raw_b4} raw over the delta)");
     // "Zero steady-state allocations": the amortized rate must be
-    // indistinguishable from zero (1e-3 tolerates a stray one-off).
+    // indistinguishable from zero (1e-3 tolerates a stray one-off). With
+    // tracing disabled (the default measured here) the TraceRecorder must
+    // be bitwise inert — a regression in its `enabled` gating shows up
+    // as per-token recorder allocations and fails these asserts.
     assert!(
         allocs_b1 <= 1e-3,
-        "B=1 decode hot path allocates ({allocs_b1:.4}/token) — scratch reuse regressed"
+        "B=1 decode hot path allocates ({allocs_b1:.4}/token) — scratch reuse or the tracing-off gate regressed"
     );
     assert!(
         allocs_b4 <= 1e-3,
-        "B=4 decode hot path allocates ({allocs_b4:.4}/token) — scratch reuse regressed"
+        "B=4 decode hot path allocates ({allocs_b4:.4}/token) — scratch reuse or the tracing-off gate regressed"
     );
 
     // -- codesign warm-start: shared factories + cache vs cold per cell ----

@@ -21,7 +21,7 @@
 use std::path::Path;
 use std::process::ExitCode;
 
-use pd_swap::util::bench::{bless_baseline, compare_reports, parse_gates};
+use pd_swap::util::bench::{bless_baseline, compare_reports, parse_gates, report_body};
 use pd_swap::util::cli::Args;
 use pd_swap::util::json;
 
@@ -79,8 +79,13 @@ fn main() -> ExitCode {
             }
         };
 
+        // Live reports may carry the versioned envelope (schema_version /
+        // git_rev / config_hash); gates address the body either way.
+        // Baselines are hand-maintained and stay legacy.
+        let current = report_body(&current);
+
         if bless {
-            let blessed = bless_baseline(&baseline, &current);
+            let blessed = bless_baseline(&baseline, current);
             if let Err(e) = std::fs::write(&base_path, blessed.to_pretty()) {
                 println!("FAIL {name}: cannot write blessed baseline: {e}");
                 failed = true;
@@ -93,7 +98,7 @@ fn main() -> ExitCode {
             continue;
         }
 
-        let cmp = compare_reports(&baseline, &current);
+        let cmp = compare_reports(&baseline, current);
         let failures = cmp.failures();
         for r in &cmp.results {
             let status = if !r.regressed {

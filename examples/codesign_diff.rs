@@ -24,6 +24,7 @@
 use std::process::ExitCode;
 
 use pd_swap::dse::PoolVariant;
+use pd_swap::util::bench::report_body;
 use pd_swap::util::cli::Args;
 use pd_swap::util::json::{parse, Value};
 
@@ -114,8 +115,10 @@ fn main() -> ExitCode {
         }
     };
 
-    let prev_winners = winners(&prev);
-    let curr_winners = winners(&curr);
+    // Accept both enveloped (schema_version / git_rev / config_hash) and
+    // legacy report documents.
+    let prev_winners = winners(report_body(&prev));
+    let curr_winners = winners(report_body(&curr));
     if curr_winners.is_empty() {
         eprintln!("codesign_diff: no per-trace winners in {curr_path}");
         return ExitCode::from(2);

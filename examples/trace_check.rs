@@ -1,0 +1,69 @@
+//! Chrome-trace validator for CI: parse a `--trace-out` /
+//! `--trace-winners` artifact and check its structural invariants —
+//! every event carries the required fields, every duration is
+//! non-negative, every B/E span is closed, and timestamps are monotone
+//! non-decreasing per (pid, tid) track (the recorder's deterministic
+//! emission order).
+//!
+//! ```text
+//! cargo run --example trace_check -- --file trace.json [--require-decision]
+//! ```
+//!
+//! `--require-decision` additionally demands at least one swap-policy
+//! decision record (cat `"policy"`) — the bench-smoke job passes it for
+//! the lookahead simulate run, where the policy must have weighed at
+//! least one swap. Exit status: 0 valid, 1 invalid, 2 unreadable input.
+
+use std::process::ExitCode;
+
+use pd_swap::telemetry::validate_chrome_trace;
+use pd_swap::util::cli::Args;
+use pd_swap::util::json::{parse, Value};
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let Some(path) = args.get("file") else {
+        eprintln!("usage: trace_check --file trace.json [--require-decision]");
+        return ExitCode::from(2);
+    };
+    let doc = match std::fs::read_to_string(path)
+        .map_err(|e| e.to_string())
+        .and_then(|s| parse(&s).map_err(|e| format!("{e:?}")))
+    {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("trace_check: {path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let checked = match validate_chrome_trace(&doc) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("trace_check: {path}: INVALID: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let decisions = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .map(|evs| {
+            evs.iter()
+                .filter(|e| e.get("cat").and_then(Value::as_str) == Some("policy"))
+                .count()
+        })
+        .unwrap_or(0);
+    if args.flag("require-decision") && decisions == 0 {
+        eprintln!(
+            "trace_check: {path}: INVALID: no swap-policy decision records \
+             (expected at least one cat=\"policy\" instant)"
+        );
+        return ExitCode::FAILURE;
+    }
+
+    println!(
+        "trace_check: {path}: OK — {checked} events validated, {decisions} policy decisions"
+    );
+    ExitCode::SUCCESS
+}

@@ -86,8 +86,10 @@ use crate::metrics::ServerMetrics;
 use crate::model::ModelShape;
 use crate::reconfig::policy::{est_prefill_time, round_trip_exposed};
 use crate::reconfig::{
-    OverlapScheduler, SwapController, SwapOutlook, SwapPolicy, RM_DECODE, RM_PREFILL,
+    DecisionPoint, OverlapScheduler, SwapController, SwapOutlook, SwapPolicy, RM_DECODE,
+    RM_PREFILL,
 };
+use crate::telemetry::TraceRecorder;
 
 use super::fsm::{Phase, PhaseFsm};
 use super::request::{Request, RequestOutcome};
@@ -317,6 +319,13 @@ pub struct EventServerConfig {
     /// rule on every candidate): skip the per-server revalidation and
     /// program the device directly. Debug builds still assert validity.
     pub assume_feasible: bool,
+    /// Record phase-span telemetry ([`crate::telemetry::TraceRecorder`])
+    /// keyed to the virtual clock. Off by default: the disabled recorder
+    /// is bitwise-inert (clocks, metrics, outcomes identical — pinned by
+    /// `tracing_disabled_is_bitwise_identical_to_enabled`) and
+    /// allocation-free (gated by the `hotpath_kernel` counting-allocator
+    /// bench).
+    pub trace: bool,
 }
 
 impl EventServerConfig {
@@ -334,6 +343,7 @@ impl EventServerConfig {
             use_surface: true,
             surface: None,
             assume_feasible: false,
+            trace: false,
         }
     }
 }
@@ -388,6 +398,9 @@ pub struct EventServer {
     log: Vec<EventRecord>,
     pub metrics: ServerMetrics,
     pub outcomes: Vec<RequestOutcome>,
+    /// Phase-span telemetry (inert unless `cfg.trace`); export with
+    /// [`crate::telemetry::TraceRecorder::to_chrome_json`].
+    pub recorder: TraceRecorder,
 }
 
 impl EventServer {
@@ -435,6 +448,7 @@ impl EventServer {
         let lat = swap.device.reconfig_latency();
         let overlap_sched = OverlapScheduler::new(model.clone(), lat);
         let kv_pool = KvPool::new(cfg.pool.clone());
+        let recorder = TraceRecorder::from_flag(cfg.trace);
         Ok(Self {
             cfg,
             model,
@@ -461,6 +475,7 @@ impl EventServer {
             log: Vec::new(),
             metrics: ServerMetrics::default(),
             outcomes: Vec::new(),
+            recorder,
         })
     }
 
@@ -652,7 +667,10 @@ impl EventServer {
             return Ok(()); // nothing to decode afterwards: keep prefilling
         }
         let o = self.outlook(job_rem, prompt);
-        if !self.cfg.policy.swap_to_decode_at_trigger(&o) {
+        let commit = self.cfg.policy.swap_to_decode_at_trigger(&o);
+        self.recorder
+            .decision(self.clock, &self.cfg.policy, DecisionPoint::AtTrigger, &o, commit);
+        if !commit {
             return Ok(()); // policy keeps the prefill RM
         }
         let was_live = self.swap.device.is_live(RM_DECODE, self.clock);
@@ -663,7 +681,10 @@ impl EventServer {
         if !was_live {
             self.metrics.reconfigurations.inc();
             self.metrics.swaps_to_decode.inc();
-            self.metrics.reconfig_exposed.record((ready - done_at).max(0.0));
+            let lat = self.overlap_sched.reconfig_latency;
+            let exposed = (ready - done_at).max(0.0);
+            self.metrics.record_reconfig_exposure(lat, exposed);
+            self.recorder.swap_span(self.clock, ready, true, lat, exposed);
         }
         self.prefilling.as_mut().unwrap().swap_committed = true;
         // Decode admissible at max(prefill_end, decode_ready) — §3.4 rule.
@@ -789,7 +810,15 @@ impl EventServer {
                     // waiting prompts?
                     if self.prefill_candidate_ready() {
                         let o = self.outlook(0, 0);
-                        if self.cfg.policy.swap_to_prefill_mid_decode(&o) {
+                        let yield_fabric = self.cfg.policy.swap_to_prefill_mid_decode(&o);
+                        self.recorder.decision(
+                            self.clock,
+                            &self.cfg.policy,
+                            DecisionPoint::MidDecode,
+                            &o,
+                            yield_fabric,
+                        );
+                        if yield_fabric {
                             return self.begin_prefill_swap();
                         }
                     }
@@ -825,7 +854,15 @@ impl EventServer {
                         // Leaving a live decode RM reuses the mid-decode
                         // rule: waiting prompts vs. the swap pair.
                         let o = self.outlook(0, 0);
-                        self.cfg.policy.swap_to_prefill_mid_decode(&o)
+                        let yield_fabric = self.cfg.policy.swap_to_prefill_mid_decode(&o);
+                        self.recorder.decision(
+                            self.clock,
+                            &self.cfg.policy,
+                            DecisionPoint::MidDecode,
+                            &o,
+                            yield_fabric,
+                        );
+                        yield_fabric
                     } else {
                         true // cold fabric: nothing is decodable yet
                     };
@@ -937,6 +974,12 @@ impl EventServer {
         if !was_live {
             self.metrics.reconfigurations.inc();
             self.metrics.swaps_to_prefill.inc();
+            // The prefill-direction load has no §3.4 tail to hide behind:
+            // the whole PCAP time is exposed (traced, but — as before
+            // this telemetry existed — not charged to the exposure
+            // histograms, which account the decode-direction §3.4 path).
+            let lat = self.overlap_sched.reconfig_latency;
+            self.recorder.swap_span(self.clock, ready, false, lat, ready - self.clock);
         }
         self.queue.push(ready, SimEvent::SwapDone { to_decode: false });
         Ok(())
@@ -953,7 +996,10 @@ impl EventServer {
         if !was_live {
             self.metrics.reconfigurations.inc();
             self.metrics.swaps_to_decode.inc();
-            self.metrics.reconfig_exposed.record((ready - self.clock).max(0.0));
+            let lat = self.overlap_sched.reconfig_latency;
+            let exposed = (ready - self.clock).max(0.0);
+            self.metrics.record_reconfig_exposure(lat, exposed);
+            self.recorder.swap_span(self.clock, ready, true, lat, exposed);
         }
         self.queue.push(ready, SimEvent::SwapDone { to_decode: true });
         Ok(())
@@ -965,10 +1011,14 @@ impl EventServer {
     fn start_prefill(&mut self) -> Result<bool> {
         let now = self.clock;
         let pool = &mut self.kv_pool;
+        let rec = &mut self.recorder;
         let mut batch = self.sched.next_batch_filtered(now, |r| {
             let plan = pool.admission_plan(r.prompt_len, r.max_new_tokens);
-            plan.admits_immediately()
-                && pool.execute_admission(r.id, 0, plan, now).unwrap_or(false)
+            let admitted = plan.admits_immediately()
+                && pool.execute_admission(r.id, 0, plan, now).unwrap_or(false);
+            let kind = if admitted { "kv-admit" } else { "kv-reject" };
+            rec.kv_instant(kind, now, r.id, pool.used_pages(), pool.total_pages());
+            admitted
         });
         let Some(req) = batch.pop() else { return Ok(false) };
         // Extraction removes the head from the arrived backlog.
@@ -979,7 +1029,8 @@ impl EventServer {
         let shape = self.cfg.shape;
         let l = req.prompt_len.max(1);
         let pre = self.prefill_lat(l);
-        if !self.prefilled.insert(id) {
+        let first_pass = self.prefilled.insert(id);
+        if !first_pass {
             // Second prefill of an evicted request: pure recompute tax.
             self.metrics.recompute_overhead.record(pre.total);
         }
@@ -999,6 +1050,32 @@ impl EventServer {
         }
         self.queue.push(trigger_at.min(done_at), SimEvent::PrefillTrigger { id });
         self.queue.push(done_at, SimEvent::PrefillDone { id });
+        if self.recorder.is_enabled() {
+            // The whole prefill timeline is analytic, so record it here
+            // at admission — per-track emission stays monotone in ts.
+            if first_pass {
+                self.recorder.request_queued(id, req.arrival.max(0.0).min(now), now);
+            }
+            self.recorder.prefill_span(id, now, pre.total, l, !first_pass);
+            let trig_ts = trigger_at.min(done_at);
+            let mut layer = 1;
+            // Layer instants are monotone; interleave the trigger at its
+            // place on the timeline so the track stays ts-ordered.
+            while layer < n_layers {
+                let at = now + pre.total * layer as f64 / n_layers as f64;
+                if at > trig_ts {
+                    break;
+                }
+                self.recorder.prefill_layer(id, at, layer);
+                layer += 1;
+            }
+            self.recorder.trigger(id, trig_ts);
+            while layer < n_layers {
+                let at = now + pre.total * layer as f64 / n_layers as f64;
+                self.recorder.prefill_layer(id, at, layer);
+                layer += 1;
+            }
+        }
         self.prefilling = Some(PrefillJob { req, done_at, swap_committed: false });
         Ok(true)
     }
@@ -1088,6 +1165,13 @@ impl EventServer {
                         self.kv_pool
                             .evict_at(vid, self.clock)
                             .map_err(|e| anyhow::anyhow!("{e}"))?;
+                        self.recorder.kv_instant(
+                            "kv-evict",
+                            self.clock,
+                            vid,
+                            self.kv_pool.used_pages(),
+                            self.kv_pool.total_pages(),
+                        );
                         self.evicted_once.insert(vid);
                         let j = self
                             .decode
@@ -1143,6 +1227,13 @@ impl EventServer {
         // arithmetic — the batch-1 form is bit-identical to the single
         // form — and the same event kind the pre-batching engine logged).
         let step = self.decode_batch_total(&ctxs);
+        if self.recorder.is_enabled() {
+            // Batched steps are attributed to every member stream: each
+            // track shows its own token timeline, sharing the step span.
+            for (id, ctx) in ids.iter().zip(&ctxs) {
+                self.recorder.decode_step(*id, self.clock, step, ids.len(), *ctx);
+            }
+        }
         if ids.len() == 1 {
             self.queue.push(self.clock + step, SimEvent::DecodeStepDone { id: ids[0] });
         } else {
@@ -1162,6 +1253,13 @@ impl EventServer {
         self.kv_pool
             .complete(f.req.id)
             .map_err(|e| anyhow::anyhow!("completing request {}: {e}", f.req.id))?;
+        self.recorder.kv_instant(
+            "kv-release",
+            self.clock,
+            f.req.id,
+            self.kv_pool.used_pages(),
+            self.kv_pool.total_pages(),
+        );
         // First token comes out of prefill logits; TTFT counts queueing +
         // prefill + any exposed swap + the wait for the first decode slot.
         let first = f.first_step.unwrap_or(f.prefill_done);
@@ -1670,6 +1768,110 @@ mod tests {
         pool.check_invariants().unwrap();
         assert_eq!(pool.resident_count(), 0);
         assert_eq!(pool.stats.admitted, pool.stats.completed + pool.stats.evicted);
+    }
+
+    #[test]
+    fn tracing_disabled_is_bitwise_identical_to_enabled() {
+        // The recorder only reads the virtual clock; flipping it on must
+        // not perturb a single bit of the simulation — clocks, latency
+        // histograms, token counts, outcome order and values.
+        for policy in [
+            SwapPolicy::Eager,
+            SwapPolicy::hysteresis_default(),
+            SwapPolicy::lookahead_default(),
+        ] {
+            let w = contended_workload();
+            let mut off = server(policy);
+            off.run(w.clone()).unwrap();
+            let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+            cfg.trace = true;
+            let mut on = EventServer::new(cfg).unwrap();
+            on.run(w).unwrap();
+            assert_eq!(off.clock().to_bits(), on.clock().to_bits(), "{policy:?}");
+            assert_eq!(
+                off.metrics.tpot.mean().to_bits(),
+                on.metrics.tpot.mean().to_bits()
+            );
+            assert_eq!(
+                off.metrics.ttft.mean().to_bits(),
+                on.metrics.ttft.mean().to_bits()
+            );
+            assert_eq!(
+                off.metrics.e2e.mean().to_bits(),
+                on.metrics.e2e.mean().to_bits()
+            );
+            assert_eq!(
+                off.metrics.tokens_generated.get(),
+                on.metrics.tokens_generated.get()
+            );
+            assert_eq!(
+                off.metrics.reconfigurations.get(),
+                on.metrics.reconfigurations.get()
+            );
+            assert_eq!(off.outcomes.len(), on.outcomes.len());
+            for (a, b) in off.outcomes.iter().zip(&on.outcomes) {
+                assert_eq!(a.id, b.id, "{policy:?}: outcome order changed");
+                assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+                assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+            }
+            // Off really is off; on really recorded the taxonomy.
+            assert!(off.recorder.is_empty());
+            assert!(!on.recorder.is_empty());
+            assert!(on.recorder.decision_count() >= 1, "{policy:?}");
+            let names: std::collections::HashSet<&'static str> =
+                on.recorder.events().iter().map(|e| e.name).collect();
+            for n in ["queued", "prefill", "trigger", "decode-step", "pcap-to-decode"] {
+                assert!(names.contains(n), "{policy:?}: missing span {n}");
+            }
+            crate::telemetry::validate_chrome_trace(&on.recorder.to_chrome_json())
+                .unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn traces_are_byte_identical_across_runs() {
+        let run = || {
+            let mut cfg = EventServerConfig::pd_swap(
+                BITNET_0_73B,
+                KV260.clone(),
+                SwapPolicy::lookahead_default(),
+            );
+            cfg.trace = true;
+            let mut s = EventServer::new(cfg).unwrap();
+            s.run(contended_workload()).unwrap();
+            s.recorder.to_chrome_json().to_string()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn eviction_pressure_trace_stays_well_formed() {
+        // Evicted requests re-prefill: their tracks gain re-prefill spans
+        // and the KV track gains evict instants — emission must stay
+        // ts-monotone per track through the preemption churn.
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.decode_batch = 4;
+        cfg.trace = true;
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(40)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut s = EventServer::new(cfg).unwrap();
+        let w: Vec<Request> =
+            (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+        s.run(w).unwrap();
+        assert!(s.metrics.kv_evictions.get() >= 1);
+        let names: std::collections::HashSet<&'static str> =
+            s.recorder.events().iter().map(|e| e.name).collect();
+        assert!(names.contains("kv-evict"));
+        assert!(names.contains("re-prefill"));
+        assert!(names.contains("kv-release"));
+        crate::telemetry::validate_chrome_trace(&s.recorder.to_chrome_json()).unwrap();
+        // The breakdown table covers every request exactly once.
+        let table = s.recorder.breakdown_table();
+        assert_eq!(table.lines().count(), 1 + 4, "header + one row per request");
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::kvpool::{EvictionPolicy, KvPool, KvPoolConfig, PoolError};
 use crate::metrics::ServerMetrics;
 use crate::model::ModelShape;
 use crate::reconfig::{OverlapScheduler, SwapController, RM_PREFILL};
+use crate::telemetry::TraceRecorder;
 
 use super::events::InFlight;
 use super::fsm::PhaseFsm;
@@ -66,6 +67,10 @@ pub struct SimServerConfig {
     /// one-stream-at-a-time rounds, bit-identical to the pre-batching
     /// engine; B > 1 shares one weight-stream pass per group).
     pub decode_batch: usize,
+    /// Record phase-span telemetry ([`crate::telemetry::TraceRecorder`])
+    /// keyed to the virtual clock. Off by default; the disabled recorder
+    /// is bitwise-inert.
+    pub trace: bool,
 }
 
 impl SimServerConfig {
@@ -79,6 +84,7 @@ impl SimServerConfig {
             overlap: true,
             pool,
             decode_batch: 1,
+            trace: false,
         }
     }
 
@@ -92,6 +98,7 @@ impl SimServerConfig {
             overlap: false,
             pool,
             decode_batch: 1,
+            trace: false,
         }
     }
 }
@@ -116,6 +123,9 @@ pub struct SimServer {
     pub metrics: ServerMetrics,
     clock: f64,
     pub outcomes: Vec<RequestOutcome>,
+    /// Phase-span telemetry (inert unless `cfg.trace`); export with
+    /// [`crate::telemetry::TraceRecorder::to_chrome_json`].
+    pub recorder: TraceRecorder,
 }
 
 impl SimServer {
@@ -138,6 +148,7 @@ impl SimServer {
             None
         };
         let kv_pool = KvPool::new(cfg.pool.clone());
+        let recorder = TraceRecorder::from_flag(cfg.trace);
         Ok(Self {
             cfg,
             surface,
@@ -150,6 +161,7 @@ impl SimServer {
             metrics: ServerMetrics::default(),
             clock: 0.0,
             outcomes: Vec::new(),
+            recorder,
         })
     }
 
@@ -212,13 +224,17 @@ impl SimServer {
     fn extract_batch(&mut self, sched: &mut Scheduler) -> Vec<Request> {
         let now = self.clock;
         let pool = &mut self.kv_pool;
+        let rec = &mut self.recorder;
         sched.next_batch_filtered(now, |r| {
             let plan = pool.admission_plan(r.prompt_len, r.max_new_tokens);
             // Batch-synchronous serving never evicts at admission time (the
             // only residents are batch-mates that have not run yet), so
             // EvictThenFit/Defer both close the batch for a later retry.
-            plan.admits_immediately()
-                && pool.execute_admission(r.id, 0, plan, now).unwrap_or(false)
+            let admitted = plan.admits_immediately()
+                && pool.execute_admission(r.id, 0, plan, now).unwrap_or(false);
+            let kind = if admitted { "kv-admit" } else { "kv-reject" };
+            rec.kv_instant(kind, now, r.id, pool.used_pages(), pool.total_pages());
+            admitted
         })
     }
 
@@ -234,6 +250,10 @@ impl SimServer {
                 let ready = swap.ensure_prefill(self.clock)?;
                 self.fsm.complete_swap(f64::MAX.min(ready)).ok();
                 self.metrics.reconfigurations.inc();
+                self.metrics.swaps_to_prefill.inc();
+                // Nothing runs while the prefill RM loads: fully exposed.
+                let lat = swap.device.reconfig_latency();
+                self.recorder.swap_span(self.clock, ready, false, lat, ready - self.clock);
                 self.clock = ready;
             }
         }
@@ -244,9 +264,11 @@ impl SimServer {
         for r in &batch {
             self.fsm.begin_prefill().ok();
             let pre = self.surface.prefill(r.prompt_len);
+            let start = self.clock;
             self.clock += pre.total;
             prefill_done.push(self.clock);
-            if !self.prefilled.insert(r.id) {
+            let first_pass = self.prefilled.insert(r.id);
+            if !first_pass {
                 // Second prefill of an evicted request: pure recompute tax.
                 self.metrics.recompute_overhead.record(pre.total);
             }
@@ -270,9 +292,57 @@ impl SimServer {
                     let ready = swap.trigger_decode_swap(trigger_abs)?;
                     let admit = swap.decode_admissible_at(self.clock, ready);
                     self.metrics.reconfigurations.inc();
-                    self.metrics.reconfig_exposed.record(admit - self.clock);
+                    self.metrics.swaps_to_decode.inc();
+                    let lat = swap.device.reconfig_latency();
+                    self.metrics.record_reconfig_exposure(lat, admit - self.clock);
+                    self.recorder.swap_span(
+                        trigger_abs,
+                        ready.max(trigger_abs),
+                        true,
+                        lat,
+                        admit - self.clock,
+                    );
                     self.clock = admit;
                     self.fsm.complete_swap(admit).ok();
+                }
+            }
+            if self.recorder.is_enabled() {
+                // The prefill timeline is analytic; the per-layer instants
+                // and the §3.4 trigger are interleaved so the request
+                // track stays ts-ordered.
+                if first_pass {
+                    self.recorder.request_queued(r.id, r.arrival.max(0.0).min(start), start);
+                }
+                self.recorder.prefill_span(r.id, start, pre.total, r.prompt_len, !first_pass);
+                let trig_ts = if is_last {
+                    self.overlap.as_ref().map(|ov| {
+                        let t = if self.cfg.overlap {
+                            ov.overlapped(&shape, r.prompt_len)
+                        } else {
+                            ov.sequential(&shape, r.prompt_len)
+                        };
+                        (start + t.trigger).min(start + pre.total)
+                    })
+                } else {
+                    None
+                };
+                let n_layers = shape.n_layers.max(1);
+                let mut layer = 1;
+                while layer < n_layers {
+                    let at = start + pre.total * layer as f64 / n_layers as f64;
+                    if trig_ts.is_some_and(|t| at > t) {
+                        break;
+                    }
+                    self.recorder.prefill_layer(r.id, at, layer);
+                    layer += 1;
+                }
+                if let Some(t) = trig_ts {
+                    self.recorder.trigger(r.id, t);
+                }
+                while layer < n_layers {
+                    let at = start + pre.total * layer as f64 / n_layers as f64;
+                    self.recorder.prefill_layer(r.id, at, layer);
+                    layer += 1;
                 }
             }
         }
@@ -356,6 +426,13 @@ impl SimServer {
                                 self.kv_pool
                                     .evict_at(vid, self.clock)
                                     .map_err(|e| anyhow::anyhow!("{e}"))?;
+                                self.recorder.kv_instant(
+                                    "kv-evict",
+                                    self.clock,
+                                    vid,
+                                    self.kv_pool.used_pages(),
+                                    self.kv_pool.total_pages(),
+                                );
                                 self.evicted_once.insert(vid);
                                 let j = active
                                     .iter()
@@ -396,12 +473,20 @@ impl SimServer {
                 let step =
                     self.surface.decode_step_batched_paged(&group_ctxs, page_tokens).total;
                 self.clock += step;
-                for &id in &group_ids {
+                for (gi, &id) in group_ids.iter().enumerate() {
                     let k = active
                         .iter()
                         .position(|a| a.req.id == id)
                         .expect("group member still active");
                     self.metrics.tpot.record(step);
+                    // Batched steps attributed to every member stream.
+                    self.recorder.decode_step(
+                        id,
+                        self.clock - step,
+                        step,
+                        group_ids.len(),
+                        group_ctxs[gi],
+                    );
                     active[k].ctx += 1;
                     active[k].tokens += 1;
                     self.kv_pool.touch(id, self.clock);
@@ -417,6 +502,13 @@ impl SimServer {
         self.kv_pool
             .complete(f.req.id)
             .map_err(|e| anyhow::anyhow!("completing request {}: {e}", f.req.id))?;
+        self.recorder.kv_instant(
+            "kv-release",
+            self.clock,
+            f.req.id,
+            self.kv_pool.used_pages(),
+            self.kv_pool.total_pages(),
+        );
         // First token comes out of prefill logits; TTFT counts queue +
         // prefill + exposed swap.
         let ttft = decode_start.max(f.prefill_done) - f.req.arrival;
@@ -735,6 +827,61 @@ mod tests {
         // Under pressure some generations were truncated.
         assert!(s.metrics.tokens_generated.get() < 4 * 96);
         s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tracing_is_bitwise_inert_and_traces_validate() {
+        let w = workload(6);
+        let mut off =
+            SimServer::new(SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())).unwrap();
+        off.run(w.clone()).unwrap();
+        let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+        cfg.trace = true;
+        let mut on = SimServer::new(cfg).unwrap();
+        on.run(w).unwrap();
+        assert_eq!(off.clock().to_bits(), on.clock().to_bits());
+        assert_eq!(
+            off.metrics.ttft.mean().to_bits(),
+            on.metrics.ttft.mean().to_bits()
+        );
+        assert_eq!(
+            off.metrics.tpot.mean().to_bits(),
+            on.metrics.tpot.mean().to_bits()
+        );
+        assert_eq!(off.outcomes.len(), on.outcomes.len());
+        for (a, b) in off.outcomes.iter().zip(&on.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+        }
+        assert!(off.recorder.is_empty());
+        let names: std::collections::HashSet<&'static str> =
+            on.recorder.events().iter().map(|e| e.name).collect();
+        for n in ["queued", "prefill", "layer", "trigger", "decode-step", "pcap-to-decode"] {
+            assert!(names.contains(n), "missing {n}");
+        }
+        crate::telemetry::validate_chrome_trace(&on.recorder.to_chrome_json()).unwrap();
+        // Byte-identical across a repeated run.
+        let rerun = || {
+            let mut cfg = SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone());
+            cfg.trace = true;
+            let mut s = SimServer::new(cfg).unwrap();
+            s.run(workload(6)).unwrap();
+            s.recorder.to_chrome_json().to_string()
+        };
+        assert_eq!(rerun(), rerun());
+    }
+
+    #[test]
+    fn sim_server_splits_swap_directions() {
+        let mut s =
+            SimServer::new(SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())).unwrap();
+        let m = s.run(workload(4)).unwrap();
+        assert_eq!(
+            m.reconfigurations.get(),
+            m.swaps_to_prefill.get() + m.swaps_to_decode.get()
+        );
+        assert!(m.swaps_to_decode.get() >= 4, "one decode swap per phase-batch");
+        assert!(m.reconfig_hidden_fraction() > 0.0, "§3.4 overlap hides some PCAP time");
     }
 
     #[test]

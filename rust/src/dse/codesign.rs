@@ -79,6 +79,7 @@ use crate::fpga::DeviceConfig;
 use crate::kvpool::{AdmissionControl, EvictionPolicy, PAGE_TOKENS_DEFAULT};
 use crate::model::{ModelShape, TraceSpec};
 use crate::reconfig::SwapPolicy;
+use crate::telemetry::TraceRecorder;
 use crate::util::json::Value;
 use crate::util::par::{default_threads, par_map};
 use crate::Result;
@@ -236,6 +237,12 @@ pub struct SweepCell {
     pub swaps: u64,
     pub exposed_s: f64,
     pub ttft_p95_s: f64,
+    /// Full [`MetricsRegistry`] snapshot of the cell's run
+    /// ([`crate::metrics::ServerMetrics::summary_json`]) — every named
+    /// counter/gauge/histogram, carried into `codesign --out`.
+    ///
+    /// [`MetricsRegistry`]: crate::metrics::MetricsRegistry
+    pub metrics: Value,
 }
 
 /// All cells for one trace, ranked best first.
@@ -383,6 +390,7 @@ impl CodesignReport {
                         ("reconfig_exposed_total_s".into(), Value::Num(c.exposed_s)),
                         ("ttft_p95_s".into(), Value::Num(c.ttft_p95_s)),
                         ("dse_objective".into(), Value::Num(c.objective)),
+                        ("metrics".into(), c.metrics.clone()),
                     ])
                 };
                 let ranked: Vec<Value> = t.ranked.iter().take(top).map(cell).collect();
@@ -536,6 +544,7 @@ fn simulate_cell(
         swaps: m.reconfigurations.get(),
         exposed_s: m.reconfig_exposed.mean() * m.reconfig_exposed.count() as f64,
         ttft_p95_s: m.ttft.quantile(0.95),
+        metrics: m.summary_json(),
     })
 }
 
@@ -725,6 +734,62 @@ pub fn run_codesign(sweep: &CodesignConfig) -> Result<CodesignReport> {
         pools: sweep.pools.iter().map(PoolVariant::label).collect(),
         traces,
     })
+}
+
+/// Re-run each trace's winning cell with the telemetry recorder enabled
+/// and return one Chrome-trace recorder per trace (`pd-swap codesign
+/// --trace-winners`). The replay is serial and derived purely from the
+/// report's (already thread-count-independent) ranking, so the emitted
+/// traces are byte-identical across runs and thread counts.
+pub fn trace_winners(
+    sweep: &CodesignConfig,
+    report: &CodesignReport,
+) -> Result<Vec<(String, TraceRecorder)>> {
+    let kernel = DseKernel::new(&sweep.dse);
+    let mut out = Vec::with_capacity(report.traces.len());
+    for (preset, outcome) in sweep.traces.iter().zip(&report.traces) {
+        let w = outcome.winner();
+        // SweepCells carry labels, not objects: resolve the winner's
+        // design / policy / pool back through the sweep's own axes.
+        let point = sweep
+            .dse
+            .grid()
+            .into_iter()
+            .map(|(t, p, d)| kernel.evaluate(t, p, d))
+            .find(|p| p.feasible && p.design.name == w.design)
+            .ok_or_else(|| anyhow!("winner design '{}' not on the sweep grid", w.design))?;
+        let policy = sweep
+            .policies
+            .iter()
+            .copied()
+            .find(|p| p.name() == w.policy)
+            .ok_or_else(|| anyhow!("winner policy '{}' not in the sweep", w.policy))?;
+        let pool = sweep
+            .pools
+            .iter()
+            .find(|p| p.label() == w.pool)
+            .ok_or_else(|| anyhow!("winner pool '{}' not in the sweep", w.pool))?;
+        let mut cfg = EventServerConfig::pd_swap(
+            sweep.dse.shape,
+            sweep.dse.device.clone(),
+            policy,
+        );
+        cfg.design = point.design;
+        // The winner's effective (already activation-clamped) batch.
+        cfg.decode_batch = w.decode_batch;
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_page_tokens(pool.page_tokens)
+            .with_policies(pool.admission, pool.eviction);
+        cfg.trace = true;
+        let mut srv = EventServer::new(cfg)
+            .map_err(|e| anyhow!("{}/{}: {e}", w.design, w.policy))?;
+        srv.run(requests_from_trace(&preset.spec.generate()))
+            .map_err(|e| anyhow!("{}/{}: {e}", w.design, w.policy))?;
+        out.push((outcome.trace.clone(), srv.recorder));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -995,5 +1060,45 @@ mod tests {
         let mixed = v.get("traces").unwrap().get("mixed").unwrap();
         assert!(mixed.get("winner").unwrap().get("design").is_some());
         assert!(mixed.get("top").unwrap().as_arr().unwrap().len() <= 3);
+    }
+
+    #[test]
+    fn report_cells_carry_metric_snapshots() {
+        // Every ranked cell ships its full MetricsRegistry snapshot into
+        // `codesign --out` — named counters, gauges, and histograms.
+        let report = run_codesign(&small_sweep()).unwrap();
+        let v = report.to_json(3);
+        let winner =
+            v.get("traces").unwrap().get("mixed").unwrap().get("winner").unwrap();
+        let m = winner.get("metrics").unwrap();
+        assert!(m.get("counters").unwrap().get("tokens_generated").is_some());
+        assert!(m.get("counters").unwrap().get("swaps_to_decode").is_some());
+        assert!(m.get("gauges").unwrap().get("reconfig_hidden_fraction").is_some());
+        assert!(m.get("histograms").unwrap().get("ttft").is_some());
+    }
+
+    #[test]
+    fn winner_traces_are_byte_identical_across_thread_counts() {
+        let mut a_cfg = small_sweep();
+        a_cfg.threads = 1;
+        let mut b_cfg = small_sweep();
+        b_cfg.threads = 4;
+        let a = run_codesign(&a_cfg).unwrap();
+        let b = run_codesign(&b_cfg).unwrap();
+        let ta = trace_winners(&a_cfg, &a).unwrap();
+        let tb = trace_winners(&b_cfg, &b).unwrap();
+        assert_eq!(ta.len(), 1);
+        for ((na, ra), (nb, rb)) in ta.iter().zip(&tb) {
+            assert_eq!(na, nb);
+            assert!(!ra.is_empty(), "winner replay must record spans");
+            assert!(ra.decision_count() >= 1, "policy decisions must be attributed");
+            let ja = ra.to_chrome_json();
+            crate::telemetry::validate_chrome_trace(&ja).unwrap();
+            assert_eq!(
+                ja.to_string(),
+                rb.to_chrome_json().to_string(),
+                "winner trace must not depend on sweep thread count"
+            );
+        }
     }
 }

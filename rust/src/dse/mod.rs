@@ -37,12 +37,14 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::bail;
 
 use crate::engines::{
     AcceleratorDesign, AttentionHosting, DecodeAttentionEngine, NormEngine,
-    PhaseModel, PrefillAttentionEngine, ScheduleQuality, SurfaceFactory, TlmmEngine,
+    PhaseModel, PrefillAttentionEngine, ScheduleQuality, SurfaceCache, SurfaceFactory,
+    TlmmEngine,
 };
 use crate::fpga::region::{validate_budget, PBLOCK_FILL_CEILING};
 use crate::fpga::{DeviceConfig, ResourceVec};
@@ -53,12 +55,17 @@ use crate::Result;
 pub mod codesign;
 
 pub use codesign::{
-    run_codesign, BatchFlip, CodesignConfig, CodesignReport, PoolFlip, PoolVariant,
-    SweepCell, TraceOutcome, TracePreset,
+    run_codesign, trace_winners, BatchFlip, CodesignConfig, CodesignReport, PoolFlip,
+    PoolVariant, SweepCell, TraceOutcome, TracePreset,
 };
 
 /// Runner-up list size carried in a [`DseResult`].
 pub const TOP_K: usize = 10;
+
+/// Page size the DSE pass keys its [`SurfaceFactory`] on. The DSE
+/// objective queries monolithic decode steps only; the paged bandwidth
+/// slot just needs *a* page size (32 = the KV-pool default).
+pub const DSE_PAGE_TOKENS: usize = 32;
 
 /// Exploration parameters (defaults = the paper's setup).
 #[derive(Debug, Clone)]
@@ -283,6 +290,11 @@ pub fn evaluate_grid_point(
 pub struct DseKernel {
     cfg: DseConfig,
     factory: SurfaceFactory,
+    /// Warm-start hook: a sweep-wide surface cache shared with other
+    /// explorations of the same (device, shape, page size). `None` (the
+    /// cold path) builds each surface directly from the factory; results
+    /// are bit-identical either way.
+    surfaces: Option<Arc<Mutex<SurfaceCache>>>,
     norm_res: ResourceVec,
     other_res: ResourceVec,
     /// The token debug-partition pblock a static design still reserves.
@@ -291,14 +303,32 @@ pub struct DseKernel {
 
 impl DseKernel {
     pub fn new(cfg: &DseConfig) -> Self {
-        // The DSE objective queries monolithic decode steps only; the
-        // paged bandwidth slot just needs *a* page size (32 = the KV-pool
-        // default).
-        let factory = SurfaceFactory::new(&cfg.device, &cfg.shape, 32);
+        let factory = SurfaceFactory::new(&cfg.device, &cfg.shape, DSE_PAGE_TOKENS);
+        Self::with_shared_opt(cfg, factory, None)
+    }
+
+    /// Warm-started kernel: reuse a pre-built [`SurfaceFactory`] and a
+    /// shared [`SurfaceCache`] across invocations — the same mechanism
+    /// `pd-swap codesign` uses for its serving pass, applied to the plain
+    /// grid exploration.
+    pub fn with_shared(
+        cfg: &DseConfig,
+        factory: SurfaceFactory,
+        surfaces: Arc<Mutex<SurfaceCache>>,
+    ) -> Self {
+        Self::with_shared_opt(cfg, factory, Some(surfaces))
+    }
+
+    fn with_shared_opt(
+        cfg: &DseConfig,
+        factory: SurfaceFactory,
+        surfaces: Option<Arc<Mutex<SurfaceCache>>>,
+    ) -> Self {
         let dummy = ResourceVec::ZERO.max(&ResourceVec::new(64.0, 128.0, 0.0, 0.0, 0.0));
         Self {
             cfg: cfg.clone(),
             factory,
+            surfaces,
             norm_res: NormEngine::PAPER.resources(),
             other_res: crate::engines::design::other_static(),
             static_dummy_pblock: dummy * (1.0 / PBLOCK_FILL_CEILING),
@@ -343,10 +373,30 @@ impl DseKernel {
                 objective: f64::INFINITY,
             };
         }
-        let surface = self.factory.surface(&design);
-        let t_pre = surface.prefill(cfg.l_prefill).total;
-        let t_dec_long = surface.decode_step(cfg.l_long).total;
-        let t_dec_short = surface.decode_step(cfg.l_short).total;
+        let (t_pre, t_dec_long, t_dec_short) = match &self.surfaces {
+            // Warm path: one construction per (design, page size) across
+            // every sharer of the cache; a miss is pure arithmetic, so
+            // the lock is held for nanoseconds.
+            Some(cache) => {
+                let s = cache
+                    .lock()
+                    .expect("surface cache poisoned")
+                    .get_with(&self.factory, &design);
+                (
+                    s.prefill(cfg.l_prefill).total,
+                    s.decode_step(cfg.l_long).total,
+                    s.decode_step(cfg.l_short).total,
+                )
+            }
+            None => {
+                let s = self.factory.surface(&design);
+                (
+                    s.prefill(cfg.l_prefill).total,
+                    s.decode_step(cfg.l_long).total,
+                    s.decode_step(cfg.l_short).total,
+                )
+            }
+        };
         finish_point(cfg, design, t_pre, t_dec_long, t_dec_short)
     }
 }
@@ -456,6 +506,25 @@ pub fn explore_serial(cfg: &DseConfig) -> Result<DseResult> {
 /// identical (bit for bit) for every `threads` value.
 pub fn explore_threads(cfg: &DseConfig, threads: usize) -> Result<DseResult> {
     let kernel = DseKernel::new(cfg);
+    let grid = cfg.grid();
+    let points = par_map(&grid, threads, |&(t, p, d)| kernel.evaluate(t, p, d));
+    reduce(cfg, points)
+}
+
+/// Warm-started [`explore`]: reuse a caller-owned [`SurfaceFactory`] and
+/// shared [`SurfaceCache`] (build the factory with [`DSE_PAGE_TOKENS`])
+/// instead of constructing them per call — the codesign warm-start
+/// applied to the plain `pd-swap dse` path, so repeated explorations of
+/// the same (device, shape) pay surface construction once. `threads == 0`
+/// means auto. Bit-identical to [`explore`].
+pub fn explore_with(
+    cfg: &DseConfig,
+    factory: &SurfaceFactory,
+    surfaces: &Arc<Mutex<SurfaceCache>>,
+    threads: usize,
+) -> Result<DseResult> {
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let kernel = DseKernel::with_shared(cfg, factory.clone(), Arc::clone(surfaces));
     let grid = cfg.grid();
     let points = par_map(&grid, threads, |&(t, p, d)| kernel.evaluate(t, p, d));
     reduce(cfg, points)
@@ -704,6 +773,31 @@ mod tests {
                     assert_eq!(a.design.name, b.design.name);
                     assert_eq!(a.objective.to_bits(), b.objective.to_bits());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_started_explore_matches_cold_bitwise() {
+        // The shared factory + cache path must be a pure performance
+        // optimization: identical best/top lists to the bit, and a second
+        // exploration through the same cache (all surfaces now warm) must
+        // replay the same result again.
+        let cfg = quick_cfg(AttentionHosting::Reconfigurable);
+        let cold = explore(&cfg).unwrap();
+        let factory = SurfaceFactory::new(&cfg.device, &cfg.shape, DSE_PAGE_TOKENS);
+        let surfaces = Arc::new(Mutex::new(SurfaceCache::new()));
+        for threads in [0, 1, 4] {
+            let warm = explore_with(&cfg, &factory, &surfaces, threads).unwrap();
+            assert_eq!(warm.explored, cold.explored);
+            assert_eq!(warm.feasible, cold.feasible);
+            assert_eq!(warm.best.design.name, cold.best.design.name);
+            assert_eq!(warm.best.objective.to_bits(), cold.best.objective.to_bits());
+            assert_eq!(warm.top.len(), cold.top.len());
+            for (a, b) in warm.top.iter().zip(&cold.top) {
+                assert_eq!(a.design.name, b.design.name);
+                assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+                assert_eq!(a.t_pre.to_bits(), b.t_pre.to_bits());
             }
         }
     }

@@ -67,6 +67,7 @@ pub mod model;
 pub mod reconfig;
 pub mod roofline;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result type.

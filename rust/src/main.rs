@@ -12,6 +12,8 @@
 //!                  [--pool-pages N] [--optimistic] [--evict]
 //! ```
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, Result};
 
 use pd_swap::coordinator::{
@@ -20,8 +22,11 @@ use pd_swap::coordinator::{
 };
 #[cfg(feature = "pjrt")]
 use pd_swap::coordinator::{LiveServer, LiveServerConfig};
-use pd_swap::dse::{explore, run_codesign, CodesignConfig, DseConfig, PoolVariant, TracePreset};
-use pd_swap::engines::{AcceleratorDesign, AttentionHosting};
+use pd_swap::dse::{
+    explore_with, run_codesign, trace_winners, CodesignConfig, DseConfig, PoolVariant,
+    TracePreset, DSE_PAGE_TOKENS,
+};
+use pd_swap::engines::{AcceleratorDesign, AttentionHosting, SurfaceCache, SurfaceFactory};
 use pd_swap::eval;
 use pd_swap::fpga::KV260;
 use pd_swap::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
@@ -60,7 +65,7 @@ USAGE:
                    [--decode-batch 1,4] [--admission worst-case,optimistic]
                    [--eviction keep,evict] [--page-size 32,64]
                    [--long-ctx N] [--l-long N] [--l-short N]
-                   [--alpha F] [--cold] [--out FILE]
+                   [--alpha F] [--cold] [--out FILE] [--trace-winners DIR]
                    joint (DSE grid x swap policy x decode batch x KV pool x
                    trace) sweep through the event-driven simulator; prints
                    the winning design+policy per traffic mix and whether
@@ -71,10 +76,17 @@ USAGE:
   pd-swap serve --artifacts DIR [--requests 8] [--gen 32] [--seed 0]
   pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]
                    [--pool-pages N] [--optimistic] [--evict] [--decode-batch B]
+                   [--trace-out FILE]
   pd-swap simulate --policy <eager|hysteresis|lookahead>   (event-driven core)
                    [--trace interactive|mixed|bursty] [--rate R] [--long-ctx N]
                    [--requests N] [--seed S] [--max-residents N]
-                   [--decode-batch B] [--log]";
+                   [--decode-batch B] [--trace-out FILE] [--log]
+
+  --trace-out FILE writes a deterministic Chrome trace-event JSON (load in
+  Perfetto / chrome://tracing) with per-request lifecycle spans, DPR swap
+  spans, KV-pool instants, and swap-policy decision records, plus a
+  per-request TTFT/TPOT breakdown table; codesign --trace-winners DIR
+  writes one such trace per per-trace winning cell.";
 
 fn info() -> Result<()> {
     let design = AcceleratorDesign::pd_swap();
@@ -158,7 +170,11 @@ fn run_dse(args: &Args) -> Result<()> {
         cfg.prefill_grid.len(),
         cfg.decode_grid.len()
     );
-    let res = explore(&cfg)?;
+    // One SurfaceFactory + shared SurfaceCache per CLI invocation — the
+    // codesign warm-start applied to the plain dse path.
+    let factory = SurfaceFactory::new(&cfg.device, &cfg.shape, DSE_PAGE_TOKENS);
+    let surfaces = Arc::new(Mutex::new(SurfaceCache::new()));
+    let res = explore_with(&cfg, &factory, &surfaces, 0)?;
     println!("explored {} candidates, {} feasible", res.explored, res.feasible);
     println!("best: {}", res.best.design.name);
     println!(
@@ -355,6 +371,18 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
         let path = pd_swap::util::bench::write_json_report(out, &report.to_json(10))?;
         println!("\nwrote {path}");
     }
+    if let Some(dir) = args.get("trace-winners") {
+        std::fs::create_dir_all(dir)?;
+        for (trace, rec) in trace_winners(&sweep, &report)? {
+            let path = format!("{dir}/trace-{trace}.json");
+            rec.write(&path)?;
+            println!(
+                "wrote winner trace for '{trace}': {path} ({} events, {} policy decisions)",
+                rec.len(),
+                rec.decision_count()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -461,7 +489,9 @@ fn serve(args: &Args) -> Result<()> {
 /// Continuous event-driven serving with a swap-scheduling policy
 /// (`--policy eager|hysteresis|lookahead`).
 fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
+    let trace_out = args.get("trace-out");
     let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+    cfg.trace = trace_out.is_some();
     if args.flag("no-overlap") {
         cfg.overlap = false;
     }
@@ -516,6 +546,18 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         server.metrics.tokens_generated.get() as f64 / server.clock().max(1e-9),
         server.metrics.decode_throughput(),
     );
+    if let Some(path) = trace_out {
+        server.recorder.write(path)?;
+        println!(
+            "\nper-request TTFT/TPOT breakdown:\n{}",
+            server.recorder.breakdown_table()
+        );
+        println!(
+            "wrote Chrome trace ({} events, {} policy decisions) to {path} — load in Perfetto (ui.perfetto.dev) or chrome://tracing",
+            server.recorder.len(),
+            server.recorder.decision_count()
+        );
+    }
     if args.flag("log") {
         println!("\nevent timeline ({} records):", server.event_log().len());
         for r in server.event_log() {
@@ -537,11 +579,13 @@ fn simulate(args: &Args) -> Result<()> {
              eager|hysteresis|lookahead for the event-driven core)"
         );
     }
+    let trace_out = args.get("trace-out");
     let mut cfg = if args.flag("static") {
         SimServerConfig::tellme_static(BITNET_0_73B, KV260.clone())
     } else {
         SimServerConfig::pd_swap(BITNET_0_73B, KV260.clone())
     };
+    cfg.trace = trace_out.is_some();
     if args.get_or("policy", "per-request") == "batched" {
         cfg.policy = Policy::BatchedPhases { max_batch: args.get_usize("max-batch", 8) };
     }
@@ -591,5 +635,16 @@ fn simulate(args: &Args) -> Result<()> {
         pool.stats.evicted,
         pool.stats.completed,
     );
+    if let Some(path) = trace_out {
+        server.recorder.write(path)?;
+        println!(
+            "\nper-request TTFT/TPOT breakdown:\n{}",
+            server.recorder.breakdown_table()
+        );
+        println!(
+            "wrote Chrome trace ({} events) to {path} — load in Perfetto (ui.perfetto.dev) or chrome://tracing",
+            server.recorder.len()
+        );
+    }
     Ok(())
 }

@@ -209,6 +209,10 @@ pub struct ServerMetrics {
     pub e2e: Histogram,
     /// Exposed (non-hidden) reconfiguration latency per swap.
     pub reconfig_exposed: Histogram,
+    /// Hidden (overlapped-with-compute) reconfiguration latency per swap
+    /// — the complement of [`Self::reconfig_exposed`] within each PCAP
+    /// load, the paper's §3.4 mechanism made visible as a metric.
+    pub reconfig_hidden: Histogram,
     /// Peak pages committed in the paged KV pool ([`crate::kvpool`]).
     pub kv_pool_high_water: Peak,
     /// Requests evicted from the KV pool (pages reclaimed, KV discarded).
@@ -223,7 +227,7 @@ pub struct ServerMetrics {
 impl ServerMetrics {
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} swaps={} (to-prefill {}, to-decode {})\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {}\n  kv-pool: high-water {} pages, evictions {}, capped admissions {}, recompute {:.1} ms total",
+            "requests={} tokens={} swaps={} (to-prefill {}, to-decode {})\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {} (hidden fraction {:.0}%)\n  kv-pool: high-water {} pages, evictions {}, capped admissions {}, recompute {:.1} ms total",
             self.requests_completed.get(),
             self.tokens_generated.get(),
             self.reconfigurations.get(),
@@ -233,6 +237,7 @@ impl ServerMetrics {
             self.tpot,
             self.e2e,
             self.reconfig_exposed,
+            self.reconfig_hidden_fraction() * 100.0,
             self.kv_pool_high_water.get(),
             self.kv_evictions.get(),
             self.kv_admissions_capped.get(),
@@ -244,6 +249,122 @@ impl ServerMetrics {
     pub fn decode_throughput(&self) -> f64 {
         let m = self.tpot.mean();
         if m == 0.0 { 0.0 } else { 1.0 / m }
+    }
+
+    /// Record one exposure-accounted PCAP load: `exposed` seconds
+    /// stalled serving, the remainder of `reconfig_latency` was hidden
+    /// behind concurrent compute (§3.4). Feeds both histograms so
+    /// [`Self::reconfig_hidden_fraction`] is a pure aggregate.
+    pub fn record_reconfig_exposure(&mut self, reconfig_latency: f64, exposed: f64) {
+        self.reconfig_exposed.record(exposed);
+        self.reconfig_hidden
+            .record((reconfig_latency - exposed).max(0.0).min(reconfig_latency.max(0.0)));
+    }
+
+    /// Aggregate fraction of exposure-accounted reconfiguration time
+    /// hidden behind compute: `hidden / (hidden + exposed)` over every
+    /// swap recorded via [`Self::record_reconfig_exposure`]; `0.0` when
+    /// no swap has been accounted yet.
+    pub fn reconfig_hidden_fraction(&self) -> f64 {
+        let hidden = self.reconfig_hidden.mean() * self.reconfig_hidden.count() as f64;
+        let exposed = self.reconfig_exposed.mean() * self.reconfig_exposed.count() as f64;
+        let total = hidden + exposed;
+        if total <= 0.0 { 0.0 } else { hidden / total }
+    }
+
+    /// The registry view: every metric under a stable name.
+    pub fn registry(&self) -> MetricsRegistry<'_> {
+        MetricsRegistry {
+            counters: vec![
+                ("requests_completed", &self.requests_completed),
+                ("tokens_generated", &self.tokens_generated),
+                ("reconfigurations", &self.reconfigurations),
+                ("swaps_to_prefill", &self.swaps_to_prefill),
+                ("swaps_to_decode", &self.swaps_to_decode),
+                ("kv_evictions", &self.kv_evictions),
+                ("kv_admissions_capped", &self.kv_admissions_capped),
+            ],
+            gauges: vec![
+                ("kv_pool_high_water_pages", self.kv_pool_high_water.get() as f64),
+                ("decode_throughput_tps", self.decode_throughput()),
+                ("reconfig_hidden_fraction", self.reconfig_hidden_fraction()),
+            ],
+            histograms: vec![
+                ("ttft", &self.ttft),
+                ("tpot", &self.tpot),
+                ("e2e", &self.e2e),
+                ("reconfig_exposed", &self.reconfig_exposed),
+                ("reconfig_hidden", &self.reconfig_hidden),
+                ("recompute_overhead", &self.recompute_overhead),
+            ],
+        }
+    }
+
+    /// JSON snapshot of the whole bundle — the per-cell metrics payload
+    /// `codesign --out` embeds. Shorthand for `registry().to_json()`.
+    pub fn summary_json(&self) -> crate::util::json::Value {
+        self.registry().to_json()
+    }
+}
+
+/// A named, uniform view over a metric bundle: counters, gauges, and
+/// histograms addressable by stable string names, with a deterministic
+/// JSON snapshot. Borrowing (not owning) keeps the hot path free of any
+/// registry bookkeeping — engines mutate plain [`ServerMetrics`] fields
+/// and the registry is materialized only at report time.
+#[derive(Debug)]
+pub struct MetricsRegistry<'m> {
+    pub counters: Vec<(&'static str, &'m Counter)>,
+    pub gauges: Vec<(&'static str, f64)>,
+    pub histograms: Vec<(&'static str, &'m Histogram)>,
+}
+
+impl MetricsRegistry<'_> {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, c)| c.get())
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.iter().find(|(n, _)| *n == name).map(|(_, h)| *h)
+    }
+
+    /// `{counters: {..}, gauges: {..}, histograms: {name: summary}}`,
+    /// insertion-ordered (hence byte-deterministic).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::Obj(vec![
+            (
+                "counters".into(),
+                Value::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(n, c)| ((*n).to_string(), Value::Num(c.get() as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges".into(),
+                Value::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(n, v)| ((*n).to_string(), Value::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms".into(),
+                Value::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(n, h)| ((*n).to_string(), h.summary_json()))
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -334,6 +455,56 @@ mod tests {
         m.swaps_to_decode.add(4);
         m.reconfigurations.add(7);
         assert!(m.report().contains("(to-prefill 3, to-decode 4)"));
+    }
+
+    #[test]
+    fn hidden_fraction_aggregates_per_swap_exposure() {
+        let mut m = ServerMetrics::default();
+        assert_eq!(m.reconfig_hidden_fraction(), 0.0);
+        // One fully hidden swap, one fully exposed, one 50/50.
+        m.record_reconfig_exposure(0.040, 0.0);
+        m.record_reconfig_exposure(0.040, 0.040);
+        m.record_reconfig_exposure(0.040, 0.020);
+        assert!((m.reconfig_hidden_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(m.reconfig_hidden.count(), 3);
+        assert!(m.report().contains("hidden fraction 50%"));
+    }
+
+    #[test]
+    fn record_reconfig_exposure_clamps_over_exposure() {
+        // A swap that waited behind an earlier PCAP load can report
+        // exposed > latency; hidden must clamp at zero, not go negative.
+        let mut m = ServerMetrics::default();
+        m.record_reconfig_exposure(0.040, 0.100);
+        assert_eq!(m.reconfig_hidden.max(), 0.0);
+        assert_eq!(m.reconfig_hidden_fraction(), 0.0);
+    }
+
+    #[test]
+    fn registry_names_every_metric() {
+        let mut m = ServerMetrics::default();
+        m.requests_completed.add(3);
+        m.tokens_generated.add(99);
+        m.ttft.record(0.5);
+        m.kv_pool_high_water.observe(17);
+        let r = m.registry();
+        assert_eq!(r.counter("requests_completed"), Some(3));
+        assert_eq!(r.counter("tokens_generated"), Some(99));
+        assert_eq!(r.counter("nonexistent"), None);
+        assert_eq!(r.gauge("kv_pool_high_water_pages"), Some(17.0));
+        assert_eq!(r.histogram("ttft").unwrap().count(), 1);
+        let v = m.summary_json();
+        assert_eq!(
+            v.get("counters").unwrap().get("tokens_generated").unwrap().as_f64(),
+            Some(99.0)
+        );
+        assert_eq!(
+            v.get("gauges").unwrap().get("reconfig_hidden_fraction").unwrap().as_f64(),
+            Some(0.0)
+        );
+        assert!(v.get("histograms").unwrap().get("tpot").is_some());
+        // Deterministic serialization.
+        assert_eq!(v.to_string(), m.summary_json().to_string());
     }
 
     #[test]

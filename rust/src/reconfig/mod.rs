@@ -20,7 +20,7 @@ use crate::model::ModelShape;
 
 pub mod policy;
 
-pub use policy::{round_trip_exposed, SwapOutlook, SwapPolicy};
+pub use policy::{round_trip_exposed, DecisionPoint, SwapOutlook, SwapPolicy};
 
 /// Names of the two attention RMs (shared with `AcceleratorDesign`).
 pub const RM_PREFILL: &str = "attn-prefill";

@@ -103,6 +103,27 @@ pub struct SwapOutlook {
     pub est_round_trip_exposed: f64,
 }
 
+/// The two contention points a policy arbitrates — used by telemetry to
+/// label decision records ([`SwapPolicy::decision_costs`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionPoint {
+    /// §3.4 prefill trigger: commit the decode swap, or keep the prefill
+    /// RM and serve more queued prompts first?
+    AtTrigger,
+    /// Between decode steps: interrupt decoding and yield the fabric to
+    /// waiting prompts?
+    MidDecode,
+}
+
+impl DecisionPoint {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecisionPoint::AtTrigger => "at-trigger",
+            DecisionPoint::MidDecode => "mid-decode",
+        }
+    }
+}
+
 /// When to move the reconfigurable attention slot between phases.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SwapPolicy {
@@ -206,6 +227,47 @@ impl SwapPolicy {
             SwapPolicy::Lookahead { amortize } => {
                 o.est_prefill_time >= amortize * o.est_round_trip_exposed.max(1e-9)
             }
+        }
+    }
+
+    /// The operands behind the two decision methods, exposed for
+    /// swap-decision telemetry attribution: `(in_favor, threshold)` such
+    /// that the policy swaps iff `in_favor >= threshold`. This replays
+    /// the exact arithmetic of [`Self::swap_to_decode_at_trigger`] /
+    /// [`Self::swap_to_prefill_mid_decode`] (the forced
+    /// nothing-left-to-prefill case included) without changing them —
+    /// consistency is pinned by the `decision_costs_match_decisions`
+    /// test. Units differ by policy (counts for Eager/Hysteresis,
+    /// seconds for Lookahead); the telemetry record carries the policy
+    /// name so consumers can interpret them.
+    pub fn decision_costs(&self, point: DecisionPoint, o: &SwapOutlook) -> (f64, f64) {
+        match point {
+            DecisionPoint::AtTrigger => {
+                if o.pending_prefill == 0 {
+                    return (1.0, 0.0); // forced: nothing more to prefill
+                }
+                match *self {
+                    SwapPolicy::Eager => (1.0, 0.0),
+                    SwapPolicy::Hysteresis { decode_backlog_tokens, .. } => (
+                        o.decode_pending_tokens as f64,
+                        decode_backlog_tokens.max(1) as f64,
+                    ),
+                    SwapPolicy::Lookahead { amortize } => (
+                        o.decode_pending_tokens as f64 * o.est_decode_step,
+                        amortize
+                            * (o.est_prefill_time + o.est_round_trip_exposed.max(1e-9)),
+                    ),
+                }
+            }
+            DecisionPoint::MidDecode => match *self {
+                SwapPolicy::Eager => (o.pending_prefill as f64, 1.0),
+                SwapPolicy::Hysteresis { prefill_backlog, .. } => {
+                    (o.pending_prefill as f64, prefill_backlog.max(1) as f64)
+                }
+                SwapPolicy::Lookahead { amortize } => {
+                    (o.est_prefill_time, amortize * o.est_round_trip_exposed.max(1e-9))
+                }
+            },
         }
     }
 }
@@ -316,6 +378,54 @@ mod tests {
         // And an empty queue always goes to decode.
         let empty = SwapOutlook { pending_prefill: 0, ..o };
         assert!(p.swap_to_decode_at_trigger(&empty));
+    }
+
+    #[test]
+    fn decision_costs_match_decisions() {
+        // The telemetry operands must agree with the live decisions
+        // (`swap ⟺ in_favor >= threshold`) on every policy at both
+        // decision points, across a grid that crosses every comparison's
+        // boundary in both directions.
+        let policies = [
+            SwapPolicy::Eager,
+            SwapPolicy::hysteresis_default(),
+            SwapPolicy::Hysteresis { prefill_backlog: 1, decode_backlog_tokens: 1 },
+            SwapPolicy::lookahead_default(),
+            SwapPolicy::Lookahead { amortize: 0.5 },
+        ];
+        let base = outlook();
+        for p in policies {
+            for pending_prefill in [0usize, 1, 2, 3, 5] {
+                for decode_pending_tokens in [0usize, 64, 4096, 9000] {
+                    for est_prefill_time in [0.01, 0.3, 3.0, 30.0] {
+                        let o = SwapOutlook {
+                            pending_prefill,
+                            decode_pending_tokens,
+                            est_prefill_time,
+                            ..base
+                        };
+                        let (lhs, rhs) = p.decision_costs(DecisionPoint::AtTrigger, &o);
+                        assert_eq!(
+                            lhs >= rhs,
+                            p.swap_to_decode_at_trigger(&o),
+                            "{p:?} at-trigger {o:?}"
+                        );
+                        let (lhs, rhs) = p.decision_costs(DecisionPoint::MidDecode, &o);
+                        assert_eq!(
+                            lhs >= rhs,
+                            p.swap_to_prefill_mid_decode(&o),
+                            "{p:?} mid-decode {o:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decision_point_names() {
+        assert_eq!(DecisionPoint::AtTrigger.name(), "at-trigger");
+        assert_eq!(DecisionPoint::MidDecode.name(), "mid-decode");
     }
 
     #[test]

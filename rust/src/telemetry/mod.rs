@@ -1,0 +1,739 @@
+//! Deterministic virtual-clock telemetry: phase-span tracing,
+//! swap-decision attribution, and Chrome-trace export.
+//!
+//! Both serving engines ([`crate::coordinator::events::EventServer`] and
+//! [`crate::coordinator::sim_server::SimServer`]) drive a
+//! [`TraceRecorder`] keyed to their deterministic virtual clock. The
+//! recorder captures four families of telemetry:
+//!
+//! * **Request lifecycle spans** (`cat = "request"`, one track per
+//!   request): `queued` (arrival → admission), `prefill` / `re-prefill`
+//!   (with per-layer `layer` instants and the §3.4 `trigger` instant),
+//!   and one `decode-step` span per generated token — batched steps are
+//!   attributed to *every* member stream, so a track reads as that
+//!   stream's own timeline.
+//! * **DPR swap spans** (`cat = "swap"`, the RP-region track): one span
+//!   per PCAP load, carrying the derived `hidden_fraction` — how much of
+//!   the reconfiguration latency was overlapped with concurrent compute,
+//!   the paper's §3.4 mechanism (`hidden_fraction(latency, exposed)`).
+//! * **KV-pool instants** (`cat = "kv"`): admit / reject / evict /
+//!   release with pool occupancy at that virtual instant.
+//! * **Swap-policy decision records** (`cat = "policy"`): at every
+//!   Eager/Hysteresis/Lookahead decision point, the full
+//!   [`SwapOutlook`] snapshot, the chosen action, and the policy's own
+//!   cost operands ([`SwapPolicy::decision_costs`]).
+//!
+//! **Determinism invariant:** every timestamp comes from the virtual
+//! clock and every record call sits on a deterministic engine code path,
+//! so the exported trace is *byte-identical* across runs and across
+//! `util::par` thread counts (pinned by tests). **Zero-overhead off
+//! path:** a disabled recorder ([`TraceRecorder::disabled`]) holds an
+//! empty `Vec` (no allocation) and every record method returns before
+//! touching it; the recorder only ever *reads* clock values, never feeds
+//! simulation arithmetic, so a disabled-recorder run is bitwise
+//! identical to a pre-telemetry run — the `hotpath_kernel`
+//! counting-allocator bench gates the off path at ~0 allocs/token.
+//!
+//! Export is Chrome trace-event JSON ([`TraceRecorder::to_chrome_json`],
+//! the `{"traceEvents": [...]}` format): load the file in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`. One process groups
+//! the request tracks, a second groups the engine tracks (fabric slot,
+//! RP region, KV pool, policy decisions).
+
+use std::fmt::Write as _;
+
+use crate::reconfig::{DecisionPoint, SwapOutlook, SwapPolicy};
+use crate::util::json::Value;
+
+/// Process id grouping the per-request tracks (`tid` = request id).
+pub const PID_REQUESTS: u32 = 1;
+/// Process id grouping the engine tracks below.
+pub const PID_ENGINE: u32 = 2;
+/// Engine track: the compute fabric slot (prefill/decode occupancy).
+pub const TID_FABRIC: u64 = 1;
+/// Engine track: the reconfigurable partition (PCAP swap spans).
+pub const TID_RP: u64 = 2;
+/// Engine track: KV-pool admit/reject/evict/release instants.
+pub const TID_KV_POOL: u64 = 3;
+/// Engine track: swap-policy decision records.
+pub const TID_POLICY: u64 = 4;
+
+/// One recorded event. Names and categories are `&'static str` and args
+/// are numbers or static strings, so recording never allocates per-field
+/// (only the containing `Vec`s grow, and only while enabled).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Chrome phase: `'X'` complete span, `'i'` instant.
+    pub ph: char,
+    /// Start (or instant) time, virtual seconds.
+    pub ts_s: f64,
+    /// Span duration, virtual seconds (`0.0` for instants).
+    pub dur_s: f64,
+    pub pid: u32,
+    pub tid: u64,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+/// Argument payload of a [`TraceEvent`].
+#[derive(Debug, Clone, Copy)]
+pub enum Arg {
+    Num(f64),
+    Str(&'static str),
+}
+
+impl Arg {
+    fn to_json(self) -> Value {
+        match self {
+            Arg::Num(n) => Value::Num(n),
+            Arg::Str(s) => Value::Str(s.to_string()),
+        }
+    }
+}
+
+/// The fraction of a PCAP load hidden behind concurrent compute — the
+/// paper's §3.4 overlap metric, derived from the *exposed* (stall) part
+/// the engines already account: `(latency − exposed) / latency`, clamped
+/// to `[0, 1]`. A zero/negative latency yields `0.0` (nothing to hide).
+pub fn hidden_fraction(reconfig_latency: f64, exposed: f64) -> f64 {
+    if reconfig_latency <= 0.0 {
+        return 0.0;
+    }
+    ((reconfig_latency - exposed).max(0.0) / reconfig_latency).min(1.0)
+}
+
+/// Span/instant recorder keyed to a serving engine's virtual clock.
+///
+/// Disabled by default everywhere: the engines construct one from their
+/// config's `trace` flag and every record method is a no-op branch when
+/// disabled. See the module docs for the span taxonomy and the
+/// determinism invariant.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    enabled: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    /// The inert recorder: no allocation, every record call is a single
+    /// predictable branch.
+    pub fn disabled() -> Self {
+        Self { enabled: false, events: Vec::new() }
+    }
+
+    pub fn enabled() -> Self {
+        Self { enabled: true, events: Vec::new() }
+    }
+
+    pub fn from_flag(trace: bool) -> Self {
+        if trace {
+            Self::enabled()
+        } else {
+            Self::disabled()
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Recorded policy decision records (`cat = "policy"`).
+    pub fn decision_count(&self) -> usize {
+        self.events.iter().filter(|e| e.cat == "policy").count()
+    }
+
+    // -- low-level records --------------------------------------------------
+
+    /// Record a complete span (`ph = 'X'`). Engines call this at the
+    /// moment the span's start AND duration are both known on the
+    /// virtual timeline (at scheduling, since event durations are
+    /// analytic), which keeps every track's emission order monotone in
+    /// `ts` — the well-formedness property `trace_check` validates.
+    pub fn span(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        pid: u32,
+        tid: u64,
+        start_s: f64,
+        dur_s: f64,
+        args: &[(&'static str, Arg)],
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push(TraceEvent {
+            name,
+            cat,
+            ph: 'X',
+            ts_s: start_s,
+            dur_s: dur_s.max(0.0),
+            pid,
+            tid,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Record an instant (`ph = 'i'`, thread scope).
+    pub fn instant(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        pid: u32,
+        tid: u64,
+        ts_s: f64,
+        args: &[(&'static str, Arg)],
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push(TraceEvent {
+            name,
+            cat,
+            ph: 'i',
+            ts_s,
+            dur_s: 0.0,
+            pid,
+            tid,
+            args: args.to_vec(),
+        });
+    }
+
+    // -- request lifecycle --------------------------------------------------
+
+    /// Queue wait: arrival → admission into prefill.
+    pub fn request_queued(&mut self, id: u64, arrival_s: f64, admitted_s: f64) {
+        self.span("queued", "request", PID_REQUESTS, id, arrival_s, admitted_s - arrival_s, &[]);
+    }
+
+    /// One prefill pass (`re-prefill` = post-eviction recompute).
+    pub fn prefill_span(
+        &mut self,
+        id: u64,
+        start_s: f64,
+        dur_s: f64,
+        prompt_tokens: usize,
+        recompute: bool,
+    ) {
+        let name = if recompute { "re-prefill" } else { "prefill" };
+        self.span(
+            name,
+            "request",
+            PID_REQUESTS,
+            id,
+            start_s,
+            dur_s,
+            &[("prompt_tokens", Arg::Num(prompt_tokens as f64))],
+        );
+    }
+
+    /// Per-layer prefill completion instant.
+    pub fn prefill_layer(&mut self, id: u64, ts_s: f64, layer: usize) {
+        self.instant(
+            "layer",
+            "request",
+            PID_REQUESTS,
+            id,
+            ts_s,
+            &[("layer", Arg::Num(layer as f64))],
+        );
+    }
+
+    /// The §3.4 final-layer-attention trigger instant.
+    pub fn trigger(&mut self, id: u64, ts_s: f64) {
+        self.instant("trigger", "request", PID_REQUESTS, id, ts_s, &[]);
+    }
+
+    /// One decode token-step, attributed to member stream `id` of a
+    /// batch of `batch` streams at context `ctx`.
+    pub fn decode_step(&mut self, id: u64, start_s: f64, dur_s: f64, batch: usize, ctx: usize) {
+        self.span(
+            "decode-step",
+            "request",
+            PID_REQUESTS,
+            id,
+            start_s,
+            dur_s,
+            &[("batch", Arg::Num(batch as f64)), ("ctx", Arg::Num(ctx as f64))],
+        );
+    }
+
+    // -- DPR swaps ----------------------------------------------------------
+
+    /// One PCAP load on the RP-region track, `start → ready`, with the
+    /// derived §3.4 overlap attribution: `exposed_s` is the part that
+    /// stalled serving, the rest was hidden behind concurrent compute.
+    pub fn swap_span(
+        &mut self,
+        start_s: f64,
+        ready_s: f64,
+        to_decode: bool,
+        reconfig_latency_s: f64,
+        exposed_s: f64,
+    ) {
+        let name = if to_decode { "pcap-to-decode" } else { "pcap-to-prefill" };
+        let hidden = hidden_fraction(reconfig_latency_s, exposed_s);
+        self.span(
+            name,
+            "swap",
+            PID_ENGINE,
+            TID_RP,
+            start_s,
+            ready_s - start_s,
+            &[
+                ("reconfig_latency_s", Arg::Num(reconfig_latency_s)),
+                ("exposed_s", Arg::Num(exposed_s)),
+                ("hidden_fraction", Arg::Num(hidden)),
+            ],
+        );
+    }
+
+    // -- KV pool ------------------------------------------------------------
+
+    /// KV-pool instant (`kv-admit` / `kv-reject` / `kv-evict` /
+    /// `kv-release`) with the pool occupancy at that virtual instant.
+    pub fn kv_instant(
+        &mut self,
+        name: &'static str,
+        ts_s: f64,
+        id: u64,
+        used_pages: usize,
+        total_pages: usize,
+    ) {
+        self.instant(
+            name,
+            "kv",
+            PID_ENGINE,
+            TID_KV_POOL,
+            ts_s,
+            &[
+                ("id", Arg::Num(id as f64)),
+                ("used_pages", Arg::Num(used_pages as f64)),
+                ("total_pages", Arg::Num(total_pages as f64)),
+            ],
+        );
+    }
+
+    // -- policy decisions ---------------------------------------------------
+
+    /// One swap-policy consultation: the full [`SwapOutlook`] snapshot,
+    /// the cost operands the policy compared
+    /// ([`SwapPolicy::decision_costs`]: swap ⟺ `in_favor >= threshold`),
+    /// and the action taken.
+    pub fn decision(
+        &mut self,
+        ts_s: f64,
+        policy: &SwapPolicy,
+        point: DecisionPoint,
+        o: &SwapOutlook,
+        swapped: bool,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let (in_favor, threshold) = policy.decision_costs(point, o);
+        self.instant(
+            point.name(),
+            "policy",
+            PID_ENGINE,
+            TID_POLICY,
+            ts_s,
+            &[
+                ("policy", Arg::Str(policy.name())),
+                ("action", Arg::Str(if swapped { "swap" } else { "stay" })),
+                ("in_favor", Arg::Num(in_favor)),
+                ("threshold", Arg::Num(threshold)),
+                ("pending_prefill", Arg::Num(o.pending_prefill as f64)),
+                ("pending_prefill_tokens", Arg::Num(o.pending_prefill_tokens as f64)),
+                ("est_prefill_time", Arg::Num(o.est_prefill_time)),
+                ("decode_ready", Arg::Num(o.decode_ready as f64)),
+                ("decode_pending_tokens", Arg::Num(o.decode_pending_tokens as f64)),
+                ("est_decode_step", Arg::Num(o.est_decode_step)),
+                ("reconfig_latency", Arg::Num(o.reconfig_latency)),
+                ("est_round_trip_exposed", Arg::Num(o.est_round_trip_exposed)),
+            ],
+        );
+    }
+
+    // -- export -------------------------------------------------------------
+
+    /// The Chrome trace-event document: `{"traceEvents": [...]}` with
+    /// metadata (process/thread names) leading, then every recorded
+    /// event in emission order, timestamps in microseconds. Serialization
+    /// is fully deterministic (insertion-ordered objects, deterministic
+    /// float formatting), so equal recordings produce equal bytes.
+    pub fn to_chrome_json(&self) -> Value {
+        let mut out: Vec<Value> = Vec::with_capacity(self.events.len() + 16);
+
+        // Metadata: name each process once and each track on first
+        // appearance (emission order, hence deterministic).
+        let mut seen: Vec<(u32, u64)> = Vec::new();
+        for e in &self.events {
+            if !seen.contains(&(e.pid, e.tid)) {
+                seen.push((e.pid, e.tid));
+            }
+        }
+        let mut seen_pids: Vec<u32> = Vec::new();
+        for &(pid, _) in &seen {
+            if !seen_pids.contains(&pid) {
+                seen_pids.push(pid);
+                let pname = match pid {
+                    PID_REQUESTS => "requests".to_string(),
+                    PID_ENGINE => "engine".to_string(),
+                    other => format!("process {other}"),
+                };
+                out.push(Value::Obj(vec![
+                    ("name".into(), Value::Str("process_name".into())),
+                    ("ph".into(), Value::Str("M".into())),
+                    ("pid".into(), Value::Num(pid as f64)),
+                    ("tid".into(), Value::Num(0.0)),
+                    (
+                        "args".into(),
+                        Value::Obj(vec![("name".into(), Value::Str(pname))]),
+                    ),
+                ]));
+            }
+        }
+        for &(pid, tid) in &seen {
+            let tname = match (pid, tid) {
+                (PID_REQUESTS, id) => format!("req {id}"),
+                (PID_ENGINE, TID_FABRIC) => "fabric".to_string(),
+                (PID_ENGINE, TID_RP) => "rp-region".to_string(),
+                (PID_ENGINE, TID_KV_POOL) => "kv-pool".to_string(),
+                (PID_ENGINE, TID_POLICY) => "swap-policy".to_string(),
+                (_, t) => format!("track {t}"),
+            };
+            out.push(Value::Obj(vec![
+                ("name".into(), Value::Str("thread_name".into())),
+                ("ph".into(), Value::Str("M".into())),
+                ("pid".into(), Value::Num(pid as f64)),
+                ("tid".into(), Value::Num(tid as f64)),
+                (
+                    "args".into(),
+                    Value::Obj(vec![("name".into(), Value::Str(tname))]),
+                ),
+            ]));
+        }
+
+        for e in &self.events {
+            let mut pairs: Vec<(String, Value)> = vec![
+                ("name".into(), Value::Str(e.name.into())),
+                ("cat".into(), Value::Str(e.cat.into())),
+                ("ph".into(), Value::Str(e.ph.to_string())),
+                ("ts".into(), Value::Num(e.ts_s * 1e6)),
+            ];
+            if e.ph == 'X' {
+                pairs.push(("dur".into(), Value::Num(e.dur_s * 1e6)));
+            }
+            pairs.push(("pid".into(), Value::Num(e.pid as f64)));
+            pairs.push(("tid".into(), Value::Num(e.tid as f64)));
+            if e.ph == 'i' {
+                pairs.push(("s".into(), Value::Str("t".into())));
+            }
+            if !e.args.is_empty() {
+                pairs.push((
+                    "args".into(),
+                    Value::Obj(
+                        e.args.iter().map(|(k, v)| ((*k).to_string(), v.to_json())).collect(),
+                    ),
+                ));
+            }
+            out.push(Value::Obj(pairs));
+        }
+
+        Value::Obj(vec![
+            ("traceEvents".into(), Value::Arr(out)),
+            ("displayTimeUnit".into(), Value::Str("ms".into())),
+        ])
+    }
+
+    /// Write the Chrome trace document to `path` (compact JSON — the
+    /// file is *not* wrapped in the bench `ReportEnvelope`; Perfetto
+    /// requires the trace object at top level, and byte-identity across
+    /// runs is part of the determinism contract).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json().to_string())
+    }
+
+    /// Per-request TTFT/TPOT breakdown derived from the recorded spans:
+    /// one row per request track in first-appearance order, splitting
+    /// time-to-first-token into queue wait, prefill compute, and swap
+    /// wait. Deterministic text (fixed-width, fixed precision).
+    pub fn breakdown_table(&self) -> String {
+        struct Row {
+            id: u64,
+            arrival: f64,
+            queued: f64,
+            prefill: f64,
+            prefill_end: f64,
+            first_decode_start: Option<f64>,
+            first_decode_end: Option<f64>,
+            decode_total: f64,
+            tokens: usize,
+        }
+        let mut rows: Vec<Row> = Vec::new();
+        for e in self.events.iter().filter(|e| e.pid == PID_REQUESTS) {
+            let idx = match rows.iter().position(|r| r.id == e.tid) {
+                Some(i) => i,
+                None => {
+                    rows.push(Row {
+                        id: e.tid,
+                        arrival: e.ts_s,
+                        queued: 0.0,
+                        prefill: 0.0,
+                        prefill_end: e.ts_s,
+                        first_decode_start: None,
+                        first_decode_end: None,
+                        decode_total: 0.0,
+                        tokens: 0,
+                    });
+                    rows.len() - 1
+                }
+            };
+            let r = &mut rows[idx];
+            r.arrival = r.arrival.min(e.ts_s);
+            match e.name {
+                "queued" => r.queued += e.dur_s,
+                "prefill" | "re-prefill" => {
+                    r.prefill += e.dur_s;
+                    r.prefill_end = r.prefill_end.max(e.ts_s + e.dur_s);
+                }
+                "decode-step" => {
+                    if r.first_decode_start.is_none() {
+                        r.first_decode_start = Some(e.ts_s);
+                        r.first_decode_end = Some(e.ts_s + e.dur_s);
+                    }
+                    r.decode_total += e.dur_s;
+                    r.tokens += 1;
+                }
+                _ => {}
+            }
+        }
+
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:>5} {:>10} {:>9} {:>10} {:>10} {:>10} {:>7} {:>9}",
+            "req", "arrival_s", "queue_s", "prefill_s", "swapwait_s", "ttft_s", "tokens", "tpot_ms"
+        );
+        for r in &rows {
+            let swap_wait = r
+                .first_decode_start
+                .map(|t| (t - r.prefill_end).max(0.0))
+                .unwrap_or(0.0);
+            let ttft = r.first_decode_end.unwrap_or(r.prefill_end) - r.arrival;
+            let tpot_ms = if r.tokens > 0 {
+                r.decode_total / r.tokens as f64 * 1e3
+            } else {
+                0.0
+            };
+            let _ = writeln!(
+                out,
+                "{:>5} {:>10.3} {:>9.3} {:>10.3} {:>10.3} {:>10.3} {:>7} {:>9.3}",
+                r.id, r.arrival, r.queued, r.prefill, swap_wait, ttft, r.tokens, tpot_ms
+            );
+        }
+        out
+    }
+}
+
+/// Validate a parsed Chrome trace-event document: the structural
+/// well-formedness `trace_check` (and CI) gates — a `traceEvents` array
+/// whose entries carry the required fields, every duration non-negative,
+/// every `'B'` matched by an `'E'` on its track, and timestamps monotone
+/// non-decreasing per `(pid, tid)` track in array order (metadata
+/// exempt). Shared by `examples/trace_check.rs` and the telemetry tests.
+pub fn validate_chrome_trace(doc: &Value) -> Result<usize, String> {
+    let Some(events) = doc.get("traceEvents").and_then(Value::as_arr) else {
+        return Err("missing traceEvents array".into());
+    };
+    // (pid, tid) → (last ts, open B-span depth)
+    let mut tracks: Vec<((f64, f64), (f64, usize))> = Vec::new();
+    let mut checked = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        if e.get("name").and_then(Value::as_str).is_none() {
+            return Err(format!("event {i}: missing name"));
+        }
+        let pid = e
+            .get("pid")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("event {i}: missing pid"))?;
+        let tid = e
+            .get("tid")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("event {i}: missing tid"))?;
+        if ph == "M" {
+            continue; // metadata carries no timestamp
+        }
+        let ts = e
+            .get("ts")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("event {i}: missing ts"))?;
+        let entry = match tracks.iter_mut().find(|(k, _)| *k == (pid, tid)) {
+            Some((_, state)) => state,
+            None => {
+                tracks.push(((pid, tid), (f64::NEG_INFINITY, 0)));
+                &mut tracks.last_mut().unwrap().1
+            }
+        };
+        if ts < entry.0 {
+            return Err(format!(
+                "event {i}: ts {ts} moves backwards on track ({pid}, {tid}) (last {})",
+                entry.0
+            ));
+        }
+        entry.0 = ts;
+        match ph {
+            "X" => {
+                let dur = e
+                    .get("dur")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| format!("event {i}: X without dur"))?;
+                if dur < 0.0 {
+                    return Err(format!("event {i}: negative dur {dur}"));
+                }
+            }
+            "B" => entry.1 += 1,
+            "E" => {
+                if entry.1 == 0 {
+                    return Err(format!("event {i}: E without open B on ({pid}, {tid})"));
+                }
+                entry.1 -= 1;
+            }
+            "i" | "I" => {}
+            other => return Err(format!("event {i}: unsupported ph '{other}'")),
+        }
+        checked += 1;
+    }
+    for ((pid, tid), (_, depth)) in &tracks {
+        if *depth != 0 {
+            return Err(format!("track ({pid}, {tid}): {depth} unclosed B span(s)"));
+        }
+    }
+    Ok(checked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outlook() -> SwapOutlook {
+        SwapOutlook {
+            pending_prefill: 2,
+            pending_prefill_tokens: 512,
+            est_prefill_time: 3.0,
+            decode_ready: 1,
+            decode_pending_tokens: 64,
+            est_decode_step: 0.05,
+            reconfig_latency: 0.045,
+            est_round_trip_exposed: 0.06,
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = TraceRecorder::disabled();
+        r.request_queued(1, 0.0, 1.0);
+        r.prefill_span(1, 1.0, 2.0, 64, false);
+        r.decode_step(1, 3.0, 0.04, 1, 65);
+        r.swap_span(2.9, 3.0, true, 0.045, 0.01);
+        r.kv_instant("kv-admit", 1.0, 1, 4, 100);
+        r.decision(3.0, &SwapPolicy::Eager, DecisionPoint::MidDecode, &outlook(), true);
+        assert!(r.is_empty());
+        assert_eq!(r.decision_count(), 0);
+        // The off path must not even have grown a buffer.
+        assert_eq!(r.events.capacity(), 0);
+    }
+
+    #[test]
+    fn hidden_fraction_clamps() {
+        assert_eq!(hidden_fraction(0.045, 0.0), 1.0);
+        assert_eq!(hidden_fraction(0.045, 0.045), 0.0);
+        assert!((hidden_fraction(0.045, 0.015) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(hidden_fraction(0.045, 0.09), 0.0); // over-exposed clamps
+        assert_eq!(hidden_fraction(0.0, 0.0), 0.0); // degenerate latency
+    }
+
+    #[test]
+    fn export_is_valid_and_deterministic() {
+        let mut r = TraceRecorder::enabled();
+        r.request_queued(3, 0.0, 0.5);
+        r.prefill_span(3, 0.5, 2.0, 128, false);
+        r.prefill_layer(3, 1.0, 1);
+        r.trigger(3, 2.3);
+        r.swap_span(2.3, 2.345, true, 0.045, 0.0);
+        r.decode_step(3, 2.5, 0.04, 2, 129);
+        r.kv_instant("kv-admit", 0.5, 3, 8, 100);
+        r.decision(2.3, &SwapPolicy::lookahead_default(), DecisionPoint::AtTrigger, &outlook(), true);
+        let doc = r.to_chrome_json();
+        let checked = validate_chrome_trace(&doc).expect("well-formed");
+        assert_eq!(checked, r.len());
+        assert_eq!(r.decision_count(), 1);
+        // Serialization is byte-deterministic.
+        assert_eq!(doc.to_string(), r.to_chrome_json().to_string());
+        // Round-trips through the parser.
+        let back = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert!(validate_chrome_trace(&back).is_ok());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        let bad = crate::util::json::parse(r#"{"traceEvents": 3}"#).unwrap();
+        assert!(validate_chrome_trace(&bad).is_err());
+        let backwards = crate::util::json::parse(
+            r#"{"traceEvents": [
+                {"name":"a","ph":"i","ts":5,"pid":1,"tid":1,"s":"t"},
+                {"name":"b","ph":"i","ts":4,"pid":1,"tid":1,"s":"t"}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&backwards).unwrap_err().contains("backwards"));
+        let unclosed = crate::util::json::parse(
+            r#"{"traceEvents": [{"name":"a","ph":"B","ts":1,"pid":1,"tid":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&unclosed).unwrap_err().contains("unclosed"));
+        let negdur = crate::util::json::parse(
+            r#"{"traceEvents": [{"name":"a","ph":"X","ts":1,"dur":-2,"pid":1,"tid":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&negdur).unwrap_err().contains("negative"));
+    }
+
+    #[test]
+    fn breakdown_table_splits_ttft() {
+        let mut r = TraceRecorder::enabled();
+        r.request_queued(7, 1.0, 2.0); // 1 s queued
+        r.prefill_span(7, 2.0, 3.0, 256, false); // prefill ends at 5.0
+        r.decode_step(7, 5.25, 0.05, 1, 257); // 0.25 s swap wait
+        r.decode_step(7, 5.30, 0.05, 1, 258);
+        let table = r.breakdown_table();
+        let row = table.lines().nth(1).expect("one data row");
+        let cols: Vec<&str> = row.split_whitespace().collect();
+        assert_eq!(cols[0], "7");
+        assert_eq!(cols[1], "1.000"); // arrival
+        assert_eq!(cols[2], "1.000"); // queue
+        assert_eq!(cols[3], "3.000"); // prefill
+        assert_eq!(cols[4], "0.250"); // swap wait
+        assert_eq!(cols[5], "4.300"); // ttft = first token end 5.3 − arrival 1.0
+        assert_eq!(cols[6], "2"); // tokens
+        assert_eq!(cols[7], "50.000"); // tpot ms
+    }
+}

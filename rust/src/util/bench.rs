@@ -99,14 +99,92 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Schema version of the [`envelope`] wrapper around every JSON report
+/// this crate writes (`BENCH_*.json`, `codesign --out`). Bump when the
+/// envelope's own layout changes, not when a report body does.
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// Best-effort git revision of the working tree, read directly from
+/// `.git/` (no subprocess): `HEAD` is followed through one `ref: `
+/// indirection, falling back to `packed-refs`. `None` outside a git
+/// checkout — reports stay writable anywhere.
+pub fn git_rev() -> Option<String> {
+    let head = std::fs::read_to_string(".git/HEAD").ok()?;
+    let head = head.trim();
+    let Some(r) = head.strip_prefix("ref: ") else {
+        // Detached HEAD: the file holds the commit hash itself.
+        return Some(head.to_string()).filter(|s| !s.is_empty());
+    };
+    let r = r.trim();
+    if let Ok(direct) = std::fs::read_to_string(format!(".git/{r}")) {
+        let direct = direct.trim();
+        if !direct.is_empty() {
+            return Some(direct.to_string());
+        }
+    }
+    let packed = std::fs::read_to_string(".git/packed-refs").ok()?;
+    packed
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.starts_with('^'))
+        .find_map(|l| match l.split_once(' ') {
+            Some((hash, name)) if name.trim() == r => Some(hash.to_string()),
+            _ => None,
+        })
+}
+
+/// FNV-1a (64-bit) over the body's compact serialization — the
+/// envelope's content fingerprint. Dependency-free and stable across
+/// platforms (the serializer is deterministic).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Wrap a report body in the versioned envelope (first slice of the
+/// ROADMAP's artifact-trending item): schema version, git revision when
+/// available, and a content hash of the body. Consumers that predate the
+/// envelope unwrap via [`report_body`], which also passes legacy
+/// documents through untouched.
+pub fn envelope(body: &crate::util::json::Value) -> crate::util::json::Value {
+    use crate::util::json::Value;
+    Value::Obj(vec![
+        ("schema_version".into(), Value::Num(REPORT_SCHEMA_VERSION as f64)),
+        (
+            "git_rev".into(),
+            git_rev().map(Value::Str).unwrap_or(Value::Null),
+        ),
+        (
+            "config_hash".into(),
+            Value::Str(format!("{:016x}", fnv1a(body.to_string().as_bytes()))),
+        ),
+        ("report".into(), body.clone()),
+    ])
+}
+
+/// The report body of a parsed document: unwraps the [`envelope`] when
+/// one is present (`schema_version` marks it), passes legacy documents
+/// through unchanged — so `bench_check` and `codesign_diff` accept both.
+pub fn report_body(v: &crate::util::json::Value) -> &crate::util::json::Value {
+    if v.get("schema_version").is_some() {
+        v.get("report").unwrap_or(v)
+    } else {
+        v
+    }
+}
+
 /// Write a machine-readable bench summary (the `BENCH_*.json` convention:
 /// one pretty-printed JSON document per bench binary, parsed by the
-/// regression tooling). Returns the path for the caller's report line.
+/// regression tooling), wrapped in the versioned [`envelope`]. Returns
+/// the path for the caller's report line.
 pub fn write_json_report<'p>(
     path: &'p str,
     v: &crate::util::json::Value,
 ) -> std::io::Result<&'p str> {
-    std::fs::write(path, v.to_pretty())?;
+    std::fs::write(path, envelope(v).to_pretty())?;
     Ok(path)
 }
 
@@ -303,8 +381,36 @@ mod tests {
         let path_s = path.to_str().unwrap();
         write_json_report(path_s, &v).unwrap();
         let back = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
-        assert_eq!(back.get("x").unwrap().as_f64(), Some(1.5));
+        // The written document is enveloped; the body round-trips through
+        // report_body.
+        assert_eq!(back.get("schema_version").unwrap().as_f64(), Some(1.0));
+        assert!(back.get("config_hash").unwrap().as_str().is_some());
+        let body = report_body(&back);
+        assert_eq!(body.get("x").unwrap().as_f64(), Some(1.5));
+        assert_eq!(body.get("bench").unwrap().as_str(), Some("unit"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn envelope_hashes_content_and_unwraps_both_formats() {
+        use crate::util::json::Value;
+        let a = Value::Obj(vec![("x".into(), Value::Num(1.0))]);
+        let b = Value::Obj(vec![("x".into(), Value::Num(2.0))]);
+        let ea = envelope(&a);
+        let eb = envelope(&b);
+        // Same body => same fingerprint; different body => different.
+        assert_eq!(
+            ea.get("config_hash").unwrap().as_str(),
+            envelope(&a).get("config_hash").unwrap().as_str()
+        );
+        assert_ne!(
+            ea.get("config_hash").unwrap().as_str(),
+            eb.get("config_hash").unwrap().as_str()
+        );
+        // Enveloped documents unwrap to the body; legacy ones pass
+        // through untouched.
+        assert_eq!(report_body(&ea).get("x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(report_body(&a).get("x").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]
