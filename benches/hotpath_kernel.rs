@@ -32,6 +32,14 @@
 //!   (designs × policies × batches × pool) grid's surfaces ≥ 3× faster
 //!   than cold per-cell construction.
 //!
+//! PR 7 addition — the **decode fast-forward gate**: a 40k-token
+//! long-decode trace must process ≥ 10× fewer queue events with
+//! `EventServerConfig::fast_forward` on than stepped (it is >100× in
+//! practice), with bit-identical virtual clocks and wall TPOT/TTFT, and
+//! exact skipped-step conservation (`stepped_equivalent == stepped`).
+//! The ratio is deterministic (no timing), so it hard-gates in smoke
+//! runs too; the wall-clock speedup rides along as an advisory number.
+//!
 //! Run: `cargo bench --bench hotpath_kernel` (CI adds `-- --smoke`)
 
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -44,7 +52,7 @@ use pd_swap::engines::{
     SurfaceFactory,
 };
 use pd_swap::fpga::KV260;
-use pd_swap::model::{TraceSpec, BITNET_0_73B};
+use pd_swap::model::{ModelShape, TraceSpec, BITNET_0_73B};
 use pd_swap::reconfig::SwapPolicy;
 use pd_swap::util::bench;
 use pd_swap::util::cli::Args;
@@ -393,6 +401,92 @@ fn main() {
         "B=4 decode hot path allocates ({allocs_b4:.4}/token) — scratch reuse or the tracing-off gate regressed"
     );
 
+    // -- decode fast-forward: 40k-token long-decode trace ------------------
+    bench::section("event fast-forward (40k-token decode, folded vs stepped)");
+    // The regime the analytic fast-forward exists for: one marathon
+    // 40k-token generation (a 40960-context variant of the paper shape so
+    // the sequence fits) plus a mid-run arrival that forces the fold to
+    // stop at its horizon, re-enter the stepped path for the prefill +
+    // two-stream stretch, and resume folding after the short request
+    // drains. The pool is enlarged to hold the 40k-token KV (≈1.3k pages
+    // at the default page size; the KV260 DDR budget would cap the
+    // sequence otherwise).
+    let shape_40k = ModelShape { max_seq: 40 * 1024, ..BITNET_0_73B };
+    let ff_workload = || -> Vec<Request> {
+        vec![
+            Request::synthetic(0, 256, 40_000, 0.0),
+            Request::synthetic(1, 128, 512, 30.0),
+        ]
+    };
+    let run_ff = |fast_forward: bool| -> EventServer {
+        let mut cfg = EventServerConfig::pd_swap(
+            shape_40k,
+            KV260.clone(),
+            SwapPolicy::hysteresis_default(),
+        );
+        cfg.decode_batch = 4;
+        cfg.fast_forward = fast_forward;
+        cfg.pool = cfg.pool.clone().with_total_pages(4096);
+        let mut srv = EventServer::new(cfg).expect("config must program");
+        srv.run(ff_workload()).expect("serving must not fail");
+        srv
+    };
+    let folded = run_ff(true);
+    let stepped = run_ff(false);
+    // Bit-identity is the admission ticket: a fast wrong fold is worthless.
+    assert_eq!(
+        folded.clock().to_bits(),
+        stepped.clock().to_bits(),
+        "fast-forward moved the virtual clock"
+    );
+    assert_eq!(
+        folded.metrics.tokens_generated.get(),
+        stepped.metrics.tokens_generated.get()
+    );
+    assert_eq!(
+        folded.metrics.tpot.mean().to_bits(),
+        stepped.metrics.tpot.mean().to_bits(),
+        "fast-forward moved the wall TPOT"
+    );
+    assert_eq!(
+        folded.metrics.ttft.mean().to_bits(),
+        stepped.metrics.ttft.mean().to_bits()
+    );
+    let events_ff = folded.events_processed();
+    let events_stepped = stepped.events_processed();
+    // Skipped-step conservation: every fold stands in for exactly the
+    // events the stepped run processed.
+    assert_eq!(
+        folded.fast_forward_stats().stepped_equivalent(events_ff),
+        events_stepped,
+        "fold accounting lost or invented events"
+    );
+    let events_skipped_ratio = events_stepped as f64 / events_ff.max(1) as f64;
+    println!(
+        "{} stepped events -> {} with fast-forward ({} folds, {} steps folded): {events_skipped_ratio:.1}x fewer events",
+        events_stepped,
+        events_ff,
+        folded.fast_forward_stats().folds,
+        folded.fast_forward_stats().steps,
+    );
+    // Hard gate (deterministic — no timing involved): the 40k-token trace
+    // must shrink by at least 10x. In practice it is >100x.
+    assert!(
+        events_skipped_ratio >= 10.0,
+        "fast-forward only cut events {events_skipped_ratio:.1}x (need >= 10x)"
+    );
+    let (ff_warm, ff_iters) = if smoke { (1, 3) } else { (1, 6) };
+    let s_ff_stepped = bench::run("EventServer 40k decode (stepped)", ff_warm, ff_iters, || {
+        std::hint::black_box(run_ff(false));
+    });
+    println!("{s_ff_stepped}");
+    let s_ff_folded = bench::run("EventServer 40k decode (fast-forward)", ff_warm, ff_iters, || {
+        std::hint::black_box(run_ff(true));
+    });
+    println!("{s_ff_folded}");
+    let ff_speedup = s_ff_stepped.mean.as_secs_f64() / s_ff_folded.mean.as_secs_f64();
+    println!("fast-forward wall-clock speedup: {ff_speedup:.1}x");
+
     // -- codesign warm-start: shared factories + cache vs cold per cell ----
     bench::section("codesign warm-start (factories + cache vs cold per-cell construction)");
     // The enlarged sweep's surface work: |designs| x |pages| distinct
@@ -502,6 +596,19 @@ fn main() {
                 ("uncached_ms".into(), Value::Num(s_ev4_direct.mean_ms())),
                 ("cached_ms".into(), Value::Num(s_ev4_surface.mean_ms())),
                 ("speedup".into(), Value::Num(ev4_speedup)),
+            ]),
+        ),
+        (
+            "event_fast_forward".into(),
+            Value::Obj(vec![
+                ("tokens".into(), Value::Num(folded.metrics.tokens_generated.get() as f64)),
+                ("virtual_clock_s".into(), Value::Num(folded.clock())),
+                ("events_stepped".into(), Value::Num(events_stepped as f64)),
+                ("events_ff".into(), Value::Num(events_ff as f64)),
+                ("events_skipped_ratio".into(), Value::Num(events_skipped_ratio)),
+                ("stepped_ms".into(), Value::Num(s_ff_stepped.mean_ms())),
+                ("ff_ms".into(), Value::Num(s_ff_folded.mean_ms())),
+                ("speedup".into(), Value::Num(ff_speedup)),
             ]),
         ),
         (

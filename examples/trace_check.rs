@@ -13,6 +13,12 @@
 //! decision record (cat `"policy"`) — the bench-smoke job passes it for
 //! the lookahead simulate run, where the policy must have weighed at
 //! least one swap. Exit status: 0 valid, 1 invalid, 2 unreadable input.
+//!
+//! Fast-forwarded traces (the default since the analytic decode fold
+//! landed) coalesce steady-state decode stretches into `decode-ff`
+//! spans; the validator checks those carry well-formed `args.k` /
+//! `args.step_s`, and the summary line reports how many folds the
+//! trace contains so CI logs show the coalescing at a glance.
 
 use std::process::ExitCode;
 
@@ -45,15 +51,29 @@ fn main() -> ExitCode {
         }
     };
 
-    let decisions = doc
-        .get("traceEvents")
-        .and_then(Value::as_arr)
+    let events = doc.get("traceEvents").and_then(Value::as_arr);
+    let decisions = events
         .map(|evs| {
             evs.iter()
                 .filter(|e| e.get("cat").and_then(Value::as_str) == Some("policy"))
                 .count()
         })
         .unwrap_or(0);
+    // Coalesced fast-forward spans and the token-steps they stand in for.
+    let (ff_spans, ff_tokens) = events
+        .map(|evs| {
+            evs.iter()
+                .filter(|e| e.get("name").and_then(Value::as_str) == Some("decode-ff"))
+                .fold((0usize, 0u64), |(n, k), e| {
+                    let steps = e
+                        .get("args")
+                        .and_then(|a| a.get("k"))
+                        .and_then(Value::as_f64)
+                        .unwrap_or(0.0) as u64;
+                    (n + 1, k + steps)
+                })
+        })
+        .unwrap_or((0, 0));
     if args.flag("require-decision") && decisions == 0 {
         eprintln!(
             "trace_check: {path}: INVALID: no swap-policy decision records \
@@ -63,7 +83,8 @@ fn main() -> ExitCode {
     }
 
     println!(
-        "trace_check: {path}: OK — {checked} events validated, {decisions} policy decisions"
+        "trace_check: {path}: OK — {checked} events validated, {decisions} policy decisions, \
+         {ff_spans} coalesced decode-ff spans ({ff_tokens} folded token-steps)"
     );
     ExitCode::SUCCESS
 }

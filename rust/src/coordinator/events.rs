@@ -91,6 +91,7 @@ use crate::reconfig::{
 };
 use crate::telemetry::TraceRecorder;
 
+use super::fastforward::{fits_before, member_step_bound, FastForwardStats};
 use super::fsm::{Phase, PhaseFsm};
 use super::request::{Request, RequestOutcome};
 use super::scheduler::{Policy, Scheduler};
@@ -207,6 +208,14 @@ impl EventQueue {
 
     pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
         self.heap.pop().map(|Reverse(e)| (e.at, e.ev))
+    }
+
+    /// Timestamp of the earliest queued event without popping it — the
+    /// fast-forward horizon: decode steps may be folded analytically only
+    /// while they finish strictly before this time (at a tie the queued
+    /// event's lower sequence number pops first, so the fold yields).
+    pub fn peek_at(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| e.at)
     }
 
     pub fn len(&self) -> usize {
@@ -326,6 +335,36 @@ pub struct EventServerConfig {
     /// allocation-free (gated by the `hotpath_kernel` counting-allocator
     /// bench).
     pub trace: bool,
+    /// Analytically fold steady-state decode stretches into one pass
+    /// instead of one queue event per token (see
+    /// [`super::fastforward`] and `docs/ARCHITECTURE.md` extension #7).
+    /// **Bit-identical** to the stepped path — clocks, TPOT/TTFT,
+    /// outcome order, eviction log, and metrics are unchanged (pinned by
+    /// `prop_fast_forward_matches_stepped`); only the diagnostic event
+    /// log and the Chrome trace coalesce (per-token `decode-step` spans
+    /// become one `decode-ff` span carrying `{k, step_s}`). Default on;
+    /// `simulate --no-fast-forward` is the escape hatch.
+    ///
+    /// ```
+    /// use pd_swap::coordinator::{EventServer, EventServerConfig, Request};
+    /// use pd_swap::fpga::KV260;
+    /// use pd_swap::model::BITNET_0_73B;
+    /// use pd_swap::reconfig::SwapPolicy;
+    ///
+    /// let run = |fast_forward: bool| {
+    ///     let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+    ///     cfg.fast_forward = fast_forward;
+    ///     let mut s = EventServer::new(cfg).unwrap();
+    ///     s.run(vec![Request::synthetic(0, 128, 64, 0.0)]).unwrap();
+    ///     (s.clock().to_bits(), s.events_processed(), s.fast_forward_stats().steps)
+    /// };
+    /// let (clock_ff, events_ff, skipped) = run(true);
+    /// let (clock_stepped, events_stepped, _) = run(false);
+    /// assert_eq!(clock_ff, clock_stepped); // bit-identical virtual clock
+    /// assert_eq!(events_ff + skipped, events_stepped); // every skip was one event
+    /// assert!(events_ff < events_stepped);
+    /// ```
+    pub fast_forward: bool,
 }
 
 impl EventServerConfig {
@@ -344,6 +383,7 @@ impl EventServerConfig {
             surface: None,
             assume_feasible: false,
             trace: false,
+            fast_forward: true,
         }
     }
 }
@@ -395,6 +435,11 @@ pub struct EventServer {
     evicted_once: HashSet<u64>,
     clock: f64,
     started: bool,
+    /// Queue events popped by [`Self::run`] (the `MAX_EVENTS` guard and
+    /// the fast-forward reduction's denominator).
+    events_processed: u64,
+    /// Fast-forward fold counters (`steps` = decode events skipped).
+    ff: FastForwardStats,
     log: Vec<EventRecord>,
     pub metrics: ServerMetrics,
     pub outcomes: Vec<RequestOutcome>,
@@ -472,6 +517,8 @@ impl EventServer {
             evicted_once: HashSet::new(),
             clock: 0.0,
             started: false,
+            events_processed: 0,
+            ff: FastForwardStats::default(),
             log: Vec::new(),
             metrics: ServerMetrics::default(),
             outcomes: Vec::new(),
@@ -491,6 +538,21 @@ impl EventServer {
     /// The event timeline (bounded; diagnostics only).
     pub fn event_log(&self) -> &[EventRecord] {
         &self.log
+    }
+
+    /// Queue events popped over the run. With fast-forward on, the
+    /// stepped engine would have processed
+    /// `fast_forward_stats().stepped_equivalent(events_processed())`
+    /// events for the same (bit-identical) result — the ratio the
+    /// `event_fast_forward` bench gates at ≥ 10×.
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Fast-forward fold counters (zero when `cfg.fast_forward` is off
+    /// or no steady-state stretch ever qualified).
+    pub fn fast_forward_stats(&self) -> FastForwardStats {
+        self.ff
     }
 
     // -- analytic kernel (surface-accelerated, bit-identical fallback) -----
@@ -579,10 +641,9 @@ impl EventServer {
         for r in workload {
             self.queue.push(r.arrival.max(0.0), SimEvent::Arrival(r));
         }
-        let mut processed = 0u64;
         while let Some((at, ev)) = self.queue.pop() {
-            processed += 1;
-            if processed > MAX_EVENTS {
+            self.events_processed += 1;
+            if self.events_processed > MAX_EVENTS {
                 bail!("event budget exceeded — serving livelock");
             }
             self.clock = self.clock.max(at);
@@ -821,6 +882,17 @@ impl EventServer {
                         if yield_fabric {
                             return self.begin_prefill_swap();
                         }
+                    }
+                    // Steady state (empty backlog, whole decode set
+                    // selected every step): fold whole token-steps
+                    // analytically before scheduling the next real one.
+                    // The fold is bit-identical to stepping, so falling
+                    // through to `try_schedule_step` afterwards resumes
+                    // the normal path at the fold's boundary (the
+                    // completing step, the pool-pressure step, or the
+                    // step that straddles the next queued event).
+                    if self.cfg.fast_forward {
+                        self.try_fast_forward()?;
                     }
                     if self.try_schedule_step()? {
                         return Ok(());
@@ -1078,6 +1150,158 @@ impl EventServer {
         }
         self.prefilling = Some(PrefillJob { req, done_at, swap_committed: false });
         Ok(true)
+    }
+
+    /// Analytic decode fast-forward (the [`EventServerConfig::fast_forward`]
+    /// gate; pure bounds in [`super::fastforward`], invariant + bitwise
+    /// argument in `docs/ARCHITECTURE.md` extension #7).
+    ///
+    /// Preconditions — the **steady-state invariant**. Any failure just
+    /// means the stepped path runs, so declining can never change a run:
+    /// * no step event in flight, nothing prefilling, and an **empty
+    ///   arrived backlog** (`backlog_n == 0` ⟺ the scheduler queue is
+    ///   empty, so `prefill_candidate_ready` stays false and the stepped
+    ///   equivalent makes no policy decision between steps);
+    /// * the whole decode set fits one batch (`len ≤ decode_batch`): the
+    ///   round-robin selection then picks the same members in the same
+    ///   order every step from the same start index;
+    /// * no member completes inside the fold
+    ///   ([`member_step_bound`]) — completion releases pages, may drain
+    ///   the set, and re-enters the Idle-phase decisions;
+    /// * every folded step finishes strictly before the next queued
+    ///   event ([`fits_before`]; ties yield to the queue's push-order
+    ///   tie-break) and its KV page growth fits the pool (dry-run
+    ///   against the real reservations) — arrivals, swaps, evictions,
+    ///   and capacity caps always run through the real queue.
+    ///
+    /// Within those bounds the fold replays [`Self::try_schedule_step`] +
+    /// [`Self::apply_token_step`]'s arithmetic in their exact order —
+    /// per-member `ensure_tokens`/TTFT anchor at schedule time, the
+    /// `clock + step` accumulation, per-member gap → TPOT sample → LRU
+    /// touch at completion time — so every float and counter lands
+    /// bit-identical, and only the per-token event machinery (heap
+    /// push/pop, dispatch, log records, per-token trace spans) is
+    /// skipped. Telemetry-enabled runs get one coalesced `decode-ff`
+    /// span per member instead of `k` `decode-step` spans.
+    fn try_fast_forward(&mut self) -> Result<()> {
+        let n = self.decode.len();
+        let b_max = self.cfg.decode_batch.max(1);
+        if n == 0
+            || n > b_max
+            || self.step_inflight
+            || self.prefilling.is_some()
+            || self.backlog_n != 0
+        {
+            return Ok(());
+        }
+        let shape = self.cfg.shape;
+        let min_rem =
+            self.decode.iter().map(|f| f.remaining(shape.max_seq)).min().unwrap_or(0);
+        let k_max = member_step_bound(min_rem);
+        if k_max == 0 {
+            return Ok(());
+        }
+        // The horizon is fixed for the whole fold: the fold pushes and
+        // pops nothing, so the earliest queued event cannot change.
+        let next_at = self.queue.peek_at();
+        // Frozen selection order: the stepped scheduler's first pick
+        // reduces the cursor mod len and later picks follow positionally,
+        // so with the whole set selected every step starts at `start` and
+        // walks the same rotation (`try_schedule_step` re-derives this
+        // per step; here it is hoisted).
+        let start = self.cursor % n;
+        let mut ctxs = std::mem::take(&mut self.batch_ctxs);
+        let t0 = self.clock;
+        let mut t = t0;
+        let mut k: usize = 0;
+        let mut step0 = 0.0f64;
+        while k < k_max {
+            ctxs.clear();
+            for j in 0..n {
+                ctxs.push(self.decode[(start + j) % n].ctx);
+            }
+            let step = self.decode_batch_total(&ctxs);
+            if !fits_before(t, step, next_at) {
+                break; // the next queued event interposes: step for real
+            }
+            // Dry-run this step's KV growth. If any member would exhaust
+            // the pool, the whole step — with its partial growth and
+            // eviction handling — belongs to the stepped path.
+            let mut extra_pages = 0usize;
+            for j in 0..n {
+                let f = &self.decode[(start + j) % n];
+                let need = self.cfg.pool.pages_for_tokens(f.ctx + 1);
+                let reserved =
+                    self.kv_pool.reserved_pages_of(f.req.id).unwrap_or(0);
+                extra_pages += need.saturating_sub(reserved);
+            }
+            if extra_pages > self.kv_pool.free_pages() {
+                break;
+            }
+            // Commit. Schedule-time effects first (KV growth + the TTFT
+            // anchor), exactly as the selection loop orders them ...
+            for j in 0..n {
+                let i = (start + j) % n;
+                let id = self.decode[i].req.id;
+                let next_tokens = self.decode[i].ctx + 1;
+                self.kv_pool
+                    .ensure_tokens(id, next_tokens, t)
+                    .map_err(|e| anyhow::anyhow!("kv grow (fast-forward): {e}"))?;
+                if self.decode[i].first_step.is_none() {
+                    self.decode[i].first_step = Some(t);
+                }
+            }
+            // ... then completion-time effects at `t + step`, member by
+            // member in selection order (the `apply_token_step` fold).
+            let done_at = t + step;
+            for j in 0..n {
+                let i = (start + j) % n;
+                let id = self.decode[i].req.id;
+                {
+                    let f = &mut self.decode[i];
+                    f.ctx += 1;
+                    f.tokens += 1;
+                    let anchor = f.last_token.or(f.first_step).unwrap_or(done_at);
+                    f.last_token = Some(done_at);
+                    let gap = (done_at - anchor).max(0.0);
+                    self.metrics.tpot.record(gap);
+                }
+                self.kv_pool.touch(id, done_at);
+            }
+            if k == 0 {
+                step0 = step;
+            }
+            t = done_at;
+            k += 1;
+        }
+        self.batch_ctxs = ctxs;
+        if k == 0 {
+            return Ok(());
+        }
+        self.clock = t;
+        // O(batch) outlook/bookkeeping for the K applied steps: the bulk
+        // twin of `apply_token_step`'s per-token decrement and cursor
+        // advance (the last applied member leaves `cursor = idx + 1`).
+        self.decode_rem_tokens = self.decode_rem_tokens.saturating_sub(k * n);
+        self.cursor = (start + n - 1) % n + 1;
+        self.ff.record_fold(k as u64);
+        if self.recorder.is_enabled() {
+            // One coalesced span per member instead of k per-token
+            // spans; entry context reconstructs as ctx − k.
+            for j in 0..n {
+                let f = &self.decode[(start + j) % n];
+                self.recorder.decode_fast_forward(
+                    f.req.id,
+                    t0,
+                    t - t0,
+                    k,
+                    n,
+                    f.ctx - k,
+                    step0,
+                );
+            }
+        }
+        Ok(())
     }
 
     /// The ONE decode scheduler: select up to `decode_batch` pool-resident
@@ -1879,5 +2103,217 @@ mod tests {
         let mut s = server(SwapPolicy::Eager);
         s.run(vec![Request::synthetic(0, 64, 4, 0.0)]).unwrap();
         assert!(s.run(vec![]).is_err());
+    }
+
+    /// Everything the fast-forward bit-identity contract pins, folded
+    /// into one comparable string: the virtual clock, every counter,
+    /// the latency histograms (count + mean/min/max/median bits), the
+    /// per-request outcome order and values, the pool's eviction log
+    /// and conservation stats. The diagnostic event log and the Chrome
+    /// trace are deliberately excluded — folds skip log records and
+    /// coalesce spans by design.
+    fn semantic_fingerprint(s: &EventServer) -> String {
+        use std::fmt::Write as _;
+        let m = &s.metrics;
+        let mut out = String::new();
+        let _ = writeln!(out, "clock {:x}", s.clock().to_bits());
+        let _ = writeln!(
+            out,
+            "counts {} {} {} {} {} {} {} {}",
+            m.requests_completed.get(),
+            m.tokens_generated.get(),
+            m.reconfigurations.get(),
+            m.swaps_to_prefill.get(),
+            m.swaps_to_decode.get(),
+            m.kv_evictions.get(),
+            m.kv_admissions_capped.get(),
+            m.kv_pool_high_water.get(),
+        );
+        for (name, h) in [
+            ("tpot", &m.tpot),
+            ("ttft", &m.ttft),
+            ("e2e", &m.e2e),
+            ("recompute", &m.recompute_overhead),
+        ] {
+            let _ = writeln!(
+                out,
+                "{name} {} {:x} {:x} {:x} {:x}",
+                h.count(),
+                h.mean().to_bits(),
+                h.min().to_bits(),
+                h.max().to_bits(),
+                h.quantile(0.5).to_bits(),
+            );
+        }
+        for o in &s.outcomes {
+            let _ = writeln!(
+                out,
+                "outcome {} {} {:x} {:x} {:x}",
+                o.id,
+                o.prompt_len,
+                o.ttft.to_bits(),
+                o.e2e.to_bits(),
+                o.mean_tpot.to_bits(),
+            );
+        }
+        for (at, id) in &s.pool().eviction_log {
+            let _ = writeln!(out, "evict {:x} {id}", at.to_bits());
+        }
+        let _ = writeln!(out, "pool {:?}", s.pool().stats);
+        out
+    }
+
+    fn run_ff(
+        policy: SwapPolicy,
+        batch: usize,
+        fast_forward: bool,
+        w: Vec<Request>,
+    ) -> EventServer {
+        let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+        cfg.decode_batch = batch;
+        cfg.fast_forward = fast_forward;
+        let mut s = EventServer::new(cfg).unwrap();
+        s.run(w).unwrap();
+        s
+    }
+
+    #[test]
+    fn fast_forward_is_bit_identical_under_contention() {
+        // The tentpole contract: flipping `fast_forward` must not move a
+        // single bit of the semantic surface, on a trace that exercises
+        // mid-decode arrivals, swaps, and every policy family.
+        for policy in [
+            SwapPolicy::Eager,
+            SwapPolicy::hysteresis_default(),
+            SwapPolicy::lookahead_default(),
+        ] {
+            for batch in [1usize, 4] {
+                let on = run_ff(policy, batch, true, contended_workload());
+                let off = run_ff(policy, batch, false, contended_workload());
+                assert_eq!(
+                    semantic_fingerprint(&on),
+                    semantic_fingerprint(&off),
+                    "{policy:?} B={batch}: fast-forward changed the timeline"
+                );
+                assert_eq!(off.fast_forward_stats().steps, 0);
+                // Every folded token-step stands in for exactly one
+                // stepped queue event — no more, no fewer.
+                assert_eq!(
+                    on.fast_forward_stats()
+                        .stepped_equivalent(on.events_processed()),
+                    off.events_processed(),
+                    "{policy:?} B={batch}: skipped-step accounting drifted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_forward_folds_long_decode_to_few_events() {
+        // One long generation with an empty backlog is the best case:
+        // all but the completing step fold into a handful of passes.
+        let w = vec![Request::synthetic(0, 128, 1024, 0.0)];
+        let on = run_ff(SwapPolicy::Eager, 1, true, w.clone());
+        let off = run_ff(SwapPolicy::Eager, 1, false, w);
+        assert_eq!(semantic_fingerprint(&on), semantic_fingerprint(&off));
+        let ff = on.fast_forward_stats();
+        assert!(ff.folds >= 1);
+        assert!(ff.steps >= 1000, "{ff:?}: nearly every step should fold");
+        let ratio = off.events_processed() as f64 / on.events_processed() as f64;
+        assert!(ratio >= 10.0, "only {ratio:.1}x fewer events");
+    }
+
+    #[test]
+    fn fast_forward_defers_to_pool_pressure() {
+        // Optimistic admission + tiny pool: decode growth hits
+        // `Exhausted` mid-run and evicts. The fold's dry-run must hand
+        // every pool-touching step to the stepped path so the eviction
+        // log, recompute accounting, and grow-denied stats come out
+        // identical either way.
+        let mk = |fast_forward: bool| {
+            let mut cfg =
+                EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+            cfg.decode_batch = 4;
+            cfg.fast_forward = fast_forward;
+            cfg.pool = cfg
+                .pool
+                .clone()
+                .with_total_pages(40)
+                .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+            let mut s = EventServer::new(cfg).unwrap();
+            let w: Vec<Request> =
+                (0..4).map(|i| Request::synthetic(i, 256, 96, 0.0)).collect();
+            s.run(w).unwrap();
+            s
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert!(off.metrics.kv_evictions.get() >= 1, "pressure must evict");
+        assert_eq!(semantic_fingerprint(&on), semantic_fingerprint(&off));
+    }
+
+    #[test]
+    fn fast_forward_trace_coalesces_decode_spans() {
+        // With tracing on, a fold emits one `decode-ff` span per member
+        // instead of hundreds of per-step spans; the trace still
+        // validates and the step-exact columns of the breakdown agree.
+        let mk = |fast_forward: bool| {
+            let mut cfg =
+                EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+            cfg.trace = true;
+            cfg.fast_forward = fast_forward;
+            let mut s = EventServer::new(cfg).unwrap();
+            s.run(vec![Request::synthetic(0, 128, 256, 0.0)]).unwrap();
+            s
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert_eq!(on.clock().to_bits(), off.clock().to_bits());
+        let n_ff = on
+            .recorder
+            .events()
+            .iter()
+            .filter(|e| e.name == "decode-ff")
+            .count();
+        assert!(n_ff >= 1, "the fold must record a coalesced span");
+        assert!(
+            on.recorder.len() < off.recorder.len(),
+            "coalescing must shrink the trace"
+        );
+        crate::telemetry::validate_chrome_trace(&on.recorder.to_chrome_json()).unwrap();
+        // TTFT and token columns are bit-exact by construction (the
+        // span carries the first step's exact duration); compare those.
+        let col = |table: &str, idx: usize| -> Vec<String> {
+            table
+                .lines()
+                .skip(1)
+                .map(|l| l.split_whitespace().nth(idx).unwrap().to_string())
+                .collect::<Vec<_>>()
+        };
+        let (ta, tb) = (on.recorder.breakdown_table(), off.recorder.breakdown_table());
+        assert_eq!(col(&ta, 5), col(&tb, 5), "ttft_s column diverged");
+        assert_eq!(col(&ta, 6), col(&tb, 6), "token column diverged");
+    }
+
+    #[test]
+    fn fast_forward_stops_short_of_queued_arrivals() {
+        // A second request lands mid-generation: the fold may only
+        // consume the gap strictly before that arrival, then the stepped
+        // path takes over so the mid-decode policy decision happens at
+        // exactly the stepped clock.
+        let w = vec![
+            Request::synthetic(0, 128, 512, 0.0),
+            Request::synthetic(1, 64, 16, 6.0),
+        ];
+        for policy in [SwapPolicy::Eager, SwapPolicy::lookahead_default()] {
+            let on = run_ff(policy, 1, true, w.clone());
+            let off = run_ff(policy, 1, false, w.clone());
+            assert_eq!(
+                semantic_fingerprint(&on),
+                semantic_fingerprint(&off),
+                "{policy:?}: arrival horizon broke bit-identity"
+            );
+            assert!(on.fast_forward_stats().steps > 0, "{policy:?}: nothing folded");
+        }
     }
 }

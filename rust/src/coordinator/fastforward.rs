@@ -1,0 +1,137 @@
+//! Analytic decode fast-forward: the pure bounds behind
+//! [`EventServer`](super::EventServer)'s O(events) → O(folds) skip.
+//!
+//! Between scheduling decisions the resident decode batch is in **steady
+//! state**: the same streams are selected in the same round-robin order
+//! every step, each step's duration is a closed form of the members'
+//! contexts ([`LatencySurface::decode_step_batched_paged`]), and nothing
+//! on the event queue interferes until the next *structural* event (an
+//! arrival, swap completion, prefill marker, or eviction). The event
+//! core exploits this by folding K whole token-steps into one pass —
+//! replaying the per-step arithmetic in the exact left-fold order the
+//! stepped path uses (so clocks, TPOT samples, and pool accounting stay
+//! **bit-identical**) while skipping the per-token event machinery
+//! (heap push/pop, dispatch, log append, pump re-entry).
+//!
+//! This module holds the pure, independently testable pieces: the
+//! member-exhaustion bound, the horizon predicate, and the fold's
+//! statistics. The fold itself lives in `events.rs` (it mutates the
+//! server's private state); `docs/ARCHITECTURE.md` extension #7 states
+//! the invariant and the bitwise argument in full.
+//!
+//! [`LatencySurface::decode_step_batched_paged`]: crate::engines::LatencySurface::decode_step_batched_paged
+
+/// How many whole token-steps can run before the earliest member of the
+/// decode set exhausts its token budget, given the minimum
+/// `InFlight::remaining` across the batch.
+///
+/// The bound is `min_remaining − 1`, **not** `min_remaining`: the step
+/// that completes a stream must run through the normal event path
+/// (completion removes the stream, releases its KV pages, may drain the
+/// decode set, and re-enters the swap-policy decision points), so the
+/// fold always stops one token short of the earliest finisher.
+///
+/// ```
+/// use pd_swap::coordinator::fastforward::member_step_bound;
+///
+/// assert_eq!(member_step_bound(100), 99); // 99 foldable, 100th completes a stream
+/// assert_eq!(member_step_bound(1), 0);    // next step finishes someone: no fold
+/// assert_eq!(member_step_bound(0), 0);    // saturating (empty/done set)
+/// ```
+pub fn member_step_bound(min_remaining: usize) -> usize {
+    min_remaining.saturating_sub(1)
+}
+
+/// Would a step of duration `step` starting at `clock` finish strictly
+/// before the next queued event at `next_at` (`None` = empty queue)?
+///
+/// Strict inequality is load-bearing: at an exact tie the queued event
+/// was pushed *earlier* (lower sequence number), so the stepped engine
+/// pops it **first** and the post-step pump sees its effects (an arrival
+/// joins the backlog, a swap settles). The fold therefore yields to the
+/// real queue at ties; anything else would reorder the tie-break that
+/// makes the event core deterministic.
+///
+/// ```
+/// use pd_swap::coordinator::fastforward::fits_before;
+///
+/// assert!(fits_before(10.0, 0.5, Some(11.0)));   // 10.5 < 11.0: fold on
+/// assert!(!fits_before(10.0, 1.0, Some(11.0)));  // exact tie: queue wins
+/// assert!(!fits_before(10.0, 2.0, Some(11.0)));  // event interposes
+/// assert!(fits_before(10.0, 1e9, None));         // empty queue: no horizon
+/// ```
+pub fn fits_before(clock: f64, step: f64, next_at: Option<f64>) -> bool {
+    match next_at {
+        Some(t) => clock + step < t,
+        None => true,
+    }
+}
+
+/// Counters for the fast-forward fold (diagnostics; deliberately kept
+/// out of [`ServerMetrics`](crate::coordinator::ServerMetrics) so
+/// metric bundles compare clean across `fast_forward` on/off).
+///
+/// `steps` counts *skipped events*: each folded token-step would have
+/// been exactly one `DecodeStepDone`/`DecodeBatchDone` on the queue, so
+/// the stepped-equivalent event count of a run is
+/// `events_processed + steps`.
+///
+/// ```
+/// use pd_swap::coordinator::fastforward::FastForwardStats;
+///
+/// let mut s = FastForwardStats::default();
+/// s.record_fold(99);
+/// s.record_fold(7);
+/// assert_eq!((s.folds, s.steps), (2, 106));
+/// assert_eq!(s.stepped_equivalent(34), 140); // 34 real events + 106 skipped
+/// ```
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FastForwardStats {
+    /// Fast-forward passes that applied at least one step.
+    pub folds: u64,
+    /// Token-steps applied inside folds (= decode events skipped).
+    pub steps: u64,
+}
+
+impl FastForwardStats {
+    /// Account one fold that applied `k` token-steps.
+    pub fn record_fold(&mut self, k: u64) {
+        self.folds += 1;
+        self.steps += k;
+    }
+
+    /// The event count the stepped engine would have processed for the
+    /// same run: every folded step maps back to exactly one queue event.
+    pub fn stepped_equivalent(&self, events_processed: u64) -> u64 {
+        events_processed + self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_bound_stops_one_short_of_the_finisher() {
+        assert_eq!(member_step_bound(2), 1);
+        assert_eq!(member_step_bound(usize::MAX), usize::MAX - 1);
+    }
+
+    #[test]
+    fn horizon_is_strict_at_ties() {
+        // The queued event's lower seq wins a tie in `EventQueue`; the
+        // predicate must mirror that by refusing the tie.
+        assert!(!fits_before(0.0, 1.0, Some(1.0)));
+        assert!(fits_before(0.0, 1.0 - f64::EPSILON, Some(1.0)));
+    }
+
+    #[test]
+    fn stats_add_up() {
+        let mut s = FastForwardStats::default();
+        assert_eq!(s.stepped_equivalent(5), 5); // no folds: identity
+        s.record_fold(0);
+        s.record_fold(3);
+        assert_eq!(s.folds, 2);
+        assert_eq!(s.stepped_equivalent(5), 8);
+    }
+}

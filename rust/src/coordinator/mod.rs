@@ -25,12 +25,17 @@
 //!   ([`crate::reconfig::SwapPolicy`]) arbitrating the single
 //!   reconfigurable attention slot under mixed traffic (our serving
 //!   extension; `EagerSwap` reproduces the paper's behavior).
+//! * [`fastforward`] — the pure bounds behind the event core's analytic
+//!   decode fast-forward: steady-state decode stretches are folded into
+//!   one pass, bit-identical to the stepped path but O(1) in events
+//!   (see `docs/ARCHITECTURE.md` extension #7).
 //! * [`live`] — the same coordinator logic driving *real* PJRT execution
 //!   of the AOT artifacts (tokens are real; FPGA timing is reported from
 //!   the simulator running in lockstep). Requires the `pjrt` cargo
 //!   feature (and an XLA installation).
 
 pub mod events;
+pub mod fastforward;
 pub mod fsm;
 #[cfg(feature = "pjrt")]
 pub mod live;
@@ -39,6 +44,7 @@ pub mod scheduler;
 pub mod sim_server;
 
 pub use events::{EventQueue, EventRecord, EventServer, EventServerConfig, SimEvent};
+pub use fastforward::FastForwardStats;
 pub use fsm::{Phase, PhaseFsm};
 #[cfg(feature = "pjrt")]
 pub use live::{LiveServer, LiveServerConfig};

@@ -94,7 +94,9 @@ pub struct TracePreset {
 }
 
 impl TracePreset {
-    /// Resolve a CLI preset name (`interactive` | `mixed` | `bursty`).
+    /// Resolve a CLI preset name (`interactive` | `mixed` | `bursty` |
+    /// `long` — the sparse long-generation trace where the event core's
+    /// decode fast-forward pays off most).
     pub fn by_name(
         name: &str,
         n_requests: usize,
@@ -106,6 +108,7 @@ impl TracePreset {
             "interactive" => TraceSpec::interactive(n_requests, rate, seed),
             "mixed" => TraceSpec::mixed_long_context(n_requests, rate, long_ctx, seed),
             "bursty" => TraceSpec::bursty(n_requests, seed),
+            "long" => TraceSpec::long_decode(n_requests, seed),
             _ => return None,
         };
         Some(TracePreset { name: name.to_string(), spec })
@@ -500,6 +503,9 @@ fn simulate_cell(
         policy,
     );
     cfg.design = point.design.clone();
+    // `pd_swap()` defaults keep the analytic decode fast-forward ON, so
+    // every sweep cell (and `trace_winners` below) inherits the event
+    // reduction — bit-identical clocks/metrics either way.
     // Clamp the requested batch by the design's activation headroom.
     let decode_batch = coord.requested_batch.min(coord.batch_cap).max(1);
     cfg.decode_batch = decode_batch;

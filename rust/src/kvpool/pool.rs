@@ -230,6 +230,16 @@ impl KvPool {
     }
 
     /// Tokens a resident may still grow to (admission cap).
+    /// Pages currently committed to resident `id` (None if not
+    /// resident). Lets callers dry-run [`Self::ensure_tokens`] growth —
+    /// the event core's decode fast-forward checks every folded step's
+    /// page demand against the real reservations before committing, so
+    /// pool-exhaustion steps (partial growth + eviction) always run
+    /// through the stepped path.
+    pub fn reserved_pages_of(&self, id: u64) -> Option<usize> {
+        self.residents.get(&id).map(|r| r.reserved)
+    }
+
     pub fn token_cap(&self, id: u64) -> Option<usize> {
         self.residents.get(&id).map(|r| r.token_cap)
     }

@@ -78,9 +78,15 @@ USAGE:
                    [--pool-pages N] [--optimistic] [--evict] [--decode-batch B]
                    [--trace-out FILE]
   pd-swap simulate --policy <eager|hysteresis|lookahead>   (event-driven core)
-                   [--trace interactive|mixed|bursty] [--rate R] [--long-ctx N]
+                   [--trace interactive|mixed|bursty|long] [--rate R] [--long-ctx N]
                    [--requests N] [--seed S] [--max-residents N]
-                   [--decode-batch B] [--trace-out FILE] [--log]
+                   [--decode-batch B] [--no-fast-forward]
+                   [--trace-out FILE] [--log]
+                   `long` is the sparse long-generation preset where the
+                   analytic decode fast-forward (default on; bit-identical
+                   to stepping) folds thousands of token-step events into
+                   a handful — the run prints the event-count reduction;
+                   --no-fast-forward steps every token for comparison
 
   --trace-out FILE writes a deterministic Chrome trace-event JSON (load in
   Perfetto / chrome://tracing) with per-request lifecycle spans, DPR swap
@@ -500,6 +506,9 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
     if cfg.decode_batch == 0 {
         bail!("--decode-batch must be >= 1 (1 = the paper's single-stream decode)");
     }
+    if args.flag("no-fast-forward") {
+        cfg.fast_forward = false;
+    }
     let pool = cfg.pool.clone();
     let pool = pool.with_total_pages(args.get_usize("pool-pages", pool.total_pages));
     let admission = if args.flag("optimistic") {
@@ -526,7 +535,8 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
             seed,
         ),
         "bursty" => TraceSpec::bursty(n, seed),
-        other => bail!("unknown trace '{other}' (try interactive|mixed|bursty)"),
+        "long" => TraceSpec::long_decode(n, seed),
+        other => bail!("unknown trace '{other}' (try interactive|mixed|bursty|long)"),
     };
     let entries = spec.generate();
     println!(
@@ -545,6 +555,19 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         server.clock(),
         server.metrics.tokens_generated.get() as f64 / server.clock().max(1e-9),
         server.metrics.decode_throughput(),
+    );
+    // Event-count reduction from the analytic decode fast-forward
+    // (bit-identical clocks/metrics either way; compare with
+    // --no-fast-forward).
+    let processed = server.events_processed();
+    let ff = server.fast_forward_stats();
+    let stepped_equiv = ff.stepped_equivalent(processed);
+    println!(
+        "events processed {processed} (stepped-equivalent {stepped_equiv}): \
+         {} fast-forward folds skipped {} token-step events ({:.1}x fewer events)",
+        ff.folds,
+        ff.steps,
+        stepped_equiv as f64 / processed.max(1) as f64,
     );
     if let Some(path) = trace_out {
         server.recorder.write(path)?;

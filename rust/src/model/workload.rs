@@ -324,6 +324,28 @@ impl TraceSpec {
         }
     }
 
+    /// Sparse long-generation traffic: short prompts, generations that
+    /// run for a thousand-plus tokens, arrivals far enough apart (fixed
+    /// low Poisson rate; the CLI rate knob is deliberately ignored, like
+    /// [`Self::bursty`]'s) that decode usually runs with an empty
+    /// backlog. This is the steady-state regime where the event core's
+    /// analytic fast-forward folds almost every token-step event — the
+    /// README's long-trace quickstart and the `event_fast_forward` bench
+    /// both draw from it. Generation stays within `BITNET_0_73B`'s 2048
+    /// sequence ceiling (prompt ≤ 256 + gen ≤ 1792).
+    pub fn long_decode(n_requests: usize, seed: u64) -> Self {
+        Self {
+            n_requests,
+            arrivals: ArrivalPattern::Poisson { rate: 0.004 },
+            mixture: vec![LengthClass {
+                weight: 1.0,
+                prompt: (64, 256),
+                gen: (1024, 1792),
+            }],
+            seed,
+        }
+    }
+
     /// Bursty short-request traffic (the §3.4 "multiple short-token
     /// requests" scenario): quiet baseline with periodic arrival storms.
     pub fn bursty(n_requests: usize, seed: u64) -> Self {

@@ -271,6 +271,45 @@ impl TraceRecorder {
         );
     }
 
+    /// A fast-forwarded decode stretch: `k` token-steps of member stream
+    /// `id` (of a batch of `batch` streams, entering at context `ctx`)
+    /// folded analytically into one span — the coalesced form of `k`
+    /// consecutive [`Self::decode_step`] spans. `step0_s` is the exact
+    /// duration of the first folded step (the TTFT-relevant one;
+    /// per-step durations grow with context, so `step_s` in the args is
+    /// the mean `dur/k`). Emitted per member at the fold's end with the
+    /// fold's entry timestamp — per-track `ts` order stays monotone
+    /// because the fold emits nothing else in between.
+    pub fn decode_fast_forward(
+        &mut self,
+        id: u64,
+        start_s: f64,
+        dur_s: f64,
+        k: usize,
+        batch: usize,
+        ctx: usize,
+        step0_s: f64,
+    ) {
+        if k == 0 {
+            return;
+        }
+        self.span(
+            "decode-ff",
+            "request",
+            PID_REQUESTS,
+            id,
+            start_s,
+            dur_s,
+            &[
+                ("k", Arg::Num(k as f64)),
+                ("step_s", Arg::Num(dur_s / k as f64)),
+                ("step0_s", Arg::Num(step0_s)),
+                ("batch", Arg::Num(batch as f64)),
+                ("ctx", Arg::Num(ctx as f64)),
+            ],
+        );
+    }
+
     // -- DPR swaps ----------------------------------------------------------
 
     /// One PCAP load on the RP-region track, `start → ready`, with the
@@ -519,6 +558,35 @@ impl TraceRecorder {
                     r.decode_total += e.dur_s;
                     r.tokens += 1;
                 }
+                // Coalesced fast-forward stretch: k tokens in one span.
+                // The first folded step's exact duration rides in
+                // `step0_s`, so the TTFT split stays step-accurate.
+                "decode-ff" => {
+                    let k = e
+                        .args
+                        .iter()
+                        .find(|(n, _)| *n == "k")
+                        .and_then(|(_, a)| match a {
+                            Arg::Num(v) => Some(*v as usize),
+                            _ => None,
+                        })
+                        .unwrap_or(1);
+                    let step0 = e
+                        .args
+                        .iter()
+                        .find(|(n, _)| *n == "step0_s")
+                        .and_then(|(_, a)| match a {
+                            Arg::Num(v) => Some(*v),
+                            _ => None,
+                        })
+                        .unwrap_or(e.dur_s / k.max(1) as f64);
+                    if r.first_decode_start.is_none() {
+                        r.first_decode_start = Some(e.ts_s);
+                        r.first_decode_end = Some(e.ts_s + step0);
+                    }
+                    r.decode_total += e.dur_s;
+                    r.tokens += k;
+                }
                 _ => {}
             }
         }
@@ -555,7 +623,10 @@ impl TraceRecorder {
 /// whose entries carry the required fields, every duration non-negative,
 /// every `'B'` matched by an `'E'` on its track, and timestamps monotone
 /// non-decreasing per `(pid, tid)` track in array order (metadata
-/// exempt). Shared by `examples/trace_check.rs` and the telemetry tests.
+/// exempt). Coalesced fast-forward spans (`decode-ff`) additionally
+/// must carry numeric `args.k ≥ 1` and `args.step_s ≥ 0` — the token
+/// count and mean step a fold stands in for. Shared by
+/// `examples/trace_check.rs` and the telemetry tests.
 pub fn validate_chrome_trace(doc: &Value) -> Result<usize, String> {
     let Some(events) = doc.get("traceEvents").and_then(Value::as_arr) else {
         return Err("missing traceEvents array".into());
@@ -568,9 +639,10 @@ pub fn validate_chrome_trace(doc: &Value) -> Result<usize, String> {
             .get("ph")
             .and_then(Value::as_str)
             .ok_or_else(|| format!("event {i}: missing ph"))?;
-        if e.get("name").and_then(Value::as_str).is_none() {
-            return Err(format!("event {i}: missing name"));
-        }
+        let name = e
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("event {i}: missing name"))?;
         let pid = e
             .get("pid")
             .and_then(Value::as_f64)
@@ -608,6 +680,30 @@ pub fn validate_chrome_trace(doc: &Value) -> Result<usize, String> {
                     .ok_or_else(|| format!("event {i}: X without dur"))?;
                 if dur < 0.0 {
                     return Err(format!("event {i}: negative dur {dur}"));
+                }
+                if name == "decode-ff" {
+                    // A coalesced fold must say what it stands in for.
+                    let args = e.get("args");
+                    let k = args
+                        .and_then(|a| a.get("k"))
+                        .and_then(Value::as_f64)
+                        .ok_or_else(|| {
+                            format!("event {i}: decode-ff without numeric args.k")
+                        })?;
+                    let step_s = args
+                        .and_then(|a| a.get("step_s"))
+                        .and_then(Value::as_f64)
+                        .ok_or_else(|| {
+                            format!("event {i}: decode-ff without numeric args.step_s")
+                        })?;
+                    if k < 1.0 {
+                        return Err(format!("event {i}: decode-ff with k {k} < 1"));
+                    }
+                    if step_s < 0.0 {
+                        return Err(format!(
+                            "event {i}: decode-ff with negative step_s {step_s}"
+                        ));
+                    }
                 }
             }
             "B" => entry.1 += 1,
@@ -715,6 +811,88 @@ mod tests {
         )
         .unwrap();
         assert!(validate_chrome_trace(&negdur).unwrap_err().contains("negative"));
+    }
+
+    #[test]
+    fn coalesced_fast_forward_span_validates() {
+        let mut r = TraceRecorder::enabled();
+        r.request_queued(4, 0.0, 0.5);
+        r.prefill_span(4, 0.5, 2.0, 128, false);
+        // 99 folded steps in one span, then the completing step.
+        r.decode_fast_forward(4, 2.5, 4.95, 99, 1, 129, 0.05);
+        r.decode_step(4, 7.45, 0.05, 1, 228);
+        let doc = r.to_chrome_json();
+        let checked = validate_chrome_trace(&doc).expect("well-formed");
+        assert_eq!(checked, r.len());
+        // Round-trips through the parser with args intact.
+        let back = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert!(validate_chrome_trace(&back).is_ok());
+        // A zero-step fold records nothing at all.
+        let before = r.len();
+        r.decode_fast_forward(4, 7.5, 0.0, 0, 1, 228, 0.0);
+        assert_eq!(r.len(), before);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_fast_forward_spans() {
+        // decode-ff without args.k
+        let no_k = crate::util::json::parse(
+            r#"{"traceEvents": [
+                {"name":"decode-ff","ph":"X","ts":1,"dur":2,"pid":1,"tid":1,
+                 "args":{"step_s":0.05}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&no_k).unwrap_err().contains("args.k"));
+        // decode-ff without args.step_s
+        let no_step = crate::util::json::parse(
+            r#"{"traceEvents": [
+                {"name":"decode-ff","ph":"X","ts":1,"dur":2,"pid":1,"tid":1,
+                 "args":{"k":40}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&no_step).unwrap_err().contains("args.step_s"));
+        // k < 1 is meaningless for a coalesced span
+        let zero_k = crate::util::json::parse(
+            r#"{"traceEvents": [
+                {"name":"decode-ff","ph":"X","ts":1,"dur":2,"pid":1,"tid":1,
+                 "args":{"k":0,"step_s":0.05}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&zero_k).unwrap_err().contains("k 0 < 1"));
+        // negative mean step
+        let neg_step = crate::util::json::parse(
+            r#"{"traceEvents": [
+                {"name":"decode-ff","ph":"X","ts":1,"dur":2,"pid":1,"tid":1,
+                 "args":{"k":4,"step_s":-0.05}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&neg_step).unwrap_err().contains("negative step_s"));
+    }
+
+    #[test]
+    fn breakdown_table_counts_coalesced_folds() {
+        // The same timeline once stepped, once coalesced: the breakdown
+        // must agree on every column (the fold carries the first step's
+        // exact duration, so even the TTFT split is step-accurate).
+        let mut stepped = TraceRecorder::enabled();
+        stepped.request_queued(9, 1.0, 2.0);
+        stepped.prefill_span(9, 2.0, 3.0, 256, false);
+        stepped.decode_step(9, 5.25, 0.05, 1, 257);
+        stepped.decode_step(9, 5.30, 0.05, 1, 258);
+        stepped.decode_step(9, 5.35, 0.05, 1, 259);
+        stepped.decode_step(9, 5.40, 0.05, 1, 260);
+        let mut folded = TraceRecorder::enabled();
+        folded.request_queued(9, 1.0, 2.0);
+        folded.prefill_span(9, 2.0, 3.0, 256, false);
+        // Three folded steps in one span + the completing stepped one.
+        folded.decode_fast_forward(9, 5.25, 0.15, 3, 1, 257, 0.05);
+        folded.decode_step(9, 5.40, 0.05, 1, 260);
+        assert_eq!(stepped.breakdown_table(), folded.breakdown_table());
+        assert!(folded.len() < stepped.len());
     }
 
     #[test]

@@ -3,14 +3,15 @@
 //! mini-framework; proptest is unavailable offline).
 
 use pd_swap::coordinator::{
-    EventServer, EventServerConfig, Policy, Request, Scheduler, SimServer, SimServerConfig,
+    requests_from_trace, EventServer, EventServerConfig, Policy, Request, Scheduler, SimServer,
+    SimServerConfig,
 };
 use pd_swap::dse::{evaluate_grid_point, explore_threads, DseConfig, DseKernel};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
 use pd_swap::fpga::{ResourceVec, KV260};
 use pd_swap::kvpool::{AdmissionControl, AdmissionDecision, EvictionPolicy, KvPool, KvPoolConfig};
 use pd_swap::memory::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
-use pd_swap::model::BITNET_0_73B;
+use pd_swap::model::{TraceSpec, BITNET_0_73B};
 use pd_swap::reconfig::{OverlapScheduler, SwapPolicy};
 use pd_swap::util::prop::{check, Config};
 use pd_swap::util::rng::Rng;
@@ -994,6 +995,181 @@ fn prop_sim_server_pool_conservation() {
             }
             Ok(())
         },
+    );
+}
+
+/// Shared fingerprint for the fast-forward equivalence pin: everything
+/// the contract covers — virtual clock, counters, latency histograms,
+/// outcome order and values, the pool's eviction log and stats — folded
+/// into one comparable string of bit patterns. The diagnostic event log
+/// and the Chrome trace are deliberately outside the contract (folds
+/// skip log records and coalesce spans by design).
+fn ff_fingerprint(s: &EventServer) -> String {
+    use std::fmt::Write as _;
+    let m = &s.metrics;
+    let mut out = String::new();
+    let _ = writeln!(out, "clock {:x}", s.clock().to_bits());
+    let _ = writeln!(
+        out,
+        "counts {} {} {} {} {} {} {} {}",
+        m.requests_completed.get(),
+        m.tokens_generated.get(),
+        m.reconfigurations.get(),
+        m.swaps_to_prefill.get(),
+        m.swaps_to_decode.get(),
+        m.kv_evictions.get(),
+        m.kv_admissions_capped.get(),
+        m.kv_pool_high_water.get(),
+    );
+    for (name, h) in [
+        ("tpot", &m.tpot),
+        ("ttft", &m.ttft),
+        ("e2e", &m.e2e),
+        ("recompute", &m.recompute_overhead),
+    ] {
+        let _ = writeln!(
+            out,
+            "{name} {} {:x} {:x} {:x} {:x}",
+            h.count(),
+            h.mean().to_bits(),
+            h.min().to_bits(),
+            h.max().to_bits(),
+            h.quantile(0.5).to_bits(),
+        );
+    }
+    for o in &s.outcomes {
+        let _ = writeln!(
+            out,
+            "outcome {} {} {:x} {:x} {:x}",
+            o.id,
+            o.prompt_len,
+            o.ttft.to_bits(),
+            o.e2e.to_bits(),
+            o.mean_tpot.to_bits(),
+        );
+    }
+    for (at, id) in &s.pool().eviction_log {
+        let _ = writeln!(out, "evict {:x} {id}", at.to_bits());
+    }
+    let _ = writeln!(out, "pool {:?}", s.pool().stats);
+    out
+}
+
+/// The analytic decode fast-forward is unobservable from the semantic
+/// surface: across random traces (Poisson and bursty presets), all
+/// three swap policies, decode batches 1 and 4, both arithmetic
+/// backends (cached surface vs direct phase model), and both admission
+/// regimes under random pool sizes, a run with `fast_forward: true` is
+/// bit-identical — clocks, TPOT/TTFT/e2e, outcome order, eviction log —
+/// to the same run stepped event by event, and every skipped token-step
+/// accounts for exactly one stepped queue event.
+#[test]
+fn prop_fast_forward_matches_stepped() {
+    check(
+        cfg(24),
+        |rng, _| {
+            let bursty = rng.chance(0.5);
+            let n = rng.range(2, 10);
+            let seed = rng.next_u64();
+            let policy = match rng.below(3) {
+                0 => SwapPolicy::Eager,
+                1 => SwapPolicy::hysteresis_default(),
+                _ => SwapPolicy::lookahead_default(),
+            };
+            let batch = if rng.chance(0.5) { 1usize } else { 4 };
+            let use_surface = rng.chance(0.5);
+            let optimistic = rng.chance(0.5);
+            let total_pages = rng.range(16, 512);
+            (bursty, n, seed, policy, batch, use_surface, optimistic, total_pages)
+        },
+        |&(bursty, n, seed, policy, batch, use_surface, optimistic, total_pages)| {
+            let spec = if bursty {
+                TraceSpec::bursty(n, seed)
+            } else {
+                TraceSpec::interactive(n, 0.4, seed)
+            };
+            let reqs = requests_from_trace(&spec.generate());
+            let run = |fast_forward: bool| -> Result<EventServer, String> {
+                let mut cfg =
+                    EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+                cfg.decode_batch = batch;
+                cfg.use_surface = use_surface;
+                cfg.fast_forward = fast_forward;
+                cfg.pool = cfg.pool.clone().with_total_pages(total_pages).with_policies(
+                    if optimistic {
+                        AdmissionControl::Optimistic
+                    } else {
+                        AdmissionControl::WorstCase
+                    },
+                    EvictionPolicy::EvictAndRecompute,
+                );
+                let mut srv = EventServer::new(cfg).map_err(|e| e.to_string())?;
+                srv.run(reqs.clone()).map_err(|e| e.to_string())?;
+                Ok(srv)
+            };
+            let on = run(true)?;
+            let off = run(false)?;
+            let (a, b) = (ff_fingerprint(&on), ff_fingerprint(&off));
+            if a != b {
+                return Err(format!(
+                    "fast-forward changed the timeline\n--- fast-forward\n{a}\n--- stepped\n{b}"
+                ));
+            }
+            let equiv = on
+                .fast_forward_stats()
+                .stepped_equivalent(on.events_processed());
+            if equiv != off.events_processed() {
+                return Err(format!(
+                    "skipped-step accounting drifted: {} folded-equivalent vs {} stepped",
+                    equiv,
+                    off.events_processed()
+                ));
+            }
+            if off.fast_forward_stats().steps != 0 {
+                return Err("the stepped run must never fold".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Shrunk regression fixture for the fast-forward equivalence (the
+/// smallest hand-reduced shape that exercises every fold stop
+/// condition): one long decode that folds freely, an arrival landing
+/// mid-generation (horizon stop + mid-decode policy decision), and a
+/// pool small enough that decode growth evicts (dry-run stop). Pinned
+/// here so a future divergence shrinks to a named, deterministic case.
+#[test]
+fn prop_fast_forward_regression_fixture() {
+    let reqs = vec![
+        Request::synthetic(0, 256, 192, 0.0),
+        Request::synthetic(1, 96, 24, 5.0),
+        Request::synthetic(2, 96, 24, 5.5),
+    ];
+    let run = |fast_forward: bool| {
+        let mut cfg = EventServerConfig::pd_swap(
+            BITNET_0_73B,
+            KV260.clone(),
+            SwapPolicy::lookahead_default(),
+        );
+        cfg.decode_batch = 4;
+        cfg.fast_forward = fast_forward;
+        cfg.pool = cfg
+            .pool
+            .clone()
+            .with_total_pages(48)
+            .with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut srv = EventServer::new(cfg).unwrap();
+        srv.run(reqs.clone()).unwrap();
+        srv
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(ff_fingerprint(&on), ff_fingerprint(&off));
+    assert!(on.fast_forward_stats().steps > 0, "the fixture must actually fold");
+    assert_eq!(
+        on.fast_forward_stats().stepped_equivalent(on.events_processed()),
+        off.events_processed()
     );
 }
 
