@@ -93,14 +93,19 @@ use crate::telemetry::TraceRecorder;
 
 use super::fastforward::{fits_before, member_step_bound, FastForwardStats};
 use super::fsm::{Phase, PhaseFsm};
-use super::request::{Request, RequestOutcome};
+use super::request::{OutcomeSink, Request, RequestOutcome};
 use super::scheduler::{Policy, Scheduler};
 
-/// Runaway guard: no workload this crate simulates needs more events.
-const MAX_EVENTS: u64 = 20_000_000;
+/// Runaway guard, workload-independent part: events any run may spend
+/// beyond the per-request budget (cold-start swaps, idle transitions).
+/// The full budget is `MAX_EVENTS_BASE + arrivals × per_request` (see
+/// [`EventServer::event_budget`]) so that a stepped million-request run
+/// — legitimately billions of events — is not mistaken for a livelock,
+/// while an actual livelock still trips in bounded time.
+const MAX_EVENTS_BASE: u64 = 10_000;
 
 /// Event-log bound (oldest entries win; the log is diagnostics, not
-/// accounting).
+/// accounting). `--log-tail N` swaps this head capture for a tail ring.
 const MAX_LOG: usize = 16_384;
 
 /// One occurrence on the virtual timeline.
@@ -165,6 +170,15 @@ impl SimEvent {
 #[derive(Debug)]
 struct Entry {
     at: f64,
+    /// Tie-class at equal timestamps: 0 = arrival, 1 = everything else.
+    /// Arrivals popping first at a shared timestamp is what the
+    /// materialized path already does implicitly — `run` seeds every
+    /// arrival before any derived event exists, so arrivals hold the
+    /// lowest sequence numbers and win every tie. Making the rule a
+    /// class instead of an accident keeps the streamed path
+    /// (`run_streamed`, which pushes arrivals lazily with *later*
+    /// sequence numbers) bit-identical to the materialized one.
+    cls: u8,
     seq: u64,
     ev: SimEvent,
 }
@@ -182,17 +196,20 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Virtual times are finite by construction; ties break by push
-        // order so the simulation is fully deterministic.
+        // Virtual times are finite by construction; ties break arrivals
+        // first (see `cls`), then by push order, so the simulation is
+        // fully deterministic and independent of when arrivals were
+        // pushed (bulk-seeded or streamed).
         self.at
             .partial_cmp(&other.at)
             .unwrap_or(Ordering::Equal)
+            .then(self.cls.cmp(&other.cls))
             .then(self.seq.cmp(&other.seq))
     }
 }
 
-/// Deterministic min-heap of timestamped events (FIFO within a
-/// timestamp).
+/// Deterministic min-heap of timestamped events (arrivals first, then
+/// FIFO within a timestamp).
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Reverse<Entry>>,
@@ -200,9 +217,21 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// Queue with room for `n` events before the heap reallocates (bulk
+    /// arrival seeding pushes the whole workload at once).
+    pub fn with_capacity(n: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(n), seq: 0 }
+    }
+
+    /// Reserve room for `n` more events.
+    pub fn reserve(&mut self, n: usize) {
+        self.heap.reserve(n);
+    }
+
     pub fn push(&mut self, at: f64, ev: SimEvent) {
         debug_assert!(at.is_finite(), "event scheduled at non-finite time");
-        self.heap.push(Reverse(Entry { at, seq: self.seq, ev }));
+        let cls = u8::from(!matches!(ev, SimEvent::Arrival(_)));
+        self.heap.push(Reverse(Entry { at, cls, seq: self.seq, ev }));
         self.seq += 1;
     }
 
@@ -213,9 +242,16 @@ impl EventQueue {
     /// Timestamp of the earliest queued event without popping it — the
     /// fast-forward horizon: decode steps may be folded analytically only
     /// while they finish strictly before this time (at a tie the queued
-    /// event's lower sequence number pops first, so the fold yields).
+    /// event pops first, so the fold yields).
     pub fn peek_at(&self) -> Option<f64> {
         self.heap.peek().map(|Reverse(e)| e.at)
+    }
+
+    /// The earliest queued event (time + payload) without popping it —
+    /// the interference-aware fold inspects it to decide whether the
+    /// event can perturb the decode set or may be absorbed in place.
+    pub fn peek(&self) -> Option<(f64, &SimEvent)> {
+        self.heap.peek().map(|Reverse(e)| (e.at, &e.ev))
     }
 
     pub fn len(&self) -> usize {
@@ -233,6 +269,52 @@ pub struct EventRecord {
     pub at: f64,
     pub kind: &'static str,
     pub subject: u64,
+}
+
+/// Bounded diagnostic event log. Two retention shapes, both O(cap):
+/// head capture (the historical behavior — keep the first `cap`
+/// records, drop the rest) and tail ring (`--log-tail N` — keep the
+/// *last* `cap` records by overwriting in place), which is what you
+/// want when a million-request run misbehaves near the end.
+#[derive(Debug, Clone)]
+struct EventLog {
+    buf: Vec<EventRecord>,
+    cap: usize,
+    keep_tail: bool,
+    /// Ring write position (tail mode, once `buf` is full).
+    head: usize,
+    dropped: u64,
+}
+
+impl EventLog {
+    fn head_capture(cap: usize) -> Self {
+        Self { buf: Vec::new(), cap, keep_tail: false, head: 0, dropped: 0 }
+    }
+
+    fn tail_ring(cap: usize) -> Self {
+        Self { buf: Vec::new(), cap: cap.max(1), keep_tail: true, head: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, rec: EventRecord) {
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else if self.keep_tail {
+            // Ring overwrite: `head` is the oldest slot.
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % self.cap.max(1);
+            self.dropped += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Records in timeline order (oldest first), unwrapping the ring.
+    fn snapshot(&self) -> Vec<EventRecord> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
 }
 
 /// One resident request mid-decode. Shared with the phase-batch
@@ -365,6 +447,31 @@ pub struct EventServerConfig {
     /// assert!(events_ff < events_stepped);
     /// ```
     pub fast_forward: bool,
+    /// Completed-request records retained verbatim in
+    /// [`EventServer::outcomes`] (head retention; completions beyond the
+    /// cap are counted in [`super::OutcomeSink::dropped`], and the
+    /// metrics histograms still see every request). The default,
+    /// [`super::OutcomeSink::DEFAULT_RETAIN`], keeps every outcome for
+    /// all pre-existing workload sizes; million-request runs keep O(cap)
+    /// memory. `usize::MAX` = retain everything.
+    pub outcome_retain: usize,
+    /// `Some(n)`: keep the *last* `n` diagnostic event records in a ring
+    /// (the `simulate --log-tail N` knob — bounded even on huge traces,
+    /// and the tail is where a late-run bug lives). `None`: the
+    /// historical head capture of the first 16384 records.
+    pub log_tail: Option<usize>,
+    /// Schedule the per-layer `PrefillLayerDone` progress markers
+    /// (`n_layers − 1` queue events per prefill). They are pure timeline
+    /// diagnostics: dispatch is a no-op, the phase FSM waits in
+    /// `Prefill` regardless, and the Chrome-trace layer instants are
+    /// emitted analytically at admission (not from these events) — so
+    /// disabling them changes *only* `events_processed` and the
+    /// diagnostic event log, bit-for-bit nothing else (pinned by
+    /// `layer_markers_off_is_semantically_identical`). Default on;
+    /// million-request runs turn them off (`simulate --no-layer-events`)
+    /// to stop paying `n_layers` queue events per request for markers
+    /// nobody reads at that scale.
+    pub prefill_layer_events: bool,
 }
 
 impl EventServerConfig {
@@ -384,6 +491,9 @@ impl EventServerConfig {
             assume_feasible: false,
             trace: false,
             fast_forward: true,
+            outcome_retain: OutcomeSink::DEFAULT_RETAIN,
+            log_tail: None,
+            prefill_layer_events: true,
         }
     }
 }
@@ -435,14 +545,22 @@ pub struct EventServer {
     evicted_once: HashSet<u64>,
     clock: f64,
     started: bool,
-    /// Queue events popped by [`Self::run`] (the `MAX_EVENTS` guard and
-    /// the fast-forward reduction's denominator).
+    /// Queue events popped by [`Self::run`] (the [`Self::event_budget`]
+    /// livelock guard and the fast-forward reduction's denominator).
     events_processed: u64,
+    /// Arrival events ever pushed into the queue (bulk-seeded or
+    /// streamed) — the completeness check's expected count and the
+    /// event-budget scale factor.
+    arrivals_total: u64,
     /// Fast-forward fold counters (`steps` = decode events skipped).
     ff: FastForwardStats,
-    log: Vec<EventRecord>,
+    log: EventLog,
     pub metrics: ServerMetrics,
-    pub outcomes: Vec<RequestOutcome>,
+    /// Completed-request records, bounded by
+    /// [`EventServerConfig::outcome_retain`]. Derefs to
+    /// `[RequestOutcome]`, so reads look exactly like the unbounded
+    /// `Vec` this replaced.
+    pub outcomes: OutcomeSink,
     /// Phase-span telemetry (inert unless `cfg.trace`); export with
     /// [`crate::telemetry::TraceRecorder::to_chrome_json`].
     pub recorder: TraceRecorder,
@@ -494,6 +612,11 @@ impl EventServer {
         let overlap_sched = OverlapScheduler::new(model.clone(), lat);
         let kv_pool = KvPool::new(cfg.pool.clone());
         let recorder = TraceRecorder::from_flag(cfg.trace);
+        let log = match cfg.log_tail {
+            Some(n) => EventLog::tail_ring(n),
+            None => EventLog::head_capture(MAX_LOG),
+        };
+        let outcomes = OutcomeSink::with_capacity(cfg.outcome_retain);
         Ok(Self {
             cfg,
             model,
@@ -518,10 +641,11 @@ impl EventServer {
             clock: 0.0,
             started: false,
             events_processed: 0,
+            arrivals_total: 0,
             ff: FastForwardStats::default(),
-            log: Vec::new(),
+            log,
             metrics: ServerMetrics::default(),
-            outcomes: Vec::new(),
+            outcomes,
             recorder,
         })
     }
@@ -535,9 +659,23 @@ impl EventServer {
         &self.kv_pool
     }
 
-    /// The event timeline (bounded; diagnostics only).
-    pub fn event_log(&self) -> &[EventRecord] {
-        &self.log
+    /// The event timeline (bounded; diagnostics only). Head capture by
+    /// default; the last-`n` ring when [`EventServerConfig::log_tail`]
+    /// is set — the snapshot unwraps the ring into timeline order.
+    pub fn event_log(&self) -> Vec<EventRecord> {
+        self.log.snapshot()
+    }
+
+    /// Diagnostic records that fell outside the log bound (head capture:
+    /// everything after the first 16384; tail ring: everything before
+    /// the last `n`).
+    pub fn event_log_dropped(&self) -> u64 {
+        self.log.dropped
+    }
+
+    /// Arrival events ever pushed (bulk-seeded or streamed).
+    pub fn arrivals_total(&self) -> u64 {
+        self.arrivals_total
     }
 
     /// Queue events popped over the run. With fast-forward on, the
@@ -637,23 +775,123 @@ impl EventServer {
         }
         self.started = true;
         workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        let expected = workload.len() as u64;
+        self.queue.reserve(workload.len());
         for r in workload {
+            self.arrivals_total += 1;
             self.queue.push(r.arrival.max(0.0), SimEvent::Arrival(r));
         }
+        // Everything is in the queue already: the refill source is dry.
+        self.event_loop(&mut || None)?;
+        self.finalize_run()
+    }
+
+    /// Serve a *streamed* workload to completion: arrivals are pulled
+    /// lazily from `workload` (non-decreasing arrival times — e.g.
+    /// [`super::requests_from_stream`] over
+    /// [`crate::model::TraceSpec::stream`]) and at most `window` of them
+    /// sit in the event queue at any moment. Each popped arrival pulls
+    /// exactly one replacement, so the queue always holds the earliest
+    /// not-yet-dispatched arrival and pops stay globally time-ordered —
+    /// which, with the arrivals-first tie class on [`EventQueue`], makes
+    /// this **bit-identical** to `run` over the materialized workload
+    /// (pinned by `prop_streamed_matches_materialized`): same clocks,
+    /// counters, histograms, and outcome order, at O(window + resident)
+    /// queue memory instead of O(total requests).
+    pub fn run_streamed(
+        &mut self,
+        workload: impl IntoIterator<Item = Request>,
+        window: usize,
+    ) -> Result<&ServerMetrics> {
+        if self.started {
+            bail!("EventServer::run_streamed is single-shot; build a fresh server per workload");
+        }
+        self.started = true;
+        let window = window.max(1);
+        let mut src = workload.into_iter();
+        let mut last_arrival = 0.0f64;
+        for _ in 0..window {
+            let Some(r) = src.next() else { break };
+            let at = r.arrival.max(0.0);
+            if at < last_arrival {
+                bail!(
+                    "streamed workload must be sorted by arrival: {} after {}",
+                    at,
+                    last_arrival
+                );
+            }
+            last_arrival = at;
+            self.arrivals_total += 1;
+            self.queue.push(at, SimEvent::Arrival(r));
+        }
+        let mut refill_err: Option<String> = None;
+        {
+            let mut refill = || -> Option<Request> {
+                let r = src.next()?;
+                let at = r.arrival.max(0.0);
+                if at < last_arrival {
+                    // Surfaced after the loop: the closure cannot bail.
+                    refill_err.get_or_insert_with(|| {
+                        format!("streamed workload must be sorted by arrival: {at} after {last_arrival}")
+                    });
+                    return None;
+                }
+                last_arrival = at;
+                Some(r)
+            };
+            self.event_loop(&mut refill)?;
+        }
+        if let Some(msg) = refill_err {
+            bail!("{msg}");
+        }
+        self.finalize_run()
+    }
+
+    /// The shared pop→dispatch→pump loop. `refill` is the streamed
+    /// arrival source: invoked exactly once per *popped* arrival (by the
+    /// dispatcher and by the fast-forward absorption alike), so the
+    /// arrival window stays at its seeded size until the source runs
+    /// dry. Bulk runs pass a dry source.
+    fn event_loop(&mut self, refill: &mut dyn FnMut() -> Option<Request>) -> Result<()> {
         while let Some((at, ev)) = self.queue.pop() {
             self.events_processed += 1;
-            if self.events_processed > MAX_EVENTS {
+            if self.events_processed > self.event_budget() {
                 bail!("event budget exceeded — serving livelock");
             }
             self.clock = self.clock.max(at);
-            if self.log.len() < MAX_LOG {
-                self.log.push(EventRecord { at, kind: ev.kind(), subject: ev.subject() });
+            self.log.push(EventRecord { at, kind: ev.kind(), subject: ev.subject() });
+            if matches!(ev, SimEvent::Arrival(_)) {
+                self.pull_arrival(refill);
             }
             self.dispatch(ev)?;
-            self.pump()?;
+            self.pump(refill)?;
         }
-        if self.metrics.requests_completed.get() != expected
+        Ok(())
+    }
+
+    /// Pull one replacement arrival from the streamed source into the
+    /// queue (no-op once the source is dry).
+    fn pull_arrival(&mut self, refill: &mut dyn FnMut() -> Option<Request>) {
+        if let Some(r) = refill() {
+            self.arrivals_total += 1;
+            self.queue.push(r.arrival.max(0.0), SimEvent::Arrival(r));
+        }
+    }
+
+    /// Livelock guard: generous per-request ceiling (two prefills' worth
+    /// of layer markers + every token as its own event + swap/eviction
+    /// overhead) plus a workload-independent base. Scales with arrivals
+    /// seen so far, so stepped million-request runs fit while a true
+    /// livelock (events with no progress) still trips.
+    fn event_budget(&self) -> u64 {
+        let shape = &self.cfg.shape;
+        let per_request =
+            2 * (shape.max_seq as u64) + 2 * (shape.n_layers as u64) + 16;
+        MAX_EVENTS_BASE + self.arrivals_total.saturating_mul(per_request)
+    }
+
+    /// Completeness check + pool-stat mirroring shared by both run modes.
+    fn finalize_run(&mut self) -> Result<&ServerMetrics> {
+        if self.metrics.requests_completed.get() != self.arrivals_total
             || !self.sched.is_empty()
             || self.prefilling.is_some()
             || !self.decode.is_empty()
@@ -661,7 +899,7 @@ impl EventServer {
             bail!(
                 "serving incomplete: {}/{} requests done, {} queued, {} decoding",
                 self.metrics.requests_completed.get(),
-                expected,
+                self.arrivals_total,
                 self.sched.queue_len(),
                 self.decode.len()
             );
@@ -851,8 +1089,10 @@ impl EventServer {
 
     /// Central decision dispatcher, called after every event: whenever
     /// the fabric is free, pick the next action (prefill / decode step /
-    /// swap) per the FSM state and the swap policy.
-    fn pump(&mut self) -> Result<()> {
+    /// swap) per the FSM state and the swap policy. `refill` is the
+    /// streamed arrival source, forwarded to the fast-forward fold so
+    /// absorbed arrivals keep the window full.
+    fn pump(&mut self, refill: &mut dyn FnMut() -> Option<Request>) -> Result<()> {
         loop {
             match self.fsm.phase() {
                 // PCAP busy or prefill events in flight: wait.
@@ -883,16 +1123,16 @@ impl EventServer {
                             return self.begin_prefill_swap();
                         }
                     }
-                    // Steady state (empty backlog, whole decode set
+                    // Steady state (dormant backlog, whole decode set
                     // selected every step): fold whole token-steps
                     // analytically before scheduling the next real one.
                     // The fold is bit-identical to stepping, so falling
                     // through to `try_schedule_step` afterwards resumes
                     // the normal path at the fold's boundary (the
                     // completing step, the pool-pressure step, or the
-                    // step that straddles the next queued event).
+                    // first *interfering* queued event).
                     if self.cfg.fast_forward {
-                        self.try_fast_forward()?;
+                        self.try_fast_forward(refill)?;
                     }
                     if self.try_schedule_step()? {
                         return Ok(());
@@ -966,11 +1206,62 @@ impl EventServer {
             return false;
         }
         match self.sched.peek() {
-            Some(r) if r.arrival <= self.clock + 1e-12 => self
-                .kv_pool
-                .admission_plan(r.prompt_len, r.max_new_tokens)
-                .admits_immediately(),
+            Some(r) if r.arrival <= self.clock + 1e-12 => {
+                self.kv_pool.admits_now(r.prompt_len, r.max_new_tokens)
+            }
             _ => false,
+        }
+    }
+
+    /// Is every residency slot taken by the decode set itself? (During a
+    /// fold `prefilling` is `None`, so the decode set alone decides.)
+    fn residency_saturated(&self) -> bool {
+        self.decode.len() + usize::from(self.prefilling.is_some()) >= self.cfg.max_residents
+    }
+
+    /// Can the arrived backlog interfere with a decode fold? A backlog
+    /// is **dormant** when `prefill_candidate_ready` is false for a
+    /// reason that cannot change while the fold runs (phase stays
+    /// `Decode`, no member completes, KV only grows):
+    ///
+    /// * empty — trivially dormant;
+    /// * residency-saturated — the decode set holds every slot and the
+    ///   [`member_step_bound`] guarantees no completion inside the fold;
+    /// * head not immediately admissible — and *monotonically* so:
+    ///   `Fits` needs `need ≤ free_pages`, and free pages only shrink
+    ///   while the fold grows KV; `EvictThenFit`'s feasibility depends
+    ///   only on `need` vs the pool total (every resident is evictable
+    ///   in the plan), which the fold never changes; `Capped` needs an
+    ///   empty pool, impossible mid-decode. So an inadmissible head
+    ///   stays inadmissible for the whole fold, and the stepped
+    ///   equivalent's per-step `prefill_candidate_ready` re-check is
+    ///   false at every step — the fold skips nothing the stepped path
+    ///   would have done.
+    fn backlog_is_dormant(&self) -> bool {
+        if self.backlog_n == 0 || self.residency_saturated() {
+            return true;
+        }
+        match self.sched.peek() {
+            Some(r) => !self.kv_pool.admits_now(r.prompt_len, r.max_new_tokens),
+            None => true,
+        }
+    }
+
+    /// May a *newly absorbed* arrival be folded through? Mirrors
+    /// [`Self::backlog_is_dormant`] for the request the fold is about to
+    /// admit into the scheduler queue: with residency saturated it can
+    /// never be extracted mid-fold; with a non-empty backlog it joins
+    /// the tail behind a head that stays inadmissible (dormancy was
+    /// established at fold entry and is monotone); otherwise it becomes
+    /// the head itself and must be inadmissible right now.
+    fn arrival_is_dormant(&self, r: &Request) -> bool {
+        if self.residency_saturated() {
+            return true;
+        }
+        if self.backlog_n == 0 {
+            !self.kv_pool.admits_now(r.prompt_len, r.max_new_tokens)
+        } else {
+            true
         }
     }
 
@@ -1116,9 +1407,17 @@ impl EventServer {
             .begin_prefill()
             .map_err(|e| anyhow::anyhow!("begin prefill: {e}"))?;
         let n_layers = shape.n_layers.max(1);
-        for layer in 1..n_layers {
-            let at = now + pre.total * layer as f64 / n_layers as f64;
-            self.queue.push(at, SimEvent::PrefillLayerDone { id, layer });
+        if self.cfg.prefill_layer_events {
+            // Pure progress markers: n_layers − 1 no-op queue events per
+            // prefill. Million-request runs disable them (see the
+            // `prefill_layer_events` docs — everything except
+            // `events_processed` and the diagnostic log is bit-identical
+            // either way; the recorder's layer instants below are
+            // emitted analytically, not from these events).
+            for layer in 1..n_layers {
+                let at = now + pre.total * layer as f64 / n_layers as f64;
+                self.queue.push(at, SimEvent::PrefillLayerDone { id, layer });
+            }
         }
         self.queue.push(trigger_at.min(done_at), SimEvent::PrefillTrigger { id });
         self.queue.push(done_at, SimEvent::PrefillDone { id });
@@ -1158,21 +1457,28 @@ impl EventServer {
     ///
     /// Preconditions — the **steady-state invariant**. Any failure just
     /// means the stepped path runs, so declining can never change a run:
-    /// * no step event in flight, nothing prefilling, and an **empty
-    ///   arrived backlog** (`backlog_n == 0` ⟺ the scheduler queue is
-    ///   empty, so `prefill_candidate_ready` stays false and the stepped
-    ///   equivalent makes no policy decision between steps);
+    /// * no step event in flight, nothing prefilling, and a **dormant
+    ///   arrived backlog** ([`Self::backlog_is_dormant`]: empty,
+    ///   residency-saturated, or an immediately-inadmissible head — in
+    ///   every case `prefill_candidate_ready` is false for a reason that
+    ///   is monotone over the fold, so the stepped equivalent makes no
+    ///   policy decision between steps);
     /// * the whole decode set fits one batch (`len ≤ decode_batch`): the
     ///   round-robin selection then picks the same members in the same
     ///   order every step from the same start index;
     /// * no member completes inside the fold
     ///   ([`member_step_bound`]) — completion releases pages, may drain
     ///   the set, and re-enters the Idle-phase decisions;
-    /// * every folded step finishes strictly before the next queued
-    ///   event ([`fits_before`]; ties yield to the queue's push-order
-    ///   tie-break) and its KV page growth fits the pool (dry-run
-    ///   against the real reservations) — arrivals, swaps, evictions,
-    ///   and capacity caps always run through the real queue.
+    /// * every folded step finishes strictly before the earliest
+    ///   **interfering** queued event ([`fits_before`]; ties yield to
+    ///   the queue's tie-break). A queued *dormant arrival* is not
+    ///   interfering: the fold pops it and replays the dispatcher's
+    ///   arrival bookkeeping in place (see the interference lattice in
+    ///   [`super::fastforward`]), exactly as the stepped engine would
+    ///   have between two step events. Each folded step's KV page
+    ///   growth is still dry-run against the real reservations —
+    ///   pool-exhaustion steps, swaps, evictions, and capacity caps
+    ///   always run through the real queue.
     ///
     /// Within those bounds the fold replays [`Self::try_schedule_step`] +
     /// [`Self::apply_token_step`]'s arithmetic in their exact order —
@@ -1181,16 +1487,23 @@ impl EventServer {
     /// touch at completion time — so every float and counter lands
     /// bit-identical, and only the per-token event machinery (heap
     /// push/pop, dispatch, log records, per-token trace spans) is
-    /// skipped. Telemetry-enabled runs get one coalesced `decode-ff`
-    /// span per member instead of `k` `decode-step` spans.
-    fn try_fast_forward(&mut self) -> Result<()> {
+    /// skipped. Absorbed arrivals commute bitwise with the surrounding
+    /// step: the stepped engine pops them mid-step (step in flight, pump
+    /// returns immediately), and their bookkeeping (backlog counters,
+    /// scheduler append) reads no clock and touches nothing the step's
+    /// completion effects read. Telemetry-enabled runs get one coalesced
+    /// `decode-ff` span per member instead of `k` `decode-step` spans.
+    fn try_fast_forward(
+        &mut self,
+        refill: &mut dyn FnMut() -> Option<Request>,
+    ) -> Result<()> {
         let n = self.decode.len();
         let b_max = self.cfg.decode_batch.max(1);
         if n == 0
             || n > b_max
             || self.step_inflight
             || self.prefilling.is_some()
-            || self.backlog_n != 0
+            || !self.backlog_is_dormant()
         {
             return Ok(());
         }
@@ -1201,9 +1514,6 @@ impl EventServer {
         if k_max == 0 {
             return Ok(());
         }
-        // The horizon is fixed for the whole fold: the fold pushes and
-        // pops nothing, so the earliest queued event cannot change.
-        let next_at = self.queue.peek_at();
         // Frozen selection order: the stepped scheduler's first pick
         // reduces the cursor mod len and later picks follow positionally,
         // so with the whole set selected every step starts at `start` and
@@ -1215,14 +1525,60 @@ impl EventServer {
         let mut t = t0;
         let mut k: usize = 0;
         let mut step0 = 0.0f64;
-        while k < k_max {
+        'fold: while k < k_max {
             ctxs.clear();
             for j in 0..n {
                 ctxs.push(self.decode[(start + j) % n].ctx);
             }
             let step = self.decode_batch_total(&ctxs);
-            if !fits_before(t, step, next_at) {
-                break; // the next queued event interposes: step for real
+            // Interference lattice over the earliest queued event:
+            // Clear (fires after this step) / Absorb (dormant arrival —
+            // pop it, replay the dispatcher's arrival bookkeeping, keep
+            // folding) / Block (anything else ends the fold). Absorbing
+            // re-peeks: the streamed refill may push the next arrival
+            // into the same horizon.
+            loop {
+                enum Verdict {
+                    Clear,
+                    Absorb,
+                    Block,
+                }
+                let verdict = match self.queue.peek() {
+                    None => Verdict::Clear,
+                    Some((at, _)) if fits_before(t, step, Some(at)) => Verdict::Clear,
+                    Some((_, SimEvent::Arrival(r))) if self.arrival_is_dormant(r) => {
+                        Verdict::Absorb
+                    }
+                    Some(_) => Verdict::Block, // interfering: step for real
+                };
+                match verdict {
+                    Verdict::Clear => break,
+                    Verdict::Block => break 'fold,
+                    Verdict::Absorb => {
+                        let (at, ev) = self.queue.pop().expect("peeked entry vanished");
+                        let (kind, subject) = (ev.kind(), ev.subject());
+                        let SimEvent::Arrival(r) = ev else {
+                            unreachable!("peeked a dormant arrival")
+                        };
+                        // Mirror `event_loop` for this one event, minus
+                        // the clock max (at ≤ t + step, and the fold
+                        // publishes `t + step` after the commit below;
+                        // the stepped engine's interim `clock = at` is
+                        // never observable — with the step in flight its
+                        // pump returns before anything reads the clock).
+                        self.events_processed += 1;
+                        if self.events_processed > self.event_budget() {
+                            self.batch_ctxs = ctxs;
+                            bail!("event budget exceeded — serving livelock");
+                        }
+                        self.log.push(EventRecord { at, kind, subject });
+                        self.pull_arrival(refill);
+                        self.backlog_n += 1;
+                        self.backlog_tokens += r.prompt_len;
+                        self.sched.admit(r);
+                        self.ff.record_absorbed_arrival();
+                    }
+                }
             }
             // Dry-run this step's KV growth. If any member would exhaust
             // the pool, the whole step — with its partial growth and
@@ -1477,6 +1833,12 @@ impl EventServer {
         self.kv_pool
             .complete(f.req.id)
             .map_err(|e| anyhow::anyhow!("completing request {}: {e}", f.req.id))?;
+        // O(resident) memory: a finished id never returns (ids are
+        // unique per workload), so its recompute/eviction history is
+        // dead weight — without this, the two sets grow with *total*
+        // requests served.
+        self.prefilled.remove(&f.req.id);
+        self.evicted_once.remove(&f.req.id);
         self.recorder.kv_instant(
             "kv-release",
             self.clock,
@@ -2293,6 +2655,194 @@ mod tests {
         let (ta, tb) = (on.recorder.breakdown_table(), off.recorder.breakdown_table());
         assert_eq!(col(&ta, 5), col(&tb, 5), "ttft_s column diverged");
         assert_eq!(col(&ta, 6), col(&tb, 6), "token column diverged");
+    }
+
+    #[test]
+    fn event_queue_pops_arrivals_first_at_ties() {
+        // The arrivals-first tie class: an arrival pushed *after* a
+        // derived event at the same timestamp still pops first — the
+        // rule that makes lazily-pushed (streamed) arrivals land in the
+        // same order the bulk-seeded path gives them implicitly.
+        let mut q = EventQueue::default();
+        q.push(1.0, SimEvent::PrefillDone { id: 0 });
+        q.push(1.0, SimEvent::Arrival(Request::synthetic(7, 64, 4, 1.0)));
+        let (_, first) = q.pop().unwrap();
+        assert!(matches!(first, SimEvent::Arrival(_)), "arrival must win the tie");
+        let (_, second) = q.pop().unwrap();
+        assert!(matches!(second, SimEvent::PrefillDone { id: 0 }));
+        // Within a class, push order still rules.
+        q.push(2.0, SimEvent::Arrival(Request::synthetic(8, 64, 4, 2.0)));
+        q.push(2.0, SimEvent::Arrival(Request::synthetic(9, 64, 4, 2.0)));
+        assert_eq!(q.pop().unwrap().1.subject(), 8);
+        assert_eq!(q.pop().unwrap().1.subject(), 9);
+    }
+
+    /// One saturated long decode with short requests landing mid-stream:
+    /// with `max_residents = 1` every mid-decode arrival is provably
+    /// dormant (the residency slot is held by the decode itself), so the
+    /// fold absorbs them instead of breaking — the swap-adjacent idle
+    /// gaps the tentpole targets.
+    fn saturated_run(fast_forward: bool) -> EventServer {
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.max_residents = 1;
+        cfg.fast_forward = fast_forward;
+        let mut s = EventServer::new(cfg).unwrap();
+        let mut w = vec![Request::synthetic(0, 128, 768, 0.0)];
+        for i in 0..4u64 {
+            w.push(Request::synthetic(1 + i, 64, 8, 5.0 + i as f64 * 0.5));
+        }
+        s.run(w).unwrap();
+        s
+    }
+
+    #[test]
+    fn fold_absorbs_dormant_arrivals_under_saturation() {
+        let on = saturated_run(true);
+        let off = saturated_run(false);
+        assert_eq!(
+            semantic_fingerprint(&on),
+            semantic_fingerprint(&off),
+            "absorbing a dormant arrival moved the timeline"
+        );
+        let ff = on.fast_forward_stats();
+        assert!(
+            ff.absorbed_arrivals >= 1,
+            "{ff:?}: saturated mid-decode arrivals must be absorbed, not block the fold"
+        );
+        assert_eq!(off.fast_forward_stats().absorbed_arrivals, 0);
+        // Absorbed arrivals are real events (counted in events_processed),
+        // so the skipped-step conservation law still closes exactly.
+        assert_eq!(
+            ff.stepped_equivalent(on.events_processed()),
+            off.events_processed(),
+            "absorption broke the events + steps conservation law"
+        );
+        assert_eq!(on.arrivals_total(), 5);
+    }
+
+    #[test]
+    fn layer_markers_off_is_semantically_identical() {
+        // `prefill_layer_events = false` removes n_layers−1 pure-marker
+        // queue events per prefill and nothing else: the semantic surface
+        // is bit-identical, only `events_processed` and the diagnostic
+        // log shrink.
+        let run = |markers: bool| {
+            let mut cfg =
+                EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+            cfg.prefill_layer_events = markers;
+            let mut s = EventServer::new(cfg).unwrap();
+            s.run(contended_workload()).unwrap();
+            s
+        };
+        let with = run(true);
+        let without = run(false);
+        assert_eq!(semantic_fingerprint(&with), semantic_fingerprint(&without));
+        assert!(without.events_processed() < with.events_processed());
+        assert_eq!(
+            with.events_processed() - without.events_processed(),
+            6 * (BITNET_0_73B.n_layers as u64 - 1),
+            "exactly the marker events must disappear (6 prefills)"
+        );
+        assert!(without.event_log().iter().all(|r| r.kind != "prefill-layer"));
+        assert!(with.event_log().iter().any(|r| r.kind == "prefill-layer"));
+    }
+
+    #[test]
+    fn log_tail_ring_keeps_the_last_records() {
+        let full = {
+            let mut s = server(SwapPolicy::Eager);
+            s.run(contended_workload()).unwrap();
+            s
+        };
+        let tail = {
+            let mut cfg =
+                EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+            cfg.log_tail = Some(8);
+            let mut s = EventServer::new(cfg).unwrap();
+            s.run(contended_workload()).unwrap();
+            s
+        };
+        // Same deterministic run, different retention: the ring holds
+        // exactly the last 8 records of the full log, in timeline order.
+        let full_log = full.event_log();
+        let tail_log = tail.event_log();
+        assert!(full_log.len() > 8, "fixture too small to exercise the ring");
+        assert_eq!(tail_log.len(), 8);
+        assert_eq!(tail.event_log_dropped(), (full_log.len() - 8) as u64);
+        assert_eq!(full.event_log_dropped(), 0);
+        for (a, b) in tail_log.iter().zip(&full_log[full_log.len() - 8..]) {
+            assert_eq!((a.at.to_bits(), a.kind, a.subject), (b.at.to_bits(), b.kind, b.subject));
+        }
+        // Retention shape is diagnostics-only: the timeline is untouched.
+        assert_eq!(semantic_fingerprint(&full), semantic_fingerprint(&tail));
+    }
+
+    #[test]
+    fn outcome_retention_caps_the_sink_but_not_the_metrics() {
+        let full = {
+            let mut s = server(SwapPolicy::Eager);
+            s.run(contended_workload()).unwrap();
+            s
+        };
+        let mut cfg =
+            EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+        cfg.outcome_retain = 2;
+        let mut s = EventServer::new(cfg).unwrap();
+        s.run(contended_workload()).unwrap();
+        assert_eq!(s.outcomes.len(), 2, "head retention keeps the first two");
+        assert_eq!(s.outcomes.dropped(), 4);
+        // The retained head is verbatim (same run, same completion order).
+        for (a, b) in s.outcomes.iter().zip(full.outcomes.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+        }
+        // Aggregates still see every request — only the per-request
+        // records are bounded.
+        assert_eq!(s.metrics.requests_completed.get(), 6);
+        assert_eq!(s.metrics.e2e.count(), 6);
+        assert_eq!(
+            s.metrics.e2e.mean().to_bits(),
+            full.metrics.e2e.mean().to_bits()
+        );
+    }
+
+    #[test]
+    fn run_streamed_matches_run_bitwise_at_unit_scale() {
+        // The streaming contract at unit scale (the property test runs
+        // the full preset × policy × batch matrix): lazy arrivals through
+        // a bounded window reproduce the materialized run bit-for-bit,
+        // for any window size.
+        let wl = bench_mixed_trace();
+        let mut mat = server(SwapPolicy::Eager);
+        mat.run(wl.clone()).unwrap();
+        for window in [1usize, 2, 7, 64] {
+            let mut st = server(SwapPolicy::Eager);
+            st.run_streamed(wl.clone(), window).unwrap();
+            assert_eq!(
+                semantic_fingerprint(&mat),
+                semantic_fingerprint(&st),
+                "window={window}: streamed run diverged from materialized"
+            );
+            assert_eq!(st.events_processed(), mat.events_processed(), "window={window}");
+            assert_eq!(st.arrivals_total(), mat.arrivals_total());
+        }
+    }
+
+    #[test]
+    fn run_streamed_rejects_unsorted_arrivals() {
+        let wl = vec![
+            Request::synthetic(0, 64, 4, 1.0),
+            Request::synthetic(1, 64, 4, 0.5),
+        ];
+        // Caught at window seeding…
+        let mut s = server(SwapPolicy::Eager);
+        let err = s.run_streamed(wl.clone(), 4).unwrap_err().to_string();
+        assert!(err.contains("sorted by arrival"), "{err}");
+        // …and through the mid-run refill side-channel.
+        let mut s = server(SwapPolicy::Eager);
+        let err = s.run_streamed(wl, 1).unwrap_err().to_string();
+        assert!(err.contains("sorted by arrival"), "{err}");
     }
 
     #[test]

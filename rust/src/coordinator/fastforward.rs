@@ -5,19 +5,38 @@
 //! state**: the same streams are selected in the same round-robin order
 //! every step, each step's duration is a closed form of the members'
 //! contexts ([`LatencySurface::decode_step_batched_paged`]), and nothing
-//! on the event queue interferes until the next *structural* event (an
-//! arrival, swap completion, prefill marker, or eviction). The event
-//! core exploits this by folding K whole token-steps into one pass —
-//! replaying the per-step arithmetic in the exact left-fold order the
+//! on the event queue interferes until the next *structural* event. The
+//! event core exploits this by folding K whole token-steps into one pass
+//! — replaying the per-step arithmetic in the exact left-fold order the
 //! stepped path uses (so clocks, TPOT samples, and pool accounting stay
 //! **bit-identical**) while skipping the per-token event machinery
 //! (heap push/pop, dispatch, log append, pump re-entry).
 //!
+//! **Interference lattice.** Not every queued event is structural. The
+//! fold classifies the earliest queued event into one of three verdicts:
+//!
+//! * **Clear** — it fires after the candidate step completes
+//!   ([`fits_before`]): fold on.
+//! * **Absorb** — it is an [`Arrival`](super::SimEvent::Arrival) whose
+//!   request provably cannot be extracted while the fold runs (*dormant*:
+//!   the residency slots are saturated by the decode set itself, or it
+//!   joins a backlog whose head is not immediately pool-admissible —
+//!   both conditions monotone over a fold, since folding only grows KV
+//!   and never completes a member). The fold pops it, runs the exact
+//!   arrival bookkeeping the dispatcher would (backlog counters +
+//!   scheduler admit + log + streamed-window refill), and keeps folding
+//!   — these are the swap-adjacent idle gaps the stepped path burned
+//!   events on.
+//! * **Block** — anything else (an admissible arrival, a swap
+//!   completion, a prefill marker, an eviction echo): the fold ends and
+//!   the event runs through the real queue.
+//!
 //! This module holds the pure, independently testable pieces: the
 //! member-exhaustion bound, the horizon predicate, and the fold's
-//! statistics. The fold itself lives in `events.rs` (it mutates the
-//! server's private state); `docs/ARCHITECTURE.md` extension #7 states
-//! the invariant and the bitwise argument in full.
+//! statistics. The fold and the dormancy predicates live in `events.rs`
+//! (they read the server's private state); `docs/ARCHITECTURE.md`
+//! extensions #7 and #8 state the invariant and the bitwise argument in
+//! full.
 //!
 //! [`LatencySurface::decode_step_batched_paged`]: crate::engines::LatencySurface::decode_step_batched_paged
 
@@ -74,7 +93,10 @@ pub fn fits_before(clock: f64, step: f64, next_at: Option<f64>) -> bool {
 /// `steps` counts *skipped events*: each folded token-step would have
 /// been exactly one `DecodeStepDone`/`DecodeBatchDone` on the queue, so
 /// the stepped-equivalent event count of a run is
-/// `events_processed + steps`.
+/// `events_processed + steps`. Absorbed arrivals are **not** skipped
+/// events — the fold pops and dispatches them for real (they count in
+/// `events_processed`); `absorbed_arrivals` only attributes how many
+/// arrivals were handled inside folds rather than between them.
 ///
 /// ```
 /// use pd_swap::coordinator::fastforward::FastForwardStats;
@@ -82,7 +104,8 @@ pub fn fits_before(clock: f64, step: f64, next_at: Option<f64>) -> bool {
 /// let mut s = FastForwardStats::default();
 /// s.record_fold(99);
 /// s.record_fold(7);
-/// assert_eq!((s.folds, s.steps), (2, 106));
+/// s.record_absorbed_arrival();
+/// assert_eq!((s.folds, s.steps, s.absorbed_arrivals), (2, 106, 1));
 /// assert_eq!(s.stepped_equivalent(34), 140); // 34 real events + 106 skipped
 /// ```
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -91,6 +114,9 @@ pub struct FastForwardStats {
     pub folds: u64,
     /// Token-steps applied inside folds (= decode events skipped).
     pub steps: u64,
+    /// Dormant arrivals absorbed mid-fold (real events, handled without
+    /// ending the fold).
+    pub absorbed_arrivals: u64,
 }
 
 impl FastForwardStats {
@@ -98,6 +124,11 @@ impl FastForwardStats {
     pub fn record_fold(&mut self, k: u64) {
         self.folds += 1;
         self.steps += k;
+    }
+
+    /// Account one dormant arrival absorbed inside a fold.
+    pub fn record_absorbed_arrival(&mut self) {
+        self.absorbed_arrivals += 1;
     }
 
     /// The event count the stepped engine would have processed for the

@@ -27,8 +27,9 @@
 //!   extension; `EagerSwap` reproduces the paper's behavior).
 //! * [`fastforward`] — the pure bounds behind the event core's analytic
 //!   decode fast-forward: steady-state decode stretches are folded into
-//!   one pass, bit-identical to the stepped path but O(1) in events
-//!   (see `docs/ARCHITECTURE.md` extension #7).
+//!   one pass, bit-identical to the stepped path but O(1) in events,
+//!   with dormant arrivals absorbed mid-fold (the interference lattice;
+//!   see `docs/ARCHITECTURE.md` extensions #7–#8).
 //! * [`live`] — the same coordinator logic driving *real* PJRT execution
 //!   of the AOT artifacts (tokens are real; FPGA timing is reported from
 //!   the simulator running in lockstep). Requires the `pjrt` cargo
@@ -49,7 +50,8 @@ pub use fsm::{Phase, PhaseFsm};
 #[cfg(feature = "pjrt")]
 pub use live::{LiveServer, LiveServerConfig};
 pub use request::{
-    generate_workload, Request, RequestOutcome, requests_from_trace, WorkloadConfig,
+    generate_workload, OutcomeSink, Request, RequestOutcome, requests_from_stream,
+    requests_from_trace, WorkloadConfig,
 };
 pub use scheduler::{Policy, Scheduler};
 pub use sim_server::{SimServer, SimServerConfig};

@@ -88,6 +88,92 @@ pub fn requests_from_trace(entries: &[crate::model::TraceEntry]) -> Vec<Request>
         .collect()
 }
 
+/// Streaming form of [`requests_from_trace`]: the same id/field mapping
+/// applied lazily, so `TraceSpec::stream()` can feed
+/// `EventServer::run_streamed` without materializing the trace. For any
+/// entry iterator `it`, `requests_from_stream(it).collect::<Vec<_>>()`
+/// equals `requests_from_trace(&it.collect::<Vec<_>>())` field-for-field.
+pub fn requests_from_stream(
+    entries: impl Iterator<Item = crate::model::TraceEntry>,
+) -> impl Iterator<Item = Request> {
+    entries
+        .enumerate()
+        .map(|(i, e)| Request::synthetic(i as u64, e.prompt_len, e.gen_len, e.arrival))
+}
+
+/// Bounded retention for completed-request records.
+///
+/// Million-request runs cannot keep every [`RequestOutcome`] (each owns a
+/// `generated` vec): the sink retains the first `cap` outcomes verbatim
+/// (head retention — deterministic, and exactly what the existing tests
+/// and examples index into) and counts the rest in `dropped`. Latency
+/// *statistics* never lose anything: `ServerMetrics` histograms record
+/// every request regardless of retention, and the reservoir there is
+/// already bounded. `Deref<Target = [RequestOutcome]>` keeps every
+/// `.len()` / `.iter()` / indexing call site working unchanged.
+#[derive(Debug, Clone)]
+pub struct OutcomeSink {
+    kept: Vec<RequestOutcome>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl OutcomeSink {
+    /// Default retention cap (matches the metrics reservoir size): big
+    /// enough that every pre-existing test/example sees full retention,
+    /// small enough that a million-request run stays O(cap).
+    pub const DEFAULT_RETAIN: usize = 1 << 16;
+
+    /// Sink retaining at most `cap` outcomes (`usize::MAX` = keep all).
+    pub fn with_capacity(cap: usize) -> Self {
+        // No pre-allocation: `cap` may be huge (or MAX) while the run
+        // completes only a handful of requests.
+        Self { kept: Vec::new(), cap, dropped: 0 }
+    }
+
+    /// Record one completed request: kept verbatim below the cap,
+    /// counted above it. O(1) amortized; beyond the cap, allocation-free.
+    pub fn push(&mut self, outcome: RequestOutcome) {
+        if self.kept.len() < self.cap {
+            self.kept.push(outcome);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Outcomes counted but not retained (total completions = `len() +
+    /// dropped()`).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retention cap this sink was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+impl Default for OutcomeSink {
+    fn default() -> Self {
+        Self::with_capacity(Self::DEFAULT_RETAIN)
+    }
+}
+
+impl std::ops::Deref for OutcomeSink {
+    type Target = [RequestOutcome];
+    fn deref(&self) -> &[RequestOutcome] {
+        &self.kept
+    }
+}
+
+impl<'a> IntoIterator for &'a OutcomeSink {
+    type Item = &'a RequestOutcome;
+    type IntoIter = std::slice::Iter<'a, RequestOutcome>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.kept.iter()
+    }
+}
+
 /// Generate a Poisson-arrival workload.
 pub fn generate_workload(cfg: &WorkloadConfig) -> Vec<Request> {
     let mut rng = Rng::new(cfg.seed);
@@ -154,6 +240,58 @@ mod tests {
         for r in generate_workload(&cfg) {
             assert_eq!(r.prompt.len(), r.prompt_len);
             assert!(r.prompt.iter().all(|&t| (1..100).contains(&t)));
+        }
+    }
+
+    fn outcome(id: u64) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            prompt_len: 8,
+            generated: Vec::new(),
+            ttft: 0.1,
+            e2e: 1.0,
+            mean_tpot: 0.01,
+        }
+    }
+
+    #[test]
+    fn outcome_sink_retains_head_and_counts_drops() {
+        let mut s = OutcomeSink::with_capacity(3);
+        for id in 0..10 {
+            s.push(outcome(id));
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.dropped(), 7);
+        assert_eq!(s.capacity(), 3);
+        // Head retention: first-completed ids survive.
+        let ids: Vec<u64> = s.iter().map(|o| o.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // Deref + IntoIterator surfaces behave like a slice.
+        assert_eq!(s[1].id, 1);
+        assert_eq!((&s).into_iter().count(), 3);
+    }
+
+    #[test]
+    fn outcome_sink_default_keeps_everything_small() {
+        let mut s = OutcomeSink::default();
+        for id in 0..100 {
+            s.push(outcome(id));
+        }
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn requests_from_stream_matches_eager_lift() {
+        let spec = crate::model::TraceSpec::million(40, 3);
+        let eager = requests_from_trace(&spec.generate());
+        let lazy: Vec<Request> = requests_from_stream(spec.stream()).collect();
+        assert_eq!(eager.len(), lazy.len());
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
         }
     }
 }

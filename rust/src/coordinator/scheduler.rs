@@ -58,6 +58,13 @@ impl Scheduler {
         self.queue.push_back(r);
     }
 
+    /// Reserve backlog capacity ahead of a bulk admission wave (the
+    /// event server's overload regimes park whole arrival bursts here;
+    /// reserving once beats the VecDeque's doubling growth).
+    pub fn reserve(&mut self, n: usize) {
+        self.queue.reserve(n);
+    }
+
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }

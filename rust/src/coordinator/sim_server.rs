@@ -49,7 +49,7 @@ use crate::telemetry::TraceRecorder;
 
 use super::events::InFlight;
 use super::fsm::PhaseFsm;
-use super::request::{Request, RequestOutcome};
+use super::request::{OutcomeSink, Request, RequestOutcome};
 use super::scheduler::{Policy, Scheduler};
 
 /// Simulation configuration.
@@ -122,7 +122,11 @@ pub struct SimServer {
     evicted_once: HashSet<u64>,
     pub metrics: ServerMetrics,
     clock: f64,
-    pub outcomes: Vec<RequestOutcome>,
+    /// Completed-request records, bounded at
+    /// [`super::OutcomeSink::DEFAULT_RETAIN`] like the event server's
+    /// (derefs to `[RequestOutcome]`; the phase-batch engine serves
+    /// paper-scale workloads, so the cap is never reached in practice).
+    pub outcomes: OutcomeSink,
     /// Phase-span telemetry (inert unless `cfg.trace`); export with
     /// [`crate::telemetry::TraceRecorder::to_chrome_json`].
     pub recorder: TraceRecorder,
@@ -160,7 +164,7 @@ impl SimServer {
             evicted_once: HashSet::new(),
             metrics: ServerMetrics::default(),
             clock: 0.0,
-            outcomes: Vec::new(),
+            outcomes: OutcomeSink::default(),
             recorder,
         })
     }

@@ -96,7 +96,8 @@ pub struct TracePreset {
 impl TracePreset {
     /// Resolve a CLI preset name (`interactive` | `mixed` | `bursty` |
     /// `long` — the sparse long-generation trace where the event core's
-    /// decode fast-forward pays off most).
+    /// decode fast-forward pays off most — | `million`, the decode-heavy
+    /// underloaded preset sized for million-request streaming runs).
     pub fn by_name(
         name: &str,
         n_requests: usize,
@@ -109,6 +110,7 @@ impl TracePreset {
             "mixed" => TraceSpec::mixed_long_context(n_requests, rate, long_ctx, seed),
             "bursty" => TraceSpec::bursty(n_requests, seed),
             "long" => TraceSpec::long_decode(n_requests, seed),
+            "million" => TraceSpec::million(n_requests, seed),
             _ => return None,
         };
         Some(TracePreset { name: name.to_string(), spec })

@@ -279,6 +279,29 @@ impl KvPool {
         AdmissionDecision::Defer
     }
 
+    /// Allocation-free twin of
+    /// `admission_plan(..).admits_immediately()`: would this request be
+    /// admitted right now without evicting anyone? Exactly equivalent
+    /// (pinned by `admits_now_matches_admission_plan`) — `Fits` is
+    /// `need ≤ free`, and `Capped` is only reachable with an empty pool
+    /// (an empty pool makes `eviction_plan` fail for any positive
+    /// deficit, so `EvictThenFit` never preempts it). The full plan
+    /// materializes an eviction victim list on the `EvictThenFit` path;
+    /// this predicate is for the per-event hot paths that only need the
+    /// yes/no — the pump's candidate probe and the fast-forward
+    /// dormancy checks, which run once per queue event.
+    pub fn admits_now(&self, prompt_len: usize, max_new_tokens: usize) -> bool {
+        let need = match self.cfg.admission {
+            AdmissionControl::WorstCase => {
+                self.cfg.worst_case_pages(prompt_len, max_new_tokens)
+            }
+            AdmissionControl::Optimistic => {
+                self.cfg.pages_for_tokens(prompt_len.min(self.cfg.max_tokens_per_request).max(1))
+            }
+        };
+        need <= self.free_pages() || self.residents.is_empty()
+    }
+
     /// LRU-first set of residents whose eviction frees at least
     /// `deficit` pages, or `None` if even evicting everyone falls short.
     pub fn eviction_plan(&self, deficit: usize) -> Option<Vec<u64>> {
@@ -644,5 +667,37 @@ mod tests {
         assert!(matches!(p.admit(1, 10, 1, 64, 0.0), Err(PoolError::AlreadyResident(1))));
         assert!(matches!(p.complete(9), Err(PoolError::NotResident(9))));
         assert!(matches!(p.evict(9), Err(PoolError::NotResident(9))));
+    }
+
+    #[test]
+    fn admits_now_matches_admission_plan() {
+        // Equivalence across admission modes, eviction policies, pool
+        // fill levels, and request sizes — including the empty-pool
+        // Capped corner and the EvictThenFit (plan says no-immediate)
+        // region the fast-forward dormancy check leans on.
+        for admission in [AdmissionControl::WorstCase, AdmissionControl::Optimistic] {
+            for eviction in [EvictionPolicy::KeepResident, EvictionPolicy::EvictAndRecompute] {
+                for residents in 0..4usize {
+                    let mut c = cfg(12);
+                    c.admission = admission;
+                    c.eviction = eviction;
+                    let mut p = KvPool::new(c);
+                    for id in 0..residents as u64 {
+                        p.admit(id, 32, 3, 96, id as f64).unwrap();
+                    }
+                    for (prompt, gen) in
+                        [(1, 1), (16, 16), (64, 64), (200, 400), (2048, 2048), (4000, 4000)]
+                    {
+                        let plan = p.admission_plan(prompt, gen).admits_immediately();
+                        let fast = p.admits_now(prompt, gen);
+                        assert_eq!(
+                            plan, fast,
+                            "admits_now diverged: {admission:?}/{eviction:?} \
+                             residents={residents} prompt={prompt} gen={gen}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

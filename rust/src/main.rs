@@ -17,8 +17,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use pd_swap::coordinator::{
-    generate_workload, requests_from_trace, EventServer, EventServerConfig, Policy, SimServer,
-    SimServerConfig, WorkloadConfig,
+    generate_workload, requests_from_stream, requests_from_trace, EventServer,
+    EventServerConfig, Policy, SimServer, SimServerConfig, WorkloadConfig,
 };
 #[cfg(feature = "pjrt")]
 use pd_swap::coordinator::{LiveServer, LiveServerConfig};
@@ -78,15 +78,22 @@ USAGE:
                    [--pool-pages N] [--optimistic] [--evict] [--decode-batch B]
                    [--trace-out FILE]
   pd-swap simulate --policy <eager|hysteresis|lookahead>   (event-driven core)
-                   [--trace interactive|mixed|bursty|long] [--rate R] [--long-ctx N]
-                   [--requests N] [--seed S] [--max-residents N]
-                   [--decode-batch B] [--no-fast-forward]
+                   [--trace interactive|mixed|bursty|long|million] [--rate R]
+                   [--long-ctx N] [--requests N] [--seed S] [--max-residents N]
+                   [--decode-batch B] [--no-fast-forward] [--no-layer-events]
+                   [--streamed] [--window N] [--log-tail N]
                    [--trace-out FILE] [--log]
                    `long` is the sparse long-generation preset where the
                    analytic decode fast-forward (default on; bit-identical
                    to stepping) folds thousands of token-step events into
                    a handful — the run prints the event-count reduction;
-                   --no-fast-forward steps every token for comparison
+                   --no-fast-forward steps every token for comparison.
+                   `million` is the decode-heavy sparse preset sized for
+                   million-request runs: combine --streamed (lazy arrivals,
+                   --window N queue bound, bit-identical to materialized),
+                   --no-layer-events (skip per-layer prefill markers), and
+                   --log-tail N (keep the last N diagnostic records) for
+                   O(window + residents) memory at any request count
 
   --trace-out FILE writes a deterministic Chrome trace-event JSON (load in
   Perfetto / chrome://tracing) with per-request lifecycle spans, DPR swap
@@ -221,7 +228,7 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
         for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             match TracePreset::by_name(name, n, rate, long_ctx, seed) {
                 Some(t) => traces.push(t),
-                None => bail!("unknown trace '{name}' (try interactive|mixed|bursty)"),
+                None => bail!("unknown trace '{name}' (try interactive|mixed|bursty|long|million)"),
             }
         }
         sweep.traces = traces;
@@ -509,6 +516,12 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
     if args.flag("no-fast-forward") {
         cfg.fast_forward = false;
     }
+    if args.flag("no-layer-events") {
+        cfg.prefill_layer_events = false;
+    }
+    if args.get("log-tail").is_some() {
+        cfg.log_tail = Some(args.get_usize("log-tail", 0).max(1));
+    }
     let pool = cfg.pool.clone();
     let pool = pool.with_total_pages(args.get_usize("pool-pages", pool.total_pages));
     let admission = if args.flag("optimistic") {
@@ -536,19 +549,35 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         ),
         "bursty" => TraceSpec::bursty(n, seed),
         "long" => TraceSpec::long_decode(n, seed),
-        other => bail!("unknown trace '{other}' (try interactive|mixed|bursty|long)"),
+        "million" => TraceSpec::million(n, seed),
+        other => bail!("unknown trace '{other}' (try interactive|mixed|bursty|long|million)"),
     };
-    let entries = spec.generate();
-    println!(
-        "simulating {} requests on the event-driven core: {} trace ({:.1} offered tok/s), {} policy, decode batch {}",
-        entries.len(),
-        args.get_or("trace", "interactive"),
-        TraceSpec::offered_tokens_per_sec(&entries),
-        policy.name(),
-        cfg.decode_batch,
-    );
-    let mut server = EventServer::new(cfg)?;
-    server.run(requests_from_trace(&entries))?;
+    let mut server = EventServer::new(cfg.clone())?;
+    if args.flag("streamed") {
+        // Lazy arrivals, bounded queue window: bit-identical to the
+        // materialized path (pinned by prop_streamed_matches_materialized)
+        // at O(window + residents) memory instead of O(total requests).
+        let window = args.get_usize("window", 1024).max(1);
+        println!(
+            "simulating {} requests on the event-driven core (streamed, window {window}): {} trace, {} policy, decode batch {}",
+            spec.n_requests,
+            args.get_or("trace", "interactive"),
+            policy.name(),
+            cfg.decode_batch,
+        );
+        server.run_streamed(requests_from_stream(spec.stream()), window)?;
+    } else {
+        let entries = spec.generate();
+        println!(
+            "simulating {} requests on the event-driven core: {} trace ({:.1} offered tok/s), {} policy, decode batch {}",
+            entries.len(),
+            args.get_or("trace", "interactive"),
+            TraceSpec::offered_tokens_per_sec(&entries),
+            policy.name(),
+            cfg.decode_batch,
+        );
+        server.run(requests_from_trace(&entries))?;
+    }
     println!("{}", server.metrics.report());
     println!(
         "makespan {:.1} s -> {:.2} tok/s end-to-end, decode throughput {:.2} tok/s (wall TPOT)",
@@ -569,6 +598,19 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         ff.steps,
         stepped_equiv as f64 / processed.max(1) as f64,
     );
+    if ff.absorbed_arrivals > 0 {
+        println!(
+            "  {} dormant arrivals absorbed mid-fold (handled without breaking a fold)",
+            ff.absorbed_arrivals
+        );
+    }
+    if server.outcomes.dropped() > 0 {
+        println!(
+            "outcome records: first {} retained verbatim, {} beyond the cap folded into the aggregate histograms",
+            server.outcomes.len(),
+            server.outcomes.dropped()
+        );
+    }
     if let Some(path) = trace_out {
         server.recorder.write(path)?;
         println!(
@@ -582,8 +624,20 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         );
     }
     if args.flag("log") {
-        println!("\nevent timeline ({} records):", server.event_log().len());
-        for r in server.event_log() {
+        let log = server.event_log();
+        let dropped = server.event_log_dropped();
+        match (dropped, cfg.log_tail) {
+            (0, _) => println!("\nevent timeline ({} records):", log.len()),
+            (d, Some(_)) => println!(
+                "\nevent timeline (last {} records; {d} earlier dropped by the ring):",
+                log.len()
+            ),
+            (d, None) => println!(
+                "\nevent timeline (first {} records; {d} later dropped — use --log-tail N for the tail):",
+                log.len()
+            ),
+        }
+        for r in log {
             println!("  {:>12.6}s  {:<18} #{}", r.at, r.kind, r.subject);
         }
     }

@@ -362,45 +362,61 @@ impl TraceSpec {
         }
     }
 
-    /// Generate the trace: non-homogeneous Poisson arrivals via Lewis
-    /// thinning against the pattern's rate envelope, lengths drawn from
-    /// the mixture. Entries are sorted by arrival.
-    pub fn generate(&self) -> Vec<TraceEntry> {
+    /// Million-request endurance traffic: sustained decode-heavy serving
+    /// over long horizons. Same sparse-arrival regime as
+    /// [`Self::long_decode`] (fixed low Poisson rate; the CLI rate knob
+    /// is ignored) with a small interactive side class so the prefill
+    /// path stays exercised — the preset the `event_million` bench and
+    /// the streamed-arrival path ([`ArrivalStream`] +
+    /// `EventServer::run_streamed`) are built around. The point is not
+    /// the shape of any one request but the *count*: with streamed
+    /// arrivals, interference-aware fast-forward folding, and the
+    /// bounded outcome sink, a run over this preset holds O(resident)
+    /// memory no matter how large `n_requests` gets.
+    pub fn million(n_requests: usize, seed: u64) -> Self {
+        Self {
+            n_requests,
+            arrivals: ArrivalPattern::Poisson { rate: 0.004 },
+            mixture: vec![
+                LengthClass { weight: 0.9, prompt: (48, 192), gen: (1024, 1792) },
+                LengthClass { weight: 0.1, prompt: (32, 128), gen: (64, 256) },
+            ],
+            seed,
+        }
+    }
+
+    /// Lazy iterator form of [`Self::generate`]: the SAME entries in the
+    /// SAME order from the SAME RNG draw sequence, produced one at a
+    /// time in O(1) memory instead of materializing the whole trace.
+    /// `generate()` is implemented on top of this, so the two can never
+    /// drift; `workload_stream_matches_generate_bitwise` pins the
+    /// equivalence explicitly. Arrival times are non-decreasing by
+    /// construction (the thinned Poisson clock only moves forward) —
+    /// the window invariant `EventServer::run_streamed` relies on.
+    pub fn stream(&self) -> ArrivalStream {
         assert!(!self.mixture.is_empty(), "trace needs at least one length class");
         assert!(
             self.arrivals.rate_max() > 0.0,
             "arrival pattern has zero peak rate: no request would ever arrive"
         );
-        let mut rng = Rng::new(self.seed);
-        let envelope = self.arrivals.rate_max();
-        let total_w: f64 = self.mixture.iter().map(|c| c.weight.max(0.0)).sum();
-        let mut t = 0.0f64;
-        let mut out = Vec::with_capacity(self.n_requests);
-        while out.len() < self.n_requests {
-            t += rng.exponential(envelope);
-            // Thinning: keep the candidate with prob rate(t)/envelope.
-            if rng.f64() * envelope > self.arrivals.rate_at(t) {
-                continue;
-            }
-            // Pick a mixture class by weight.
-            let mut pick = rng.f64() * total_w.max(1e-300);
-            let mut class = 0;
-            for (i, c) in self.mixture.iter().enumerate() {
-                pick -= c.weight.max(0.0);
-                if pick <= 0.0 {
-                    class = i;
-                    break;
-                }
-            }
-            let c = &self.mixture[class];
-            let (plo, phi) = c.prompt;
-            let (plo, phi) = (plo.max(1), phi.max(plo.max(1)));
-            let lp = (plo as f64).ln() + rng.f64() * ((phi as f64).ln() - (plo as f64).ln());
-            let prompt_len = (lp.exp().round() as usize).clamp(plo, phi);
-            let (glo, ghi) = c.gen;
-            let gen_len = rng.range(glo.min(ghi), ghi.max(glo));
-            out.push(TraceEntry { arrival: t, prompt_len, gen_len, class });
+        ArrivalStream {
+            rng: Rng::new(self.seed),
+            envelope: self.arrivals.rate_max(),
+            total_w: self.mixture.iter().map(|c| c.weight.max(0.0)).sum(),
+            t: 0.0,
+            emitted: 0,
+            spec: self.clone(),
         }
+    }
+
+    /// Generate the trace: non-homogeneous Poisson arrivals via Lewis
+    /// thinning against the pattern's rate envelope, lengths drawn from
+    /// the mixture. Entries are sorted by arrival. Materializes
+    /// [`Self::stream`]; million-request consumers should iterate the
+    /// stream directly instead.
+    pub fn generate(&self) -> Vec<TraceEntry> {
+        let mut out = Vec::with_capacity(self.n_requests);
+        out.extend(self.stream());
         out
     }
 
@@ -411,6 +427,67 @@ impl TraceSpec {
         let span = last.arrival.max(1e-9);
         let tokens: usize = entries.iter().map(|e| e.prompt_len + e.gen_len).sum();
         tokens as f64 / span
+    }
+}
+
+/// Lazy trace generator: the iterator behind [`TraceSpec::stream`] /
+/// [`TraceSpec::generate`]. Holds only the RNG state and the thinned
+/// Poisson clock — O(1) memory regardless of `n_requests` — and
+/// replays exactly the draw sequence the eager generator used to make,
+/// so `spec.stream().collect::<Vec<_>>() == spec.generate()` bitwise.
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    spec: TraceSpec,
+    rng: Rng,
+    /// Thinning envelope: upper bound of the arrival-rate function.
+    envelope: f64,
+    /// Total mixture weight (class pick is by subtraction against it).
+    total_w: f64,
+    /// Current thinned-Poisson clock; non-decreasing across `next()`.
+    t: f64,
+    emitted: usize,
+}
+
+impl Iterator for ArrivalStream {
+    type Item = TraceEntry;
+
+    fn next(&mut self) -> Option<TraceEntry> {
+        if self.emitted >= self.spec.n_requests {
+            return None;
+        }
+        loop {
+            self.t += self.rng.exponential(self.envelope);
+            // Thinning: keep the candidate with prob rate(t)/envelope.
+            if self.rng.f64() * self.envelope > self.spec.arrivals.rate_at(self.t) {
+                continue;
+            }
+            // Pick a mixture class by weight.
+            let mut pick = self.rng.f64() * self.total_w.max(1e-300);
+            let mut class = 0;
+            for (i, c) in self.spec.mixture.iter().enumerate() {
+                pick -= c.weight.max(0.0);
+                if pick <= 0.0 {
+                    class = i;
+                    break;
+                }
+            }
+            let c = &self.spec.mixture[class];
+            let (plo, phi) = c.prompt;
+            let (plo, phi) = (plo.max(1), phi.max(plo.max(1)));
+            let lp = (plo as f64).ln() + self.rng.f64() * ((phi as f64).ln() - (plo as f64).ln());
+            let prompt_len = (lp.exp().round() as usize).clamp(plo, phi);
+            let (glo, ghi) = c.gen;
+            let gen_len = self.rng.range(glo.min(ghi), ghi.max(glo));
+            self.emitted += 1;
+            return Some(TraceEntry { arrival: self.t, prompt_len, gen_len, class });
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        // Exact: thinning always terminates (envelope > 0 is asserted at
+        // construction), so every `next()` before exhaustion yields.
+        let rem = self.spec.n_requests.saturating_sub(self.emitted);
+        (rem, Some(rem))
     }
 }
 
@@ -550,5 +627,69 @@ mod tests {
         let cv2 = var / (mean * mean);
         assert!(cv2 > 1.5, "cv² {cv2:.2} — arrivals not bursty");
         assert!(TraceSpec::offered_tokens_per_sec(&entries) > 0.0);
+    }
+
+    #[test]
+    fn workload_stream_matches_generate_bitwise() {
+        // One spec per arrival pattern + mixture shape; the stream must
+        // replay the eager generator's exact draw sequence.
+        let specs = [
+            TraceSpec::interactive(96, 0.5, 41),
+            TraceSpec::mixed_long_context(64, 0.1, 16 * 1024, 42),
+            TraceSpec::long_decode(24, 43),
+            TraceSpec::bursty(128, 44),
+            TraceSpec::million(200, 45),
+        ];
+        for spec in &specs {
+            let eager = spec.generate();
+            let lazy: Vec<TraceEntry> = spec.stream().collect();
+            assert_eq!(eager.len(), lazy.len());
+            for (a, b) in eager.iter().zip(&lazy) {
+                assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+                assert_eq!(a.prompt_len, b.prompt_len);
+                assert_eq!(a.gen_len, b.gen_len);
+                assert_eq!(a.class, b.class);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_is_resumable_mid_iteration() {
+        // Cloning the stream freezes its RNG + clock state: the clone and
+        // the original must produce identical suffixes.
+        let spec = TraceSpec::million(50, 9);
+        let mut s = spec.stream();
+        for _ in 0..20 {
+            s.next().unwrap();
+        }
+        let mut fork = s.clone();
+        for _ in 0..30 {
+            let a = s.next().unwrap();
+            let b = fork.next().unwrap();
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.gen_len, b.gen_len);
+        }
+        assert!(s.next().is_none());
+        assert_eq!(s.size_hint(), (0, Some(0)));
+    }
+
+    #[test]
+    fn million_preset_is_decode_heavy_and_underloaded() {
+        let spec = TraceSpec::million(300, 17);
+        let entries = spec.generate();
+        assert_eq!(entries.len(), 300);
+        for w in entries.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let gen_tokens: usize = entries.iter().map(|e| e.gen_len).sum();
+        let prompt_tokens: usize = entries.iter().map(|e| e.prompt_len).sum();
+        // Decode-heavy: generated tokens dominate prompt tokens.
+        assert!(gen_tokens > 4 * prompt_tokens, "{gen_tokens} vs {prompt_tokens}");
+        // Underloaded: mean inter-arrival gap (≈250 s at rate 0.004) far
+        // exceeds any plausible per-request service time, so the backlog
+        // stays bounded and the O(resident) memory claim holds.
+        let span = entries.last().unwrap().arrival;
+        let mean_gap = span / entries.len() as f64;
+        assert!(mean_gap > 100.0, "mean gap {mean_gap:.1}s");
     }
 }

@@ -144,11 +144,27 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Host fingerprint for report comparability: OS, architecture, and
+/// logical CPU count. Throughput numbers (requests/s, events/s) are only
+/// meaningful against a baseline from comparable hardware — the
+/// fingerprint lets the trending tooling flag cross-host comparisons
+/// instead of silently mixing them.
+pub fn host_fingerprint() -> crate::util::json::Value {
+    use crate::util::json::Value;
+    let cpus = std::thread::available_parallelism().map_or(0, |n| n.get());
+    Value::Obj(vec![
+        ("os".into(), Value::Str(std::env::consts::OS.into())),
+        ("arch".into(), Value::Str(std::env::consts::ARCH.into())),
+        ("cpus".into(), Value::Num(cpus as f64)),
+    ])
+}
+
 /// Wrap a report body in the versioned envelope (first slice of the
 /// ROADMAP's artifact-trending item): schema version, git revision when
-/// available, and a content hash of the body. Consumers that predate the
-/// envelope unwrap via [`report_body`], which also passes legacy
-/// documents through untouched.
+/// available, host fingerprint, and a content hash of the body.
+/// Consumers that predate the envelope unwrap via [`report_body`], which
+/// also passes legacy documents (including pre-`host` envelopes)
+/// through untouched — the extra field is additive.
 pub fn envelope(body: &crate::util::json::Value) -> crate::util::json::Value {
     use crate::util::json::Value;
     Value::Obj(vec![
@@ -157,6 +173,7 @@ pub fn envelope(body: &crate::util::json::Value) -> crate::util::json::Value {
             "git_rev".into(),
             git_rev().map(Value::Str).unwrap_or(Value::Null),
         ),
+        ("host".into(), host_fingerprint()),
         (
             "config_hash".into(),
             Value::Str(format!("{:016x}", fnv1a(body.to_string().as_bytes()))),
@@ -411,6 +428,23 @@ mod tests {
         // through untouched.
         assert_eq!(report_body(&ea).get("x").unwrap().as_f64(), Some(1.0));
         assert_eq!(report_body(&a).get("x").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn envelope_carries_the_host_fingerprint() {
+        use crate::util::json::Value;
+        let e = envelope(&Value::Obj(vec![("x".into(), Value::Num(1.0))]));
+        let host = e.get("host").expect("envelope must carry host");
+        assert_eq!(host.get("os").unwrap().as_str(), Some(std::env::consts::OS));
+        assert_eq!(host.get("arch").unwrap().as_str(), Some(std::env::consts::ARCH));
+        assert!(host.get("cpus").unwrap().as_f64().unwrap() >= 0.0);
+        // Legacy documents — and pre-`host` envelopes — still unwrap:
+        // report_body keys on schema_version alone.
+        let pre_host = Value::Obj(vec![
+            ("schema_version".into(), Value::Num(1.0)),
+            ("report".into(), Value::Obj(vec![("y".into(), Value::Num(3.0))])),
+        ]);
+        assert_eq!(report_body(&pre_host).get("y").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

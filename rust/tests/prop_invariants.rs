@@ -3,8 +3,8 @@
 //! mini-framework; proptest is unavailable offline).
 
 use pd_swap::coordinator::{
-    requests_from_trace, EventServer, EventServerConfig, Policy, Request, Scheduler, SimServer,
-    SimServerConfig,
+    requests_from_stream, requests_from_trace, EventServer, EventServerConfig, Policy, Request,
+    Scheduler, SimServer, SimServerConfig,
 };
 use pd_swap::dse::{evaluate_grid_point, explore_threads, DseConfig, DseKernel};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
@@ -1068,8 +1068,12 @@ fn prop_fast_forward_matches_stepped() {
     check(
         cfg(24),
         |rng, _| {
-            let bursty = rng.chance(0.5);
-            let n = rng.range(2, 10);
+            // Trace family: 0/1 = the historical interactive/bursty
+            // shapes, 2 = sparse long-generation, 3 = the decode-heavy
+            // `million` preset (scaled down) — the last two are where the
+            // interference-aware fold absorbs dormant arrivals.
+            let kind = rng.below(4) as usize;
+            let n = if kind >= 2 { rng.range(2, 5) } else { rng.range(2, 10) };
             let seed = rng.next_u64();
             let policy = match rng.below(3) {
                 0 => SwapPolicy::Eager,
@@ -1080,13 +1084,17 @@ fn prop_fast_forward_matches_stepped() {
             let use_surface = rng.chance(0.5);
             let optimistic = rng.chance(0.5);
             let total_pages = rng.range(16, 512);
-            (bursty, n, seed, policy, batch, use_surface, optimistic, total_pages)
+            // Residency axis, including full saturation (max_residents=1
+            // makes every mid-decode arrival dormant).
+            let residents = *rng.choose(&[1usize, 2, 8]);
+            (kind, n, seed, policy, batch, use_surface, optimistic, total_pages, residents)
         },
-        |&(bursty, n, seed, policy, batch, use_surface, optimistic, total_pages)| {
-            let spec = if bursty {
-                TraceSpec::bursty(n, seed)
-            } else {
-                TraceSpec::interactive(n, 0.4, seed)
+        |&(kind, n, seed, policy, batch, use_surface, optimistic, total_pages, residents)| {
+            let spec = match kind {
+                0 => TraceSpec::interactive(n, 0.4, seed),
+                1 => TraceSpec::bursty(n, seed),
+                2 => TraceSpec::long_decode(n, seed),
+                _ => TraceSpec::million(n, seed),
             };
             let reqs = requests_from_trace(&spec.generate());
             let run = |fast_forward: bool| -> Result<EventServer, String> {
@@ -1095,6 +1103,7 @@ fn prop_fast_forward_matches_stepped() {
                 cfg.decode_batch = batch;
                 cfg.use_surface = use_surface;
                 cfg.fast_forward = fast_forward;
+                cfg.max_residents = residents;
                 cfg.pool = cfg.pool.clone().with_total_pages(total_pages).with_policies(
                     if optimistic {
                         AdmissionControl::Optimistic
@@ -1171,6 +1180,74 @@ fn prop_fast_forward_regression_fixture() {
         on.fast_forward_stats().stepped_equivalent(on.events_processed()),
         off.events_processed()
     );
+}
+
+/// Streaming is unobservable from the semantic surface: for every trace
+/// preset (including the decode-heavy `million` shape), every swap
+/// policy, decode batches 1 and 4, both arithmetic backends, and arrival
+/// windows down to a single request, `run_streamed` over the lazy
+/// arrival stream is bit-identical — clocks, counters, histograms,
+/// outcome order and values — to `run` over the materialized workload,
+/// and the lazy stream itself replays the materialized generator's RNG
+/// draws exactly (`requests_from_stream(spec.stream())` ≡
+/// `requests_from_trace(&spec.generate())`).
+#[test]
+fn prop_streamed_matches_materialized() {
+    let presets: [(&str, fn(usize, u64) -> TraceSpec); 4] = [
+        ("interactive", |n, s| TraceSpec::interactive(n, 0.4, s)),
+        ("bursty", TraceSpec::bursty),
+        ("long", TraceSpec::long_decode),
+        ("million", TraceSpec::million),
+    ];
+    for (name, mk) in presets {
+        let spec = mk(8, 0xC0FFEE);
+        // The stream IS the generator, request for request.
+        let eager: Vec<Request> = requests_from_trace(&spec.generate());
+        let lazy: Vec<Request> = requests_from_stream(spec.stream()).collect();
+        assert_eq!(eager.len(), lazy.len(), "{name}");
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.id, b.id, "{name}");
+            assert_eq!(a.prompt_len, b.prompt_len, "{name}");
+            assert_eq!(a.max_new_tokens, b.max_new_tokens, "{name}");
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "{name}");
+        }
+        for policy in [
+            SwapPolicy::Eager,
+            SwapPolicy::hysteresis_default(),
+            SwapPolicy::lookahead_default(),
+        ] {
+            for batch in [1usize, 4] {
+                for use_surface in [true, false] {
+                    let mk_srv = || {
+                        let mut cfg = EventServerConfig::pd_swap(
+                            BITNET_0_73B,
+                            KV260.clone(),
+                            policy,
+                        );
+                        cfg.decode_batch = batch;
+                        cfg.use_surface = use_surface;
+                        EventServer::new(cfg).unwrap()
+                    };
+                    let mut mat = mk_srv();
+                    mat.run(eager.clone()).unwrap();
+                    let mat_fp = ff_fingerprint(&mat);
+                    for window in [1usize, 3, 1024] {
+                        let mut st = mk_srv();
+                        st.run_streamed(requests_from_stream(spec.stream()), window)
+                            .unwrap();
+                        assert_eq!(
+                            mat_fp,
+                            ff_fingerprint(&st),
+                            "{name}/{policy:?}/B={batch}/surface={use_surface}/window={window}: \
+                             streamed run diverged from materialized"
+                        );
+                        assert_eq!(st.events_processed(), mat.events_processed());
+                        assert_eq!(st.arrivals_total(), mat.arrivals_total());
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Resource vector algebra: fits_within is monotone under addition of
