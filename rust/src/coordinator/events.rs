@@ -1874,6 +1874,7 @@ impl EventServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fingerprint::semantic_fingerprint;
     use crate::fpga::KV260;
     use crate::kvpool::AdmissionControl;
     use crate::model::BITNET_0_73B;
@@ -2467,64 +2468,6 @@ mod tests {
         assert!(s.run(vec![]).is_err());
     }
 
-    /// Everything the fast-forward bit-identity contract pins, folded
-    /// into one comparable string: the virtual clock, every counter,
-    /// the latency histograms (count + mean/min/max/median bits), the
-    /// per-request outcome order and values, the pool's eviction log
-    /// and conservation stats. The diagnostic event log and the Chrome
-    /// trace are deliberately excluded — folds skip log records and
-    /// coalesce spans by design.
-    fn semantic_fingerprint(s: &EventServer) -> String {
-        use std::fmt::Write as _;
-        let m = &s.metrics;
-        let mut out = String::new();
-        let _ = writeln!(out, "clock {:x}", s.clock().to_bits());
-        let _ = writeln!(
-            out,
-            "counts {} {} {} {} {} {} {} {}",
-            m.requests_completed.get(),
-            m.tokens_generated.get(),
-            m.reconfigurations.get(),
-            m.swaps_to_prefill.get(),
-            m.swaps_to_decode.get(),
-            m.kv_evictions.get(),
-            m.kv_admissions_capped.get(),
-            m.kv_pool_high_water.get(),
-        );
-        for (name, h) in [
-            ("tpot", &m.tpot),
-            ("ttft", &m.ttft),
-            ("e2e", &m.e2e),
-            ("recompute", &m.recompute_overhead),
-        ] {
-            let _ = writeln!(
-                out,
-                "{name} {} {:x} {:x} {:x} {:x}",
-                h.count(),
-                h.mean().to_bits(),
-                h.min().to_bits(),
-                h.max().to_bits(),
-                h.quantile(0.5).to_bits(),
-            );
-        }
-        for o in &s.outcomes {
-            let _ = writeln!(
-                out,
-                "outcome {} {} {:x} {:x} {:x}",
-                o.id,
-                o.prompt_len,
-                o.ttft.to_bits(),
-                o.e2e.to_bits(),
-                o.mean_tpot.to_bits(),
-            );
-        }
-        for (at, id) in &s.pool().eviction_log {
-            let _ = writeln!(out, "evict {:x} {id}", at.to_bits());
-        }
-        let _ = writeln!(out, "pool {:?}", s.pool().stats);
-        out
-    }
-
     fn run_ff(
         policy: SwapPolicy,
         batch: usize,
@@ -2675,6 +2618,40 @@ mod tests {
         q.push(2.0, SimEvent::Arrival(Request::synthetic(9, 64, 4, 2.0)));
         assert_eq!(q.pop().unwrap().1.subject(), 8);
         assert_eq!(q.pop().unwrap().1.subject(), 9);
+    }
+
+    #[test]
+    fn event_queue_orders_by_at_then_class_then_seq() {
+        // The full (at, class, seq) ordering contract, exercised
+        // directly: time is the primary key; at equal times arrivals
+        // (class 0) precede every derived event (class 1); within a
+        // (time, class) cell push order (seq) rules — regardless of the
+        // interleaving the pushes arrived in. peek()/peek_at() must
+        // agree with the pop that follows them at every step.
+        let mut q = EventQueue::with_capacity(4);
+        assert!(q.is_empty());
+        assert_eq!(q.peek_at(), None);
+        q.push(2.0, SimEvent::DecodeStepDone { id: 20 });
+        q.push(1.0, SimEvent::PrefillDone { id: 11 });
+        q.push(2.0, SimEvent::Arrival(Request::synthetic(21, 64, 4, 2.0)));
+        q.push(1.0, SimEvent::PrefillTrigger { id: 12 });
+        q.push(1.0, SimEvent::Arrival(Request::synthetic(10, 64, 4, 1.0)));
+        q.push(2.0, SimEvent::DecodeStepDone { id: 22 });
+        assert_eq!(q.len(), 6);
+        let mut order = Vec::new();
+        loop {
+            let Some(at_peek) = q.peek_at() else { break };
+            let subject_peek = q.peek().map(|(_, ev)| ev.subject()).unwrap();
+            let (at, ev) = q.pop().unwrap();
+            assert_eq!(at.to_bits(), at_peek.to_bits(), "peek_at disagrees with pop");
+            assert_eq!(ev.subject(), subject_peek, "peek disagrees with pop");
+            order.push(ev.subject());
+        }
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        // t=1: the arrival first (class), then 11, 12 in push order;
+        // t=2: the arrival first, then 20, 22 in push order.
+        assert_eq!(order, vec![10, 11, 12, 21, 20, 22]);
     }
 
     /// One saturated long decode with short requests landing mid-stream:

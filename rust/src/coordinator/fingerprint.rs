@@ -1,0 +1,96 @@
+//! The shared semantic fingerprint behind every engine-equivalence pin.
+//!
+//! Four documented contracts promise *bitwise* agreement between engine
+//! configurations (see README §"Semantics contracts"): surface ≡ phase
+//! model, batch-1 ≡ single-stream, fast-forward ≡ stepped, and
+//! streamed ≡ materialized. Each pin — the hand-written property tests
+//! and the differential fuzzer's oracle alike — compares the same
+//! folded string produced here, so "bit-identical" means one thing
+//! everywhere.
+
+use std::fmt::Write as _;
+
+use super::events::EventServer;
+
+/// Everything the bitwise engine-equivalence contracts pin, folded into
+/// one comparable string: the virtual clock, every counter, the latency
+/// histograms (count + mean/min/max/median bits), the per-request
+/// outcome order and values, the pool's eviction log and conservation
+/// stats. The diagnostic event log and the Chrome trace are deliberately
+/// excluded — fast-forward folds skip log records and coalesce spans by
+/// design, and `events_processed()` is exactly the quantity the fast
+/// paths exist to change.
+///
+/// Floats are rendered via [`f64::to_bits`] so the comparison is exact:
+/// two fingerprints are equal iff every pinned value is equal to the
+/// last bit.
+///
+/// # Examples
+///
+/// The fast-forward contract in one assertion — folding a steady-state
+/// decode must not move a bit of the semantic surface:
+///
+/// ```
+/// use pd_swap::coordinator::{semantic_fingerprint, EventServer, EventServerConfig, Request};
+/// use pd_swap::fpga::KV260;
+/// use pd_swap::model::BITNET_0_73B;
+/// use pd_swap::reconfig::SwapPolicy;
+///
+/// let run = |fast_forward: bool| {
+///     let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+///     cfg.fast_forward = fast_forward;
+///     let mut s = EventServer::new(cfg).unwrap();
+///     s.run(vec![Request::synthetic(0, 128, 64, 0.0)]).unwrap();
+///     semantic_fingerprint(&s)
+/// };
+/// assert_eq!(run(true), run(false));
+/// ```
+pub fn semantic_fingerprint(s: &EventServer) -> String {
+    let m = &s.metrics;
+    let mut out = String::new();
+    let _ = writeln!(out, "clock {:x}", s.clock().to_bits());
+    let _ = writeln!(
+        out,
+        "counts {} {} {} {} {} {} {} {}",
+        m.requests_completed.get(),
+        m.tokens_generated.get(),
+        m.reconfigurations.get(),
+        m.swaps_to_prefill.get(),
+        m.swaps_to_decode.get(),
+        m.kv_evictions.get(),
+        m.kv_admissions_capped.get(),
+        m.kv_pool_high_water.get(),
+    );
+    for (name, h) in [
+        ("tpot", &m.tpot),
+        ("ttft", &m.ttft),
+        ("e2e", &m.e2e),
+        ("recompute", &m.recompute_overhead),
+    ] {
+        let _ = writeln!(
+            out,
+            "{name} {} {:x} {:x} {:x} {:x}",
+            h.count(),
+            h.mean().to_bits(),
+            h.min().to_bits(),
+            h.max().to_bits(),
+            h.quantile(0.5).to_bits(),
+        );
+    }
+    for o in &s.outcomes {
+        let _ = writeln!(
+            out,
+            "outcome {} {} {:x} {:x} {:x}",
+            o.id,
+            o.prompt_len,
+            o.ttft.to_bits(),
+            o.e2e.to_bits(),
+            o.mean_tpot.to_bits(),
+        );
+    }
+    for (at, id) in &s.pool().eviction_log {
+        let _ = writeln!(out, "evict {:x} {id}", at.to_bits());
+    }
+    let _ = writeln!(out, "pool {:?}", s.pool().stats);
+    out
+}

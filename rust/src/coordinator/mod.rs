@@ -30,6 +30,9 @@
 //!   one pass, bit-identical to the stepped path but O(1) in events,
 //!   with dormant arrivals absorbed mid-fold (the interference lattice;
 //!   see `docs/ARCHITECTURE.md` extensions #7–#8).
+//! * [`fingerprint`] — the shared semantic fingerprint every bitwise
+//!   engine-equivalence pin compares, from the hand-written property
+//!   tests to the differential fuzzer's oracle ([`crate::fuzz`]).
 //! * [`live`] — the same coordinator logic driving *real* PJRT execution
 //!   of the AOT artifacts (tokens are real; FPGA timing is reported from
 //!   the simulator running in lockstep). Requires the `pjrt` cargo
@@ -37,6 +40,7 @@
 
 pub mod events;
 pub mod fastforward;
+pub mod fingerprint;
 pub mod fsm;
 #[cfg(feature = "pjrt")]
 pub mod live;
@@ -46,6 +50,7 @@ pub mod sim_server;
 
 pub use events::{EventQueue, EventRecord, EventServer, EventServerConfig, SimEvent};
 pub use fastforward::FastForwardStats;
+pub use fingerprint::semantic_fingerprint;
 pub use fsm::{Phase, PhaseFsm};
 #[cfg(feature = "pjrt")]
 pub use live::{LiveServer, LiveServerConfig};

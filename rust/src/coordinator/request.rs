@@ -272,6 +272,42 @@ mod tests {
     }
 
     #[test]
+    fn outcome_sink_retain_zero_keeps_nothing_counts_everything() {
+        // The `--outcome-retain 0` boundary: pure counting mode. The
+        // Deref surface must be an empty slice, not a panic, and every
+        // push lands in dropped() exactly.
+        let mut s = OutcomeSink::with_capacity(0);
+        assert_eq!(s.capacity(), 0);
+        assert_eq!(s.dropped(), 0);
+        for id in 0..5 {
+            s.push(outcome(id));
+        }
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.dropped(), 5);
+        assert!(s.is_empty());
+        assert_eq!(s.iter().count(), 0);
+        assert!(s.first().is_none());
+    }
+
+    #[test]
+    fn outcome_sink_retain_one_pins_the_first_completion() {
+        // retain = 1: exactly the first-completed outcome survives with
+        // its contents intact; dropped() accounts for the rest.
+        let mut s = OutcomeSink::with_capacity(1);
+        for id in 10..14 {
+            s.push(outcome(id));
+        }
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.dropped(), 3);
+        assert_eq!(s[0].id, 10);
+        assert_eq!(s[0].prompt_len, 8);
+        assert_eq!(s[0].ttft.to_bits(), 0.1f64.to_bits());
+        assert_eq!(s[0].e2e.to_bits(), 1.0f64.to_bits());
+        // len + dropped is the conservation the fuzz oracle checks.
+        assert_eq!(s.len() as u64 + s.dropped(), 4);
+    }
+
+    #[test]
     fn outcome_sink_default_keeps_everything_small() {
         let mut s = OutcomeSink::default();
         for id in 0..100 {

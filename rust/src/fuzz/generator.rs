@@ -1,0 +1,245 @@
+//! Seeded case generation: one draw from the codesign cross-product.
+//!
+//! A [`FuzzCase`] is plain data — every field is an integer, bool, or
+//! seed — so a failing draw serializes losslessly into a replayable
+//! fixture ([`super::shrink::Fixture`]) and shrinks by editing fields,
+//! not by re-rolling RNG state. The realization methods
+//! ([`FuzzCase::trace_spec`], [`FuzzCase::design`],
+//! [`FuzzCase::pool_config`], ...) turn the data back into live
+//! configuration deterministically, reusing the same constructors the
+//! codesign sweep and the CLI use.
+
+use crate::dse::{evaluate_grid_point, DseConfig};
+use crate::engines::{AcceleratorDesign, AttentionHosting};
+use crate::fpga::KV260;
+use crate::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
+use crate::model::{ModelShape, TraceSpec, BITNET_0_73B};
+use crate::reconfig::SwapPolicy;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// The model/device the fuzzer runs on. The crate ships exactly one
+/// calibrated shape (the paper's BitNet-class 0.73B on the KV260), so
+/// the shape axis is fixed; the design axis below still varies the
+/// fabric partition under it.
+pub fn fuzz_shape() -> ModelShape {
+    BITNET_0_73B
+}
+
+/// One point in the serving cross-product: trace family × request
+/// count × accelerator design (paper or a random feasible DSE grid
+/// point) × swap policy × decode batch × residency cap × KV-pool
+/// sizing/policies × streaming window × telemetry. Seeds are stored
+/// explicitly so realization is deterministic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuzzCase {
+    /// Trace preset family: 0 interactive, 1 mixed-long-context,
+    /// 2 bursty, 3 long-decode, 4 million (decode-heavy streaming).
+    pub trace_kind: usize,
+    pub n_requests: usize,
+    /// Seed for the trace preset's own RNG (arrival + length draws).
+    pub trace_seed: u64,
+    /// Poisson arrival rate in milli-requests/s (integer so the JSON
+    /// round-trip is exact); presets that fix their own rate ignore it.
+    pub rate_milli: usize,
+    /// Long-context knob for the `mixed_long_context` preset.
+    pub long_ctx: usize,
+    /// DSE grid point realized via [`evaluate_grid_point`]; `tlmm_pe ==
+    /// 0` is the sentinel for the paper design (and infeasible draws
+    /// fall back to it, so every case runs).
+    pub tlmm_pe: usize,
+    pub prefill_dsp: usize,
+    pub decode_dsp: usize,
+    /// 0 eager, 1 hysteresis (defaults), 2 lookahead (defaults).
+    pub policy_kind: usize,
+    /// Requested decode batch; clamped at realization by the design's
+    /// activation-buffer headroom ([`AcceleratorDesign::max_decode_batch`]).
+    pub decode_batch: usize,
+    pub max_residents: usize,
+    pub total_pages: usize,
+    pub page_tokens: usize,
+    /// Admission: optimistic (grow-on-demand) vs worst-case reservation.
+    pub optimistic: bool,
+    /// Eviction: evict-and-recompute vs keep-resident (cap in place).
+    pub evict: bool,
+    /// Arrival-window size for the streamed↔materialized pair.
+    pub window: usize,
+    /// Run the telemetry pair (recorder on must be bitwise inert and the
+    /// Chrome export structurally valid).
+    pub telemetry: bool,
+}
+
+impl FuzzCase {
+    /// Draw a case at the given prop-style `size` (1..=64): size scales
+    /// the request-count ceiling so early cases are tiny and later ones
+    /// approach `max_requests`.
+    pub fn draw(rng: &mut Rng, size: usize, max_requests: usize) -> Self {
+        let cap = (2 + size / 6).min(max_requests.max(2));
+        let trace_kind = rng.below(5);
+        // The long-generation families step thousands of events per
+        // request on the stepped side of the oracle; keep their counts
+        // smaller so a case stays milliseconds-bounded.
+        let n_hi = if trace_kind >= 3 { cap.min(5) } else { cap };
+        let (tlmm_pe, prefill_dsp, decode_dsp) = if rng.chance(0.5) {
+            (0, 0, 0)
+        } else {
+            (
+                *rng.choose(&[160usize, 240, 320, 400]),
+                rng.range(2, 25) * 25,
+                rng.range(1, 25) * 25,
+            )
+        };
+        Self {
+            trace_kind,
+            n_requests: rng.range(1, n_hi),
+            trace_seed: rng.next_u64(),
+            rate_milli: rng.range(100, 700),
+            long_ctx: rng.range(1024, fuzz_shape().max_seq),
+            tlmm_pe,
+            prefill_dsp,
+            decode_dsp,
+            policy_kind: rng.below(3),
+            decode_batch: *rng.choose(&[1usize, 2, 4]),
+            max_residents: *rng.choose(&[1usize, 2, 8]),
+            total_pages: rng.range(16, 512),
+            page_tokens: *rng.choose(&[16usize, 32, 64]),
+            optimistic: rng.chance(0.5),
+            evict: rng.chance(0.5),
+            window: *rng.choose(&[1usize, 3, 1024]),
+            telemetry: rng.chance(0.25),
+        }
+    }
+
+    /// The trace preset this case serves (deterministic in `trace_seed`).
+    pub fn trace_spec(&self) -> TraceSpec {
+        let rate = self.rate_milli as f64 / 1000.0;
+        match self.trace_kind {
+            0 => TraceSpec::interactive(self.n_requests, rate, self.trace_seed),
+            1 => TraceSpec::mixed_long_context(
+                self.n_requests,
+                rate,
+                self.long_ctx,
+                self.trace_seed,
+            ),
+            2 => TraceSpec::bursty(self.n_requests, self.trace_seed),
+            3 => TraceSpec::long_decode(self.n_requests, self.trace_seed),
+            _ => TraceSpec::million(self.n_requests, self.trace_seed),
+        }
+    }
+
+    /// The accelerator design: the paper floorplan for the `tlmm_pe ==
+    /// 0` sentinel, otherwise the DSE grid point — falling back to the
+    /// paper design when the drawn point is infeasible on the KV260.
+    pub fn design(&self) -> AcceleratorDesign {
+        if self.tlmm_pe == 0 {
+            return AcceleratorDesign::pd_swap();
+        }
+        let dse = DseConfig::paper_default(
+            fuzz_shape(),
+            KV260.clone(),
+            AttentionHosting::Reconfigurable,
+        );
+        let p = evaluate_grid_point(&dse, self.tlmm_pe, self.prefill_dsp, self.decode_dsp);
+        if p.feasible {
+            p.design
+        } else {
+            AcceleratorDesign::pd_swap()
+        }
+    }
+
+    pub fn swap_policy(&self) -> SwapPolicy {
+        match self.policy_kind {
+            0 => SwapPolicy::Eager,
+            1 => SwapPolicy::hysteresis_default(),
+            _ => SwapPolicy::lookahead_default(),
+        }
+    }
+
+    /// The KV pool under test. `with_page_tokens` re-derives the page
+    /// count from the byte budget, so it must precede the explicit
+    /// `with_total_pages` override.
+    pub fn pool_config(&self) -> KvPoolConfig {
+        KvPoolConfig::for_device(&fuzz_shape(), &KV260)
+            .with_page_tokens(self.page_tokens)
+            .with_total_pages(self.total_pages)
+            .with_policies(
+                if self.optimistic {
+                    AdmissionControl::Optimistic
+                } else {
+                    AdmissionControl::WorstCase
+                },
+                if self.evict {
+                    EvictionPolicy::EvictAndRecompute
+                } else {
+                    EvictionPolicy::KeepResident
+                },
+            )
+    }
+
+    /// Serialize to JSON. Seeds travel as hex *strings*: the crate's
+    /// JSON numbers are f64, which silently rounds u64 values above
+    /// 2^53 — exactly the range `next_u64` seeds live in.
+    pub fn to_json(&self) -> Value {
+        Value::from_pairs(vec![
+            ("trace_kind", Value::num(self.trace_kind as f64)),
+            ("n_requests", Value::num(self.n_requests as f64)),
+            ("trace_seed", Value::str(format!("{:#018x}", self.trace_seed))),
+            ("rate_milli", Value::num(self.rate_milli as f64)),
+            ("long_ctx", Value::num(self.long_ctx as f64)),
+            ("tlmm_pe", Value::num(self.tlmm_pe as f64)),
+            ("prefill_dsp", Value::num(self.prefill_dsp as f64)),
+            ("decode_dsp", Value::num(self.decode_dsp as f64)),
+            ("policy_kind", Value::num(self.policy_kind as f64)),
+            ("decode_batch", Value::num(self.decode_batch as f64)),
+            ("max_residents", Value::num(self.max_residents as f64)),
+            ("total_pages", Value::num(self.total_pages as f64)),
+            ("page_tokens", Value::num(self.page_tokens as f64)),
+            ("optimistic", Value::Bool(self.optimistic)),
+            ("evict", Value::Bool(self.evict)),
+            ("window", Value::num(self.window as f64)),
+            ("telemetry", Value::Bool(self.telemetry)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        let us = |k: &str| -> Result<usize, String> {
+            v.get(k)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| format!("fixture case: missing usize field '{k}'"))
+        };
+        let fb = |k: &str| -> Result<bool, String> {
+            v.get(k)
+                .and_then(Value::as_bool)
+                .ok_or_else(|| format!("fixture case: missing bool field '{k}'"))
+        };
+        Ok(Self {
+            trace_kind: us("trace_kind")?,
+            n_requests: us("n_requests")?,
+            trace_seed: parse_hex_seed(
+                v.get("trace_seed")
+                    .and_then(Value::as_str)
+                    .ok_or("fixture case: missing 'trace_seed'")?,
+            )?,
+            rate_milli: us("rate_milli")?,
+            long_ctx: us("long_ctx")?,
+            tlmm_pe: us("tlmm_pe")?,
+            prefill_dsp: us("prefill_dsp")?,
+            decode_dsp: us("decode_dsp")?,
+            policy_kind: us("policy_kind")?,
+            decode_batch: us("decode_batch")?,
+            max_residents: us("max_residents")?,
+            total_pages: us("total_pages")?,
+            page_tokens: us("page_tokens")?,
+            optimistic: fb("optimistic")?,
+            evict: fb("evict")?,
+            window: us("window")?,
+            telemetry: fb("telemetry")?,
+        })
+    }
+}
+
+/// Parse a `0x`-prefixed (or bare-hex) u64 seed string.
+pub fn parse_hex_seed(s: &str) -> Result<u64, String> {
+    let h = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")).unwrap_or(s);
+    u64::from_str_radix(h, 16).map_err(|e| format!("bad hex seed '{s}': {e}"))
+}

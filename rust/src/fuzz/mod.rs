@@ -1,0 +1,247 @@
+//! Differential serving fuzzer: one seeded oracle over every engine
+//! pair (beyond-paper infrastructure; see `docs/ARCHITECTURE.md`
+//! extension #9).
+//!
+//! The repo's four semantics contracts (README §"Semantics contracts")
+//! are each pinned by a hand-written property test that fixes most of
+//! the configuration space. This module is the cheap insurance for the
+//! rest of the cross-product: [`generator`] draws a random
+//! `(trace, design, policy, batch, pool, window, telemetry)` tuple from
+//! a seed, [`oracle`] runs every applicable engine pair on it and
+//! asserts the documented equivalences (bitwise
+//! [`crate::coordinator::semantic_fingerprint`] where the contract
+//! promises bitwise, conservation invariants everywhere), and
+//! [`shrink`] minimizes any failing tuple into a replayable JSON
+//! fixture. The CLI entry is `pd-swap fuzz --seed S --cases N`; the
+//! committed corpus under `rust/tests/fuzz_corpus/` replays through
+//! `rust/tests/fuzz_replay.rs`.
+//!
+//! Everything is deterministic: same seed → same cases → same summary,
+//! byte for byte (pinned by `fuzz_is_deterministic_and_clean` below and
+//! the CI `fuzz-smoke` step).
+
+pub mod generator;
+pub mod oracle;
+pub mod shrink;
+
+pub use generator::{parse_hex_seed, FuzzCase};
+pub use oracle::{run_case, CaseReport, Divergence, OracleOptions};
+pub use shrink::{replay_file, shrink_case, Fixture, FixtureDivergence, FIXTURE_SCHEMA};
+
+use std::fmt::Write as _;
+
+use crate::util::rng::Rng;
+
+/// Driver configuration for one fuzz run.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Ceiling on requests per case (the generator's size ramp tops out
+    /// here).
+    pub max_requests: usize,
+    /// Where to write the shrunk fixture on divergence; `None` skips
+    /// writing (tests that only need the summary).
+    pub out_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x5EED, max_requests: 10, out_dir: None }
+    }
+}
+
+/// Outcome of a fuzz run. `report` is deliberately free of anything
+/// non-deterministic (no wall time, no absolute paths), so re-running
+/// the same seed must reproduce it byte for byte.
+#[derive(Debug, Clone)]
+pub struct FuzzSummary {
+    pub cases_run: usize,
+    pub divergences: usize,
+    pub fixture_path: Option<std::path::PathBuf>,
+    pub report: String,
+}
+
+/// Size ramp matching [`crate::util::prop::Config`]'s default
+/// `max_size`: case `i` of `N` runs at `1 + i*64/N`.
+const FUZZ_MAX_SIZE: usize = 64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Run the seeded fuzz loop: draw cases, run the oracle on each, and on
+/// the first divergence shrink it and (optionally) write the fixture.
+/// Errors are reserved for I/O problems; a divergence is a normal
+/// summary outcome (`divergences > 0`) so the CLI can exit nonzero with
+/// the full report printed.
+pub fn run_fuzz(cfg: &FuzzConfig, opts: OracleOptions) -> Result<FuzzSummary, String> {
+    let mut meta = Rng::new(cfg.seed);
+    let mut digest = FNV_OFFSET;
+    let mut total_requests = 0usize;
+    let mut total_pairs = 0usize;
+    let mut events_reference = 0u64;
+    let mut events_stepped = 0u64;
+    for case_index in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let size = 1 + (case_index * FUZZ_MAX_SIZE) / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let case = FuzzCase::draw(&mut rng, size, cfg.max_requests);
+        match run_case(&case, opts) {
+            Ok(rep) => {
+                digest = fnv1a(digest, rep.fingerprint.as_bytes());
+                total_requests += rep.requests;
+                total_pairs += rep.pairs_checked;
+                events_reference += rep.events_reference;
+                events_stepped += rep.events_stepped;
+            }
+            Err(d) => {
+                let (min_case, min_div, attempts) = shrink_case(case, d, opts);
+                let fixture = Fixture {
+                    master_seed: cfg.seed,
+                    case_index,
+                    case_seed,
+                    case: min_case,
+                    divergence: Some(FixtureDivergence {
+                        pair: min_div.pair.to_string(),
+                        fingerprint_line: min_div.line,
+                        detail: min_div.detail.clone(),
+                    }),
+                };
+                let mut fixture_path = None;
+                if let Some(dir) = &cfg.out_dir {
+                    std::fs::create_dir_all(dir)
+                        .map_err(|e| format!("create {}: {e}", dir.display()))?;
+                    let path = dir
+                        .join(format!("fuzz-repro-{:016x}-{case_index}.json", cfg.seed));
+                    fixture.write(&path)?;
+                    fixture_path = Some(path);
+                }
+                let mut report = String::new();
+                let _ = writeln!(
+                    report,
+                    "fuzz: DIVERGENCE at case {case_index}/{} (seed {:#x}, case seed {:#018x})",
+                    cfg.cases, cfg.seed, case_seed
+                );
+                let _ = writeln!(
+                    report,
+                    "  pair: {} (first divergent fingerprint line {})",
+                    min_div.pair, min_div.line
+                );
+                let _ = writeln!(report, "  detail: {}", min_div.detail);
+                let _ = writeln!(
+                    report,
+                    "  shrunk in {attempts} oracle re-runs to: {:?}",
+                    fixture.case
+                );
+                let _ = writeln!(
+                    report,
+                    "  replay: pd-swap fuzz --replay <fixture.json>"
+                );
+                return Ok(FuzzSummary {
+                    cases_run: case_index + 1,
+                    divergences: 1,
+                    fixture_path,
+                    report,
+                });
+            }
+        }
+    }
+    let mut report = String::new();
+    let _ = writeln!(
+        report,
+        "fuzz: {} cases at seed {:#x} (≤ {} requests/case) — no divergence",
+        cfg.cases, cfg.seed, cfg.max_requests
+    );
+    let _ = writeln!(
+        report,
+        "  {} engine-pair checks over {} generated requests",
+        total_pairs, total_requests
+    );
+    let _ = writeln!(
+        report,
+        "  events: {} on the fast-forward reference vs {} stepped",
+        events_reference, events_stepped
+    );
+    let _ = writeln!(
+        report,
+        "  oracle: ff≡stepped, surface≡direct, streamed≡materialized, telemetry-inert \
+         (bitwise); SimServer + pool/outcome/token conservation (invariants)"
+    );
+    let _ = writeln!(report, "  corpus digest: {:#018x}", digest);
+    Ok(FuzzSummary {
+        cases_run: cfg.cases,
+        divergences: 0,
+        fixture_path: None,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FuzzConfig {
+        FuzzConfig { cases: 4, seed: 0x5EED, max_requests: 3, out_dir: None }
+    }
+
+    #[test]
+    fn fuzz_is_deterministic_and_clean() {
+        // The acceptance pin in miniature: the smoke seed finds nothing,
+        // and re-running it reproduces the summary byte for byte.
+        let a = run_fuzz(&small_cfg(), OracleOptions::default()).unwrap();
+        assert_eq!(a.divergences, 0, "{}", a.report);
+        assert_eq!(a.cases_run, 4);
+        let b = run_fuzz(&small_cfg(), OracleOptions::default()).unwrap();
+        assert_eq!(a.report, b.report, "summary must be byte-identical across reruns");
+    }
+
+    #[test]
+    fn case_json_round_trips() {
+        let mut rng = Rng::new(7);
+        for size in [1usize, 8, 32, 64] {
+            let case = FuzzCase::draw(&mut rng, size, 10);
+            let text = case.to_json().to_pretty();
+            let doc = crate::util::json::parse(&text).unwrap();
+            assert_eq!(FuzzCase::from_json(&doc).unwrap(), case, "{text}");
+        }
+    }
+
+    #[test]
+    fn injected_divergence_shrinks_to_replayable_fixture() {
+        // Break the oracle on purpose (a 1-token ceiling fails every
+        // case) and prove the whole loop: divergence → shrink → fixture
+        // on disk → replay reproduces it → the un-broken oracle clears
+        // the same fixture.
+        let opts = OracleOptions { inject_token_ceiling: Some(1) };
+        let dir = std::env::temp_dir().join(format!("pd-swap-fuzz-{}", std::process::id()));
+        let cfg = FuzzConfig {
+            cases: 4,
+            seed: 1,
+            max_requests: 6,
+            out_dir: Some(dir.clone()),
+        };
+        let summary = run_fuzz(&cfg, opts).unwrap();
+        assert_eq!(summary.divergences, 1);
+        assert_eq!(summary.cases_run, 1, "the first case already trips a 1-token ceiling");
+        let path = summary.fixture_path.expect("a fixture must be written");
+
+        let (fx, diverged) = replay_file(&path, opts).unwrap();
+        assert_eq!(fx.case.n_requests, 1, "shrink should reach the 1-request floor");
+        assert_eq!(fx.master_seed, 1);
+        let d = diverged.expect("replay with the injected fault must reproduce");
+        assert_eq!(d.pair, "injected-token-ceiling");
+        let recorded = fx.divergence.expect("fixture records what failed");
+        assert_eq!(recorded.pair, "injected-token-ceiling");
+
+        let (_, clean) = replay_file(&path, OracleOptions::default()).unwrap();
+        assert!(clean.is_none(), "without the injected fault the engines agree");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,385 @@
+//! The differential oracle: run every applicable engine pair on one
+//! [`FuzzCase`] and assert the documented equivalences.
+//!
+//! The oracle matrix (see `docs/ARCHITECTURE.md` extension #9):
+//!
+//! | pair | promise |
+//! |------|---------|
+//! | fast-forward vs stepped | bitwise [`semantic_fingerprint`] + fold event accounting |
+//! | surface vs direct phase model | bitwise fingerprint |
+//! | streamed vs materialized | bitwise fingerprint + event/arrival counts |
+//! | telemetry on vs off | bitwise fingerprint (inert recorder) + valid Chrome trace |
+//! | `EventServer` vs `SimServer` | invariant-only (different time semantics) |
+//!
+//! Every `EventServer` run additionally passes always-on well-formedness
+//! checks: monotone diagnostic log, finite non-negative clock, drained
+//! pool with intact conservation invariants, exact [`OutcomeSink`] drop
+//! accounting, eviction-counter agreement, and token conservation.
+
+use crate::coordinator::{
+    requests_from_stream, requests_from_trace, semantic_fingerprint, EventServer,
+    EventServerConfig, OutcomeSink, Policy, Request, SimServer, SimServerConfig,
+};
+use crate::engines::AcceleratorDesign;
+use crate::fpga::KV260;
+use crate::telemetry::validate_chrome_trace;
+
+use super::generator::{fuzz_shape, FuzzCase};
+
+/// A failed oracle check: which engine pair disagreed, where, and how.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    /// Which pair (or which well-formedness check) failed.
+    pub pair: &'static str,
+    /// First [`semantic_fingerprint`] line at which the runs part ways —
+    /// the fingerprint is ordered by the event timeline (clock, counters,
+    /// histograms, then per-request outcomes in completion order), so
+    /// this is the event-index analog a reproducer should start from.
+    /// Zero for invariant violations with no line structure.
+    pub line: usize,
+    pub detail: String,
+}
+
+/// Oracle knobs. The only knob is test-only fault injection: a token
+/// ceiling that makes the oracle report a synthetic divergence whenever
+/// the reference run generates at least that many tokens. It exists to
+/// prove the shrink → fixture → replay loop end-to-end (an injected
+/// "bug" shrinks to the floor case and replays from disk) and is never
+/// set by the CLI.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OracleOptions {
+    pub inject_token_ceiling: Option<u64>,
+}
+
+/// What a clean case contributes to the run summary.
+#[derive(Debug, Clone)]
+pub struct CaseReport {
+    /// Reference fingerprint (fast-forward + surface, materialized).
+    pub fingerprint: String,
+    pub requests: usize,
+    pub pairs_checked: usize,
+    pub events_reference: u64,
+    pub events_stepped: u64,
+}
+
+fn div(pair: &'static str, detail: String) -> Divergence {
+    Divergence { pair, line: 0, detail }
+}
+
+/// Compare two fingerprints; on mismatch report the first divergent line.
+fn bitwise(pair: &'static str, reference: &str, candidate: &str) -> Result<(), Divergence> {
+    if reference == candidate {
+        return Ok(());
+    }
+    let line = reference
+        .lines()
+        .zip(candidate.lines())
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| reference.lines().count().min(candidate.lines().count()));
+    let a = reference.lines().nth(line).unwrap_or("<end>");
+    let b = candidate.lines().nth(line).unwrap_or("<end>");
+    Err(Divergence {
+        pair,
+        line,
+        detail: format!("fingerprint line {line}: reference `{a}` vs candidate `{b}`"),
+    })
+}
+
+/// The reference `EventServer` configuration for a case: fast-forward
+/// on, cached surface backend, telemetry off.
+fn event_cfg(case: &FuzzCase, design: &AcceleratorDesign, batch: usize) -> EventServerConfig {
+    let mut cfg = EventServerConfig::pd_swap(fuzz_shape(), KV260.clone(), case.swap_policy());
+    cfg.design = design.clone();
+    cfg.pool = case.pool_config();
+    cfg.decode_batch = batch;
+    cfg.max_residents = case.max_residents;
+    cfg
+}
+
+fn run_event(
+    cfg: EventServerConfig,
+    reqs: &[Request],
+    pair: &'static str,
+) -> Result<EventServer, Divergence> {
+    let mut srv =
+        EventServer::new(cfg).map_err(|e| div(pair, format!("EventServer::new failed: {e}")))?;
+    srv.run(reqs.to_vec()).map_err(|e| div(pair, format!("run failed: {e}")))?;
+    Ok(srv)
+}
+
+fn check_outcomes(
+    outcomes: &OutcomeSink,
+    completed: u64,
+    pair: &'static str,
+) -> Result<(), Divergence> {
+    if outcomes.len() as u64 + outcomes.dropped() != completed {
+        return Err(div(
+            pair,
+            format!(
+                "OutcomeSink drop accounting: {} kept + {} dropped != {completed} completed",
+                outcomes.len(),
+                outcomes.dropped()
+            ),
+        ));
+    }
+    let mut ids: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    if ids.len() != outcomes.len() {
+        return Err(div(pair, "duplicate request id in outcomes".into()));
+    }
+    for o in outcomes.iter() {
+        if !(o.ttft >= 0.0 && o.e2e >= o.ttft - 1e-9) {
+            return Err(div(
+                pair,
+                format!("outcome {} latency ordering: ttft {} e2e {}", o.id, o.ttft, o.e2e),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Always-on well-formedness for one completed `EventServer` run.
+fn well_formed(s: &EventServer, n: usize, sum_max_new: u64, pair: &'static str) -> Result<(), Divergence> {
+    if !s.clock().is_finite() || s.clock() < 0.0 {
+        return Err(div(pair, format!("virtual clock not finite/non-negative: {}", s.clock())));
+    }
+    let log = s.event_log();
+    for w in log.windows(2) {
+        if w[1].at < w[0].at {
+            return Err(div(
+                pair,
+                format!("diagnostic log not monotone: {} after {}", w[1].at, w[0].at),
+            ));
+        }
+    }
+    s.pool()
+        .check_invariants()
+        .map_err(|e| div(pair, format!("pool conservation: {e}")))?;
+    if s.pool().resident_count() != 0 || s.pool().used_pages() != 0 {
+        return Err(div(
+            pair,
+            format!(
+                "pool not drained: {} residents, {} pages",
+                s.pool().resident_count(),
+                s.pool().used_pages()
+            ),
+        ));
+    }
+    if s.metrics.requests_completed.get() != n as u64 {
+        return Err(div(
+            pair,
+            format!("completed {} of {n} requests", s.metrics.requests_completed.get()),
+        ));
+    }
+    if s.metrics.tokens_generated.get() > sum_max_new {
+        return Err(div(
+            pair,
+            format!(
+                "token conservation: generated {} > requested {sum_max_new}",
+                s.metrics.tokens_generated.get()
+            ),
+        ));
+    }
+    if s.metrics.kv_evictions.get() != s.pool().stats.evicted {
+        return Err(div(
+            pair,
+            format!(
+                "eviction counters disagree: metrics {} vs pool {}",
+                s.metrics.kv_evictions.get(),
+                s.pool().stats.evicted
+            ),
+        ));
+    }
+    check_outcomes(&s.outcomes, s.metrics.requests_completed.get(), pair)
+}
+
+/// The invariant-only `SimServer` leg: the phase-batch engine has
+/// different time semantics (round-synchronous, no mid-decode arrivals)
+/// so nothing bitwise is promised — but conservation must hold on the
+/// same workload, design, and pool.
+fn check_sim(
+    case: &FuzzCase,
+    design: &AcceleratorDesign,
+    reqs: &[Request],
+    batch: usize,
+    sum_max_new: u64,
+) -> Result<(), Divergence> {
+    const PAIR: &str = "sim-server-conservation";
+    let cfg = SimServerConfig {
+        design: design.clone(),
+        device: KV260.clone(),
+        shape: fuzz_shape(),
+        policy: Policy::BatchedPhases { max_batch: case.max_residents.max(1) },
+        overlap: true,
+        pool: case.pool_config(),
+        decode_batch: batch,
+        trace: false,
+    };
+    let mut srv =
+        SimServer::new(cfg).map_err(|e| div(PAIR, format!("SimServer::new failed: {e}")))?;
+    srv.run(reqs.to_vec()).map_err(|e| div(PAIR, format!("run failed: {e}")))?;
+    if !srv.clock().is_finite() || srv.clock() < 0.0 {
+        return Err(div(PAIR, format!("clock not finite/non-negative: {}", srv.clock())));
+    }
+    srv.pool()
+        .check_invariants()
+        .map_err(|e| div(PAIR, format!("pool conservation: {e}")))?;
+    if srv.pool().resident_count() != 0 || srv.pool().used_pages() != 0 {
+        return Err(div(PAIR, "pool not drained at end of run".into()));
+    }
+    if srv.metrics.requests_completed.get() != reqs.len() as u64 {
+        return Err(div(
+            PAIR,
+            format!(
+                "completed {} of {} requests",
+                srv.metrics.requests_completed.get(),
+                reqs.len()
+            ),
+        ));
+    }
+    if srv.metrics.tokens_generated.get() > sum_max_new {
+        return Err(div(
+            PAIR,
+            format!(
+                "token conservation: generated {} > requested {sum_max_new}",
+                srv.metrics.tokens_generated.get()
+            ),
+        ));
+    }
+    if srv.metrics.kv_evictions.get() != srv.pool().stats.evicted {
+        return Err(div(
+            PAIR,
+            format!(
+                "eviction counters disagree: metrics {} vs pool {}",
+                srv.metrics.kv_evictions.get(),
+                srv.pool().stats.evicted
+            ),
+        ));
+    }
+    check_outcomes(&srv.outcomes, srv.metrics.requests_completed.get(), PAIR)
+}
+
+/// Run the whole oracle on one case: reference run, then every
+/// applicable pair. Returns the first divergence found (the driver
+/// shrinks it), or a [`CaseReport`] for the summary digest.
+pub fn run_case(case: &FuzzCase, opts: OracleOptions) -> Result<CaseReport, Divergence> {
+    let spec = case.trace_spec();
+    let reqs = requests_from_trace(&spec.generate());
+    let design = case.design();
+    let batch = case
+        .decode_batch
+        .min(design.max_decode_batch(&KV260, &fuzz_shape()))
+        .max(1);
+    let sum_max_new: u64 = reqs.iter().map(|r| r.max_new_tokens as u64).sum();
+    let n = reqs.len();
+
+    // A — reference: fast-forward + surface backend, materialized.
+    let reference = run_event(event_cfg(case, &design, batch), &reqs, "reference")?;
+    well_formed(&reference, n, sum_max_new, "reference")?;
+    let fp = semantic_fingerprint(&reference);
+    let mut pairs_checked = 0usize;
+
+    // B — stepped: fast-forward off must be bitwise identical, and the
+    // fold accounting must balance (every skipped token-step stands in
+    // for exactly one stepped queue event).
+    let stepped = {
+        let mut cfg = event_cfg(case, &design, batch);
+        cfg.fast_forward = false;
+        run_event(cfg, &reqs, "fast-forward-vs-stepped")?
+    };
+    well_formed(&stepped, n, sum_max_new, "fast-forward-vs-stepped")?;
+    bitwise("fast-forward-vs-stepped", &fp, &semantic_fingerprint(&stepped))?;
+    let equiv = reference
+        .fast_forward_stats()
+        .stepped_equivalent(reference.events_processed());
+    if equiv != stepped.events_processed() {
+        return Err(div(
+            "fast-forward-vs-stepped",
+            format!(
+                "fold event accounting drifted: {equiv} folded-equivalent vs {} stepped",
+                stepped.events_processed()
+            ),
+        ));
+    }
+    if stepped.fast_forward_stats().steps != 0 {
+        return Err(div("fast-forward-vs-stepped", "the stepped run must never fold".into()));
+    }
+    pairs_checked += 1;
+
+    // C — direct backend: the cached surface is a restatement of the
+    // phase model, so disabling it must not move a bit.
+    let direct = {
+        let mut cfg = event_cfg(case, &design, batch);
+        cfg.use_surface = false;
+        run_event(cfg, &reqs, "surface-vs-direct")?
+    };
+    well_formed(&direct, n, sum_max_new, "surface-vs-direct")?;
+    bitwise("surface-vs-direct", &fp, &semantic_fingerprint(&direct))?;
+    pairs_checked += 1;
+
+    // D — streamed: lazy arrivals through a bounded window reproduce the
+    // materialized run bitwise, including event and arrival counts.
+    let streamed = {
+        let cfg = event_cfg(case, &design, batch);
+        let mut srv = EventServer::new(cfg)
+            .map_err(|e| div("streamed-vs-materialized", format!("EventServer::new failed: {e}")))?;
+        srv.run_streamed(requests_from_stream(spec.stream()), case.window)
+            .map_err(|e| div("streamed-vs-materialized", format!("run_streamed failed: {e}")))?;
+        srv
+    };
+    well_formed(&streamed, n, sum_max_new, "streamed-vs-materialized")?;
+    bitwise("streamed-vs-materialized", &fp, &semantic_fingerprint(&streamed))?;
+    if streamed.events_processed() != reference.events_processed()
+        || streamed.arrivals_total() != reference.arrivals_total()
+    {
+        return Err(div(
+            "streamed-vs-materialized",
+            format!(
+                "event accounting drifted: streamed {}/{} vs materialized {}/{}",
+                streamed.events_processed(),
+                streamed.arrivals_total(),
+                reference.events_processed(),
+                reference.arrivals_total()
+            ),
+        ));
+    }
+    pairs_checked += 1;
+
+    // E — telemetry (when drawn): the recorder must be bitwise inert and
+    // the Chrome export structurally valid.
+    if case.telemetry {
+        let traced = {
+            let mut cfg = event_cfg(case, &design, batch);
+            cfg.trace = true;
+            run_event(cfg, &reqs, "telemetry-inert")?
+        };
+        well_formed(&traced, n, sum_max_new, "telemetry-inert")?;
+        bitwise("telemetry-inert", &fp, &semantic_fingerprint(&traced))?;
+        validate_chrome_trace(&traced.recorder.to_chrome_json())
+            .map_err(|e| div("chrome-trace", e))?;
+        pairs_checked += 1;
+    }
+
+    // F — the phase-batch reference engine, invariant-only.
+    check_sim(case, &design, &reqs, batch, sum_max_new)?;
+    pairs_checked += 1;
+
+    if let Some(ceiling) = opts.inject_token_ceiling {
+        let got = reference.metrics.tokens_generated.get();
+        if got >= ceiling {
+            return Err(div(
+                "injected-token-ceiling",
+                format!("injected fault: {got} tokens generated >= ceiling {ceiling}"),
+            ));
+        }
+    }
+
+    Ok(CaseReport {
+        fingerprint: fp,
+        requests: n,
+        pairs_checked,
+        events_reference: reference.events_processed(),
+        events_stepped: stepped.events_processed(),
+    })
+}

@@ -1,0 +1,203 @@
+//! Shrinking and replayable fixtures.
+//!
+//! On divergence the driver minimizes the failing [`FuzzCase`] by
+//! re-running the oracle on deterministic candidate edits — fewer
+//! requests, shorter contexts, smaller batch/residency/pool, narrower
+//! window, telemetry off, the paper design instead of a grid point —
+//! keeping the first candidate that still fails and looping until no
+//! edit fails (greedy first-improvement descent, attempt-bounded). The
+//! minimized case plus its provenance (master seed, case index, case
+//! seed) and the divergence (pair + fingerprint line) serialize to a
+//! JSON [`Fixture`] that `pd-swap fuzz --replay` and the committed
+//! `rust/tests/fuzz_corpus/` both re-run end-to-end.
+
+use crate::util::json::{self, Value};
+
+use super::generator::{parse_hex_seed, FuzzCase};
+use super::oracle::{run_case, Divergence, OracleOptions};
+
+/// Schema tag for serialized fixtures.
+pub const FIXTURE_SCHEMA: &str = "pd-swap-fuzz-fixture-v1";
+
+/// Upper bound on oracle re-runs during one shrink (each candidate edit
+/// costs a full oracle pass; greedy descent converges long before this).
+const MAX_SHRINK_ATTEMPTS: usize = 128;
+
+/// Candidate one-step reductions of a case, most-aggressive first.
+fn candidates(c: &FuzzCase) -> Vec<FuzzCase> {
+    let mut out = Vec::new();
+    if c.n_requests > 1 {
+        out.push(FuzzCase { n_requests: c.n_requests / 2, ..c.clone() });
+        out.push(FuzzCase { n_requests: c.n_requests - 1, ..c.clone() });
+    }
+    if c.trace_kind == 1 && c.long_ctx > 1024 {
+        out.push(FuzzCase { long_ctx: (c.long_ctx / 2).max(1024), ..c.clone() });
+    }
+    if c.tlmm_pe != 0 {
+        out.push(FuzzCase { tlmm_pe: 0, prefill_dsp: 0, decode_dsp: 0, ..c.clone() });
+    }
+    if c.decode_batch > 1 {
+        out.push(FuzzCase { decode_batch: 1, ..c.clone() });
+    }
+    if c.max_residents > 1 {
+        out.push(FuzzCase { max_residents: c.max_residents / 2, ..c.clone() });
+    }
+    if c.total_pages > 16 {
+        out.push(FuzzCase { total_pages: (c.total_pages / 2).max(16), ..c.clone() });
+    }
+    if c.window > 1 {
+        out.push(FuzzCase { window: 1, ..c.clone() });
+    }
+    if c.telemetry {
+        out.push(FuzzCase { telemetry: false, ..c.clone() });
+    }
+    out
+}
+
+/// Greedy first-improvement shrink: returns the minimized still-failing
+/// case, its divergence, and how many oracle re-runs it took. Any
+/// divergence counts as "still failing" — the minimal case may fail a
+/// different pair than the original, which is standard shrinker
+/// behavior and still pins the bug.
+pub fn shrink_case(
+    initial: FuzzCase,
+    initial_divergence: Divergence,
+    opts: OracleOptions,
+) -> (FuzzCase, Divergence, usize) {
+    let mut best = initial;
+    let mut best_div = initial_divergence;
+    let mut attempts = 0usize;
+    'outer: loop {
+        for cand in candidates(&best) {
+            if attempts >= MAX_SHRINK_ATTEMPTS {
+                break 'outer;
+            }
+            attempts += 1;
+            if let Err(d) = run_case(&cand, opts) {
+                best = cand;
+                best_div = d;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (best, best_div, attempts)
+}
+
+/// The divergence record a fixture carries.
+#[derive(Debug, Clone)]
+pub struct FixtureDivergence {
+    pub pair: String,
+    /// First divergent [`crate::coordinator::semantic_fingerprint`]
+    /// line (the timeline-ordered event index analog); 0 for invariant
+    /// violations.
+    pub fingerprint_line: usize,
+    pub detail: String,
+}
+
+/// A replayable, shrunk failing case with its provenance.
+#[derive(Debug, Clone)]
+pub struct Fixture {
+    /// The `--seed` of the run that found it.
+    pub master_seed: u64,
+    /// Which case index of that run diverged.
+    pub case_index: usize,
+    /// The per-case RNG seed (derived from `master_seed` by the driver).
+    pub case_seed: u64,
+    /// The minimized case.
+    pub case: FuzzCase,
+    /// What failed when it was recorded. Corpus entries that pin
+    /// already-fixed or never-failing corner cases carry `None`.
+    pub divergence: Option<FixtureDivergence>,
+}
+
+impl Fixture {
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("schema", Value::str(FIXTURE_SCHEMA)),
+            ("master_seed", Value::str(format!("{:#018x}", self.master_seed))),
+            ("case_index", Value::num(self.case_index as f64)),
+            ("case_seed", Value::str(format!("{:#018x}", self.case_seed))),
+            ("case", self.case.to_json()),
+        ];
+        if let Some(d) = &self.divergence {
+            pairs.push((
+                "divergence",
+                Value::from_pairs(vec![
+                    ("pair", Value::str(d.pair.clone())),
+                    ("fingerprint_line", Value::num(d.fingerprint_line as f64)),
+                    ("detail", Value::str(d.detail.clone())),
+                ]),
+            ));
+        }
+        Value::from_pairs(pairs)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        match v.get("schema").and_then(Value::as_str) {
+            Some(FIXTURE_SCHEMA) => {}
+            other => return Err(format!("unknown fixture schema {other:?}")),
+        }
+        let seed = |k: &str| -> Result<u64, String> {
+            parse_hex_seed(
+                v.get(k)
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| format!("fixture: missing seed field '{k}'"))?,
+            )
+        };
+        let divergence = match v.get("divergence") {
+            None => None,
+            Some(d) => Some(FixtureDivergence {
+                pair: d
+                    .get("pair")
+                    .and_then(Value::as_str)
+                    .ok_or("fixture divergence: missing 'pair'")?
+                    .to_string(),
+                fingerprint_line: d
+                    .get("fingerprint_line")
+                    .and_then(Value::as_usize)
+                    .ok_or("fixture divergence: missing 'fingerprint_line'")?,
+                detail: d
+                    .get("detail")
+                    .and_then(Value::as_str)
+                    .ok_or("fixture divergence: missing 'detail'")?
+                    .to_string(),
+            }),
+        };
+        Ok(Self {
+            master_seed: seed("master_seed")?,
+            case_index: v
+                .get("case_index")
+                .and_then(Value::as_usize)
+                .ok_or("fixture: missing 'case_index'")?,
+            case_seed: seed("case_seed")?,
+            case: FuzzCase::from_json(v.req("case").map_err(|e| e.to_string())?)?,
+            divergence,
+        })
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty() + "\n")
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    pub fn read(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&doc)
+    }
+}
+
+/// Re-run the oracle on a serialized fixture: `Ok((fx, None))` means the
+/// fixture no longer diverges; `Ok((fx, Some(d)))` means it reproduced.
+pub fn replay_file(
+    path: &std::path::Path,
+    opts: OracleOptions,
+) -> Result<(Fixture, Option<Divergence>), String> {
+    let fx = Fixture::read(path)?;
+    match run_case(&fx.case, opts) {
+        Ok(_) => Ok((fx, None)),
+        Err(d) => Ok((fx, Some(d))),
+    }
+}

@@ -700,4 +700,40 @@ mod tests {
             }
         }
     }
+
+    #[test]
+    fn admits_now_flips_exactly_at_zero_free_pages() {
+        // The 1 → 0 free-page boundary: one free page still admits a
+        // one-page request; zero free pages with residents denies even
+        // the smallest one. Pins the `need <= free || empty` predicate
+        // the pump's candidate probe and fast-forward dormancy rely on.
+        let c = cfg(32).with_policies(AdmissionControl::WorstCase, EvictionPolicy::KeepResident);
+        let mut p = KvPool::new(c);
+        p.admit(0, 0, 31, 31 * PAGE_TOKENS_DEFAULT, 0.0).unwrap();
+        assert_eq!(p.free_pages(), 1);
+        assert!(p.admits_now(1, 1), "one free page admits a one-page worst case");
+        p.admit(1, 0, 1, PAGE_TOKENS_DEFAULT, 0.0).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        assert!(!p.admits_now(1, 1), "zero free + residents must deny");
+
+        // Optimistic admission needs at least one page too (the .max(1)
+        // clamp), so it denies at exactly-zero free just the same.
+        let c = cfg(4).with_policies(AdmissionControl::Optimistic, EvictionPolicy::EvictAndRecompute);
+        let mut q = KvPool::new(c);
+        q.admit(7, 0, 4, 4 * PAGE_TOKENS_DEFAULT, 0.0).unwrap();
+        assert_eq!(q.free_pages(), 0);
+        assert!(!q.admits_now(1, 1), "optimistic at zero free must deny");
+
+        // Draining restores the empty-pool escape hatch: with no
+        // residents the predicate is true even for oversized requests
+        // (the Capped-admission clamp handles the sizing).
+        q.complete(7).unwrap();
+        assert_eq!(q.resident_count(), 0);
+        assert!(q.admits_now(10_000, 10_000));
+        p.complete(0).unwrap();
+        p.complete(1).unwrap();
+        assert!(p.admits_now(10_000, 10_000), "empty pool admits via the Capped clamp");
+        p.check_invariants().unwrap();
+        q.check_invariants().unwrap();
+    }
 }

@@ -60,6 +60,7 @@ pub mod dse;
 pub mod engines;
 pub mod eval;
 pub mod fpga;
+pub mod fuzz;
 pub mod kvpool;
 pub mod memory;
 pub mod metrics;

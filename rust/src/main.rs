@@ -29,6 +29,7 @@ use pd_swap::dse::{
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, SurfaceCache, SurfaceFactory};
 use pd_swap::eval;
 use pd_swap::fpga::KV260;
+use pd_swap::fuzz::{parse_hex_seed, replay_file, run_fuzz, FuzzConfig, OracleOptions};
 use pd_swap::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
 use pd_swap::model::{TraceSpec, BITNET_0_73B};
 use pd_swap::reconfig::SwapPolicy;
@@ -46,6 +47,7 @@ fn main() -> Result<()> {
         Some("generate") => generate(&args),
         Some("serve") => serve(&args),
         Some("simulate") => simulate(&args),
+        Some("fuzz") => run_fuzz_cmd(&args),
         _ => {
             println!("{}", USAGE);
             Ok(())
@@ -77,6 +79,15 @@ USAGE:
   pd-swap simulate [--requests 16] [--policy batched] [--no-overlap] [--static]
                    [--pool-pages N] [--optimistic] [--evict] [--decode-batch B]
                    [--trace-out FILE]
+  pd-swap fuzz [--cases 64] [--seed 0x5EED] [--max-requests 10] [--out fuzz-failures]
+               [--replay FILE]
+                   seeded differential fuzzer: random (trace x design x
+                   policy x batch x pool x window) tuples through every
+                   engine pair, asserting the documented bitwise contracts
+                   and conservation invariants; a divergence is shrunk to a
+                   minimal case, written as a replayable JSON fixture under
+                   --out, and fails the command. --replay re-runs one
+                   fixture. Deterministic: same seed, same summary.
   pd-swap simulate --policy <eager|hysteresis|lookahead>   (event-driven core)
                    [--trace interactive|mixed|bursty|long|million] [--rate R]
                    [--long-ctx N] [--requests N] [--seed S] [--max-residents N]
@@ -721,6 +732,67 @@ fn simulate(args: &Args) -> Result<()> {
         println!(
             "wrote Chrome trace ({} events) to {path} — load in Perfetto (ui.perfetto.dev) or chrome://tracing",
             server.recorder.len()
+        );
+    }
+    Ok(())
+}
+
+/// `pd-swap fuzz` — seeded differential fuzzing over the engine pairs,
+/// or `--replay FILE` to re-run one serialized fixture.
+fn run_fuzz_cmd(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("replay") {
+        let path = std::path::Path::new(path);
+        let (fx, diverged) =
+            replay_file(path, OracleOptions::default()).map_err(|e| anyhow::anyhow!(e))?;
+        println!("replaying fixture {}", path.display());
+        println!(
+            "  provenance: seed {:#018x}, case {} (case seed {:#018x})",
+            fx.master_seed, fx.case_index, fx.case_seed
+        );
+        println!("  case: {:?}", fx.case);
+        if let Some(d) = &fx.divergence {
+            println!(
+                "  recorded divergence: {} (fingerprint line {}): {}",
+                d.pair, d.fingerprint_line, d.detail
+            );
+        }
+        return match diverged {
+            None => {
+                println!("  verdict: clean — the fixture no longer diverges");
+                Ok(())
+            }
+            Some(d) => bail!(
+                "fixture still diverges: {} (fingerprint line {}): {}",
+                d.pair,
+                d.line,
+                d.detail
+            ),
+        };
+    }
+    let seed_str = args.get_or("seed", "0x5EED");
+    let seed = if seed_str.starts_with("0x") || seed_str.starts_with("0X") {
+        parse_hex_seed(seed_str).map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        seed_str.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--seed expects a u64 (decimal or 0x-hex), got '{seed_str}'")
+        })?
+    };
+    let cfg = FuzzConfig {
+        cases: args.get_usize("cases", 64),
+        seed,
+        max_requests: args.get_usize("max-requests", 10),
+        out_dir: Some(std::path::PathBuf::from(args.get_or("out", "fuzz-failures"))),
+    };
+    let summary = run_fuzz(&cfg, OracleOptions::default()).map_err(|e| anyhow::anyhow!(e))?;
+    print!("{}", summary.report);
+    if summary.divergences > 0 {
+        bail!(
+            "fuzz found a divergence (fixture: {})",
+            summary
+                .fixture_path
+                .as_deref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "not written".into())
         );
     }
     Ok(())

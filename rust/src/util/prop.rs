@@ -133,6 +133,85 @@ mod tests {
         );
     }
 
+    /// Extract the text after `key` up to the first of `stop` from a
+    /// panic report — the parsing a human replaying a failure does.
+    fn field<'a>(msg: &'a str, key: &str, stop: &[char]) -> &'a str {
+        let start = msg.find(key).unwrap_or_else(|| panic!("report lacks '{key}': {msg}"))
+            + key.len();
+        let rest = &msg[start..];
+        let end = rest.find(|c| stop.contains(&c)).unwrap_or(rest.len());
+        &rest[..end]
+    }
+
+    #[test]
+    fn shrink_reports_a_strictly_smaller_failing_size() {
+        // A property that fails iff the size-scaled input reaches 2,
+        // with a generator that returns the size itself: fully
+        // deterministic, so the whole shrink trajectory is pinned.
+        // Cases run at sizes 1, 9, 17, ... — case 1 (size 9) is the
+        // first failure; halving re-draws then fail at 4 and 2, pass at
+        // 1, so the report must say size=2: strictly smaller than 9.
+        use std::cell::Cell;
+        let first_fail = Cell::new(0usize);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(
+                Config { cases: 8, seed: 42, max_size: 64 },
+                |_, size| size,
+                |&x| {
+                    if x < 2 {
+                        Ok(())
+                    } else {
+                        if first_fail.get() == 0 {
+                            first_fail.set(x);
+                        }
+                        Err(format!("{x} >= 2"))
+                    }
+                },
+            )
+        }));
+        let payload = result.expect_err("the failing property must panic");
+        let msg = payload.downcast_ref::<String>().expect("panic payload is a String");
+        assert_eq!(first_fail.get(), 9, "first failure is case 1 at size 1 + 1*64/8");
+        let final_size: usize = field(msg, "size=", &[')']).parse().unwrap();
+        assert!(
+            final_size < first_fail.get(),
+            "shrunk size {final_size} must be strictly smaller than the initial {}",
+            first_fail.get()
+        );
+        assert_eq!(final_size, 2, "greedy halving bottoms out at the smallest failing size");
+        assert!(msg.contains("input: 2"), "the report carries the shrunk input: {msg}");
+    }
+
+    #[test]
+    fn reported_seed_replays_the_identical_input() {
+        // Drive a genuinely random property to failure, parse the
+        // replay coordinates out of the panic report the way a human
+        // would, and check `replay` regenerates the exact same input
+        // and verdict.
+        let gen = |rng: &mut Rng, _size: usize| rng.below(1000);
+        let prop = |&x: &usize| if x < 10 { Ok(()) } else { Err(format!("{x} >= 10")) };
+        let result = std::panic::catch_unwind(|| {
+            check(Config { cases: 64, seed: 0xFEED, max_size: 16 }, gen, prop)
+        });
+        let payload = result.expect_err("the failing property must panic");
+        let msg = payload.downcast_ref::<String>().expect("panic payload is a String");
+        let seed = u64::from_str_radix(field(msg, "seed=0x", &[',']), 16).unwrap();
+        let size: usize = field(msg, "size=", &[')']).parse().unwrap();
+        let reported_input = field(msg, "input: ", &['\n']).to_string();
+
+        let mut replayed = None;
+        let res = replay(seed, size, gen, |&x: &usize| {
+            replayed = Some(x);
+            prop(&x)
+        });
+        assert!(res.is_err(), "the replayed case must still fail");
+        assert_eq!(
+            format!("{:?}", replayed.expect("prop ran")),
+            reported_input,
+            "replay(case_seed) must regenerate the identical input"
+        );
+    }
+
     #[test]
     fn replay_reproduces() {
         // Find a failing case manually, then replay it.

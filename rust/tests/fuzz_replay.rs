@@ -1,0 +1,54 @@
+//! Replays the committed fuzz corpus and pins the fuzzer's determinism.
+//!
+//! `rust/tests/fuzz_corpus/` holds shrunk [`pd_swap::fuzz::Fixture`]
+//! files — tricky corners of the configuration cross-product pinned so
+//! they run on every `cargo test` forever. Each must replay *clean*:
+//! a corpus fixture diverging again means a semantics contract broke.
+//!
+//! To add a fixture: take the JSON that `pd-swap fuzz` writes under
+//! `--out` on a divergence, fix the bug, confirm
+//! `pd-swap fuzz --replay <file>` reports clean, then commit the file
+//! here (see README §"Fuzzing quickstart").
+
+use pd_swap::fuzz::{replay_file, run_fuzz, FuzzConfig, OracleOptions};
+
+fn corpus_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fuzz_corpus")
+}
+
+#[test]
+fn corpus_fixtures_replay_clean() {
+    let mut paths: Vec<_> = std::fs::read_dir(corpus_dir())
+        .expect("rust/tests/fuzz_corpus must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    assert!(!paths.is_empty(), "the corpus must contain at least one fixture");
+    for p in &paths {
+        let (fx, diverged) = replay_file(p, OracleOptions::default())
+            .unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        assert!(
+            diverged.is_none(),
+            "{}: corpus fixture diverges again: {:?}\n  case: {:?}",
+            p.display(),
+            diverged,
+            fx.case
+        );
+    }
+}
+
+#[test]
+fn fuzz_smoke_seed_is_clean_and_deterministic() {
+    // The CI invocation in miniature: the committed smoke seed over a
+    // reduced case count must find nothing, and re-running it must
+    // reproduce the summary byte for byte (the acceptance pin for
+    // `pd-swap fuzz --cases 64 --seed 0x5EED`).
+    let cfg = FuzzConfig { cases: 8, seed: 0x5EED, max_requests: 6, out_dir: None };
+    let a = run_fuzz(&cfg, OracleOptions::default()).unwrap();
+    assert_eq!(a.divergences, 0, "{}", a.report);
+    assert_eq!(a.cases_run, 8);
+    let b = run_fuzz(&cfg, OracleOptions::default()).unwrap();
+    assert_eq!(a.report, b.report, "summary must be byte-identical across reruns");
+}

@@ -3,8 +3,8 @@
 //! mini-framework; proptest is unavailable offline).
 
 use pd_swap::coordinator::{
-    requests_from_stream, requests_from_trace, EventServer, EventServerConfig, Policy, Request,
-    Scheduler, SimServer, SimServerConfig,
+    requests_from_stream, requests_from_trace, semantic_fingerprint, EventServer,
+    EventServerConfig, Policy, Request, Scheduler, SimServer, SimServerConfig,
 };
 use pd_swap::dse::{evaluate_grid_point, explore_threads, DseConfig, DseKernel};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
@@ -998,63 +998,6 @@ fn prop_sim_server_pool_conservation() {
     );
 }
 
-/// Shared fingerprint for the fast-forward equivalence pin: everything
-/// the contract covers — virtual clock, counters, latency histograms,
-/// outcome order and values, the pool's eviction log and stats — folded
-/// into one comparable string of bit patterns. The diagnostic event log
-/// and the Chrome trace are deliberately outside the contract (folds
-/// skip log records and coalesce spans by design).
-fn ff_fingerprint(s: &EventServer) -> String {
-    use std::fmt::Write as _;
-    let m = &s.metrics;
-    let mut out = String::new();
-    let _ = writeln!(out, "clock {:x}", s.clock().to_bits());
-    let _ = writeln!(
-        out,
-        "counts {} {} {} {} {} {} {} {}",
-        m.requests_completed.get(),
-        m.tokens_generated.get(),
-        m.reconfigurations.get(),
-        m.swaps_to_prefill.get(),
-        m.swaps_to_decode.get(),
-        m.kv_evictions.get(),
-        m.kv_admissions_capped.get(),
-        m.kv_pool_high_water.get(),
-    );
-    for (name, h) in [
-        ("tpot", &m.tpot),
-        ("ttft", &m.ttft),
-        ("e2e", &m.e2e),
-        ("recompute", &m.recompute_overhead),
-    ] {
-        let _ = writeln!(
-            out,
-            "{name} {} {:x} {:x} {:x} {:x}",
-            h.count(),
-            h.mean().to_bits(),
-            h.min().to_bits(),
-            h.max().to_bits(),
-            h.quantile(0.5).to_bits(),
-        );
-    }
-    for o in &s.outcomes {
-        let _ = writeln!(
-            out,
-            "outcome {} {} {:x} {:x} {:x}",
-            o.id,
-            o.prompt_len,
-            o.ttft.to_bits(),
-            o.e2e.to_bits(),
-            o.mean_tpot.to_bits(),
-        );
-    }
-    for (at, id) in &s.pool().eviction_log {
-        let _ = writeln!(out, "evict {:x} {id}", at.to_bits());
-    }
-    let _ = writeln!(out, "pool {:?}", s.pool().stats);
-    out
-}
-
 /// The analytic decode fast-forward is unobservable from the semantic
 /// surface: across random traces (Poisson and bursty presets), all
 /// three swap policies, decode batches 1 and 4, both arithmetic
@@ -1118,7 +1061,7 @@ fn prop_fast_forward_matches_stepped() {
             };
             let on = run(true)?;
             let off = run(false)?;
-            let (a, b) = (ff_fingerprint(&on), ff_fingerprint(&off));
+            let (a, b) = (semantic_fingerprint(&on), semantic_fingerprint(&off));
             if a != b {
                 return Err(format!(
                     "fast-forward changed the timeline\n--- fast-forward\n{a}\n--- stepped\n{b}"
@@ -1174,7 +1117,7 @@ fn prop_fast_forward_regression_fixture() {
     };
     let on = run(true);
     let off = run(false);
-    assert_eq!(ff_fingerprint(&on), ff_fingerprint(&off));
+    assert_eq!(semantic_fingerprint(&on), semantic_fingerprint(&off));
     assert!(on.fast_forward_stats().steps > 0, "the fixture must actually fold");
     assert_eq!(
         on.fast_forward_stats().stepped_equivalent(on.events_processed()),
@@ -1230,14 +1173,14 @@ fn prop_streamed_matches_materialized() {
                     };
                     let mut mat = mk_srv();
                     mat.run(eager.clone()).unwrap();
-                    let mat_fp = ff_fingerprint(&mat);
+                    let mat_fp = semantic_fingerprint(&mat);
                     for window in [1usize, 3, 1024] {
                         let mut st = mk_srv();
                         st.run_streamed(requests_from_stream(spec.stream()), window)
                             .unwrap();
                         assert_eq!(
                             mat_fp,
-                            ff_fingerprint(&st),
+                            semantic_fingerprint(&st),
                             "{name}/{policy:?}/B={batch}/surface={use_surface}/window={window}: \
                              streamed run diverged from materialized"
                         );
