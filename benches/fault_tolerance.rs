@@ -1,0 +1,216 @@
+//! Bench: SLO-goodput under a deterministic swap-failure storm —
+//! retry + degraded fallback vs naive fail-stop (extension #10).
+//!
+//! The claim this bench exists to gate: when PCAP reconfigurations
+//! start failing, a node that retries with capped exponential backoff
+//! and falls back to the static-unified surface keeps serving — its
+//! SLO-weighted goodput stays strictly above a fail-stop node that
+//! sheds everything outstanding the moment one swap exhausts its
+//! retry budget. Gated by `benches/baselines/BENCH_fault.json`:
+//!
+//! 1. **Goodput ratio** (`storm.goodput_ratio`, hard ≥ 1.2): both
+//!    policies serve the same bursty trace under the same seeded
+//!    [`FaultPlan::storm`]; goodput is `slo_goodput_tps(makespan) ×
+//!    slo_attainment` — tokens that reached *completed* requests per
+//!    second, discounted by the completed fraction, the same number
+//!    the codesign sweep reports per cell. The fallback policy must
+//!    beat fail-stop by ≥ 20%.
+//! 2. **Fallback completes** (`storm.fallback_completed_frac`, hard
+//!    ≥ 0.9): the storm plan carries no deadlines, so the degraded
+//!    path must finish every request — shedding here would mean the
+//!    retry/fallback machinery lost work it had no license to drop.
+//! 3. **Fail-stop actually trips** (`storm.failstop_sheds`, hard
+//!    ≥ 1): the comparison is meaningless if the chosen seed never
+//!    exhausts a retry budget, so the bench deterministically scans
+//!    seed candidates and records the one it used.
+//!
+//! Everything runs on the virtual clock — the reported goodput is a
+//! deterministic function of (trace seed, fault seed, policy), byte
+//! for byte, which the bench asserts by rerunning the fallback leg.
+//!
+//! Run: `cargo bench --bench fault_tolerance` (CI adds `-- --smoke`)
+
+use pd_swap::coordinator::{
+    requests_from_trace, semantic_fingerprint, EventServer, EventServerConfig, Request,
+};
+use pd_swap::faults::FaultPlan;
+use pd_swap::fpga::KV260;
+use pd_swap::model::{TraceSpec, BITNET_0_73B};
+use pd_swap::reconfig::{SwapPolicy, SwapRetryPolicy};
+use pd_swap::util::bench;
+use pd_swap::util::cli::Args;
+use pd_swap::util::json::Value;
+
+/// Storm intensity: per-attempt PCAP failure probability. At the
+/// default 3-attempt retry budget this exhausts ~21.6% of swaps, so a
+/// fail-stop node trips early in any multi-swap run while the
+/// fallback node spends only short windows degraded.
+const STORM_PROB: f64 = 0.6;
+
+/// Requests in the bursty trace. Small enough to stay milliseconds,
+/// large enough that an early fail-stop trip strands most of the
+/// workload.
+const N_REQUESTS: usize = 24;
+
+/// One storm run: the paper design under Eager swapping (maximum swap
+/// traffic — the regime fault tolerance is for), bursty arrivals, the
+/// given retry policy against `FaultPlan::storm(fault_seed)`.
+fn run_storm(reqs: &[Request], fault_seed: u64, retry: SwapRetryPolicy) -> EventServer {
+    let mut cfg = EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), SwapPolicy::Eager);
+    cfg.faults = FaultPlan::storm(fault_seed, STORM_PROB);
+    cfg.retry = retry;
+    let mut srv = EventServer::new(cfg).expect("config must program");
+    srv.run(reqs.to_vec()).expect("serving must not fail");
+    srv
+}
+
+/// SLO-weighted goodput: tokens that reached completed requests per
+/// second of virtual makespan, discounted by the completed fraction.
+/// The attainment factor is what separates the policies — a fail-stop
+/// node's clock stops when it trips, so raw tokens/makespan alone
+/// would flatter it.
+fn slo_goodput(srv: &EventServer) -> f64 {
+    srv.metrics.slo_goodput_tps(srv.clock()) * srv.metrics.slo_attainment()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let out = args.get_or("out", "BENCH_fault.json");
+    let smoke = args.flag("smoke");
+
+    let spec = TraceSpec::bursty(N_REQUESTS, 0xB0B);
+    let reqs = requests_from_trace(&spec.generate());
+    let n = reqs.len() as u64;
+
+    // -- pick a storm seed that actually trips fail-stop -------------------
+    // A hard-coded seed would gate on luck; instead scan a small
+    // deterministic candidate list and use the first seed whose
+    // fail-stop run strands at least half the workload. At p = 0.6 the
+    // first candidate trips with overwhelming probability — the scan is
+    // insurance, and the chosen seed lands in the report either way.
+    bench::section("storm seed scan (first seed stranding >= half the workload)");
+    let mut chosen = None;
+    for seed in 1..=16u64 {
+        let failstop = run_storm(&reqs, seed, SwapRetryPolicy::fail_stop());
+        let shed = failstop.metrics.requests_shed.get();
+        println!("  seed {seed}: fail-stop sheds {shed}/{n}");
+        if shed >= n.div_ceil(2) {
+            chosen = Some((seed, failstop));
+            break;
+        }
+    }
+    let (seed, failstop) = chosen.expect(
+        "no storm seed in 1..=16 strands half the workload under fail-stop — \
+         the retry/fault wiring has drifted",
+    );
+
+    // -- the comparison: retry + degraded fallback vs fail-stop ------------
+    bench::section("retry + degraded fallback vs fail-stop (same seed, same trace)");
+    let fallback = run_storm(&reqs, seed, SwapRetryPolicy::default());
+    let m_fb = &fallback.metrics;
+    let m_fs = &failstop.metrics;
+
+    // The storm plan has no deadlines: nothing licenses the fallback
+    // node to shed, so it must complete everything.
+    assert_eq!(
+        m_fb.requests_shed.get(),
+        0,
+        "fallback shed requests under a deadline-free storm"
+    );
+    assert_eq!(
+        m_fb.requests_completed.get(),
+        n,
+        "fallback must complete the full workload"
+    );
+    // Fail-stop tripped (the scan guarantees sheds), so the same draw
+    // stream must have exhausted a retry budget on the fallback side
+    // too — which is exactly what puts it into degraded mode.
+    assert!(
+        m_fb.swap_failures.get() >= u64::from(SwapRetryPolicy::default().max_attempts),
+        "fallback saw fewer swap failures than one exhausted retry budget"
+    );
+    assert!(
+        m_fb.degraded_seconds > 0.0,
+        "retry exhaustion must put the fallback node into degraded mode"
+    );
+
+    let goodput_fb = slo_goodput(&fallback);
+    let goodput_fs = slo_goodput(&failstop);
+    let ratio = goodput_fb / goodput_fs.max(1e-12);
+    let completed_frac = m_fb.requests_completed.get() as f64 / n as f64;
+    println!(
+        "fallback:  {}/{n} completed, {} swap failures / {} retries, {:.3}s degraded, \
+         {goodput_fb:.2} tok/s SLO-goodput over {:.2}s",
+        m_fb.requests_completed.get(),
+        m_fb.swap_failures.get(),
+        m_fb.swap_retries.get(),
+        m_fb.degraded_seconds,
+        fallback.clock(),
+    );
+    println!(
+        "fail-stop: {}/{n} completed ({} shed), {goodput_fs:.2} tok/s SLO-goodput over {:.2}s",
+        m_fs.requests_completed.get(),
+        m_fs.requests_shed.get(),
+        failstop.clock(),
+    );
+    println!("SLO-goodput ratio (fallback / fail-stop): {ratio:.2}x");
+    assert!(
+        ratio > 1.0,
+        "retry + fallback goodput {goodput_fb:.2} not strictly above fail-stop {goodput_fs:.2}"
+    );
+    assert!(
+        ratio >= 1.2,
+        "goodput ratio {ratio:.2}x below the 1.2x bar the baseline gates"
+    );
+
+    // -- determinism: the reported number is a pure function of seeds ------
+    bench::section("determinism (rerun the fallback leg, compare fingerprints)");
+    let rerun = run_storm(&reqs, seed, SwapRetryPolicy::default());
+    assert_eq!(
+        semantic_fingerprint(&fallback),
+        semantic_fingerprint(&rerun),
+        "same fault seed must reproduce the fallback run byte for byte"
+    );
+    println!("rerun fingerprint identical");
+
+    let report = Value::Obj(vec![
+        ("bench".into(), Value::Str("fault_tolerance".into())),
+        ("smoke".into(), Value::Num(u8::from(smoke) as f64)),
+        (
+            "storm".into(),
+            Value::Obj(vec![
+                ("seed".into(), Value::Num(seed as f64)),
+                ("swap_fail_prob".into(), Value::Num(STORM_PROB)),
+                ("requests".into(), Value::Num(n as f64)),
+                (
+                    "fallback".into(),
+                    Value::Obj(vec![
+                        ("completed".into(), Value::Num(m_fb.requests_completed.get() as f64)),
+                        ("shed".into(), Value::Num(m_fb.requests_shed.get() as f64)),
+                        ("swap_failures".into(), Value::Num(m_fb.swap_failures.get() as f64)),
+                        ("swap_retries".into(), Value::Num(m_fb.swap_retries.get() as f64)),
+                        ("degraded_seconds".into(), Value::Num(m_fb.degraded_seconds)),
+                        ("slo_goodput_tps".into(), Value::Num(goodput_fb)),
+                        ("makespan_s".into(), Value::Num(fallback.clock())),
+                    ]),
+                ),
+                (
+                    "failstop".into(),
+                    Value::Obj(vec![
+                        ("completed".into(), Value::Num(m_fs.requests_completed.get() as f64)),
+                        ("shed".into(), Value::Num(m_fs.requests_shed.get() as f64)),
+                        ("slo_goodput_tps".into(), Value::Num(goodput_fs)),
+                        ("makespan_s".into(), Value::Num(failstop.clock())),
+                    ]),
+                ),
+                ("goodput_ratio".into(), Value::Num(ratio)),
+                ("fallback_completed_frac".into(), Value::Num(completed_frac)),
+                ("failstop_sheds".into(), Value::Num(m_fs.requests_shed.get() as f64)),
+            ]),
+        ),
+    ]);
+    match bench::write_json_report(out, &report) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

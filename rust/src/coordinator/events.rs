@@ -80,14 +80,15 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
-use crate::fpga::DeviceConfig;
+use crate::faults::FaultPlan;
+use crate::fpga::{DeviceConfig, ReconfigState};
 use crate::kvpool::{EvictionPolicy, KvPool, KvPoolConfig, PoolError};
 use crate::metrics::ServerMetrics;
 use crate::model::ModelShape;
 use crate::reconfig::policy::{est_prefill_time, round_trip_exposed};
 use crate::reconfig::{
-    DecisionPoint, OverlapScheduler, SwapController, SwapOutlook, SwapPolicy, RM_DECODE,
-    RM_PREFILL,
+    DecisionPoint, OverlapScheduler, SwapController, SwapOutlook, SwapPolicy, SwapRetryPolicy,
+    RM_DECODE, RM_PREFILL,
 };
 use crate::telemetry::TraceRecorder;
 
@@ -136,6 +137,17 @@ pub enum SimEvent {
     /// A KV-pool eviction happened (bookkeeping is synchronous; the
     /// event marks the preemption on the timeline).
     KvEvicted { victim: u64 },
+    /// Fault injection: the backoff after a failed PCAP load elapsed —
+    /// re-issue the load (a retry of the in-flight logical swap, or a
+    /// degraded-mode repair attempt).
+    SwapFailed { to_decode: bool },
+    /// Fault injection: request `id`'s SLO deadline passed (`e2e` false
+    /// = the TTFT bound). A no-op if the request already completed.
+    DeadlineExceeded { id: u64, e2e: bool },
+    /// Fault injection: DDR brownout window `idx` opens.
+    FaultWindowStart { idx: usize },
+    /// Fault injection: DDR brownout window `idx` closes.
+    FaultWindowEnd { idx: usize },
 }
 
 impl SimEvent {
@@ -150,6 +162,12 @@ impl SimEvent {
             SimEvent::DecodeStepDone { .. } => "decode-step",
             SimEvent::DecodeBatchDone { .. } => "decode-batch",
             SimEvent::KvEvicted { .. } => "kv-evicted",
+            SimEvent::SwapFailed { to_decode: true } => "swap-failed-decode",
+            SimEvent::SwapFailed { to_decode: false } => "swap-failed-prefill",
+            SimEvent::DeadlineExceeded { e2e: true, .. } => "deadline-e2e",
+            SimEvent::DeadlineExceeded { e2e: false, .. } => "deadline-ttft",
+            SimEvent::FaultWindowStart { .. } => "fault-window-start",
+            SimEvent::FaultWindowEnd { .. } => "fault-window-end",
         }
     }
 
@@ -159,10 +177,14 @@ impl SimEvent {
             SimEvent::PrefillLayerDone { id, .. }
             | SimEvent::PrefillTrigger { id }
             | SimEvent::PrefillDone { id }
-            | SimEvent::DecodeStepDone { id } => *id,
+            | SimEvent::DecodeStepDone { id }
+            | SimEvent::DeadlineExceeded { id, .. } => *id,
             SimEvent::DecodeBatchDone { first, .. } => *first,
-            SimEvent::SwapDone { .. } => u64::MAX,
+            SimEvent::SwapDone { .. } | SimEvent::SwapFailed { .. } => u64::MAX,
             SimEvent::KvEvicted { victim } => *victim,
+            SimEvent::FaultWindowStart { idx } | SimEvent::FaultWindowEnd { idx } => {
+                *idx as u64
+            }
         }
     }
 }
@@ -472,6 +494,20 @@ pub struct EventServerConfig {
     /// to stop paying `n_layers` queue events per request for markers
     /// nobody reads at that scale.
     pub prefill_layer_events: bool,
+    /// Deterministic fault injection (extension #10): seeded PCAP
+    /// swap-failure draws, bounded DDR-bandwidth brownout windows, and
+    /// per-request SLO deadlines. [`FaultPlan::none`] (the default) is
+    /// **bitwise inert**: every fault code path is gated on
+    /// [`FaultPlan::is_active`], so clocks, metrics, outcomes, and
+    /// fingerprints are identical to a build without this field — the
+    /// 5th semantics contract, pinned by
+    /// `prop_zero_fault_plan_is_bitwise_inert`.
+    pub faults: FaultPlan,
+    /// What to do when a PCAP load fails: capped exponential backoff in
+    /// virtual time for `max_attempts`, then degraded static-unified
+    /// fallback (default) or fail-stop. Only consulted when `faults`
+    /// is active.
+    pub retry: SwapRetryPolicy,
 }
 
 impl EventServerConfig {
@@ -494,6 +530,8 @@ impl EventServerConfig {
             outcome_retain: OutcomeSink::DEFAULT_RETAIN,
             log_tail: None,
             prefill_layer_events: true,
+            faults: FaultPlan::none(),
+            retry: SwapRetryPolicy::default(),
         }
     }
 }
@@ -554,6 +592,30 @@ pub struct EventServer {
     arrivals_total: u64,
     /// Fast-forward fold counters (`steps` = decode events skipped).
     ff: FastForwardStats,
+    /// Working copy of the fault plan (owns the deterministic draw
+    /// counter — same plan + same event sequence ⇒ same draws).
+    faults: FaultPlan,
+    /// Degraded-mode pricing engine (the static-unified fallback
+    /// architecture); built only when the fault plan is active.
+    degraded_model: Option<PhaseModel>,
+    degraded_surface: Option<LatencySurface>,
+    /// Serving on the static fallback after swap-retry exhaustion.
+    degraded: bool,
+    degraded_since: f64,
+    /// A degraded-mode background repair load is in flight on the PCAP.
+    repair_inflight: bool,
+    /// Consecutive failed PCAP loads for the current logical swap chain
+    /// (retries and repairs continue it; success resets it). Forced
+    /// success at [`crate::faults::SWAP_FAIL_STREAK_CAP`].
+    swap_failure_streak: u32,
+    /// `SwapRetryPolicy::fail_stop` tripped: everything sheds.
+    fail_stopped: bool,
+    /// Deadline-exceeded residents awaiting shed outside a step.
+    shed_due: Vec<u64>,
+    /// Multiplicative latency penalty of the open DDR brownout window
+    /// (1.0 = healthy; [`Self::with_ddr_penalty`] skips the multiply at
+    /// exactly 1.0 so zero-fault floats are untouched).
+    ddr_penalty: f64,
     log: EventLog,
     pub metrics: ServerMetrics,
     /// Completed-request records, bounded by
@@ -617,6 +679,23 @@ impl EventServer {
             None => EventLog::head_capture(MAX_LOG),
         };
         let outcomes = OutcomeSink::with_capacity(cfg.outcome_retain);
+        // Degraded-mode fallback engine: the static-unified architecture
+        // (both phases resident, no DPR) prices serving after swap-retry
+        // exhaustion. Built only when faults can actually occur, so the
+        // zero-fault construction path is untouched.
+        let (degraded_model, degraded_surface) = if cfg.faults.is_active() {
+            let d = AcceleratorDesign::tellme_static();
+            let m = PhaseModel::new(d.clone(), cfg.device.clone());
+            let s = if cfg.use_surface {
+                Some(LatencySurface::new(&d, &cfg.device, &cfg.shape, cfg.pool.page_tokens))
+            } else {
+                None
+            };
+            (Some(m), s)
+        } else {
+            (None, None)
+        };
+        let faults = cfg.faults.clone();
         Ok(Self {
             cfg,
             model,
@@ -643,6 +722,16 @@ impl EventServer {
             events_processed: 0,
             arrivals_total: 0,
             ff: FastForwardStats::default(),
+            faults,
+            degraded_model,
+            degraded_surface,
+            degraded: false,
+            degraded_since: 0.0,
+            repair_inflight: false,
+            swap_failure_streak: 0,
+            fail_stopped: false,
+            shed_due: Vec::new(),
+            ddr_penalty: 1.0,
             log,
             metrics: ServerMetrics::default(),
             outcomes,
@@ -695,6 +784,19 @@ impl EventServer {
 
     // -- analytic kernel (surface-accelerated, bit-identical fallback) -----
 
+    /// Apply the open DDR-brownout window's multiplicative latency
+    /// penalty. The multiply is skipped at exactly 1.0 (the healthy
+    /// state), so zero-fault floats pass through untouched — bitwise
+    /// inertness of the fault layer depends on this.
+    #[inline]
+    fn with_ddr_penalty(&self, t: f64) -> f64 {
+        if self.ddr_penalty != 1.0 {
+            t * self.ddr_penalty
+        } else {
+            t
+        }
+    }
+
     fn prefill_lat(&self, l: usize) -> crate::engines::PrefillLatency {
         match &self.surface {
             Some(s) => s.prefill(l),
@@ -702,39 +804,109 @@ impl EventServer {
         }
     }
 
+    /// Prefill total under the active fault regime: priced on the
+    /// degraded static-unified engine while in fallback, on the healthy
+    /// engine otherwise, with the brownout penalty applied to either.
+    fn effective_prefill_total(&self, l: usize) -> f64 {
+        let t = if self.degraded {
+            match &self.degraded_surface {
+                Some(s) => s.prefill(l).total,
+                None => self
+                    .degraded_model
+                    .as_ref()
+                    .expect("degraded engine exists whenever faults are active")
+                    .prefill(&self.cfg.shape, l)
+                    .total,
+            }
+        } else {
+            self.prefill_lat(l).total
+        };
+        self.with_ddr_penalty(t)
+    }
+
     /// One decode step at context `l` under the pool's page size.
     fn decode_step_total(&self, l: usize) -> f64 {
-        match &self.surface {
-            Some(s) => s.decode_step_paged(l, self.cfg.pool.page_tokens).total,
-            None => {
-                self.model.decode_step_paged(&self.cfg.shape, l, self.cfg.pool.page_tokens).total
+        let t = if self.degraded {
+            match &self.degraded_surface {
+                Some(s) => s.decode_step_paged(l, self.cfg.pool.page_tokens).total,
+                None => self
+                    .degraded_model
+                    .as_ref()
+                    .expect("degraded engine exists whenever faults are active")
+                    .decode_step_paged(&self.cfg.shape, l, self.cfg.pool.page_tokens)
+                    .total,
             }
-        }
+        } else {
+            match &self.surface {
+                Some(s) => s.decode_step_paged(l, self.cfg.pool.page_tokens).total,
+                None => self
+                    .model
+                    .decode_step_paged(&self.cfg.shape, l, self.cfg.pool.page_tokens)
+                    .total,
+            }
+        };
+        self.with_ddr_penalty(t)
     }
 
     /// One *batched* decode step over per-stream contexts `ctxs` (shared
     /// weight stream, per-stream paged KV) under the pool's page size.
     fn decode_batch_total(&self, ctxs: &[usize]) -> f64 {
-        match &self.surface {
-            Some(s) => s.decode_step_batched_paged(ctxs, self.cfg.pool.page_tokens).total,
-            None => self
-                .model
-                .decode_step_batched_paged(&self.cfg.shape, ctxs, self.cfg.pool.page_tokens)
-                .total,
-        }
+        let t = if self.degraded {
+            match &self.degraded_surface {
+                Some(s) => s.decode_step_batched_paged(ctxs, self.cfg.pool.page_tokens).total,
+                None => self
+                    .degraded_model
+                    .as_ref()
+                    .expect("degraded engine exists whenever faults are active")
+                    .decode_step_batched_paged(&self.cfg.shape, ctxs, self.cfg.pool.page_tokens)
+                    .total,
+            }
+        } else {
+            match &self.surface {
+                Some(s) => s.decode_step_batched_paged(ctxs, self.cfg.pool.page_tokens).total,
+                None => self
+                    .model
+                    .decode_step_batched_paged(&self.cfg.shape, ctxs, self.cfg.pool.page_tokens)
+                    .total,
+            }
+        };
+        self.with_ddr_penalty(t)
     }
 
     /// Uniform-context batched step (`batch` streams all at context `l`)
     /// — bit-identical to [`Self::decode_batch_total`] over `[l; batch]`
     /// without materializing the slice (the policy outlook's estimate).
     fn decode_uniform_total(&self, l: usize, batch: usize) -> f64 {
-        match &self.surface {
-            Some(s) => s.decode_step_uniform_paged(l, batch, self.cfg.pool.page_tokens).total,
-            None => self
-                .model
-                .decode_step_uniform_paged(&self.cfg.shape, l, batch, self.cfg.pool.page_tokens)
-                .total,
-        }
+        let t = if self.degraded {
+            match &self.degraded_surface {
+                Some(s) => s.decode_step_uniform_paged(l, batch, self.cfg.pool.page_tokens).total,
+                None => self
+                    .degraded_model
+                    .as_ref()
+                    .expect("degraded engine exists whenever faults are active")
+                    .decode_step_uniform_paged(
+                        &self.cfg.shape,
+                        l,
+                        batch,
+                        self.cfg.pool.page_tokens,
+                    )
+                    .total,
+            }
+        } else {
+            match &self.surface {
+                Some(s) => s.decode_step_uniform_paged(l, batch, self.cfg.pool.page_tokens).total,
+                None => self
+                    .model
+                    .decode_step_uniform_paged(
+                        &self.cfg.shape,
+                        l,
+                        batch,
+                        self.cfg.pool.page_tokens,
+                    )
+                    .total,
+            }
+        };
+        self.with_ddr_penalty(t)
     }
 
     /// §3.4 early-trigger offset into a prefill of `l` tokens.
@@ -774,6 +946,7 @@ impl EventServer {
             bail!("EventServer::run is single-shot; build a fresh server per workload");
         }
         self.started = true;
+        self.seed_fault_events();
         workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         self.queue.reserve(workload.len());
         for r in workload {
@@ -806,6 +979,7 @@ impl EventServer {
             bail!("EventServer::run_streamed is single-shot; build a fresh server per workload");
         }
         self.started = true;
+        self.seed_fault_events();
         let window = window.max(1);
         let mut src = workload.into_iter();
         let mut last_arrival = 0.0f64;
@@ -868,6 +1042,17 @@ impl EventServer {
         Ok(())
     }
 
+    /// Seed the DDR brownout window open/close events. Runs before any
+    /// arrival is pushed — in **both** run modes — so the window events
+    /// hold the same low sequence numbers either way and the streamed
+    /// path stays bit-identical to the materialized one under faults.
+    fn seed_fault_events(&mut self) {
+        for (idx, w) in self.faults.windows().iter().enumerate() {
+            self.queue.push(w.start_s.max(0.0), SimEvent::FaultWindowStart { idx });
+            self.queue.push(w.end_s.max(0.0), SimEvent::FaultWindowEnd { idx });
+        }
+    }
+
     /// Pull one replacement arrival from the streamed source into the
     /// queue (no-op once the source is dry).
     fn pull_arrival(&mut self, refill: &mut dyn FnMut() -> Option<Request>) {
@@ -884,22 +1069,41 @@ impl EventServer {
     /// livelock (events with no progress) still trips.
     fn event_budget(&self) -> u64 {
         let shape = &self.cfg.shape;
-        let per_request =
-            2 * (shape.max_seq as u64) + 2 * (shape.n_layers as u64) + 16;
-        MAX_EVENTS_BASE + self.arrivals_total.saturating_mul(per_request)
+        let mut per_request =
+            2 * (shape.max_seq as u64) + 2 * (shape.n_layers as u64) + 20;
+        if self.faults.is_active() {
+            // Fault headroom: each logical swap chain costs at most a
+            // SwapFailed + SwapDone pair per failed attempt, bounded by
+            // the forced-success streak cap, plus two deadline events
+            // per request.
+            per_request += 4 * (crate::faults::SWAP_FAIL_STREAK_CAP as u64 + 4);
+        }
+        let flat = MAX_EVENTS_BASE + 2 * self.faults.windows().len() as u64;
+        flat + self.arrivals_total.saturating_mul(per_request)
     }
 
     /// Completeness check + pool-stat mirroring shared by both run modes.
     fn finalize_run(&mut self) -> Result<&ServerMetrics> {
-        if self.metrics.requests_completed.get() != self.arrivals_total
+        if self.degraded {
+            // The run ended still in fallback (no repair ever landed):
+            // close the degraded-time gauge at the final clock.
+            self.degraded = false;
+            self.metrics.degraded_seconds += (self.clock - self.degraded_since).max(0.0);
+        }
+        // Conservation: every arrival either completed or was shed —
+        // nothing is silently dropped (satellite of extension #10).
+        let accounted =
+            self.metrics.requests_completed.get() + self.metrics.requests_shed.get();
+        if accounted != self.arrivals_total
             || !self.sched.is_empty()
             || self.prefilling.is_some()
             || !self.decode.is_empty()
         {
             bail!(
-                "serving incomplete: {}/{} requests done, {} queued, {} decoding",
+                "serving incomplete: {}/{} requests done ({} shed), {} queued, {} decoding",
                 self.metrics.requests_completed.get(),
                 self.arrivals_total,
+                self.metrics.requests_shed.get(),
                 self.sched.queue_len(),
                 self.decode.len()
             );
@@ -923,6 +1127,19 @@ impl EventServer {
     fn dispatch(&mut self, ev: SimEvent) -> Result<()> {
         match ev {
             SimEvent::Arrival(r) => {
+                if self.fail_stopped {
+                    // Fail-stop tripped: arrivals are shed at the door
+                    // (counted, never queued, no deadline timers).
+                    self.record_shed(r.id, r.prompt_len, r.arrival, None, "fail-stop");
+                    return Ok(());
+                }
+                if let Some(d) = self.faults.deadlines() {
+                    let a = r.arrival.max(0.0);
+                    self.queue
+                        .push(a + d.ttft_s, SimEvent::DeadlineExceeded { id: r.id, e2e: false });
+                    self.queue
+                        .push(a + d.e2e_s, SimEvent::DeadlineExceeded { id: r.id, e2e: true });
+                }
                 // Incremental outlook: the request is in the queue AND has
                 // arrived (its timeline event just fired), so it joins the
                 // backlog counters here and leaves them at extraction.
@@ -935,9 +1152,19 @@ impl EventServer {
             SimEvent::PrefillLayerDone { .. } | SimEvent::KvEvicted { .. } => Ok(()),
             SimEvent::PrefillTrigger { id } => self.on_trigger(id),
             SimEvent::PrefillDone { id } => self.on_prefill_done(id),
-            SimEvent::SwapDone { .. } => self.on_swap_done(),
+            SimEvent::SwapDone { to_decode } => self.on_swap_done(to_decode),
             SimEvent::DecodeStepDone { id } => self.on_step_done(id),
             SimEvent::DecodeBatchDone { first, n } => self.on_batch_done(first, n),
+            SimEvent::SwapFailed { to_decode } => self.on_swap_failed(to_decode),
+            SimEvent::DeadlineExceeded { id, e2e } => self.on_deadline(id, e2e),
+            SimEvent::FaultWindowStart { idx } => {
+                self.on_fault_window(idx, true);
+                Ok(())
+            }
+            SimEvent::FaultWindowEnd { idx } => {
+                self.on_fault_window(idx, false);
+                Ok(())
+            }
         }
     }
 
@@ -951,6 +1178,15 @@ impl EventServer {
         };
         if job_id != id || committed {
             return Ok(());
+        }
+        if self.degraded || self.fail_stopped {
+            // Degraded mode serves both phases on the static fallback —
+            // there is no §3.4 trigger swap to commit (and the repair
+            // path owns the PCAP).
+            return Ok(());
+        }
+        if self.shed_due.contains(&id) {
+            return Ok(()); // this prefill is deadline-doomed: don't swap for it
         }
         let shape = self.cfg.shape;
         // Decode-side work after this prefill lands.
@@ -994,6 +1230,22 @@ impl EventServer {
     fn on_prefill_done(&mut self, id: u64) -> Result<()> {
         let Some(job) = self.prefilling.take() else { return Ok(()) };
         debug_assert_eq!(job.req.id, id);
+        if let Some(pos) = self.shed_due.iter().position(|&s| s == id) {
+            // Its deadline passed while it was on the fabric: the prefill
+            // ran to completion (the work is spent), but the request sheds
+            // instead of entering decode.
+            self.shed_due.remove(pos);
+            self.kv_pool
+                .complete(id)
+                .map_err(|e| anyhow::anyhow!("shedding request {id}: {e}"))?;
+            self.record_shed(id, job.req.prompt_len, job.req.arrival, None, "deadline");
+            if !job.swap_committed {
+                self.fsm
+                    .finish_prefill()
+                    .map_err(|e| anyhow::anyhow!("finish prefill: {e}"))?;
+            }
+            return Ok(());
+        }
         let shape = self.cfg.shape;
         let cap = self.kv_pool.token_cap(id).unwrap_or(shape.max_seq);
         self.kv_pool
@@ -1016,11 +1268,335 @@ impl EventServer {
         Ok(())
     }
 
-    fn on_swap_done(&mut self) -> Result<()> {
+    fn on_swap_done(&mut self, to_decode: bool) -> Result<()> {
+        // Fault draw at the instant the PCAP load would land — and only
+        // when a load is actually in flight. A was-live no-op SwapDone
+        // (the device already held the RM, nothing loaded) consumes no
+        // randomness, so low-fault timelines stay aligned with the
+        // zero-fault one until the first real load.
+        let loading = matches!(self.swap.device.state(), ReconfigState::Loading { .. });
+        if self.faults.is_active()
+            && loading
+            && self.faults.swap_attempt_fails(self.swap_failure_streak)
+        {
+            return self.on_swap_attempt_failed(to_decode);
+        }
+        self.swap_failure_streak = 0;
         self.swap.device.settle(self.clock);
+        if self.repair_inflight {
+            // A degraded-mode background repair landed: the fabric holds
+            // a healthy RM again. The FSM never entered `Swapping` for
+            // the repair, so there is no swap completion to run.
+            self.repair_inflight = false;
+            self.exit_degraded();
+            return Ok(());
+        }
         self.fsm
             .complete_swap(self.clock)
             .map_err(|e| anyhow::anyhow!("swap completion: {e}"))?;
+        Ok(())
+    }
+
+    /// A PCAP load attempt failed (drawn at its landing time). Retry with
+    /// capped exponential backoff in virtual time; on exhaustion, fall
+    /// back (degraded static-unified serving with scheduled background
+    /// repairs) or trip fail-stop, per [`SwapRetryPolicy`].
+    fn on_swap_attempt_failed(&mut self, to_decode: bool) -> Result<()> {
+        self.metrics.swap_failures.inc();
+        self.swap_failure_streak += 1;
+        self.swap
+            .device
+            .fail_reconfig(self.clock)
+            .map_err(|e| anyhow::anyhow!("failing reconfig: {e}"))?;
+        self.recorder.swap_failed(self.clock, self.swap_failure_streak, to_decode);
+        if self.repair_inflight {
+            // A background repair failed: stay degraded, try again after
+            // the full backoff cap (repairs are best-effort background
+            // work; the streak continues, so the forced-success cap
+            // still bounds the loop).
+            self.repair_inflight = false;
+            self.queue.push(
+                self.clock + self.cfg.retry.backoff_cap_s,
+                SimEvent::SwapFailed { to_decode },
+            );
+            return Ok(());
+        }
+        if self.swap_failure_streak < self.cfg.retry.max_attempts {
+            self.queue.push(
+                self.clock + self.cfg.retry.backoff(self.swap_failure_streak),
+                SimEvent::SwapFailed { to_decode },
+            );
+            return Ok(());
+        }
+        // Retries exhausted: abandon the in-flight logical swap. The FSM
+        // resumes the phase it left; reconcile that with what the engine
+        // actually holds now (the prefill may have completed, the decode
+        // set may have drained, while the swap chain was retrying).
+        let resumed = self
+            .fsm
+            .fail_swap()
+            .map_err(|e| anyhow::anyhow!("abandoning swap: {e}"))?;
+        if let Some(job) = self.prefilling.as_mut() {
+            // The §3.4 commit is void — the decode swap it committed to
+            // was abandoned — so prefill completion must release the FSM
+            // itself again.
+            job.swap_committed = false;
+        }
+        match resumed {
+            Phase::Prefill if self.prefilling.is_none() => {
+                self.fsm
+                    .finish_prefill()
+                    .map_err(|e| anyhow::anyhow!("post-failure prefill drain: {e}"))?;
+            }
+            Phase::Decode if self.decode.is_empty() => {
+                self.fsm
+                    .finish_request()
+                    .map_err(|e| anyhow::anyhow!("post-failure decode drain: {e}"))?;
+            }
+            _ => {}
+        }
+        if self.cfg.retry.fail_stop {
+            return self.trip_fail_stop();
+        }
+        self.degraded = true;
+        self.degraded_since = self.clock;
+        self.recorder.degraded_enter(self.clock);
+        // Schedule the first background repair attempt.
+        self.queue.push(
+            self.clock + self.cfg.retry.backoff_cap_s,
+            SimEvent::SwapFailed { to_decode },
+        );
+        Ok(())
+    }
+
+    /// The post-failure backoff elapsed: re-issue the PCAP load — as a
+    /// live retry of the in-flight logical swap (FSM still `Swapping`),
+    /// or as a degraded-mode background repair.
+    fn on_swap_failed(&mut self, to_decode: bool) -> Result<()> {
+        if self.fail_stopped {
+            return Ok(());
+        }
+        let rm = if to_decode { RM_DECODE } else { RM_PREFILL };
+        if self.degraded {
+            if self.repair_inflight {
+                return Ok(()); // a repair is already on the PCAP
+            }
+            let ready = self
+                .swap
+                .device
+                .start_reconfig(rm, self.clock)
+                .map_err(|e| anyhow::anyhow!("repair reconfig: {e}"))?;
+            self.repair_inflight = true;
+            self.recorder
+                .swap_retry(self.clock, self.swap_failure_streak + 1, ready - self.clock);
+            self.queue.push(ready, SimEvent::SwapDone { to_decode });
+            return Ok(());
+        }
+        self.metrics.swap_retries.inc();
+        let ready = self
+            .swap
+            .device
+            .start_reconfig(rm, self.clock)
+            .map_err(|e| anyhow::anyhow!("retry reconfig: {e}"))?;
+        self.fsm
+            .retry_swap(ready)
+            .map_err(|e| anyhow::anyhow!("retry swap: {e}"))?;
+        self.recorder
+            .swap_retry(self.clock, self.swap_failure_streak + 1, ready - self.clock);
+        self.queue.push(ready, SimEvent::SwapDone { to_decode });
+        Ok(())
+    }
+
+    /// SLO deadline timer for `id` fired. "Completed wins": a request
+    /// that already finished is untouched (the timer is a no-op).
+    /// Otherwise the request sheds from wherever it sits — immediately
+    /// if still queued, deferred to a safe point if resident.
+    fn on_deadline(&mut self, id: u64, e2e: bool) -> Result<()> {
+        if self.fail_stopped {
+            return Ok(());
+        }
+        if let Some(r) = self.sched.remove(id) {
+            // Still queued: never admitted, so no pool reservation to
+            // free — just the backlog counters.
+            self.backlog_n = self.backlog_n.saturating_sub(1);
+            self.backlog_tokens = self.backlog_tokens.saturating_sub(r.prompt_len);
+            self.record_shed(r.id, r.prompt_len, r.arrival, None, "deadline");
+            return Ok(());
+        }
+        if self.prefilling.as_ref().is_some_and(|j| j.req.id == id) {
+            if !self.shed_due.contains(&id) {
+                self.shed_due.push(id);
+            }
+            return Ok(());
+        }
+        if let Some(f) = self.decode.iter().find(|f| f.req.id == id) {
+            // The TTFT bound is met the moment the first decode step
+            // started; only the e2e bound can still shed a decoding
+            // request.
+            if !e2e && f.first_step.is_some() {
+                return Ok(());
+            }
+            if !self.shed_due.contains(&id) {
+                self.shed_due.push(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// DDR brownout window open/close: a multiplicative slowdown on
+    /// every phase latency evaluated while the window is open. Events
+    /// already in flight keep their priced times — only newly scheduled
+    /// work sees the penalty (and the fast-forward fold cannot straddle
+    /// a window edge: these events Block the interference lattice).
+    fn on_fault_window(&mut self, idx: usize, start: bool) {
+        let Some(w) = self.faults.windows().get(idx).copied() else { return };
+        if start {
+            self.ddr_penalty = if w.bw_scale > 0.0 { 1.0 / w.bw_scale } else { 1.0 };
+            self.recorder.fault_window(
+                w.start_s.max(0.0),
+                (w.end_s - w.start_s).max(0.0),
+                w.bw_scale,
+            );
+        } else {
+            self.ddr_penalty = 1.0;
+        }
+    }
+
+    /// Leave degraded mode (a repair load landed): close the
+    /// degraded-time gauge.
+    fn exit_degraded(&mut self) {
+        if !self.degraded {
+            return;
+        }
+        self.degraded = false;
+        self.metrics.degraded_seconds += (self.clock - self.degraded_since).max(0.0);
+        self.recorder.degraded_exit(self.clock);
+    }
+
+    /// Count and record a shed request (deadline miss or fail-stop).
+    /// Shed requests contribute no tokens to `tokens_generated` and no
+    /// samples to the latency histograms — goodput counts useful work
+    /// only — but they land in `outcomes` with `shed: true` so the
+    /// conservation check (completed + shed == arrivals) is auditable.
+    fn record_shed(
+        &mut self,
+        id: u64,
+        prompt_len: usize,
+        arrival: f64,
+        first_step: Option<f64>,
+        reason: &'static str,
+    ) {
+        self.prefilled.remove(&id);
+        self.evicted_once.remove(&id);
+        self.metrics.requests_shed.inc();
+        self.recorder.request_shed(id, self.clock, reason);
+        self.outcomes.push(RequestOutcome {
+            id,
+            prompt_len,
+            generated: Vec::new(),
+            ttft: first_step.map(|t| (t - arrival).max(0.0)).unwrap_or(0.0),
+            e2e: (self.clock - arrival).max(0.0),
+            mean_tpot: 0.0,
+            shed: true,
+        });
+    }
+
+    /// Apply deferred deadline sheds at a safe point (no step in
+    /// flight). "Completed wins": a request that finished on the step
+    /// already in flight when its deadline fired drops silently here.
+    /// A request still prefilling sheds at its `PrefillDone` instead.
+    fn drain_shed_due(&mut self) -> Result<()> {
+        if self.step_inflight {
+            return Ok(());
+        }
+        let mut i = 0;
+        while i < self.shed_due.len() {
+            let id = self.shed_due[i];
+            if self.prefilling.as_ref().is_some_and(|j| j.req.id == id) {
+                i += 1;
+                continue;
+            }
+            self.shed_due.remove(i);
+            if let Some(idx) = self.decode.iter().position(|f| f.req.id == id) {
+                let f = self.decode.remove(idx);
+                self.decode_rem_tokens = self
+                    .decode_rem_tokens
+                    .saturating_sub(f.remaining(self.cfg.shape.max_seq));
+                if idx < self.cursor {
+                    self.cursor -= 1;
+                }
+                self.kv_pool
+                    .complete(f.req.id)
+                    .map_err(|e| anyhow::anyhow!("shedding request {}: {e}", f.req.id))?;
+                self.record_shed(
+                    f.req.id,
+                    f.req.prompt_len,
+                    f.req.arrival,
+                    f.first_step,
+                    "deadline",
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// [`SwapRetryPolicy::fail_stop`] tripped: retries exhausted and no
+    /// fallback. Shed everything queued or resident, free every KV
+    /// reservation, and refuse future arrivals — the naive baseline the
+    /// `fault_tolerance` bench compares degraded fallback against.
+    fn trip_fail_stop(&mut self) -> Result<()> {
+        self.fail_stopped = true;
+        while let Some(id) = self.sched.peek().map(|r| r.id) {
+            let r = self.sched.remove(id).expect("peeked head must remove");
+            self.record_shed(r.id, r.prompt_len, r.arrival, None, "fail-stop");
+        }
+        self.backlog_n = 0;
+        self.backlog_tokens = 0;
+        if let Some(job) = self.prefilling.take() {
+            self.kv_pool
+                .complete(job.req.id)
+                .map_err(|e| anyhow::anyhow!("fail-stop shed {}: {e}", job.req.id))?;
+            self.record_shed(job.req.id, job.req.prompt_len, job.req.arrival, None, "fail-stop");
+            if matches!(self.fsm.phase(), Phase::Prefill) {
+                self.fsm
+                    .finish_prefill()
+                    .map_err(|e| anyhow::anyhow!("fail-stop prefill drain: {e}"))?;
+            }
+        }
+        debug_assert!(!self.step_inflight, "fail-stop trips only outside a step");
+        while let Some(f) = self.decode.pop() {
+            self.kv_pool
+                .complete(f.req.id)
+                .map_err(|e| anyhow::anyhow!("fail-stop shed {}: {e}", f.req.id))?;
+            self.record_shed(
+                f.req.id,
+                f.req.prompt_len,
+                f.req.arrival,
+                f.first_step,
+                "fail-stop",
+            );
+        }
+        self.decode_rem_tokens = 0;
+        self.cursor = 0;
+        if matches!(self.fsm.phase(), Phase::Decode) {
+            self.fsm
+                .finish_request()
+                .map_err(|e| anyhow::anyhow!("fail-stop decode drain: {e}"))?;
+        }
+        self.shed_due.clear();
+        Ok(())
+    }
+
+    /// Degraded-mode phase change: the static fallback hosts both
+    /// phases, so the transition is free — zero virtual time, no PCAP
+    /// traffic (the repair path owns the device), no swap metrics.
+    fn enter_phase_degraded(&mut self, to_decode: bool) -> Result<()> {
+        self.fsm
+            .begin_swap(to_decode, self.clock)
+            .map_err(|e| anyhow::anyhow!("degraded phase change: {e}"))?;
+        self.fsm
+            .complete_swap(self.clock)
+            .map_err(|e| anyhow::anyhow!("degraded phase change: {e}"))?;
         Ok(())
     }
 
@@ -1094,6 +1670,9 @@ impl EventServer {
     /// absorbed arrivals keep the window full.
     fn pump(&mut self, refill: &mut dyn FnMut() -> Option<Request>) -> Result<()> {
         loop {
+            if !self.shed_due.is_empty() {
+                self.drain_shed_due()?;
+            }
             match self.fsm.phase() {
                 // PCAP busy or prefill events in flight: wait.
                 Phase::Swapping { .. } | Phase::Prefill => return Ok(()),
@@ -1120,6 +1699,13 @@ impl EventServer {
                             yield_fabric,
                         );
                         if yield_fabric {
+                            if self.degraded {
+                                // Static fallback hosts both phases: the
+                                // phase change is free and never touches
+                                // the device.
+                                self.enter_phase_degraded(false)?;
+                                continue;
+                            }
                             return self.begin_prefill_swap();
                         }
                     }
@@ -1141,10 +1727,26 @@ impl EventServer {
                     continue;
                 }
                 Phase::Idle => {
+                    if self.fail_stopped {
+                        return Ok(()); // everything sheds at dispatch
+                    }
                     let can_prefill = self.prefill_candidate_ready();
                     let has_decode = !self.decode.is_empty();
                     if !can_prefill && !has_decode {
                         return Ok(()); // idle until the next arrival
+                    }
+                    if self.degraded {
+                        // Static fallback serves both phases without the
+                        // device: prefer prompts (they unblock decode
+                        // work), else decode what's resident.
+                        if can_prefill && self.start_prefill()? {
+                            return Ok(());
+                        }
+                        if has_decode {
+                            self.enter_phase_degraded(true)?;
+                            continue;
+                        }
+                        return Ok(());
                     }
                     let prefill_live = self.swap.device.is_live(RM_PREFILL, self.clock);
                     let decode_live = self.swap.device.is_live(RM_DECODE, self.clock);
@@ -1391,15 +1993,15 @@ impl EventServer {
         let id = req.id;
         let shape = self.cfg.shape;
         let l = req.prompt_len.max(1);
-        let pre = self.prefill_lat(l);
+        let pre_total = self.effective_prefill_total(l);
         let first_pass = self.prefilled.insert(id);
         if !first_pass {
             // Second prefill of an evicted request: pure recompute tax.
-            self.metrics.recompute_overhead.record(pre.total);
+            self.metrics.recompute_overhead.record(pre_total);
         }
-        let done_at = now + pre.total;
-        let trigger_at = if self.cfg.overlap {
-            now + self.trigger_offset(l)
+        let done_at = now + pre_total;
+        let trigger_at = if self.cfg.overlap && !self.degraded {
+            now + self.with_ddr_penalty(self.trigger_offset(l))
         } else {
             done_at
         };
@@ -1415,7 +2017,7 @@ impl EventServer {
             // either way; the recorder's layer instants below are
             // emitted analytically, not from these events).
             for layer in 1..n_layers {
-                let at = now + pre.total * layer as f64 / n_layers as f64;
+                let at = now + pre_total * layer as f64 / n_layers as f64;
                 self.queue.push(at, SimEvent::PrefillLayerDone { id, layer });
             }
         }
@@ -1427,13 +2029,13 @@ impl EventServer {
             if first_pass {
                 self.recorder.request_queued(id, req.arrival.max(0.0).min(now), now);
             }
-            self.recorder.prefill_span(id, now, pre.total, l, !first_pass);
+            self.recorder.prefill_span(id, now, pre_total, l, !first_pass);
             let trig_ts = trigger_at.min(done_at);
             let mut layer = 1;
             // Layer instants are monotone; interleave the trigger at its
             // place on the timeline so the track stays ts-ordered.
             while layer < n_layers {
-                let at = now + pre.total * layer as f64 / n_layers as f64;
+                let at = now + pre_total * layer as f64 / n_layers as f64;
                 if at > trig_ts {
                     break;
                 }
@@ -1442,7 +2044,7 @@ impl EventServer {
             }
             self.recorder.trigger(id, trig_ts);
             while layer < n_layers {
-                let at = now + pre.total * layer as f64 / n_layers as f64;
+                let at = now + pre_total * layer as f64 / n_layers as f64;
                 self.recorder.prefill_layer(id, at, layer);
                 layer += 1;
             }
@@ -1573,6 +2175,21 @@ impl EventServer {
                         }
                         self.log.push(EventRecord { at, kind, subject });
                         self.pull_arrival(refill);
+                        // Mirror the dispatcher's deadline-timer pushes in
+                        // the exact same order (refill arrival, then TTFT,
+                        // then e2e), so the queue's sequence numbering
+                        // matches the stepped path's push order.
+                        if let Some(d) = self.faults.deadlines() {
+                            let a = r.arrival.max(0.0);
+                            self.queue.push(
+                                a + d.ttft_s,
+                                SimEvent::DeadlineExceeded { id: r.id, e2e: false },
+                            );
+                            self.queue.push(
+                                a + d.e2e_s,
+                                SimEvent::DeadlineExceeded { id: r.id, e2e: true },
+                            );
+                        }
                         self.backlog_n += 1;
                         self.backlog_tokens += r.prompt_len;
                         self.sched.admit(r);
@@ -1866,6 +2483,7 @@ impl EventServer {
             // includes interleaved co-tenants' steps AND any interposed
             // prefill/swap detours (the latency a co-tenant observes).
             mean_tpot: if f.tokens > 0 { (last - first) / f.tokens as f64 } else { 0.0 },
+            shed: false,
         });
         Ok(())
     }

@@ -78,6 +78,9 @@ pub fn semantic_fingerprint(s: &EventServer) -> String {
         );
     }
     for o in &s.outcomes {
+        if o.shed {
+            continue;
+        }
         let _ = writeln!(
             out,
             "outcome {} {} {:x} {:x} {:x}",
@@ -86,6 +89,30 @@ pub fn semantic_fingerprint(s: &EventServer) -> String {
             o.ttft.to_bits(),
             o.e2e.to_bits(),
             o.mean_tpot.to_bits(),
+        );
+    }
+    // Fault-layer surface (extension #10). Zero-fault runs emit NOTHING
+    // here — the 5th semantics contract (zero-fault ≡ fault-layer-free)
+    // compares fingerprints bitwise, so these lines appear only when a
+    // fault actually manifested.
+    for o in &s.outcomes {
+        if o.shed {
+            let _ =
+                writeln!(out, "shed {} {} {:x}", o.id, o.prompt_len, o.e2e.to_bits());
+        }
+    }
+    if m.requests_shed.get() != 0
+        || m.swap_failures.get() != 0
+        || m.swap_retries.get() != 0
+        || m.degraded_seconds != 0.0
+    {
+        let _ = writeln!(
+            out,
+            "faults {} {} {} {:x}",
+            m.requests_shed.get(),
+            m.swap_failures.get(),
+            m.swap_retries.get(),
+            m.degraded_seconds.to_bits(),
         );
     }
     for (at, id) in &s.pool().eviction_log {

@@ -46,6 +46,9 @@ pub struct PhaseFsm {
     phase: Phase,
     /// Simulation/wall time at which the in-flight swap completes.
     swap_done_at: f64,
+    /// Phase the in-flight swap departed from — where [`Self::fail_swap`]
+    /// returns the machine when the PCAP load is abandoned.
+    resume: Phase,
     /// Telemetry: number of swaps performed.
     pub swaps: u64,
 }
@@ -58,7 +61,7 @@ impl Default for PhaseFsm {
 
 impl PhaseFsm {
     pub fn new() -> Self {
-        Self { phase: Phase::Idle, swap_done_at: 0.0, swaps: 0 }
+        Self { phase: Phase::Idle, swap_done_at: 0.0, resume: Phase::Idle, swaps: 0 }
     }
 
     pub fn phase(&self) -> Phase {
@@ -84,6 +87,7 @@ impl PhaseFsm {
     pub fn begin_swap(&mut self, to_decode: bool, done_at: f64) -> Result<(), FsmError> {
         match self.phase {
             Phase::Idle | Phase::Prefill | Phase::Decode => {
+                self.resume = self.phase;
                 self.phase = Phase::Swapping { to_decode };
                 self.swap_done_at = done_at;
                 self.swaps += 1;
@@ -92,6 +96,37 @@ impl PhaseFsm {
             p @ Phase::Swapping { .. } => {
                 Err(FsmError::IllegalTransition { event: "begin_swap", phase: p })
             }
+        }
+    }
+
+    /// Re-arm the in-flight swap after a failed PCAP load attempt: stay
+    /// in `Swapping` (the retried load occupies the serial PCAP exactly
+    /// like the first attempt did — a concurrent `begin_swap` is still
+    /// illegal, so a retry can never double-book the RP) with a new
+    /// completion deadline. Legal **only** mid-swap.
+    pub fn retry_swap(&mut self, done_at: f64) -> Result<(), FsmError> {
+        match self.phase {
+            Phase::Swapping { .. } => {
+                self.swap_done_at = done_at;
+                Ok(())
+            }
+            p => Err(FsmError::IllegalTransition { event: "retry_swap", phase: p }),
+        }
+    }
+
+    /// Abandon the in-flight swap (retry budget exhausted): return to the
+    /// phase the swap departed from. The caller owns reconciling that
+    /// phase with reality — e.g. a §3.4 trigger swap departs from
+    /// `Prefill`, but by the time its retries exhaust the prefill job has
+    /// finished, so the engine immediately follows with
+    /// [`Self::finish_prefill`]. Legal **only** mid-swap.
+    pub fn fail_swap(&mut self) -> Result<Phase, FsmError> {
+        match self.phase {
+            Phase::Swapping { .. } => {
+                self.phase = self.resume;
+                Ok(self.phase)
+            }
+            p => Err(FsmError::IllegalTransition { event: "fail_swap", phase: p }),
         }
     }
 
@@ -204,6 +239,67 @@ mod tests {
         assert_eq!(f.swaps, 1, "only the cold load swapped");
         // finish_prefill is only legal from Prefill.
         assert!(f.finish_prefill().is_err());
+    }
+
+    #[test]
+    fn failed_trigger_swap_retried_mid_prefill_never_double_books() {
+        // §3.4 storm scenario: the decode swap triggered mid-prefill
+        // fails and is retried (possibly repeatedly). Throughout, the
+        // machine stays in Swapping — a second begin_swap (which would
+        // double-book the serial PCAP / the RP region) stays illegal,
+        // and decode admission honors the *latest* retry deadline.
+        let mut f = PhaseFsm::new();
+        f.begin_swap(false, 0.045).unwrap();
+        f.complete_swap(0.045).unwrap();
+        f.begin_prefill().unwrap();
+        f.begin_swap(true, 1.045).unwrap(); // early trigger
+        for attempt in 1..=3u32 {
+            let redo = 1.045 + attempt as f64 * 0.050;
+            f.retry_swap(redo).unwrap();
+            assert!(matches!(f.phase(), Phase::Swapping { to_decode: true }));
+            assert!(f.begin_swap(true, redo).is_err(), "retry must not double-book");
+            assert!(f.begin_swap(false, redo).is_err());
+            assert!(!f.decode_admissible(redo - 0.001), "old deadline must not leak");
+            assert!(f.decode_admissible(redo));
+        }
+        assert_eq!(f.swaps, 2, "retries re-arm the same logical swap");
+        f.complete_swap(1.195).unwrap();
+        assert_eq!(f.phase(), Phase::Decode);
+    }
+
+    #[test]
+    fn exhausted_trigger_swap_resumes_prefill_then_finishes_once() {
+        // Retry budget exhausted mid-prefill: fail_swap returns to
+        // Prefill (the departed-from phase), after which finish_prefill
+        // is legal exactly once — the inconsistent double-finish the
+        // satellite test guards against is an error.
+        let mut f = PhaseFsm::new();
+        f.begin_swap(false, 0.045).unwrap();
+        f.complete_swap(0.045).unwrap();
+        f.begin_prefill().unwrap();
+        f.begin_swap(true, 1.045).unwrap();
+        f.retry_swap(1.095).unwrap();
+        assert_eq!(f.fail_swap().unwrap(), Phase::Prefill);
+        assert!(f.fail_swap().is_err(), "nothing in flight to fail");
+        assert!(f.retry_swap(2.0).is_err(), "nothing in flight to retry");
+        f.finish_prefill().unwrap();
+        assert!(f.finish_prefill().is_err(), "finish_prefill must not re-enter");
+        assert_eq!(f.phase(), Phase::Idle);
+    }
+
+    #[test]
+    fn exhausted_swap_resumes_decode_and_idle() {
+        // fail_swap from a decode→prefill swap resumes Decode; from a
+        // cold (Idle) load it resumes Idle.
+        let mut f = PhaseFsm::new();
+        f.begin_swap(true, 0.045).unwrap();
+        assert_eq!(f.fail_swap().unwrap(), Phase::Idle);
+        f.begin_swap(true, 0.1).unwrap();
+        f.complete_swap(0.1).unwrap();
+        f.begin_swap(false, 0.2).unwrap();
+        assert_eq!(f.fail_swap().unwrap(), Phase::Decode);
+        f.finish_request().unwrap();
+        assert_eq!(f.phase(), Phase::Idle);
     }
 
     #[test]

@@ -158,6 +158,7 @@ impl LiveServer {
                 } else {
                     0.0
                 },
+                shed: false,
             },
             sim_ttft,
             sim_e2e,

@@ -46,6 +46,13 @@ pub struct RequestOutcome {
     pub e2e: f64,
     /// Mean per-output-token latency over the decode phase.
     pub mean_tpot: f64,
+    /// The request was shed (SLO deadline exceeded or fail-stop
+    /// fallback) instead of completing: KV pages were freed, any tokens
+    /// in `generated` are partial, and `ttft`/`mean_tpot` are only
+    /// meaningful if a first token was actually produced. Shed requests
+    /// count toward arrivals but not `requests_completed` — the serving
+    /// conservation law is `completed + shed == arrivals`.
+    pub shed: bool,
 }
 
 /// Synthetic workload parameters (edge assistant profile).
@@ -251,6 +258,7 @@ mod tests {
             ttft: 0.1,
             e2e: 1.0,
             mean_tpot: 0.01,
+            shed: false,
         }
     }
 

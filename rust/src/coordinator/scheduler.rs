@@ -39,6 +39,10 @@ pub struct Scheduler {
     /// Batch extractions cut short by an admission rejection (the head
     /// request stayed queued for a later batch).
     pub deferrals: u64,
+    /// Requests removed from the queue without dispatch (SLO deadline
+    /// shed / fail-stop). Conservation with removal becomes
+    /// `dispatched + removed == admitted + requeued` at drain.
+    pub removed: u64,
 }
 
 impl Scheduler {
@@ -50,6 +54,7 @@ impl Scheduler {
             dispatched: 0,
             requeued: 0,
             deferrals: 0,
+            removed: 0,
         }
     }
 
@@ -150,6 +155,16 @@ impl Scheduler {
             .map_or(0, |i| i + 1);
         let yielded = (r.requeues as usize - 1).min(self.queue.len());
         self.queue.insert(older.max(yielded).min(self.queue.len()), r);
+    }
+
+    /// Remove a queued request by id without dispatching it (the SLO
+    /// shed path: its deadline passed while it waited). Returns the
+    /// request so the caller can record the shed outcome; `None` if `id`
+    /// is not queued (already dispatched or never admitted).
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.removed += 1;
+        self.queue.remove(pos)
     }
 
     /// True when nothing is queued.
@@ -281,6 +296,25 @@ mod tests {
         s.requeue_front(batch[1].clone());
         let order: Vec<u64> = s.next_batch(10.0).iter().map(|r| r.id).collect();
         assert_eq!(order, vec![0, 1]);
+    }
+
+    #[test]
+    fn remove_sheds_by_id_and_counts() {
+        let mut s = Scheduler::new(Policy::BatchedPhases { max_batch: 8 });
+        for i in 0..3 {
+            s.admit(req(i, 0.0));
+        }
+        let r = s.remove(1).expect("queued");
+        assert_eq!(r.id, 1);
+        assert!(s.remove(1).is_none(), "second removal finds nothing");
+        assert!(s.remove(99).is_none(), "unknown id finds nothing");
+        let order: Vec<u64> = s.next_batch(0.0).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 2], "FIFO order survives the removal");
+        assert_eq!(s.removed, 1);
+        assert!(s.is_empty());
+        // Conservation with the shed path: dispatched + removed
+        // accounts for every admission.
+        assert_eq!(s.dispatched + s.removed, s.admitted + s.requeued);
     }
 
     #[test]

@@ -535,6 +535,7 @@ impl SimServer {
             } else {
                 0.0
             },
+            shed: false,
         });
         Ok(())
     }

@@ -242,6 +242,12 @@ pub struct SweepCell {
     pub swaps: u64,
     pub exposed_s: f64,
     pub ttft_p95_s: f64,
+    /// SLO-weighted goodput: `makespan_tps × slo_attainment` — useful
+    /// tokens per second, discounted by the completed fraction. Equal to
+    /// `makespan_tps` in fault-free sweeps (attainment 1.0); separates
+    /// from it under fault injection (extension #10), where shed
+    /// requests generate no counted tokens.
+    pub slo_goodput_tps: f64,
     /// Full [`MetricsRegistry`] snapshot of the cell's run
     /// ([`crate::metrics::ServerMetrics::summary_json`]) — every named
     /// counter/gauge/histogram, carried into `codesign --out`.
@@ -394,6 +400,7 @@ impl CodesignReport {
                         ("swaps".into(), Value::Num(c.swaps as f64)),
                         ("reconfig_exposed_total_s".into(), Value::Num(c.exposed_s)),
                         ("ttft_p95_s".into(), Value::Num(c.ttft_p95_s)),
+                        ("slo_goodput_tokens_per_sec".into(), Value::Num(c.slo_goodput_tps)),
                         ("dse_objective".into(), Value::Num(c.objective)),
                         ("metrics".into(), c.metrics.clone()),
                     ])
@@ -552,6 +559,8 @@ fn simulate_cell(
         swaps: m.reconfigurations.get(),
         exposed_s: m.reconfig_exposed.mean() * m.reconfig_exposed.count() as f64,
         ttft_p95_s: m.ttft.quantile(0.95),
+        slo_goodput_tps: (m.tokens_generated.get() as f64 / srv.clock().max(1e-12))
+            * m.slo_attainment(),
         metrics: m.summary_json(),
     })
 }

@@ -1,0 +1,339 @@
+//! Deterministic fault injection for the serving simulators
+//! (`docs/ARCHITECTURE.md` extension #10).
+//!
+//! The paper assumes every PCAP partial reconfiguration lands on time and
+//! DDR bandwidth is constant; real DPR on edge FPGAs fails those
+//! assumptions (bitstream CRC errors force PCAP retries, co-tenants brown
+//! out the DDR controller). A [`FaultPlan`] is a *seeded, virtual-time*
+//! realization of those failure modes:
+//!
+//! - **PCAP swap failures** — each actual partial-bitstream load draws a
+//!   Bernoulli failure with probability [`FaultPlan::swap_fail_prob`].
+//!   Draws are keyed on `(seed, draw index)`, so any two engines that
+//!   issue the same load sequence (which every bitwise-equivalence pair
+//!   does by construction) see identical outcomes.
+//! - **DDR brownout windows** — bounded `[start, end)` intervals during
+//!   which bandwidth-bound latencies are scaled by `1 / bw_scale`.
+//!   Windows are drawn up front, sorted and non-overlapping, and enter
+//!   the timeline as explicit `FaultWindowStart`/`End` events.
+//! - **SLO deadlines** — per-trace-family TTFT and end-to-end bounds; a
+//!   request that cannot meet them is *shed* (KV pages freed, outcome
+//!   recorded with `shed = true`).
+//!
+//! The inertness contract: [`FaultPlan::none`] (and any zero-intensity
+//! spec) reports `is_active() == false` and the serving engines take the
+//! exact pre-fault code paths — clocks, metrics, outcomes, and traces are
+//! bitwise identical to an engine built before this module existed
+//! (pinned by `prop_zero_fault_plan_is_bitwise_inert`).
+
+use crate::util::rng::Rng;
+
+/// After this many *consecutive* failures of the same logical swap, the
+/// next attempt deterministically succeeds — modeling the controller
+/// re-fetching a fresh bitstream image. This bounds every retry/repair
+/// loop (termination is guaranteed, not just almost-sure), which the
+/// event budget and the fuzzer rely on.
+pub const SWAP_FAIL_STREAK_CAP: u32 = 16;
+
+/// Per-request SLO deadlines, both measured from the request's arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Deadlines {
+    /// Time-to-first-token bound (queueing + prefill + exposed swap).
+    pub ttft_s: f64,
+    /// End-to-end completion bound.
+    pub e2e_s: f64,
+}
+
+/// One bounded DDR-bandwidth-degradation window on the virtual timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DdrWindow {
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Effective-bandwidth scale in (0, 1] while the window is open:
+    /// bandwidth-bound latencies are multiplied by `1 / bw_scale`.
+    pub bw_scale: f64,
+}
+
+/// Named fault presets (`pd-swap simulate --faults <preset>` and the
+/// fuzzer's fault axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// No faults — the plan normalizes to [`FaultPlan::none`].
+    None,
+    /// High per-attempt PCAP failure probability, no DDR/deadline faults.
+    SwapStorm,
+    /// DDR brownout windows only.
+    DdrBrownout,
+    /// SLO deadlines only (per trace family).
+    Deadlines,
+    /// Everything at moderate intensity.
+    Chaos,
+}
+
+impl FaultSpec {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "none" => Some(Self::None),
+            "swap-storm" => Some(Self::SwapStorm),
+            "ddr-brownout" => Some(Self::DdrBrownout),
+            "deadlines" => Some(Self::Deadlines),
+            "chaos" => Some(Self::Chaos),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::SwapStorm => "swap-storm",
+            Self::DdrBrownout => "ddr-brownout",
+            Self::Deadlines => "deadlines",
+            Self::Chaos => "chaos",
+        }
+    }
+
+    /// The fuzzer's fault axis: a small integer drawn by the case
+    /// generator. 0 is `None` so the axis is biased toward fault-free
+    /// cases by construction of the draw, and unknown values wrap.
+    pub fn from_kind(kind: usize) -> Self {
+        match kind % 5 {
+            0 => Self::None,
+            1 => Self::SwapStorm,
+            2 => Self::DdrBrownout,
+            3 => Self::Deadlines,
+            _ => Self::Chaos,
+        }
+    }
+}
+
+/// A seeded, fully-materialized fault realization for one serving run.
+///
+/// Cloning is cheap and *resets nothing*: the draw counter is part of the
+/// plan state, so clone a fresh plan per engine (the config is cloned per
+/// run anyway) and two engines that issue the same swap sequence get the
+/// same failure outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    active: bool,
+    swap_fail_prob: f64,
+    windows: Vec<DdrWindow>,
+    deadlines: Option<Deadlines>,
+    seed: u64,
+    /// Failure draws taken so far. Each draw hashes `(seed, draws)` into
+    /// a fresh PRNG stream — no long-lived generator state to desync.
+    draws: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultPlan {
+    /// The inert plan: no failures, no windows, no deadlines, and every
+    /// engine fast-path stays on the pre-fault code.
+    pub fn none() -> Self {
+        Self {
+            active: false,
+            swap_fail_prob: 0.0,
+            windows: Vec::new(),
+            deadlines: None,
+            seed: 0,
+            draws: 0,
+        }
+    }
+
+    /// Realize a named preset for `seed` and a trace family (the family
+    /// scales the deadline preset; pass the trace name, e.g.
+    /// `"interactive"`). A zero-intensity realization normalizes to the
+    /// inert plan.
+    pub fn from_spec(spec: FaultSpec, seed: u64, family: &str) -> Self {
+        match spec {
+            FaultSpec::None => Self::none(),
+            FaultSpec::SwapStorm => Self::build(seed, 0.55, 0, None, family),
+            FaultSpec::DdrBrownout => Self::build(seed, 0.0, 3, None, family),
+            FaultSpec::Deadlines => {
+                Self::build(seed, 0.0, 0, Some(family_deadlines(family)), family)
+            }
+            FaultSpec::Chaos => {
+                Self::build(seed, 0.35, 2, Some(family_deadlines(family)), family)
+            }
+        }
+    }
+
+    /// Swap-failure-only plan with an explicit probability — the
+    /// `fault_tolerance` bench's storm knob.
+    pub fn storm(seed: u64, swap_fail_prob: f64) -> Self {
+        Self::build(seed, swap_fail_prob.clamp(0.0, 0.95), 0, None, "storm")
+    }
+
+    fn build(
+        seed: u64,
+        swap_fail_prob: f64,
+        max_windows: usize,
+        deadlines: Option<Deadlines>,
+        _family: &str,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA01_75EE_D000_0010);
+        let mut windows = Vec::new();
+        if max_windows > 0 {
+            let n = 1 + rng.below(max_windows);
+            let mut t = 0.0;
+            for _ in 0..n {
+                t += 5.0 + rng.f64() * 40.0;
+                let dur = 3.0 + rng.f64() * 12.0;
+                let bw_scale = 0.4 + rng.f64() * 0.5;
+                windows.push(DdrWindow { start_s: t, end_s: t + dur, bw_scale });
+                t += dur;
+            }
+        }
+        let active = swap_fail_prob > 0.0 || !windows.is_empty() || deadlines.is_some();
+        Self { active, swap_fail_prob, windows, deadlines, seed, draws: 0 }
+    }
+
+    /// False iff the plan can never perturb a run. Engines gate every
+    /// fault code path on this, which is what makes the zero-fault plan
+    /// *structurally* inert rather than merely numerically inert.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    pub fn swap_fail_prob(&self) -> f64 {
+        self.swap_fail_prob
+    }
+
+    /// The DDR brownout windows, sorted by start and non-overlapping.
+    pub fn windows(&self) -> &[DdrWindow] {
+        &self.windows
+    }
+
+    pub fn deadlines(&self) -> Option<Deadlines> {
+        self.deadlines
+    }
+
+    /// Draw the outcome of one actual PCAP load attempt. `streak` is the
+    /// count of consecutive failures of this logical swap so far; at
+    /// [`SWAP_FAIL_STREAK_CAP`] the attempt deterministically succeeds
+    /// (the draw is still consumed, so engines that disagree only on the
+    /// cap would still share the stream).
+    pub fn swap_attempt_fails(&mut self, streak: u32) -> bool {
+        if !self.active || self.swap_fail_prob <= 0.0 {
+            return false;
+        }
+        self.draws += 1;
+        let mut r = Rng::new(self.seed ^ self.draws.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let fail = r.f64() < self.swap_fail_prob;
+        fail && streak < SWAP_FAIL_STREAK_CAP
+    }
+
+    /// Failure draws consumed so far (diagnostics).
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+}
+
+/// Deadline presets per trace family. Virtual-time latencies on the
+/// modeled edge device run seconds-per-prefill, so the bounds are loose
+/// enough that a healthy run meets them and tight enough that queueing
+/// collapse or a degraded fallback sheds the tail.
+fn family_deadlines(family: &str) -> Deadlines {
+    match family {
+        "interactive" => Deadlines { ttft_s: 30.0, e2e_s: 180.0 },
+        "mixed" => Deadlines { ttft_s: 60.0, e2e_s: 360.0 },
+        "bursty" => Deadlines { ttft_s: 45.0, e2e_s: 300.0 },
+        "long" => Deadlines { ttft_s: 120.0, e2e_s: 1200.0 },
+        "million" => Deadlines { ttft_s: 30.0, e2e_s: 600.0 },
+        _ => Deadlines { ttft_s: 60.0, e2e_s: 600.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_inert_and_zero_spec_normalizes_to_it() {
+        let mut p = FaultPlan::none();
+        assert!(!p.is_active());
+        assert!(!p.swap_attempt_fails(0));
+        assert_eq!(p.draws(), 0, "inert plan consumes no draws");
+        let q = FaultPlan::from_spec(FaultSpec::None, 0xDEAD, "interactive");
+        assert_eq!(p, q, "a zero-intensity spec IS the inert plan");
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_clone_independent() {
+        let mut a = FaultPlan::from_spec(FaultSpec::SwapStorm, 7, "mixed");
+        let mut b = a.clone();
+        let xs: Vec<bool> = (0..64).map(|_| a.swap_attempt_fails(0)).collect();
+        let ys: Vec<bool> = (0..64).map(|_| b.swap_attempt_fails(0)).collect();
+        assert_eq!(xs, ys);
+        assert!(xs.iter().any(|&f| f), "storm prob 0.55 must fail sometimes");
+        assert!(xs.iter().any(|&f| !f), "and succeed sometimes");
+    }
+
+    #[test]
+    fn different_seeds_draw_differently() {
+        let mut a = FaultPlan::storm(1, 0.5);
+        let mut b = FaultPlan::storm(2, 0.5);
+        let xs: Vec<bool> = (0..256).map(|_| a.swap_attempt_fails(0)).collect();
+        let ys: Vec<bool> = (0..256).map(|_| b.swap_attempt_fails(0)).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn streak_cap_forces_success() {
+        // Probability 0.95 (the clamp ceiling): at the cap the draw is
+        // still consumed but the outcome is forced to success.
+        let mut p = FaultPlan::storm(3, 1.0);
+        assert!((p.swap_fail_prob() - 0.95).abs() < 1e-12);
+        for _ in 0..1000 {
+            assert!(!p.swap_attempt_fails(SWAP_FAIL_STREAK_CAP));
+        }
+        assert_eq!(p.draws(), 1000);
+    }
+
+    #[test]
+    fn brownout_windows_sorted_and_disjoint() {
+        for seed in 0..32u64 {
+            let p = FaultPlan::from_spec(FaultSpec::DdrBrownout, seed, "bursty");
+            assert!(p.is_active());
+            let ws = p.windows();
+            assert!(!ws.is_empty() && ws.len() <= 3);
+            for w in ws {
+                assert!(w.start_s > 0.0 && w.end_s > w.start_s);
+                assert!((0.4..=0.9).contains(&w.bw_scale), "scale {}", w.bw_scale);
+            }
+            for pair in ws.windows(2) {
+                assert!(pair[0].end_s <= pair[1].start_s, "windows overlap");
+            }
+        }
+    }
+
+    #[test]
+    fn deadlines_follow_trace_family() {
+        let p = FaultPlan::from_spec(FaultSpec::Deadlines, 0, "interactive");
+        let d = p.deadlines().unwrap();
+        assert!(d.ttft_s < d.e2e_s);
+        let q = FaultPlan::from_spec(FaultSpec::Deadlines, 0, "long");
+        assert!(q.deadlines().unwrap().ttft_s > d.ttft_s, "long-context gets looser bounds");
+        assert!(p.windows().is_empty() && p.swap_fail_prob() == 0.0);
+    }
+
+    #[test]
+    fn preset_names_round_trip() {
+        for s in [
+            FaultSpec::None,
+            FaultSpec::SwapStorm,
+            FaultSpec::DdrBrownout,
+            FaultSpec::Deadlines,
+            FaultSpec::Chaos,
+        ] {
+            assert_eq!(FaultSpec::from_name(s.name()), Some(s));
+        }
+        assert_eq!(FaultSpec::from_name("bogus"), None);
+        assert_eq!(FaultSpec::from_kind(0), FaultSpec::None);
+        assert_eq!(FaultSpec::from_kind(4), FaultSpec::Chaos);
+    }
+}

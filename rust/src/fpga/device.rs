@@ -135,6 +135,26 @@ impl FpgaDevice {
         Ok(until)
     }
 
+    /// Abort the in-flight partial reconfiguration (fault injection: a
+    /// bitstream CRC error or PCAP transfer abort detected at the load's
+    /// completion point). The RP is left **Empty** — the aborted load
+    /// tore the previous RM's configuration frames, so nothing is live
+    /// until a fresh `start_reconfig` completes. Deliberately does NOT
+    /// settle first: the failure is decided at exactly the moment the
+    /// load would have completed, so a `Loading` whose deadline equals
+    /// `now` is still the failing load, not a settled success.
+    ///
+    /// Errors if no load is in flight (a failure needs something to fail).
+    pub fn fail_reconfig(&mut self, now: f64) -> Result<()> {
+        match &self.state {
+            ReconfigState::Loading { .. } => {
+                self.state = ReconfigState::Empty;
+                Ok(())
+            }
+            s => bail!("no PCAP load in flight to fail at t={now:.3}s (state {s:?})"),
+        }
+    }
+
     /// PCAP bandwidth exposure for diagnostics.
     pub fn pcap(&self) -> &PcapModel {
         &self.pcap
@@ -208,6 +228,25 @@ mod tests {
     fn unknown_rm_rejected() {
         let mut dev = device();
         assert!(dev.start_reconfig("attn-nope", 0.0).is_err());
+    }
+
+    #[test]
+    fn fail_reconfig_empties_the_partition_even_at_the_deadline() {
+        let mut dev = device();
+        let done = dev.start_reconfig("attn-prefill", 0.0).unwrap();
+        // Failure decided exactly at the completion point: the load must
+        // NOT be treated as settled, and the RP ends Empty.
+        dev.fail_reconfig(done).unwrap();
+        assert_eq!(*dev.state(), ReconfigState::Empty);
+        assert!(!dev.is_live("attn-prefill", done));
+        // Nothing in flight anymore: failing again is an error...
+        assert!(dev.fail_reconfig(done).is_err());
+        // ...and a fresh retry pays full PCAP time from `now`.
+        let redo = dev.start_reconfig("attn-prefill", done).unwrap();
+        assert!((redo - done - dev.reconfig_latency()).abs() < 1e-12);
+        dev.settle(redo);
+        assert!(dev.is_live("attn-prefill", redo));
+        assert_eq!(dev.reconfig_count, 2, "both attempts hit the PCAP");
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use crate::dse::{evaluate_grid_point, DseConfig};
 use crate::engines::{AcceleratorDesign, AttentionHosting};
+use crate::faults::{FaultPlan, FaultSpec};
 use crate::fpga::KV260;
 use crate::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
 use crate::model::{ModelShape, TraceSpec, BITNET_0_73B};
@@ -67,6 +68,13 @@ pub struct FuzzCase {
     /// Run the telemetry pair (recorder on must be bitwise inert and the
     /// Chrome export structurally valid).
     pub telemetry: bool,
+    /// Fault axis (extension #10): [`FaultSpec::from_kind`] index. 0 is
+    /// fault-free; the draw is biased so half the corpus keeps
+    /// exercising the pure zero-fault contracts.
+    pub fault_kind: usize,
+    /// Seed the fault plan is realized from (swap-failure draws, DDR
+    /// window placement).
+    pub fault_seed: u64,
 }
 
 impl FuzzCase {
@@ -107,6 +115,8 @@ impl FuzzCase {
             evict: rng.chance(0.5),
             window: *rng.choose(&[1usize, 3, 1024]),
             telemetry: rng.chance(0.25),
+            fault_kind: if rng.chance(0.5) { 0 } else { rng.below(5) },
+            fault_seed: rng.next_u64(),
         }
     }
 
@@ -145,6 +155,22 @@ impl FuzzCase {
         } else {
             AcceleratorDesign::pd_swap()
         }
+    }
+
+    /// The fault plan this case injects (extension #10), realized from
+    /// the fault axis for `fault_seed` and the trace family (the family
+    /// picks the deadline preset). Each engine leg realizes its own
+    /// fresh plan, so the Bernoulli draw streams start aligned and two
+    /// legs that issue the same swap sequence see identical failures.
+    pub fn fault_plan(&self) -> FaultPlan {
+        let family = match self.trace_kind {
+            0 => "interactive",
+            1 => "mixed",
+            2 => "bursty",
+            3 => "long",
+            _ => "million",
+        };
+        FaultPlan::from_spec(FaultSpec::from_kind(self.fault_kind), self.fault_seed, family)
     }
 
     pub fn swap_policy(&self) -> SwapPolicy {
@@ -198,6 +224,8 @@ impl FuzzCase {
             ("evict", Value::Bool(self.evict)),
             ("window", Value::num(self.window as f64)),
             ("telemetry", Value::Bool(self.telemetry)),
+            ("fault_kind", Value::num(self.fault_kind as f64)),
+            ("fault_seed", Value::str(format!("{:#018x}", self.fault_seed))),
         ])
     }
 
@@ -234,6 +262,14 @@ impl FuzzCase {
             evict: fb("evict")?,
             window: us("window")?,
             telemetry: fb("telemetry")?,
+            // The fault axis postdates the first corpus fixtures; absent
+            // keys mean the fault-free plan, so old fixtures replay
+            // byte-for-byte as drawn.
+            fault_kind: v.get("fault_kind").and_then(Value::as_usize).unwrap_or(0),
+            fault_seed: match v.get("fault_seed").and_then(Value::as_str) {
+                Some(s) => parse_hex_seed(s)?,
+                None => 0,
+            },
         })
     }
 }

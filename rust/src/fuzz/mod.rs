@@ -6,8 +6,9 @@
 //! are each pinned by a hand-written property test that fixes most of
 //! the configuration space. This module is the cheap insurance for the
 //! rest of the cross-product: [`generator`] draws a random
-//! `(trace, design, policy, batch, pool, window, telemetry)` tuple from
-//! a seed, [`oracle`] runs every applicable engine pair on it and
+//! `(trace, design, policy, batch, pool, window, telemetry, faults)`
+//! tuple from a seed, [`oracle`] runs every applicable engine pair on
+//! it and
 //! asserts the documented equivalences (bitwise
 //! [`crate::coordinator::semantic_fingerprint`] where the contract
 //! promises bitwise, conservation invariants everywhere), and
@@ -172,7 +173,8 @@ pub fn run_fuzz(cfg: &FuzzConfig, opts: OracleOptions) -> Result<FuzzSummary, St
     let _ = writeln!(
         report,
         "  oracle: ff≡stepped, surface≡direct, streamed≡materialized, telemetry-inert \
-         (bitwise); SimServer + pool/outcome/token conservation (invariants)"
+         (bitwise, incl. the fault axis: swap failures / DDR brownouts / deadline \
+         sheds); SimServer + pool/outcome/shed/token conservation (invariants)"
     );
     let _ = writeln!(report, "  corpus digest: {:#018x}", digest);
     Ok(FuzzSummary {

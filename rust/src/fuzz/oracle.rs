@@ -14,7 +14,14 @@
 //! Every `EventServer` run additionally passes always-on well-formedness
 //! checks: monotone diagnostic log, finite non-negative clock, drained
 //! pool with intact conservation invariants, exact [`OutcomeSink`] drop
-//! accounting, eviction-counter agreement, and token conservation.
+//! accounting, eviction-counter agreement, token conservation, and
+//! shed-path conservation (`completed + shed == arrivals`).
+//!
+//! Cases additionally draw a fault axis (extension #10): a
+//! [`crate::faults::FaultSpec`] kind and seed realized identically for
+//! every `EventServer` leg, so the bitwise pairs are exercised under
+//! injected PCAP swap failures, DDR brownouts, and SLO deadline sheds
+//! as well as fault-free.
 
 use crate::coordinator::{
     requests_from_stream, requests_from_trace, semantic_fingerprint, EventServer,
@@ -93,6 +100,12 @@ fn event_cfg(case: &FuzzCase, design: &AcceleratorDesign, batch: usize) -> Event
     cfg.pool = case.pool_config();
     cfg.decode_batch = batch;
     cfg.max_residents = case.max_residents;
+    // The fault axis (extension #10): every EventServer leg realizes its
+    // own fresh plan from the same (kind, seed), so their failure-draw
+    // streams start aligned and the bitwise pairs stay bitwise under
+    // faults. The retry policy stays at the default (retry + degraded
+    // fallback); the SimServer leg stays fault-free by construction.
+    cfg.faults = case.fault_plan();
     cfg
 }
 
@@ -166,10 +179,15 @@ fn well_formed(s: &EventServer, n: usize, sum_max_new: u64, pair: &'static str) 
             ),
         ));
     }
-    if s.metrics.requests_completed.get() != n as u64 {
+    // Shed-path conservation: every arrival either completes or is shed
+    // with an explicit outcome — nothing vanishes. Fault-free plans
+    // never shed, so this is the old `completed == n` check there.
+    let completed = s.metrics.requests_completed.get();
+    let shed = s.metrics.requests_shed.get();
+    if completed + shed != n as u64 {
         return Err(div(
             pair,
-            format!("completed {} of {n} requests", s.metrics.requests_completed.get()),
+            format!("conservation: {completed} completed + {shed} shed != {n} arrivals"),
         ));
     }
     if s.metrics.tokens_generated.get() > sum_max_new {
@@ -191,7 +209,7 @@ fn well_formed(s: &EventServer, n: usize, sum_max_new: u64, pair: &'static str) 
             ),
         ));
     }
-    check_outcomes(&s.outcomes, s.metrics.requests_completed.get(), pair)
+    check_outcomes(&s.outcomes, completed + shed, pair)
 }
 
 /// The invariant-only `SimServer` leg: the phase-batch engine has

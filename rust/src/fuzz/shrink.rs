@@ -26,6 +26,12 @@ const MAX_SHRINK_ATTEMPTS: usize = 128;
 /// Candidate one-step reductions of a case, most-aggressive first.
 fn candidates(c: &FuzzCase) -> Vec<FuzzCase> {
     let mut out = Vec::new();
+    // Dropping the fault axis first: if the divergence survives without
+    // injected faults it was never a fault-layer bug, and the fixture
+    // should say so.
+    if c.fault_kind != 0 {
+        out.push(FuzzCase { fault_kind: 0, fault_seed: 0, ..c.clone() });
+    }
     if c.n_requests > 1 {
         out.push(FuzzCase { n_requests: c.n_requests / 2, ..c.clone() });
         out.push(FuzzCase { n_requests: c.n_requests - 1, ..c.clone() });

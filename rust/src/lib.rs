@@ -59,6 +59,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod engines;
 pub mod eval;
+pub mod faults;
 pub mod fpga;
 pub mod fuzz;
 pub mod kvpool;

@@ -28,11 +28,12 @@ use pd_swap::dse::{
 };
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, SurfaceCache, SurfaceFactory};
 use pd_swap::eval;
+use pd_swap::faults::{FaultPlan, FaultSpec};
 use pd_swap::fpga::KV260;
 use pd_swap::fuzz::{parse_hex_seed, replay_file, run_fuzz, FuzzConfig, OracleOptions};
 use pd_swap::kvpool::{AdmissionControl, EvictionPolicy, KvPoolConfig};
 use pd_swap::model::{TraceSpec, BITNET_0_73B};
-use pd_swap::reconfig::SwapPolicy;
+use pd_swap::reconfig::{SwapPolicy, SwapRetryPolicy};
 #[cfg(feature = "pjrt")]
 use pd_swap::runtime::{SamplerConfig, SamplingMode};
 use pd_swap::util::cli::Args;
@@ -93,6 +94,8 @@ USAGE:
                    [--long-ctx N] [--requests N] [--seed S] [--max-residents N]
                    [--decode-batch B] [--no-fast-forward] [--no-layer-events]
                    [--streamed] [--window N] [--log-tail N]
+                   [--faults none|swap-storm|ddr-brownout|deadlines|chaos]
+                   [--fault-seed S] [--fail-stop]
                    [--trace-out FILE] [--log]
                    `long` is the sparse long-generation preset where the
                    analytic decode fast-forward (default on; bit-identical
@@ -104,7 +107,16 @@ USAGE:
                    --window N queue bound, bit-identical to materialized),
                    --no-layer-events (skip per-layer prefill markers), and
                    --log-tail N (keep the last N diagnostic records) for
-                   O(window + residents) memory at any request count
+                   O(window + residents) memory at any request count.
+                   --faults realizes a deterministic fault preset for
+                   --fault-seed: PCAP swap failures retry with capped
+                   exponential backoff, then fall back to a degraded
+                   static-unified mode until a repair swap lands
+                   (--fail-stop sheds everything instead); DDR brownout
+                   windows scale bandwidth-bound latencies; SLO deadlines
+                   shed late requests (KV pages freed, `shed` outcome).
+                   Same --fault-seed => byte-identical report and trace;
+                   --faults none is bitwise-inert
 
   --trace-out FILE writes a deterministic Chrome trace-event JSON (load in
   Perfetto / chrome://tracing) with per-request lifecycle spans, DPR swap
@@ -317,9 +329,9 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
             t.trace, t.offered_tokens_per_sec
         );
         println!(
-            "{:<40} {:<11} {:>6} {:<26} {:>9} {:>9} {:>6} {:>11} {:>11}",
-            "design", "policy", "B", "pool", "dec t/s", "e2e t/s", "swaps", "exposed s",
-            "ttft p95 s"
+            "{:<40} {:<11} {:>6} {:<26} {:>9} {:>9} {:>12} {:>6} {:>11} {:>11}",
+            "design", "policy", "B", "pool", "dec t/s", "e2e t/s", "slo-good t/s", "swaps",
+            "exposed s", "ttft p95 s"
         );
         for c in t.ranked.iter().take(5) {
             // A trailing '*' marks a batch clamped by the design's
@@ -330,9 +342,9 @@ fn run_codesign_cmd(args: &Args) -> Result<()> {
                 c.decode_batch.to_string()
             };
             println!(
-                "{:<40} {:<11} {:>6} {:<26} {:>9.2} {:>9.2} {:>6} {:>11.2} {:>11.1}",
-                c.design, c.policy, b, c.pool, c.decode_tps, c.makespan_tps, c.swaps,
-                c.exposed_s, c.ttft_p95_s,
+                "{:<40} {:<11} {:>6} {:<26} {:>9.2} {:>9.2} {:>12.2} {:>6} {:>11.2} {:>11.1}",
+                c.design, c.policy, b, c.pool, c.decode_tps, c.makespan_tps, c.slo_goodput_tps,
+                c.swaps, c.exposed_s, c.ttft_p95_s,
             );
         }
         let capped = t.ranked.iter().filter(|c| c.batch_capped).count();
@@ -550,7 +562,8 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
     let n = args.get_usize("requests", 16);
     let seed = args.get_u64("seed", 0);
     let rate = args.get_f64("rate", 0.05);
-    let spec = match args.get_or("trace", "interactive") {
+    let trace_name = args.get_or("trace", "interactive");
+    let spec = match trace_name {
         "interactive" => TraceSpec::interactive(n, rate, seed),
         "mixed" => TraceSpec::mixed_long_context(
             n,
@@ -563,6 +576,20 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         "million" => TraceSpec::million(n, seed),
         other => bail!("unknown trace '{other}' (try interactive|mixed|bursty|long|million)"),
     };
+    // Fault injection (docs/ARCHITECTURE.md extension #10): realize a
+    // named preset for --fault-seed and the trace family. 'none' keeps
+    // the plan inert — bitwise-identical to the pre-fault engine.
+    let fault_name = args.get_or("faults", "none");
+    let fault_spec = FaultSpec::from_name(fault_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown --faults '{fault_name}' (try none|swap-storm|ddr-brownout|deadlines|chaos)"
+        )
+    })?;
+    let fault_seed = args.get_u64("fault-seed", 1);
+    cfg.faults = FaultPlan::from_spec(fault_spec, fault_seed, trace_name);
+    if args.flag("fail-stop") {
+        cfg.retry = SwapRetryPolicy::fail_stop();
+    }
     let mut server = EventServer::new(cfg.clone())?;
     if args.flag("streamed") {
         // Lazy arrivals, bounded queue window: bit-identical to the
@@ -570,23 +597,25 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         // at O(window + residents) memory instead of O(total requests).
         let window = args.get_usize("window", 1024).max(1);
         println!(
-            "simulating {} requests on the event-driven core (streamed, window {window}): {} trace, {} policy, decode batch {}",
+            "simulating {} requests on the event-driven core (streamed, window {window}): {} trace (seed {seed}), {} policy, decode batch {}",
             spec.n_requests,
-            args.get_or("trace", "interactive"),
+            trace_name,
             policy.name(),
             cfg.decode_batch,
         );
+        print_fault_header(&cfg.faults, fault_name, fault_seed, &cfg.retry);
         server.run_streamed(requests_from_stream(spec.stream()), window)?;
     } else {
         let entries = spec.generate();
         println!(
-            "simulating {} requests on the event-driven core: {} trace ({:.1} offered tok/s), {} policy, decode batch {}",
+            "simulating {} requests on the event-driven core: {} trace (seed {seed}, {:.1} offered tok/s), {} policy, decode batch {}",
             entries.len(),
-            args.get_or("trace", "interactive"),
+            trace_name,
             TraceSpec::offered_tokens_per_sec(&entries),
             policy.name(),
             cfg.decode_batch,
         );
+        print_fault_header(&cfg.faults, fault_name, fault_seed, &cfg.retry);
         server.run(requests_from_trace(&entries))?;
     }
     println!("{}", server.metrics.report());
@@ -596,6 +625,14 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
         server.metrics.tokens_generated.get() as f64 / server.clock().max(1e-9),
         server.metrics.decode_throughput(),
     );
+    if cfg.faults.is_active() {
+        println!(
+            "SLO attainment {:.1}% ({} shed) -> goodput {:.2} tok/s over the makespan",
+            100.0 * server.metrics.slo_attainment(),
+            server.metrics.requests_shed.get(),
+            server.metrics.slo_goodput_tps(server.clock()),
+        );
+    }
     // Event-count reduction from the analytic decode fast-forward
     // (bit-identical clocks/metrics either way; compare with
     // --no-fast-forward).
@@ -655,6 +692,35 @@ fn simulate_events(args: &Args, policy: SwapPolicy) -> Result<()> {
     Ok(())
 }
 
+/// One-line fault-plan banner under the run header (silent when inert),
+/// so a faulted run's provenance — preset, seed, retry policy — is in
+/// the captured output next to the trace seed.
+fn print_fault_header(
+    faults: &FaultPlan,
+    name: &str,
+    fault_seed: u64,
+    retry: &SwapRetryPolicy,
+) {
+    if !faults.is_active() {
+        return;
+    }
+    let deadlines = match faults.deadlines() {
+        Some(d) => format!("ttft {:.0} s / e2e {:.0} s", d.ttft_s, d.e2e_s),
+        None => "none".to_string(),
+    };
+    println!(
+        "fault injection: preset '{name}' (fault seed {fault_seed}) — swap-fail prob {:.2}, {} DDR brownout window(s), deadlines {}, {}",
+        faults.swap_fail_prob(),
+        faults.windows().len(),
+        deadlines,
+        if retry.fail_stop {
+            "fail-stop (no degraded fallback)".to_string()
+        } else {
+            format!("retry x{} then degraded fallback", retry.max_attempts)
+        },
+    );
+}
+
 fn simulate(args: &Args) -> Result<()> {
     let policy_name = args.get_or("policy", "per-request");
     if let Some(policy) = SwapPolicy::from_name(policy_name) {
@@ -700,12 +766,18 @@ fn simulate(args: &Args) -> Result<()> {
     };
     cfg.pool = pool.with_policies(admission, eviction);
 
+    let n_requests = args.get_usize("requests", 16);
+    let wl_seed = args.get_u64("seed", 0);
     let wl = generate_workload(&WorkloadConfig {
-        n_requests: args.get_usize("requests", 16),
-        seed: args.get_u64("seed", 0),
+        n_requests,
+        seed: wl_seed,
         ..Default::default()
     });
     let mut server = SimServer::new(cfg)?;
+    println!(
+        "simulating {n_requests} requests on the phase-batch engine ({}), workload seed {wl_seed}",
+        if args.flag("static") { "TeLLMe static" } else { "PD-Swap" },
+    );
     server.run(wl)?;
     println!(
         "simulated KV260 serving metrics ({}):\n{}",

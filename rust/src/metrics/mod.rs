@@ -222,12 +222,26 @@ pub struct ServerMetrics {
     /// Time spent re-running prefill for evicted requests (the
     /// evict-and-recompute tax).
     pub recompute_overhead: Histogram,
+    /// PCAP partial-reconfiguration attempts that failed (fault
+    /// injection, extension #10). Zero on every fault-free run.
+    pub swap_failures: Counter,
+    /// Failed swaps re-attempted under the retry/backoff policy (the
+    /// terminal failure of an exhausted swap is counted in
+    /// [`Self::swap_failures`] but not here).
+    pub swap_retries: Counter,
+    /// Requests shed (SLO deadline exceeded or fail-stop fallback)
+    /// instead of completed; `requests_completed + requests_shed` equals
+    /// total arrivals.
+    pub requests_shed: Counter,
+    /// Virtual seconds spent serving in the degraded (static-unified
+    /// fallback) engine while the reconfigurable partition was down.
+    pub degraded_seconds: f64,
 }
 
 impl ServerMetrics {
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} swaps={} (to-prefill {}, to-decode {})\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {} (hidden fraction {:.0}%)\n  kv-pool: high-water {} pages, evictions {}, capped admissions {}, recompute {:.1} ms total",
+            "requests={} tokens={} swaps={} (to-prefill {}, to-decode {})\n  TTFT: {}\n  TPOT: {}\n  E2E:  {}\n  exposed-reconfig: {} (hidden fraction {:.0}%)\n  kv-pool: high-water {} pages, evictions {}, capped admissions {}, recompute {:.1} ms total\n  faults: shed {}, swap failures {} (retries {}), degraded {:.2} s, SLO attainment {:.1}%",
             self.requests_completed.get(),
             self.tokens_generated.get(),
             self.reconfigurations.get(),
@@ -242,6 +256,11 @@ impl ServerMetrics {
             self.kv_evictions.get(),
             self.kv_admissions_capped.get(),
             self.recompute_overhead.mean() * self.recompute_overhead.count() as f64 * 1e3,
+            self.requests_shed.get(),
+            self.swap_failures.get(),
+            self.swap_retries.get(),
+            self.degraded_seconds,
+            self.slo_attainment() * 100.0,
         )
     }
 
@@ -249,6 +268,24 @@ impl ServerMetrics {
     pub fn decode_throughput(&self) -> f64 {
         let m = self.tpot.mean();
         if m == 0.0 { 0.0 } else { 1.0 / m }
+    }
+
+    /// Fraction of finished requests that completed within their SLO
+    /// (`completed / (completed + shed)`); 1.0 when nothing finished —
+    /// an idle node hasn't violated anything.
+    pub fn slo_attainment(&self) -> f64 {
+        let done = self.requests_completed.get();
+        let total = done + self.requests_shed.get();
+        if total == 0 { 1.0 } else { done as f64 / total as f64 }
+    }
+
+    /// SLO goodput over a run of `makespan` seconds: tokens that reached
+    /// *completed* requests per second of wall (virtual) time. Shed
+    /// requests' partial tokens are excluded — `tokens_generated` only
+    /// counts completions — which is exactly what a fleet router should
+    /// price a degraded node by.
+    pub fn slo_goodput_tps(&self, makespan: f64) -> f64 {
+        if makespan <= 0.0 { 0.0 } else { self.tokens_generated.get() as f64 / makespan }
     }
 
     /// Record one exposure-accounted PCAP load: `exposed` seconds
@@ -283,11 +320,16 @@ impl ServerMetrics {
                 ("swaps_to_decode", &self.swaps_to_decode),
                 ("kv_evictions", &self.kv_evictions),
                 ("kv_admissions_capped", &self.kv_admissions_capped),
+                ("swap_failures", &self.swap_failures),
+                ("swap_retries", &self.swap_retries),
+                ("requests_shed", &self.requests_shed),
             ],
             gauges: vec![
                 ("kv_pool_high_water_pages", self.kv_pool_high_water.get() as f64),
                 ("decode_throughput_tps", self.decode_throughput()),
                 ("reconfig_hidden_fraction", self.reconfig_hidden_fraction()),
+                ("degraded_seconds", self.degraded_seconds),
+                ("slo_attainment", self.slo_attainment()),
             ],
             histograms: vec![
                 ("ttft", &self.ttft),
@@ -505,6 +547,25 @@ mod tests {
         assert!(v.get("histograms").unwrap().get("tpot").is_some());
         // Deterministic serialization.
         assert_eq!(v.to_string(), m.summary_json().to_string());
+    }
+
+    #[test]
+    fn slo_attainment_counts_shed_against_completed() {
+        let mut m = ServerMetrics::default();
+        assert_eq!(m.slo_attainment(), 1.0, "idle node violates nothing");
+        m.requests_completed.add(3);
+        m.requests_shed.inc();
+        assert!((m.slo_attainment() - 0.75).abs() < 1e-12);
+        m.tokens_generated.add(150);
+        assert!((m.slo_goodput_tps(10.0) - 15.0).abs() < 1e-12);
+        assert_eq!(m.slo_goodput_tps(0.0), 0.0);
+        assert!(m.report().contains("shed 1"));
+        assert!(m.report().contains("SLO attainment 75.0%"));
+        let r = m.registry();
+        assert_eq!(r.counter("requests_shed"), Some(1));
+        assert_eq!(r.counter("swap_failures"), Some(0));
+        assert_eq!(r.gauge("slo_attainment"), Some(0.75));
+        assert_eq!(r.gauge("degraded_seconds"), Some(0.0));
     }
 
     #[test]

@@ -22,6 +22,61 @@ pub mod policy;
 
 pub use policy::{round_trip_exposed, DecisionPoint, SwapOutlook, SwapPolicy};
 
+/// What to do when a PCAP partial reconfiguration fails (fault
+/// injection, `docs/ARCHITECTURE.md` extension #10): retry with capped
+/// exponential backoff in *virtual* time, then fall back.
+///
+/// Fallback semantics at exhaustion:
+/// - **degraded** (default): keep whatever engine is resident and serve
+///   the other phase through the modeled static-unified penalty
+///   (TeLLMe-v2-style single engine) until a scheduled repair swap
+///   succeeds — availability over latency.
+/// - **fail-stop** (`fail_stop = true`): shed everything outstanding and
+///   every later arrival — the naive comparator the `fault_tolerance`
+///   bench prices the degraded mode against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwapRetryPolicy {
+    /// PCAP attempts per logical swap before fallback (≥ 1; the first
+    /// attempt counts).
+    pub max_attempts: u32,
+    /// Backoff before the first retry, seconds of virtual time.
+    pub backoff_base_s: f64,
+    /// Backoff ceiling; also the cadence of degraded-mode repair swaps.
+    pub backoff_cap_s: f64,
+    /// Exhaustion sheds instead of degrading (naive baseline).
+    pub fail_stop: bool,
+}
+
+impl Default for SwapRetryPolicy {
+    fn default() -> Self {
+        // Base ≈ a quarter PCAP load, cap ≈ 7 loads: retries stay cheap
+        // next to the ~45 ms reconfiguration they are retrying, and the
+        // repair cadence doesn't busy-spin the degraded timeline.
+        Self { max_attempts: 3, backoff_base_s: 0.010, backoff_cap_s: 0.320, fail_stop: false }
+    }
+}
+
+impl SwapRetryPolicy {
+    /// The naive fail-stop comparator (same retry budget, no fallback).
+    pub fn fail_stop() -> Self {
+        Self { fail_stop: true, ..Self::default() }
+    }
+
+    /// Virtual-time delay before retry number `attempt` (1-based):
+    /// `base · 2^(attempt−1)`, capped. Pure float arithmetic with an
+    /// early cap return, so the schedule is bit-deterministic.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        let mut d = self.backoff_base_s.max(0.0);
+        for _ in 1..attempt {
+            d *= 2.0;
+            if d >= self.backoff_cap_s {
+                return self.backoff_cap_s;
+            }
+        }
+        d.min(self.backoff_cap_s)
+    }
+}
+
 /// Names of the two attention RMs (shared with `AcceleratorDesign`).
 pub const RM_PREFILL: &str = "attn-prefill";
 pub const RM_DECODE: &str = "attn-decode";
@@ -271,6 +326,56 @@ mod tests {
         let admit = ctl.decode_admissible_at(prefill_end, ready);
         assert_eq!(admit, ready.max(prefill_end));
         assert!(ctl.device.is_live(super::RM_DECODE, admit));
+    }
+
+    #[test]
+    fn retry_backoff_is_capped_exponential() {
+        let p = SwapRetryPolicy::default();
+        assert_eq!(p.backoff(1).to_bits(), 0.010f64.to_bits());
+        assert_eq!(p.backoff(2).to_bits(), 0.020f64.to_bits());
+        assert_eq!(p.backoff(3).to_bits(), 0.040f64.to_bits());
+        // Monotone, and pinned at the cap from attempt 6 on.
+        let mut last = 0.0;
+        for a in 1..=12 {
+            let d = p.backoff(a);
+            assert!(d >= last, "attempt {a}");
+            assert!(d <= p.backoff_cap_s);
+            last = d;
+        }
+        assert_eq!(p.backoff(6).to_bits(), p.backoff_cap_s.to_bits());
+        assert_eq!(p.backoff(32).to_bits(), p.backoff_cap_s.to_bits());
+        assert!(SwapRetryPolicy::fail_stop().fail_stop);
+        assert_eq!(SwapRetryPolicy::fail_stop().max_attempts, p.max_attempts);
+    }
+
+    #[test]
+    fn failed_trigger_swap_retried_through_controller_stays_safe() {
+        // Satellite: a decode swap triggered mid-prefill fails at its
+        // completion point; the retried load must pay full PCAP time
+        // from the retry instant and the §3.4 admission rule must hold
+        // against the *retried* ready time, never the failed one.
+        let design = AcceleratorDesign::pd_swap();
+        let device = design.program(&KV260).unwrap();
+        let mut ctl = SwapController::new(device);
+        let t0 = ctl.ensure_prefill(0.0).unwrap();
+        let trigger = t0 + 1.0;
+        let ready1 = ctl.trigger_decode_swap(trigger).unwrap();
+        // The load fails exactly when it would have completed.
+        ctl.device.fail_reconfig(ready1).unwrap();
+        assert!(!ctl.device.is_live(RM_DECODE, ready1));
+        // Retry after backoff: a full PCAP load from the retry time, via
+        // the same trigger path (the RP is Empty, so this is a real load,
+        // not the already-live no-op).
+        let retry_at = ready1 + SwapRetryPolicy::default().backoff(1);
+        let ready2 = ctl.trigger_decode_swap(retry_at).unwrap();
+        assert!((ready2 - retry_at - ctl.device.reconfig_latency()).abs() < 1e-12);
+        assert!(ready2 > ready1, "retried ready time strictly later");
+        // Admission: decode still gated on the retried ready time.
+        let prefill_end = trigger + 0.010;
+        let admit = ctl.decode_admissible_at(prefill_end, ready2);
+        assert_eq!(admit, ready2);
+        assert!(ctl.device.is_live(RM_DECODE, admit));
+        assert!(!ctl.device.is_live(RM_DECODE, ready2 - 1e-6));
     }
 
     #[test]

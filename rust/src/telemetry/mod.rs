@@ -57,6 +57,10 @@ pub const TID_RP: u64 = 2;
 pub const TID_KV_POOL: u64 = 3;
 /// Engine track: swap-policy decision records.
 pub const TID_POLICY: u64 = 4;
+/// Engine track: fault injection (extension #10) — DDR brownout window
+/// spans, PCAP failure/retry instants, degraded-mode enter/exit, shed
+/// records.
+pub const TID_FAULT: u64 = 5;
 
 /// One recorded event. Names and categories are `&'static str` and args
 /// are numbers or static strings, so recording never allocates per-field
@@ -366,6 +370,78 @@ impl TraceRecorder {
         );
     }
 
+    // -- fault injection (extension #10) -------------------------------------
+
+    /// One DDR brownout window as a span on the fault track. Emitted
+    /// lazily when the window *opens* (its open/close times are both
+    /// known from the plan), which keeps the track's emission order
+    /// monotone in `ts`.
+    pub fn fault_window(&mut self, start_s: f64, dur_s: f64, bw_scale: f64) {
+        self.span(
+            "ddr-brownout",
+            "fault",
+            PID_ENGINE,
+            TID_FAULT,
+            start_s,
+            dur_s,
+            &[("bw_scale", Arg::Num(bw_scale))],
+        );
+    }
+
+    /// A PCAP load attempt failed (`streak` = consecutive failures of
+    /// the current logical swap chain).
+    pub fn swap_failed(&mut self, ts_s: f64, streak: u32, to_decode: bool) {
+        self.instant(
+            "pcap-fail",
+            "fault",
+            PID_ENGINE,
+            TID_FAULT,
+            ts_s,
+            &[
+                ("streak", Arg::Num(streak as f64)),
+                ("target", Arg::Str(if to_decode { "decode" } else { "prefill" })),
+            ],
+        );
+    }
+
+    /// A post-backoff PCAP load re-issue (retry or degraded-mode
+    /// repair); `load_s` is the load latency being re-paid.
+    pub fn swap_retry(&mut self, ts_s: f64, attempt: u32, load_s: f64) {
+        self.instant(
+            "pcap-retry",
+            "fault",
+            PID_ENGINE,
+            TID_FAULT,
+            ts_s,
+            &[("attempt", Arg::Num(attempt as f64)), ("load_s", Arg::Num(load_s))],
+        );
+    }
+
+    /// Degraded-mode entry (swap retries exhausted; serving falls back
+    /// to the static-unified pricing). Instants, not a span: the exit
+    /// time is unknown at entry, and spans must be emitted with both
+    /// endpoints known to keep per-track `ts` monotone.
+    pub fn degraded_enter(&mut self, ts_s: f64) {
+        self.instant("degraded-enter", "fault", PID_ENGINE, TID_FAULT, ts_s, &[]);
+    }
+
+    /// Degraded-mode exit (a background repair load landed).
+    pub fn degraded_exit(&mut self, ts_s: f64) {
+        self.instant("degraded-exit", "fault", PID_ENGINE, TID_FAULT, ts_s, &[]);
+    }
+
+    /// A request shed (`reason` = `"deadline"` / `"fail-stop"`).
+    pub fn request_shed(&mut self, id: u64, ts_s: f64, reason: &'static str) {
+        self.instant(
+            "shed",
+            "fault",
+            PID_ENGINE,
+            TID_FAULT,
+            ts_s,
+            &[("id", Arg::Num(id as f64)), ("reason", Arg::Str(reason))],
+        );
+    }
+
     // -- policy decisions ---------------------------------------------------
 
     /// One swap-policy consultation: the full [`SwapOutlook`] snapshot,
@@ -453,6 +529,7 @@ impl TraceRecorder {
                 (PID_ENGINE, TID_RP) => "rp-region".to_string(),
                 (PID_ENGINE, TID_KV_POOL) => "kv-pool".to_string(),
                 (PID_ENGINE, TID_POLICY) => "swap-policy".to_string(),
+                (PID_ENGINE, TID_FAULT) => "faults".to_string(),
                 (_, t) => format!("track {t}"),
             };
             out.push(Value::Obj(vec![

@@ -8,11 +8,13 @@ use pd_swap::coordinator::{
 };
 use pd_swap::dse::{evaluate_grid_point, explore_threads, DseConfig, DseKernel};
 use pd_swap::engines::{AcceleratorDesign, AttentionHosting, LatencySurface, PhaseModel};
+use pd_swap::faults::{FaultPlan, FaultSpec};
 use pd_swap::fpga::{ResourceVec, KV260};
 use pd_swap::kvpool::{AdmissionControl, AdmissionDecision, EvictionPolicy, KvPool, KvPoolConfig};
 use pd_swap::memory::{AxiBurst, MemorySystem, PortAssignment, PortMapping, Stream};
 use pd_swap::model::{TraceSpec, BITNET_0_73B};
-use pd_swap::reconfig::{OverlapScheduler, SwapPolicy};
+use pd_swap::reconfig::{OverlapScheduler, SwapPolicy, SwapRetryPolicy};
+use pd_swap::util::par::par_map;
 use pd_swap::util::prop::{check, Config};
 use pd_swap::util::rng::Rng;
 
@@ -1188,6 +1190,138 @@ fn prop_streamed_matches_materialized() {
                         assert_eq!(st.arrivals_total(), mat.arrivals_total());
                     }
                 }
+            }
+        }
+    }
+}
+
+/// The 5th semantics contract (`docs/ARCHITECTURE.md` extension #10):
+/// an explicitly-installed zero-fault plan is *bitwise inert*. Across
+/// random traces, all three swap policies, decode batches 1 and 4, and
+/// all three execution modes (fast-forward, stepped, streamed), a run
+/// with `FaultPlan::none()` — even with a non-default retry policy,
+/// whose code paths must never execute without faults — produces the
+/// identical [`semantic_fingerprint`] as a config that never mentions
+/// the fault layer at all, and no fault metric moves off zero.
+#[test]
+fn prop_zero_fault_plan_is_bitwise_inert() {
+    check(
+        cfg(16),
+        |rng, _| {
+            let kind = rng.below(4) as usize;
+            let n = if kind >= 2 { rng.range(2, 5) } else { rng.range(2, 8) };
+            let seed = rng.next_u64();
+            let policy = match rng.below(3) {
+                0 => SwapPolicy::Eager,
+                1 => SwapPolicy::hysteresis_default(),
+                _ => SwapPolicy::lookahead_default(),
+            };
+            let batch = if rng.chance(0.5) { 1usize } else { 4 };
+            (kind, n, seed, policy, batch)
+        },
+        |&(kind, n, seed, policy, batch)| {
+            let spec = || match kind {
+                0 => TraceSpec::interactive(n, 0.4, seed),
+                1 => TraceSpec::bursty(n, seed),
+                2 => TraceSpec::long_decode(n, seed),
+                _ => TraceSpec::million(n, seed),
+            };
+            let reqs = requests_from_trace(&spec().generate());
+            // zero_fault: install the fault layer explicitly (inert plan
+            // + a deliberately non-default retry policy). baseline: never
+            // touch either field.
+            let run = |fast_forward: bool,
+                       streamed: bool,
+                       zero_fault: bool|
+             -> Result<EventServer, String> {
+                let mut cfg =
+                    EventServerConfig::pd_swap(BITNET_0_73B, KV260.clone(), policy);
+                cfg.decode_batch = batch;
+                cfg.fast_forward = fast_forward;
+                if zero_fault {
+                    cfg.faults = FaultPlan::none();
+                    cfg.retry = SwapRetryPolicy::fail_stop();
+                }
+                let mut srv = EventServer::new(cfg).map_err(|e| e.to_string())?;
+                if streamed {
+                    srv.run_streamed(requests_from_stream(spec().stream()), 3)
+                        .map_err(|e| e.to_string())?;
+                } else {
+                    srv.run(reqs.clone()).map_err(|e| e.to_string())?;
+                }
+                Ok(srv)
+            };
+            let baseline = run(true, false, false)?;
+            let fp = semantic_fingerprint(&baseline);
+            for (ff, streamed) in [(true, false), (false, false), (true, true)] {
+                let srv = run(ff, streamed, true)?;
+                let got = semantic_fingerprint(&srv);
+                if got != fp {
+                    return Err(format!(
+                        "zero-fault plan moved a bit (ff={ff} streamed={streamed})\
+                         \n--- baseline\n{fp}\n--- zero-fault\n{got}"
+                    ));
+                }
+                if srv.metrics.requests_shed.get() != 0
+                    || srv.metrics.swap_failures.get() != 0
+                    || srv.metrics.swap_retries.get() != 0
+                    || srv.metrics.degraded_seconds != 0.0
+                {
+                    return Err("zero-fault run moved a fault metric".into());
+                }
+            }
+            if fp.contains("shed ") || fp.contains("faults ") {
+                return Err("zero-fault fingerprint leaked fault lines".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Faulted runs are deterministic per mode: the same `--fault-seed`
+/// yields byte-identical metrics summaries, semantic fingerprints, and
+/// Chrome traces across repeated runs — including runs executed on
+/// `util::par` worker threads at several thread counts (the fault layer
+/// keeps no global or thread-local state).
+#[test]
+fn prop_fault_seed_runs_are_byte_identical() {
+    for (spec, family) in [
+        (FaultSpec::SwapStorm, "bursty"),
+        (FaultSpec::DdrBrownout, "bursty"),
+        (FaultSpec::Deadlines, "interactive"),
+        (FaultSpec::Chaos, "interactive"),
+    ] {
+        let trace = match family {
+            "interactive" => TraceSpec::interactive(8, 0.4, 0xFA17),
+            _ => TraceSpec::bursty(8, 0xFA17),
+        };
+        let reqs = requests_from_trace(&trace.generate());
+        let run = || {
+            let mut cfg = EventServerConfig::pd_swap(
+                BITNET_0_73B,
+                KV260.clone(),
+                SwapPolicy::Eager,
+            );
+            cfg.trace = true;
+            cfg.faults = FaultPlan::from_spec(spec, 0xDEC0DE, family);
+            let mut srv = EventServer::new(cfg).unwrap();
+            srv.run(reqs.clone()).unwrap();
+            (
+                semantic_fingerprint(&srv),
+                srv.metrics.summary_json().to_pretty(),
+                srv.recorder.to_chrome_json().to_pretty(),
+            )
+        };
+        let reference = run();
+        let rerun = run();
+        assert_eq!(reference, rerun, "{spec:?}: rerun diverged");
+        for threads in [1usize, 2, 4] {
+            let results = par_map(&[(); 4], threads, |_| run());
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(
+                    reference, *r,
+                    "{spec:?}: run {i} at {threads} threads diverged"
+                );
             }
         }
     }
